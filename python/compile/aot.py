@@ -1,0 +1,166 @@
+"""AOT-lower the L2 graphs to HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per (graph x geometry) variant plus a
+``manifest.json`` the Rust runtime uses for artifact discovery (names,
+shapes, dtypes, argument order).  Python never runs after this.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+# Geometry grid. V mirrors the paper's tuning: 8/16 for CPU-style index
+# buffers, 256 for the GPU-style buffer. count chosen so the throughput
+# variants move ~10-100 MB per execution (bandwidth is size-invariant
+# past warmup; DESIGN.md §4 scaling note).
+GEOMETRIES = [
+    # (V, count, N_src)
+    (8, 4096, 1 << 22),
+    (16, 4096, 1 << 22),
+    (256, 1024, 1 << 22),
+    # Small smoke geometry for fast integration tests.
+    (8, 64, 1 << 12),
+]
+
+DTYPE = jnp.float64  # the paper's unit of data motion is the double
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True; the
+    Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _gather_variants(v, count, n):
+    src = jax.ShapeDtypeStruct((n,), DTYPE)
+    idx = jax.ShapeDtypeStruct((v,), jnp.int32)
+    delta = jax.ShapeDtypeStruct((1,), jnp.int32)
+    for family, fn in [
+        ("pallas", model.gather_pallas),
+        ("ref", model.gather_ref),
+    ]:
+        name = f"gather_{family}_v{v}_c{count}_n{n}"
+        yield name, functools.partial(fn, count=count), (src, idx, delta), {
+            "kernel": "gather", "family": family,
+            "v": v, "count": count, "n": n, "dtype": "f64",
+            "args": [
+                {"name": "src", "shape": [n], "dtype": "f64"},
+                {"name": "idx", "shape": [v], "dtype": "s32"},
+                {"name": "delta", "shape": [1], "dtype": "s32"},
+            ],
+            "out": {"shape": [count, v], "dtype": "f64"},
+        }
+    name = f"gather_checksum_ref_v{v}_c{count}_n{n}"
+    yield name, functools.partial(model.gather_checksum_ref, count=count), (
+        src, idx, delta), {
+        "kernel": "gather_checksum", "family": "ref",
+        "v": v, "count": count, "n": n, "dtype": "f64",
+        "args": [
+            {"name": "src", "shape": [n], "dtype": "f64"},
+            {"name": "idx", "shape": [v], "dtype": "s32"},
+            {"name": "delta", "shape": [1], "dtype": "s32"},
+        ],
+        "out": {"shape": [], "dtype": "f64"},
+    }
+
+
+def _scatter_variants(v, count, n):
+    # §Perf: without buffer donation, PJRT copies the whole destination
+    # every execution; a 32 MB dst costs ~30 ms and swamps the scatter
+    # itself. The measured traffic is count*v writes, so a compact
+    # destination preserves the benchmark while killing the copy.
+    n = min(n, 1 << 18)
+    vals = jax.ShapeDtypeStruct((count, v), DTYPE)
+    idx = jax.ShapeDtypeStruct((v,), jnp.int32)
+    delta = jax.ShapeDtypeStruct((1,), jnp.int32)
+    dst = jax.ShapeDtypeStruct((n,), DTYPE)
+    for family, fn in [
+        ("pallas", model.scatter_pallas),
+        ("ref", model.scatter_ref),
+    ]:
+        name = f"scatter_{family}_v{v}_c{count}_n{n}"
+        yield name, functools.partial(fn, count=count), (
+            vals, idx, delta, dst), {
+            "kernel": "scatter", "family": family,
+            "v": v, "count": count, "n": n, "dtype": "f64",
+            "args": [
+                {"name": "vals", "shape": [count, v], "dtype": "f64"},
+                {"name": "idx", "shape": [v], "dtype": "s32"},
+                {"name": "delta", "shape": [1], "dtype": "s32"},
+                {"name": "dst", "shape": [n], "dtype": "f64"},
+            ],
+            "out": {"shape": [n], "dtype": "f64"},
+        }
+    name = f"scatter_checksum_ref_v{v}_c{count}_n{n}"
+    yield name, functools.partial(model.scatter_checksum_ref, count=count), (
+        vals, idx, delta, dst), {
+        "kernel": "scatter_checksum", "family": "ref",
+        "v": v, "count": count, "n": n, "dtype": "f64",
+        "args": [
+            {"name": "vals", "shape": [count, v], "dtype": "f64"},
+            {"name": "idx", "shape": [v], "dtype": "s32"},
+            {"name": "delta", "shape": [1], "dtype": "s32"},
+            {"name": "dst", "shape": [n], "dtype": "f64"},
+        ],
+        "out": {"shape": [], "dtype": "f64"},
+    }
+
+
+def variants():
+    for v, count, n in GEOMETRIES:
+        yield from _gather_variants(v, count, n)
+        yield from _scatter_variants(v, count, n)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on variant names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "variants": []}
+    for name, fn, specs, meta in variants():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["name"] = name
+        meta["file"] = f"{name}.hlo.txt"
+        manifest["variants"].append(meta)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['variants'])} variants")
+
+
+if __name__ == "__main__":
+    main()

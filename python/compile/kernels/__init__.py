@@ -1,0 +1,16 @@
+"""L1 Pallas kernels for Spatter: gather and scatter inner loops.
+
+The kernels implement the Spatter access-pattern semantics
+(Algorithm 1 of the paper): for gather number ``i`` and index-buffer
+slot ``j``::
+
+    out[i, j] = src[delta * i + idx[j]]          # gather
+    dst[delta * i + idx[j]] = vals[i, j]         # scatter
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and correctness (not TPU wallclock)
+is the target on this testbed.  See DESIGN.md §Hardware-Adaptation for
+the TPU mapping of the paper's CUDA shared-memory staging.
+"""
+
+from . import gather, ref, scatter  # noqa: F401

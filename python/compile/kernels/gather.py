@@ -1,0 +1,101 @@
+"""Pallas gather kernel (Spatter Algorithm 1, gather direction).
+
+TPU adaptation of the paper's CUDA gather backend (DESIGN.md
+§Hardware-Adaptation):
+
+* The CUDA backend stages the 256-entry index buffer in *shared memory*
+  once per thread block.  Here the index buffer is a small, fully-mapped
+  input block — read once per grid step into registers/VMEM (the
+  interpret-mode analogue of a scratch prefetch).
+* The CUDA backend assigns one Spatter iteration (one gather of length V)
+  to a thread block.  Here a BlockSpec tiles the *count* dimension: each
+  grid step produces a ``(TILE_I, V)`` destination tile, so the
+  HBM->VMEM schedule expressed by the BlockSpec plays the role of the
+  threadblock schedule.
+* There is no MXU work — gather is bandwidth-bound, zero FLOPs — so the
+  kernel's only job is to keep address generation off the critical path
+  (broadcasted-iota + one vector add) and stream tiles.
+
+Semantics note: addresses are produced as ``delta*i + idx[j]``; the
+caller is responsible for sizing ``src`` so all addresses are in bounds
+(the Rust coordinator validates this).  Out-of-bounds indices clamp, per
+XLA gather semantics, and are additionally exercised by tests.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(count: int, preferred: int = 512) -> int:
+    """Largest power-of-two tile <= preferred that divides count."""
+    tile = 1
+    t = 1
+    while t <= count and t <= preferred:
+        if count % t == 0:
+            tile = t
+        t *= 2
+    return tile
+
+
+def _gather_kernel(idx_ref, delta_ref, src_ref, out_ref, *, tile_i: int):
+    """One grid step: gather a (tile_i, V) tile of the destination.
+
+    idx_ref   : (V,)  int32 — the Spatter index buffer (scratch-staged)
+    delta_ref : (1,)  int32 — delta between consecutive gathers
+    src_ref   : (N,)  data  — the full source array (not blocked: the
+                indices are arbitrary, so no sub-block of src is safe)
+    out_ref   : (tile_i, V) data — this grid step's destination tile
+    """
+    pid = pl.program_id(0)
+    idx = idx_ref[...]
+    delta = delta_ref[0]
+    v = idx.shape[0]
+    # Global gather number for each row of the tile.
+    row = pid * tile_i + jax.lax.broadcasted_iota(jnp.int32, (tile_i, v), 0)
+    addr = row * delta + idx[None, :]
+    src = src_ref[...]
+    out_ref[...] = src[addr]
+
+
+def gather(src, idx, delta, count: int, *, tile_i: int | None = None):
+    """Run the Spatter gather pattern: out[i, j] = src[delta*i + idx[j]].
+
+    Args:
+      src:   (N,) source array.
+      idx:   (V,) int32 index buffer.
+      delta: scalar int32 (passed as shape-(1,) array or python int).
+      count: number of gathers (static).
+      tile_i: override the count-dimension tile (must divide count).
+
+    Returns: (count, V) gathered array.
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    delta = jnp.asarray(delta, jnp.int32).reshape((1,))
+    v = idx.shape[0]
+    if tile_i is None:
+        tile_i = _pick_tile(count)
+    if count % tile_i != 0:
+        raise ValueError(f"tile_i={tile_i} must divide count={count}")
+    grid = count // tile_i
+    kernel = functools.partial(_gather_kernel, tile_i=tile_i)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(idx.shape, lambda i: (0,)),       # idx: whole buffer
+            pl.BlockSpec((1,), lambda i: (0,)),            # delta scalar
+            pl.BlockSpec(src.shape, lambda i: (0,)),       # src: whole array
+        ],
+        out_specs=pl.BlockSpec((tile_i, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((count, v), src.dtype),
+        interpret=True,
+    )(idx, delta, src)
+
+
+def gather_checksum(src, idx, delta, count: int):
+    """Gather then reduce to a scalar — cheap numeric validation for the
+    Rust driver (one f64 instead of a (count, V) readback)."""
+    return jnp.sum(gather(src, idx, delta, count), dtype=jnp.float64)

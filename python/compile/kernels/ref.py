@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground-truth semantics of Spatter's Algorithm 1, written
+with plain jax.numpy indexing — no Pallas, no tiling.  Every Pallas
+kernel must match these bit-for-bit (gather) or up to duplicate-write
+resolution (scatter).  They are also AOT-lowered as the *throughput*
+variants: XLA fuses them into a single tight gather/scatter loop with no
+per-tile copy overhead, which is what the Rust driver times (see
+DESIGN.md §2, real-execution substitution).
+"""
+
+import jax.numpy as jnp
+
+
+def addresses(idx, delta, count: int):
+    """The (count, V) address matrix addr[i, j] = delta*i + idx[j]."""
+    idx = jnp.asarray(idx, jnp.int32)
+    i = jnp.arange(count, dtype=jnp.int32)[:, None]
+    delta = jnp.asarray(delta, jnp.int32).reshape(())
+    return i * delta + idx[None, :]
+
+
+def gather(src, idx, delta, count: int):
+    """out[i, j] = src[delta*i + idx[j]]  (clamping OOB like XLA)."""
+    return src[addresses(idx, delta, count)]
+
+
+def gather_checksum(src, idx, delta, count: int):
+    return jnp.sum(gather(src, idx, delta, count), dtype=jnp.float64)
+
+
+def scatter(vals, idx, delta, dst, count: int):
+    """dst[delta*i + idx[j]] = vals[i, j]; duplicate addresses resolve to
+    one of the written values (XLA scatter, unordered)."""
+    addr = addresses(idx, delta, count).reshape(-1)
+    return dst.at[addr].set(vals.reshape(-1), mode="drop")
+
+
+def scatter_candidates(vals, idx, delta, dst, count: int):
+    """For testing duplicate-address scatters: per destination slot, the
+    set of values that could legally end up there.  Returned as
+    (min_candidate, max_candidate) arrays — any legal scatter result sits
+    elementwise within the envelope."""
+    import numpy as np
+
+    addr = np.asarray(addresses(idx, delta, count)).reshape(-1)
+    v = np.asarray(vals).reshape(-1)
+    lo = np.array(dst, dtype=np.float64)
+    hi = np.array(dst, dtype=np.float64)
+    n = dst.shape[0]
+    first = {}
+    for a, val in zip(addr, v):
+        if 0 <= a < n:
+            if a in first:
+                lo[a] = min(lo[a], val, first[a])
+                hi[a] = max(hi[a], val, first[a])
+            else:
+                lo[a] = val
+                hi[a] = val
+                first[a] = val
+    return lo, hi

@@ -1,0 +1,88 @@
+"""Pallas scatter kernel (Spatter Algorithm 1, scatter direction).
+
+``dst[delta*i + idx[j]] = vals[i, j]`` for i in [0, count), j in [0, V).
+
+Grid/tile structure mirrors the gather kernel: the *count* dimension is
+tiled by a BlockSpec; each grid step scatters one ``(TILE_I, V)`` tile of
+values into the destination.  The destination block is the *whole*
+buffer every step (indices are arbitrary), relying on the sequential
+grid of interpret mode / TPU revisiting semantics — each step
+read-modify-writes the accumulated destination.
+
+Duplicate-index semantics: when two (i, j) slots produce the same
+address, exactly one of the writes wins (XLA scatter, unordered) — the
+same contract the paper's OpenMP/CUDA backends have, where concurrent
+scatters to one address are racy.  The Rust coordinator and the tests
+only rely on "one of the candidate values", matching the tool's
+semantics (Spatter measures bandwidth, not scatter ordering).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gather import _pick_tile
+
+
+def _scatter_kernel(idx_ref, delta_ref, vals_ref, dst_in_ref, out_ref,
+                    *, tile_i: int):
+    """One grid step: scatter a (tile_i, V) tile of values into dst.
+
+    On step 0 the destination is seeded from dst_in; later steps
+    read-modify-write the output block (whole-buffer mapping, sequential
+    grid).
+    """
+    pid = pl.program_id(0)
+    idx = idx_ref[...]
+    delta = delta_ref[0]
+    v = idx.shape[0]
+    row = pid * tile_i + jax.lax.broadcasted_iota(jnp.int32, (tile_i, v), 0)
+    addr = (row * delta + idx[None, :]).reshape(-1)
+    vals = vals_ref[...].reshape(-1)
+
+    @pl.when(pid == 0)
+    def _seed():
+        out_ref[...] = dst_in_ref[...]
+
+    cur = out_ref[...]
+    out_ref[...] = cur.at[addr].set(vals, mode="drop")
+
+
+def scatter(vals, idx, delta, dst, count: int, *, tile_i: int | None = None):
+    """Run the Spatter scatter pattern over an existing destination.
+
+    Args:
+      vals:  (count, V) values to scatter.
+      idx:   (V,) int32 index buffer.
+      delta: scalar int32.
+      dst:   (N,) destination seed (returned array starts from this).
+      count: number of scatters (static, == vals.shape[0]).
+
+    Returns: (N,) destination after all scatters.
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    delta = jnp.asarray(delta, jnp.int32).reshape((1,))
+    v = idx.shape[0]
+    if vals.shape != (count, v):
+        raise ValueError(f"vals must be ({count}, {v}), got {vals.shape}")
+    if tile_i is None:
+        tile_i = _pick_tile(count)
+    if count % tile_i != 0:
+        raise ValueError(f"tile_i={tile_i} must divide count={count}")
+    grid = count // tile_i
+    kernel = functools.partial(_scatter_kernel, tile_i=tile_i)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(idx.shape, lambda i: (0,)),        # idx
+            pl.BlockSpec((1,), lambda i: (0,)),             # delta
+            pl.BlockSpec((tile_i, v), lambda i: (i, 0)),    # vals tile
+            pl.BlockSpec(dst.shape, lambda i: (0,)),        # dst seed
+        ],
+        out_specs=pl.BlockSpec(dst.shape, lambda i: (0,)),  # whole dst
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        interpret=True,
+    )(idx, delta, vals, dst)

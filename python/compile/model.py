@@ -1,0 +1,65 @@
+"""L2: the Spatter run as a jitted JAX graph, calling the L1 kernels.
+
+Each public function here is one AOT artifact shape (see aot.py).  The
+graph is pure dataflow: (src|vals, idx, delta) -> gathered tiles or
+scattered destination.  Shapes (count, V, N) are static per artifact;
+idx and delta are runtime *inputs*, so a single artifact serves every
+pattern with the same geometry — the Rust coordinator picks the artifact
+by geometry and feeds the pattern at run time.
+
+Two families are lowered:
+
+* ``*_pallas`` — routed through the L1 Pallas kernels (interpret=True).
+  These validate the kernel-in-HLO path end to end.
+* ``*_ref``   — the pure-jnp oracle.  XLA fuses these into one tight
+  gather/scatter loop; the Rust driver times these for the
+  real-execution bandwidth numbers (DESIGN.md §2).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import gather as k
+from .kernels import ref
+from .kernels import scatter as ks
+
+
+# ---------------------------------------------------------------------------
+# Gather graphs
+# ---------------------------------------------------------------------------
+
+def gather_pallas(src, idx, delta, *, count: int):
+    """(N,) x (V,) x (1,) -> (count, V) via the Pallas kernel."""
+    return k.gather(src, idx, delta, count)
+
+
+def gather_ref(src, idx, delta, *, count: int):
+    """Same contract, pure-jnp (XLA-fused throughput variant)."""
+    return ref.gather(src, idx, delta, count)
+
+
+def gather_checksum_pallas(src, idx, delta, *, count: int):
+    """Gather + scalar reduce: cheap numeric validation readback."""
+    return k.gather_checksum(src, idx, delta, count)
+
+
+def gather_checksum_ref(src, idx, delta, *, count: int):
+    return ref.gather_checksum(src, idx, delta, count)
+
+
+# ---------------------------------------------------------------------------
+# Scatter graphs
+# ---------------------------------------------------------------------------
+
+def scatter_pallas(vals, idx, delta, dst, *, count: int):
+    """(count,V) x (V,) x (1,) x (N,) -> (N,) via the Pallas kernel."""
+    return ks.scatter(vals, idx, delta, dst, count)
+
+
+def scatter_ref(vals, idx, delta, dst, *, count: int):
+    return ref.scatter(vals, idx, delta, dst, count)
+
+
+def scatter_checksum_ref(vals, idx, delta, dst, *, count: int):
+    """Scatter + scalar reduce of the destination."""
+    return jnp.sum(ref.scatter(vals, idx, delta, dst, count),
+                   dtype=jnp.float64)

@@ -1,0 +1,242 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the build.
+
+The Pallas gather/scatter kernels must match the pure-jnp oracles in
+ref.py for every geometry the tool can feed them.  Hypothesis sweeps
+shapes / dtypes / deltas / index contents; directed tests pin the
+paper's specific pattern classes (uniform stride, broadcast, MS1,
+delta-0 scatter, Laplacian-style irregular offsets).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gather as kg
+from compile.kernels import ref
+from compile.kernels import scatter as ks
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _src(n, dtype=jnp.float64, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(n), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Directed gather tests: the paper's pattern classes
+# ---------------------------------------------------------------------------
+
+class TestGatherDirected:
+    def test_stream_like_stride1(self):
+        # UNIFORM:8:1 with delta 8 == STREAM copy read (paper §3.4).
+        src = _src(4096)
+        idx = jnp.arange(8, dtype=jnp.int32)
+        out = kg.gather(src, idx, 8, 64)
+        np.testing.assert_array_equal(out, ref.gather(src, idx, 8, 64))
+        # stride-1/delta-V gather is exactly the src prefix reshaped
+        np.testing.assert_array_equal(out, src[: 64 * 8].reshape(64, 8))
+
+    @pytest.mark.parametrize("stride", [1, 2, 4, 8, 16, 32, 64, 128])
+    def test_uniform_stride_sweep(self, stride):
+        # Fig 3's sweep: UNIFORM:8:stride, delta 8*stride.
+        v, count = 8, 32
+        n = count * 8 * stride + v * stride + 1
+        src = _src(n)
+        idx = jnp.arange(v, dtype=jnp.int32) * stride
+        out = kg.gather(src, idx, 8 * stride, count)
+        np.testing.assert_array_equal(
+            out, ref.gather(src, idx, 8 * stride, count))
+
+    def test_broadcast_pattern(self):
+        # PENNANT-G4: [0,0,0,0,1,1,1,1,2,2,2,2,3,3,3,3], delta 4.
+        idx = jnp.asarray([0] * 4 + [1] * 4 + [2] * 4 + [3] * 4, jnp.int32)
+        src = _src(1024)
+        out = kg.gather(src, idx, 4, 16)
+        np.testing.assert_array_equal(out, ref.gather(src, idx, 4, 16))
+        # broadcast means 4 identical columns per group
+        np.testing.assert_array_equal(out[:, 0], out[:, 3])
+
+    def test_mostly_stride1_pattern(self):
+        # MS1:8:4:20 -> [0,1,2,3,23,24,25,26] (paper §3.3.2).
+        idx = jnp.asarray([0, 1, 2, 3, 23, 24, 25, 26], jnp.int32)
+        src = _src(2048)
+        out = kg.gather(src, idx, 2, 16)
+        np.testing.assert_array_equal(out, ref.gather(src, idx, 2, 16))
+
+    def test_laplacian_pattern(self):
+        # LAPLACIAN:2:1:100 5-point stencil [0,99,100,101,200] (0-based).
+        idx = jnp.asarray([0, 99, 100, 101, 200], jnp.int32)
+        src = _src(100 * 100 + 256)
+        out = kg.gather(src, idx, 1, 64)
+        np.testing.assert_array_equal(out, ref.gather(src, idx, 1, 64))
+
+    def test_delta_zero_gather(self):
+        # delta 0: every gather reads the same addresses.
+        idx = jnp.asarray([5, 3, 1, 7], jnp.int32)
+        src = _src(64)
+        out = kg.gather(src, idx, 0, 16)
+        np.testing.assert_array_equal(out, ref.gather(src, idx, 0, 16))
+        np.testing.assert_array_equal(out[0], out[15])
+
+    def test_table5_amg_pattern(self):
+        # AMG-G0, a "mostly stride-1" 27-ish point pattern.
+        idx = jnp.asarray(
+            [1333, 0, 1, 36, 37, 72, 73, 1296, 1297, 1332, 1368, 1369,
+             2592, 2593, 2628, 2629], jnp.int32)
+        src = _src(8192)
+        out = kg.gather(src, idx, 1, 32)
+        np.testing.assert_array_equal(out, ref.gather(src, idx, 1, 32))
+
+    def test_explicit_tile_override(self):
+        src = _src(512)
+        idx = jnp.arange(16, dtype=jnp.int32)
+        a = kg.gather(src, idx, 16, 24, tile_i=8)
+        b = kg.gather(src, idx, 16, 24, tile_i=1)
+        np.testing.assert_array_equal(a, b)
+
+    def test_bad_tile_raises(self):
+        src = _src(64)
+        idx = jnp.arange(4, dtype=jnp.int32)
+        with pytest.raises(ValueError):
+            kg.gather(src, idx, 1, 10, tile_i=4)
+
+    def test_f32_dtype(self):
+        src = _src(256, jnp.float32)
+        idx = jnp.asarray([0, 3, 9, 1], jnp.int32)
+        out = kg.gather(src, idx, 2, 32)
+        assert out.dtype == jnp.float32
+        np.testing.assert_array_equal(out, ref.gather(src, idx, 2, 32))
+
+    def test_checksum_matches_sum(self):
+        src = _src(512)
+        idx = jnp.arange(8, dtype=jnp.int32)
+        c = kg.gather_checksum(src, idx, 8, 32)
+        r = ref.gather_checksum(src, idx, 8, 32)
+        np.testing.assert_allclose(float(c), float(r), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Directed scatter tests
+# ---------------------------------------------------------------------------
+
+class TestScatterDirected:
+    def test_stride1_scatter_is_copy(self):
+        v, count = 8, 32
+        vals = _src(count * v).reshape(count, v)
+        idx = jnp.arange(v, dtype=jnp.int32)
+        dst = jnp.zeros(count * v, jnp.float64)
+        out = ks.scatter(vals, idx, v, dst, count)
+        np.testing.assert_array_equal(out, vals.reshape(-1))
+
+    @pytest.mark.parametrize("stride", [1, 2, 4, 8, 24])
+    def test_uniform_stride_scatter(self, stride):
+        # LULESH-S0/S1-like uniform stride scatters.
+        v, count = 8, 16
+        n = count * 8 * stride + v * stride + 8
+        vals = _src(count * v, seed=3).reshape(count, v)
+        idx = jnp.arange(v, dtype=jnp.int32) * stride
+        dst = jnp.full(n, -1.0, jnp.float64)
+        out = ks.scatter(vals, idx, 8 * stride, dst, count)
+        expect = ref.scatter(vals, idx, 8 * stride, dst, count)
+        np.testing.assert_array_equal(out, expect)
+
+    def test_delta_zero_scatter_envelope(self):
+        # LULESH-S3: scatter with delta 0 — every iteration overwrites
+        # the same slots; result must be one of the written values.
+        v, count = 8, 16
+        vals = _src(count * v, seed=5).reshape(count, v)
+        idx = jnp.arange(v, dtype=jnp.int32) * 3
+        dst = jnp.zeros(64, jnp.float64)
+        out = np.asarray(ks.scatter(vals, idx, 0, dst, count))
+        lo, hi = ref.scatter_candidates(vals, idx, 0, dst, count)
+        assert (out >= lo - 1e-12).all() and (out <= hi + 1e-12).all()
+
+    def test_untouched_slots_keep_seed(self):
+        v, count = 4, 8
+        vals = jnp.ones((count, v), jnp.float64)
+        idx = jnp.arange(v, dtype=jnp.int32) * 2  # only even slots
+        dst = jnp.full(128, 7.0, jnp.float64)
+        out = np.asarray(ks.scatter(vals, idx, 8, dst, count))
+        # odd slots within the written range keep the seed
+        assert (out[1:64:2] == 7.0).all()
+        assert (out[64:] == 7.0).all()
+
+    def test_scatter_then_gather_roundtrip(self):
+        # gather(scatter(x)) == x when addresses are disjoint.
+        v, count = 8, 16
+        vals = _src(count * v, seed=9).reshape(count, v)
+        idx = jnp.arange(v, dtype=jnp.int32)
+        dst = jnp.zeros(count * v, jnp.float64)
+        scattered = ks.scatter(vals, idx, v, dst, count)
+        back = kg.gather(scattered, idx, v, count)
+        np.testing.assert_array_equal(back, vals)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+@st.composite
+def gather_cases(draw):
+    v = draw(st.integers(1, 32))
+    count = draw(st.integers(1, 64))
+    delta = draw(st.integers(0, 16))
+    idx = draw(st.lists(st.integers(0, 255), min_size=v, max_size=v))
+    dtype = draw(st.sampled_from(["float64", "float32", "int32"]))
+    return v, count, delta, idx, dtype
+
+
+@settings(max_examples=40, deadline=None)
+@given(gather_cases())
+def test_gather_matches_ref_hypothesis(case):
+    v, count, delta, idx, dtype = case
+    n = count * delta + 256 + 1
+    rng = np.random.default_rng(v * 1000 + count)
+    if dtype == "int32":
+        src = jnp.asarray(rng.integers(-1000, 1000, n), jnp.int32)
+    else:
+        src = jnp.asarray(rng.standard_normal(n), dtype)
+    idx = jnp.asarray(idx, jnp.int32)
+    out = kg.gather(src, idx, delta, count)
+    np.testing.assert_array_equal(out, ref.gather(src, idx, delta, count))
+
+
+@st.composite
+def scatter_cases(draw):
+    v = draw(st.integers(1, 16))
+    count = draw(st.integers(1, 32))
+    # distinct index-buffer entries + delta >= v*max_gap guarantees
+    # address disjointness across iterations, so the result is unique
+    idx = draw(st.lists(st.integers(0, 63), min_size=v, max_size=v,
+                        unique=True))
+    return v, count, sorted(idx)
+
+
+@settings(max_examples=30, deadline=None)
+@given(scatter_cases())
+def test_scatter_disjoint_matches_ref_hypothesis(case):
+    v, count, idx = case
+    delta = 64  # > max idx: no cross-iteration overlap
+    n = count * delta + 64 + 1
+    rng = np.random.default_rng(count * 77 + v)
+    vals = jnp.asarray(rng.standard_normal((count, v)), jnp.float64)
+    idxa = jnp.asarray(idx, jnp.int32)
+    dst = jnp.asarray(rng.standard_normal(n), jnp.float64)
+    out = ks.scatter(vals, idxa, delta, dst, count)
+    expect = ref.scatter(vals, idxa, delta, dst, count)
+    np.testing.assert_array_equal(out, expect)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 32), st.integers(0, 8))
+def test_gather_checksum_consistency(v, count, delta):
+    n = count * delta + v + 1
+    rng = np.random.default_rng(v + count + delta)
+    src = jnp.asarray(rng.standard_normal(n), jnp.float64)
+    idx = jnp.asarray(rng.integers(0, v + 1, v), jnp.int32)
+    c = kg.gather_checksum(src, idx, delta, count)
+    r = ref.gather_checksum(src, idx, delta, count)
+    np.testing.assert_allclose(float(c), float(r), rtol=1e-10)

@@ -1,0 +1,24 @@
+//! Bench harness regenerating the paper's fig4 series.
+//! Runs the suite experiment, prints the same rows the paper reports,
+//! and writes the CSV series to bench_out/.
+
+use std::path::Path;
+use std::time::Instant;
+
+use spatter::suite::{self, SuiteContext};
+
+fn main() {
+    let name = "fig4";
+    let ctx = SuiteContext::new(Path::new("bench_out"));
+    let t0 = Instant::now();
+    match suite::run(name, &ctx) {
+        Ok(report) => {
+            println!("{report}");
+            println!("[bench {name}] regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("[bench {name}] FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Performance bench for the real-execution path: wall-clock bandwidth
+//! of the AOT gather/scatter artifacts on PJRT-CPU, compared against a
+//! plain memcpy-style upper bound measured on this host.
+//!
+//! §Perf target: stride-1 gather through the `ref` artifact within 2x
+//! of the host's sequential-read bandwidth (the kernel is a pure
+//! stream), and the `pallas` artifact within 4x of `ref` (it carries
+//! the interpret-mode grid structure).
+
+use std::time::Instant;
+
+use spatter::backends::{Backend, PjrtBackend};
+use spatter::pattern::{Kernel, Pattern};
+
+/// Rough host sequential-read bandwidth (GB/s) via a summation sweep.
+fn host_read_gbs() -> f64 {
+    let n = 1 << 24; // 128 MB of f64
+    let data: Vec<f64> = (0..n).map(|i| i as f64).collect();
+    // warm
+    let mut acc = 0.0;
+    for &x in &data {
+        acc += x;
+    }
+    let t0 = Instant::now();
+    let reps = 3;
+    for _ in 0..reps {
+        let mut s = 0.0;
+        for &x in &data {
+            s += x;
+        }
+        acc += s;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    std::hint::black_box(acc);
+    (reps * n * 8) as f64 / secs / 1e9
+}
+
+fn main() {
+    println!("== perf_pjrt: real-execution path ==");
+    let host = host_read_gbs();
+    println!("host sequential read: {host:.2} GB/s");
+
+    let mut pjrt = match PjrtBackend::open_default() {
+        Ok(b) => b,
+        Err(e) => {
+            println!("SKIPPED: {e} (run `make artifacts`)");
+            return;
+        }
+    };
+    pjrt.runs = 5;
+
+    let stream = Pattern::parse("UNIFORM:8:1")
+        .unwrap()
+        .with_delta(8)
+        .with_count(1 << 20);
+    let r = pjrt.run(&stream, Kernel::Gather).unwrap();
+    let bw = r.bandwidth_gbs();
+    println!(
+        "pjrt stride-1 gather (ref artifact): {bw:.2} GB/s ({:.2}x of host read)",
+        host / bw
+    );
+
+    let strided = Pattern::parse("UNIFORM:8:8")
+        .unwrap()
+        .with_delta(64)
+        .with_count(1 << 20);
+    let r8 = pjrt.run(&strided, Kernel::Gather).unwrap();
+    println!("pjrt stride-8 gather: {:.2} GB/s", r8.bandwidth_gbs());
+
+    let v16 = spatter::pattern::table5::by_name("LULESH-G2")
+        .unwrap()
+        .to_pattern(1 << 20);
+    let rv = pjrt.run(&v16, Kernel::Gather).unwrap();
+    println!("pjrt LULESH-G2 (v16): {:.2} GB/s", rv.bandwidth_gbs());
+
+    let sc = spatter::pattern::table5::by_name("LULESH-S1")
+        .unwrap()
+        .to_pattern(1 << 18);
+    let rs = pjrt.run(&sc, Kernel::Scatter).unwrap();
+    println!("pjrt LULESH-S1 scatter: {:.2} GB/s", rs.bandwidth_gbs());
+
+    if bw * 2.0 < host {
+        println!(
+            "stride-1 gather is more than 2x below host read — see \
+             EXPERIMENTS.md §Perf"
+        );
+    } else {
+        println!("stride-1 gather within 2x of host read: target met");
+    }
+}

@@ -1,0 +1,90 @@
+//! Performance microbench for the L3 hot path: simulated accesses per
+//! second through the CPU and GPU engines.
+//!
+//! This is the §Perf target tracker (EXPERIMENTS.md): a full figure
+//! sweep should take seconds, which needs >= ~10^7-10^8 simulated
+//! accesses/s. Run before/after each optimization.
+
+use std::time::Instant;
+
+use spatter::pattern::{Kernel, Pattern};
+use spatter::platforms;
+use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
+use spatter::sim::gpu::GpuEngine;
+
+fn bench_cpu(name: &str, pattern: &Pattern, kernel: Kernel) -> f64 {
+    let p = platforms::by_name("skx").unwrap();
+    let mut e = CpuEngine::with_options(
+        &p,
+        CpuSimOptions {
+            max_sim_accesses: 1 << 22,
+            ..Default::default()
+        },
+    );
+    // warm once (engine allocation, page-in)
+    e.run(pattern, kernel).unwrap();
+    let t0 = Instant::now();
+    let reps = 3;
+    let mut accesses = 0u64;
+    for _ in 0..reps {
+        let r = e.run(pattern, kernel).unwrap();
+        accesses += r.counters.accesses;
+    }
+    let rate = accesses as f64 / t0.elapsed().as_secs_f64();
+    println!("cpu-engine  {name:<28} {:.2} M acc/s", rate / 1e6);
+    rate
+}
+
+fn bench_gpu(name: &str, pattern: &Pattern, kernel: Kernel) -> f64 {
+    let p = platforms::gpu_by_name("p100").unwrap();
+    let mut e = GpuEngine::new(&p);
+    e.run(pattern, kernel).unwrap();
+    let t0 = Instant::now();
+    let reps = 3;
+    let mut accesses = 0u64;
+    for _ in 0..reps {
+        let r = e.run(pattern, kernel).unwrap();
+        accesses += r.counters.accesses;
+    }
+    let rate = accesses as f64 / t0.elapsed().as_secs_f64();
+    println!("gpu-engine  {name:<28} {:.2} M acc/s", rate / 1e6);
+    rate
+}
+
+fn main() {
+    println!("== perf_sim: simulator hot-path throughput ==");
+    let stream = Pattern::parse("UNIFORM:8:1")
+        .unwrap()
+        .with_delta(8)
+        .with_count(1 << 22);
+    let strided = Pattern::parse("UNIFORM:8:64")
+        .unwrap()
+        .with_delta(512)
+        .with_count(1 << 22);
+    let amg = spatter::pattern::table5::by_name("AMG-G0")
+        .unwrap()
+        .to_pattern(1 << 20);
+    let pennant = spatter::pattern::table5::by_name("PENNANT-G12")
+        .unwrap()
+        .to_pattern(1 << 20);
+
+    let mut rates = Vec::new();
+    rates.push(bench_cpu("stride-1 (cache hits)", &stream, Kernel::Gather));
+    rates.push(bench_cpu("stride-64 (dram misses)", &strided, Kernel::Gather));
+    rates.push(bench_cpu("AMG-G0 (cached app)", &amg, Kernel::Gather));
+    rates.push(bench_cpu("PENNANT-G12 (tlb-bound)", &pennant, Kernel::Gather));
+    rates.push(bench_cpu("stride-1 scatter (stream)", &stream, Kernel::Scatter));
+
+    let gstream = Pattern::parse("UNIFORM:256:1")
+        .unwrap()
+        .with_delta(256)
+        .with_count(1 << 14);
+    rates.push(bench_gpu("stride-1", &gstream, Kernel::Gather));
+    rates.push(bench_gpu("stride-1 scatter", &gstream, Kernel::Scatter));
+
+    let worst = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("\nworst case: {:.2} M acc/s (target >= 10 M acc/s)", worst / 1e6);
+    if worst < 10e6 {
+        println!("BELOW TARGET — see EXPERIMENTS.md §Perf for the iteration log");
+    }
+}

@@ -1,0 +1,221 @@
+//! Spatter's execution backends (paper §3.2).
+//!
+//! The paper ships OpenMP, CUDA, and Scalar backends; this reproduction
+//! maps them onto the simulated platforms plus a fourth backend that
+//! *really executes* the gather/scatter through the AOT-compiled
+//! L1/L2 kernels on PJRT-CPU:
+//!
+//! | paper backend | here |
+//! |---|---|
+//! | OpenMP (vectorized) | [`OpenMpSim`] — CPU engine, vector G/S issue |
+//! | Scalar (`#pragma novec`) | [`ScalarSim`] — CPU engine, scalar issue |
+//! | CUDA | [`CudaSim`] — GPU engine |
+//! | (n/a) | [`PjrtBackend`] — real execution + wall-clock timing |
+
+mod pjrt;
+
+pub use pjrt::PjrtBackend;
+
+use crate::error::Result;
+use crate::pattern::{Kernel, Pattern};
+use crate::platforms::{CpuPlatform, GpuPlatform};
+use crate::sim::cpu::{CpuEngine, CpuSimOptions};
+use crate::sim::gpu::GpuEngine;
+use crate::sim::SimResult;
+
+/// A Spatter execution backend: takes a fully-specified pattern, runs
+/// (or models) it, and reports time + bandwidth.
+pub trait Backend {
+    /// Backend name for reports.
+    fn name(&self) -> &str;
+
+    /// Execute one pattern with the given kernel.
+    fn run(&mut self, pattern: &Pattern, kernel: Kernel) -> Result<SimResult>;
+
+    /// STREAM-equivalent peak (GB/s) for normalized plots, if known.
+    fn stream_gbs(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// The paper's OpenMP backend on a simulated CPU platform.
+pub struct OpenMpSim {
+    engine: CpuEngine,
+    name: String,
+}
+
+impl OpenMpSim {
+    pub fn new(platform: &CpuPlatform) -> OpenMpSim {
+        OpenMpSim {
+            engine: CpuEngine::new(platform),
+            name: format!("openmp:{}", platform.name),
+        }
+    }
+
+    /// With prefetching disabled (the Fig 4 MSR study).
+    pub fn without_prefetch(platform: &CpuPlatform) -> OpenMpSim {
+        OpenMpSim {
+            engine: CpuEngine::with_options(
+                platform,
+                CpuSimOptions {
+                    prefetch_enabled: false,
+                    ..Default::default()
+                },
+            ),
+            name: format!("openmp-nopf:{}", platform.name),
+        }
+    }
+
+    pub fn engine(&self) -> &CpuEngine {
+        &self.engine
+    }
+}
+
+impl Backend for OpenMpSim {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, pattern: &Pattern, kernel: Kernel) -> Result<SimResult> {
+        self.engine.run(pattern, kernel)
+    }
+
+    fn stream_gbs(&self) -> Option<f64> {
+        Some(self.engine.platform().stream_gbs)
+    }
+}
+
+/// The paper's Scalar backend (`#pragma novec` baseline) on a simulated
+/// CPU platform.
+pub struct ScalarSim {
+    engine: CpuEngine,
+    name: String,
+}
+
+impl ScalarSim {
+    pub fn new(platform: &CpuPlatform) -> ScalarSim {
+        ScalarSim {
+            engine: CpuEngine::with_options(
+                platform,
+                CpuSimOptions {
+                    vectorized: false,
+                    ..Default::default()
+                },
+            ),
+            name: format!("scalar:{}", platform.name),
+        }
+    }
+}
+
+impl Backend for ScalarSim {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, pattern: &Pattern, kernel: Kernel) -> Result<SimResult> {
+        self.engine.run(pattern, kernel)
+    }
+
+    fn stream_gbs(&self) -> Option<f64> {
+        Some(self.engine.platform().stream_gbs)
+    }
+}
+
+/// The paper's CUDA backend on a simulated GPU platform.
+pub struct CudaSim {
+    engine: GpuEngine,
+    name: String,
+}
+
+impl CudaSim {
+    pub fn new(platform: &GpuPlatform) -> CudaSim {
+        CudaSim {
+            engine: GpuEngine::new(platform),
+            name: format!("cuda:{}", platform.name),
+        }
+    }
+}
+
+impl Backend for CudaSim {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&mut self, pattern: &Pattern, kernel: Kernel) -> Result<SimResult> {
+        self.engine.run(pattern, kernel)
+    }
+
+    fn stream_gbs(&self) -> Option<f64> {
+        Some(self.engine.platform().stream_gbs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platforms;
+
+    fn pat() -> Pattern {
+        Pattern::parse("UNIFORM:8:2")
+            .unwrap()
+            .with_delta(16)
+            .with_count(1 << 14)
+    }
+
+    #[test]
+    fn openmp_backend_runs() {
+        let p = platforms::by_name("skx").unwrap();
+        let mut b = OpenMpSim::new(&p);
+        let r = b.run(&pat(), Kernel::Gather).unwrap();
+        assert!(r.bandwidth_gbs() > 0.0);
+        assert_eq!(b.name(), "openmp:skx");
+        assert_eq!(b.stream_gbs(), Some(p.stream_gbs));
+    }
+
+    #[test]
+    fn scalar_backend_is_slower_on_simd_cpu() {
+        let p = platforms::by_name("knl").unwrap();
+        let mut omp = OpenMpSim::new(&p);
+        let mut sca = ScalarSim::new(&p);
+        let dense = Pattern::parse("UNIFORM:8:1")
+            .unwrap()
+            .with_delta(8)
+            .with_count(1 << 16);
+        let bo = omp.run(&dense, Kernel::Gather).unwrap().bandwidth_gbs();
+        let bs = sca.run(&dense, Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!(bo > bs, "omp {bo:.1} vs scalar {bs:.1}");
+    }
+
+    #[test]
+    fn cuda_backend_runs() {
+        let p = platforms::gpu_by_name("p100").unwrap();
+        let mut b = CudaSim::new(&p);
+        let gpat = Pattern::parse("UNIFORM:256:1")
+            .unwrap()
+            .with_delta(256)
+            .with_count(1 << 12);
+        let r = b.run(&gpat, Kernel::Gather).unwrap();
+        assert!(r.bandwidth_gbs() > 100.0);
+        assert_eq!(b.name(), "cuda:p100");
+    }
+
+    #[test]
+    fn nopf_variant_differs() {
+        let p = platforms::by_name("bdw").unwrap();
+        let mut on = OpenMpSim::new(&p);
+        let mut off = OpenMpSim::without_prefetch(&p);
+        let dense = Pattern::parse("UNIFORM:8:1")
+            .unwrap()
+            .with_delta(8)
+            .with_count(1 << 17);
+        let bon = on.run(&dense, Kernel::Gather).unwrap();
+        let boff = off.run(&dense, Kernel::Gather).unwrap();
+        // Without prefetch the demand misses pay full latency.
+        assert!(
+            boff.breakdown.latency_s > bon.breakdown.latency_s,
+            "latency on={:.2e} off={:.2e}",
+            bon.breakdown.latency_s,
+            boff.breakdown.latency_s
+        );
+    }
+}

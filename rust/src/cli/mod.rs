@@ -1,0 +1,336 @@
+//! Spatter's command-line interface (no `clap` in the offline vendor
+//! set — a getopt-style parser that mirrors the original tool's flags).
+//!
+//! ```text
+//! spatter -k Gather -p UNIFORM:8:1 -d 8 -l 16777216 [-b openmp] [-a skx]
+//! spatter -j config.json [-a skx]
+//! spatter --list-platforms | --list-patterns
+//! spatter --suite fig3 [--out bench_out/]
+//! ```
+
+use crate::error::{Error, Result};
+use crate::pattern::{Kernel, Pattern};
+
+/// Which backend executes the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Simulated multi-core CPU (paper's OpenMP backend).
+    OpenMp,
+    /// Simulated GPU (paper's CUDA backend).
+    Cuda,
+    /// Simulated scalar (non-vectorized) CPU baseline.
+    Scalar,
+    /// Real execution through PJRT-CPU of the AOT'd L1/L2 kernels.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "openmp" | "omp" => Ok(BackendKind::OpenMp),
+            "cuda" => Ok(BackendKind::Cuda),
+            "scalar" => Ok(BackendKind::Scalar),
+            "pjrt" | "native" => Ok(BackendKind::Pjrt),
+            _ => Err(Error::Cli(format!(
+                "unknown backend '{s}' (openmp|cuda|scalar|pjrt)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::OpenMp => "openmp",
+            BackendKind::Cuda => "cuda",
+            BackendKind::Scalar => "scalar",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// A parsed invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    /// Run a single pattern (-k -p -d -l).
+    Run(RunArgs),
+    /// Run every configuration in a JSON file (-j).
+    Json { path: String, common: CommonArgs },
+    /// Regenerate a paper experiment (--suite fig3 ...).
+    Suite { name: String, out_dir: String },
+    /// Informational listings.
+    ListPlatforms,
+    ListPatterns,
+    Help,
+}
+
+/// Flags shared by run modes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommonArgs {
+    /// Simulated platform name (-a / --arch), default "skx".
+    pub platform: String,
+    /// Backend (-b), default OpenMP.
+    pub backend: BackendKind,
+    /// Runs per pattern (--runs), default 10 per the paper.
+    pub runs: usize,
+    /// Validate numerics through the PJRT path (--validate).
+    pub validate: bool,
+    /// Emit JSON instead of a table (--json-out).
+    pub json_out: bool,
+}
+
+impl Default for CommonArgs {
+    fn default() -> Self {
+        CommonArgs {
+            platform: "skx".to_string(),
+            backend: BackendKind::OpenMp,
+            runs: crate::stats::RUNS_PER_PATTERN,
+            validate: false,
+            json_out: false,
+        }
+    }
+}
+
+/// Arguments for a single-pattern run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunArgs {
+    pub kernel: Kernel,
+    pub pattern: Pattern,
+    pub common: CommonArgs,
+}
+
+/// Parse argv (excluding argv[0]).
+pub fn parse_args(args: &[String]) -> Result<Command> {
+    let mut kernel: Option<Kernel> = None;
+    let mut pattern_spec: Option<String> = None;
+    let mut deltas: Option<Vec<i64>> = None;
+    let mut count: Option<usize> = None;
+    let mut json_path: Option<String> = None;
+    let mut suite: Option<String> = None;
+    let mut out_dir = "bench_out".to_string();
+    let mut common = CommonArgs::default();
+
+    let mut it = args.iter().peekable();
+    while let Some(arg) = it.next() {
+        let mut take = |name: &str| -> Result<String> {
+            it.next()
+                .cloned()
+                .ok_or_else(|| Error::Cli(format!("{name} requires a value")))
+        };
+        match arg.as_str() {
+            "-k" | "--kernel" => kernel = Some(Kernel::parse(&take("-k")?)?),
+            "-p" | "--pattern" => pattern_spec = Some(take("-p")?),
+            "-d" | "--delta" => {
+                // Single delta or a comma-separated cycling list (the
+                // temporal-locality extension, paper §7 item 1).
+                let v = take("-d")?;
+                let list: std::result::Result<Vec<i64>, _> =
+                    v.split(',').map(|t| t.trim().parse::<i64>()).collect();
+                let list = list
+                    .map_err(|_| Error::Cli(format!("bad delta '{v}'")))?;
+                if list.is_empty() {
+                    return Err(Error::Cli("empty delta list".into()));
+                }
+                deltas = Some(list);
+            }
+            "-l" | "--count" => {
+                let v = take("-l")?;
+                count = Some(parse_count(&v)?);
+            }
+            "-j" | "--json" => json_path = Some(take("-j")?),
+            "-a" | "--arch" | "--platform" => common.platform = take("-a")?,
+            "-b" | "--backend" => common.backend = BackendKind::parse(&take("-b")?)?,
+            "--runs" => {
+                let v = take("--runs")?;
+                common.runs = v
+                    .parse()
+                    .map_err(|_| Error::Cli(format!("bad --runs '{v}'")))?;
+                if common.runs == 0 {
+                    return Err(Error::Cli("--runs must be > 0".into()));
+                }
+            }
+            "--validate" => common.validate = true,
+            "--json-out" => common.json_out = true,
+            "--suite" => suite = Some(take("--suite")?),
+            "--out" => out_dir = take("--out")?,
+            "--list-platforms" => return Ok(Command::ListPlatforms),
+            "--list-patterns" => return Ok(Command::ListPatterns),
+            "-h" | "--help" => return Ok(Command::Help),
+            other => {
+                return Err(Error::Cli(format!("unknown argument '{other}'")))
+            }
+        }
+    }
+
+    if let Some(name) = suite {
+        return Ok(Command::Suite { name, out_dir });
+    }
+    if let Some(path) = json_path {
+        return Ok(Command::Json { path, common });
+    }
+    if args.is_empty() {
+        return Ok(Command::Help);
+    }
+
+    let kernel =
+        kernel.ok_or_else(|| Error::Cli("missing -k Gather|Scatter".into()))?;
+    let spec = pattern_spec
+        .ok_or_else(|| Error::Cli("missing -p PATTERN".into()))?;
+    // Table-5 pattern ids are accepted anywhere a spec is; they carry
+    // their own default delta.
+    let mut pattern = match crate::pattern::table5::by_name(&spec) {
+        Some(app) => Pattern::from_indices(app.name, app.indices.to_vec())
+            .with_delta(app.delta),
+        None => Pattern::parse(&spec)?,
+    };
+    if let Some(d) = deltas {
+        pattern = pattern.with_deltas(&d);
+    }
+    pattern = pattern.with_count(count.unwrap_or(1 << 20));
+    pattern.validate()?;
+    Ok(Command::Run(RunArgs {
+        kernel,
+        pattern,
+        common,
+    }))
+}
+
+/// Counts accept plain integers or `2^N`.
+fn parse_count(s: &str) -> Result<usize> {
+    if let Some(exp) = s.strip_prefix("2^") {
+        let e: u32 = exp
+            .parse()
+            .map_err(|_| Error::Cli(format!("bad count '{s}'")))?;
+        if e >= 48 {
+            return Err(Error::Cli(format!("count 2^{e} too large")));
+        }
+        return Ok(1usize << e);
+    }
+    s.parse()
+        .map_err(|_| Error::Cli(format!("bad count '{s}'")))
+}
+
+/// Usage text for `--help`.
+pub const USAGE: &str = "\
+spatter — gather/scatter memory benchmark (paper reproduction)
+
+USAGE:
+  spatter -k Gather|Scatter -p PATTERN -d DELTA -l COUNT [options]
+  spatter -j CONFIG.json [options]
+  spatter --suite NAME [--out DIR]     regenerate a paper experiment
+  spatter --list-platforms | --list-patterns
+
+PATTERN:
+  UNIFORM:N:STRIDE        e.g. UNIFORM:8:1
+  MS1:N:BREAKS:GAPS       e.g. MS1:8:4:20
+  LAPLACIAN:D:L:SIZE      e.g. LAPLACIAN:2:2:100
+  RANDOM:N:RANGE[:SEED]   GUPS-like random indices
+  idx0,idx1,...           custom index buffer
+  or a Table-5 name, e.g. PENNANT-G5 (with --list-patterns)
+
+OPTIONS:
+  -a, --arch NAME      simulated platform (default skx; --list-platforms)
+  -b, --backend B      openmp | cuda | scalar | pjrt (default openmp)
+  -d, --delta D        base advance; a comma list cycles (temporal
+                       locality extension), e.g. -d 0,0,0,16
+  -l, --count N        gathers/scatters to perform (accepts 2^N)
+      --runs N         runs per pattern (default 10, paper protocol)
+      --validate       cross-check numerics through the PJRT path
+      --json-out       machine-readable output
+      --suite NAME     fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|all
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn paper_example_invocation() {
+        // ./spatter -k Gather -p UNIFORM:8:1 -d 8 -l $((2**24))
+        let cmd = parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8 -l 2^24")).unwrap();
+        match cmd {
+            Command::Run(r) => {
+                assert_eq!(r.kernel, Kernel::Gather);
+                assert_eq!(r.pattern.indices, (0..8).collect::<Vec<i64>>());
+                assert_eq!(r.pattern.delta, 8);
+                assert_eq!(r.pattern.count, 1 << 24);
+            }
+            other => panic!("expected Run, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn custom_pattern_invocation() {
+        let cmd = parse_args(&argv("-k Scatter -p 0,24,48 -d 1 -l 100")).unwrap();
+        match cmd {
+            Command::Run(r) => {
+                assert_eq!(r.kernel, Kernel::Scatter);
+                assert_eq!(r.pattern.indices, vec![0, 24, 48]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn json_mode() {
+        let cmd = parse_args(&argv("-j cfg.json -a bdw -b scalar")).unwrap();
+        match cmd {
+            Command::Json { path, common } => {
+                assert_eq!(path, "cfg.json");
+                assert_eq!(common.platform, "bdw");
+                assert_eq!(common.backend, BackendKind::Scalar);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn suite_mode() {
+        let cmd = parse_args(&argv("--suite fig3 --out outdir")).unwrap();
+        assert_eq!(
+            cmd,
+            Command::Suite {
+                name: "fig3".into(),
+                out_dir: "outdir".into()
+            }
+        );
+    }
+
+    #[test]
+    fn listings_and_help() {
+        assert_eq!(parse_args(&argv("--list-platforms")).unwrap(), Command::ListPlatforms);
+        assert_eq!(parse_args(&argv("--list-patterns")).unwrap(), Command::ListPatterns);
+        assert_eq!(parse_args(&argv("-h")).unwrap(), Command::Help);
+        assert_eq!(parse_args(&[]).unwrap(), Command::Help);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_args(&argv("-k Gather")).is_err()); // missing -p
+        assert!(parse_args(&argv("-p UNIFORM:8:1")).is_err()); // missing -k
+        assert!(parse_args(&argv("-k Gather -p UNIFORM:8:1 -d")).is_err());
+        assert!(parse_args(&argv("--bogus")).is_err());
+        assert!(parse_args(&argv("-k Gather -p UNIFORM:8:1 -l 2^60")).is_err());
+        assert!(parse_args(&argv("-k Gather -p UNIFORM:8:1 --runs 0")).is_err());
+        assert!(parse_args(&argv("-b warp -k G -p 0,1")).is_err());
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(BackendKind::parse("OMP").unwrap(), BackendKind::OpenMp);
+        assert_eq!(BackendKind::parse("cuda").unwrap(), BackendKind::Cuda);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("sve").is_err());
+    }
+
+    #[test]
+    fn default_count_applied() {
+        let cmd = parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8")).unwrap();
+        match cmd {
+            Command::Run(r) => assert_eq!(r.pattern.count, 1 << 20),
+            other => panic!("{other:?}"),
+        }
+    }
+}

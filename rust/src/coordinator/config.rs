@@ -1,0 +1,167 @@
+//! JSON multi-configuration input (paper §3.3 "JSON Specification").
+//!
+//! A config file is an array of run objects:
+//!
+//! ```json
+//! [
+//!   {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+//!    "count": 16777216},
+//!   {"name": "lulesh-s1", "kernel": "Scatter",
+//!    "pattern": [0, 24, 48], "delta": 8, "count": 1048576}
+//! ]
+//! ```
+//!
+//! `pattern` is either a spec string (builtin or Table-5 name) or an
+//! explicit index array. Spatter "will parse this file and allocate
+//! memory once for all tests" — the analogue here: patterns are
+//! validated and sized up front, before any backend runs.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+use crate::pattern::{table5, Kernel, Pattern};
+
+/// One entry of a JSON config file.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub name: String,
+    pub kernel: Kernel,
+    pub pattern: Pattern,
+}
+
+/// Parse a config file from disk.
+pub fn parse_config_file(path: &Path) -> Result<Vec<RunConfig>> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        Error::Config(format!("cannot read {} ({e})", path.display()))
+    })?;
+    parse_config_text(&text)
+}
+
+/// Parse config JSON text.
+pub fn parse_config_text(text: &str) -> Result<Vec<RunConfig>> {
+    let root = json::parse(text)?;
+    let arr = root.as_array().map_err(|_| {
+        Error::Config("config root must be an array of run objects".into())
+    })?;
+    if arr.is_empty() {
+        return Err(Error::Config("config contains no runs".into()));
+    }
+    arr.iter().enumerate().map(|(i, v)| parse_one(i, v)).collect()
+}
+
+fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
+    let kernel = Kernel::parse(v.get("kernel")?.as_str()?)?;
+    let mut pattern = match v.get("pattern")? {
+        Value::String(spec) => {
+            // Table-5 names are accepted anywhere a spec is.
+            if let Some(app) = table5::by_name(spec) {
+                Pattern::from_indices(&app.name.to_string(), app.indices.to_vec())
+                    .with_delta(app.delta)
+            } else {
+                Pattern::parse(spec)?
+            }
+        }
+        Value::Array(items) => {
+            let idx: Result<Vec<i64>> = items.iter().map(|x| x.as_i64()).collect();
+            Pattern::from_indices(&format!("custom[{i}]"), idx?)
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "run {i}: pattern must be a string or array, got {}",
+                other.kind()
+            )))
+        }
+    };
+    // "delta" accepts a number or a cycling list (temporal-locality
+    // extension): {"delta": [0, 0, 0, 16]}.
+    if let Some(d) = v.get_opt("delta") {
+        match d {
+            Value::Array(items) => {
+                let list: Result<Vec<i64>> =
+                    items.iter().map(|x| x.as_i64()).collect();
+                pattern = pattern.with_deltas(&list?);
+            }
+            other => pattern = pattern.with_delta(other.as_i64()?),
+        }
+    }
+    let count = match v.get_opt("count") {
+        Some(c) => c.as_usize()?,
+        None => 1 << 20,
+    };
+    pattern = pattern.with_count(count);
+    pattern
+        .validate()
+        .map_err(|e| Error::Config(format!("run {i}: {e}")))?;
+    let name = match v.get_opt("name") {
+        Some(n) => n.as_str()?.to_string(),
+        None => pattern.spec.clone(),
+    };
+    Ok(RunConfig {
+        name,
+        kernel,
+        pattern,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_config() {
+        let cfgs = parse_config_text(
+            r#"[
+              {"kernel": "Gather", "pattern": "UNIFORM:8:2", "delta": 16,
+               "count": 4096},
+              {"name": "mine", "kernel": "Scatter", "pattern": [0, 24, 48],
+               "delta": 1, "count": 128},
+              {"kernel": "Gather", "pattern": "PENNANT-G4", "count": 64}
+            ]"#,
+        )
+        .unwrap();
+        assert_eq!(cfgs.len(), 3);
+        assert_eq!(cfgs[0].kernel, Kernel::Gather);
+        assert_eq!(cfgs[0].pattern.indices, vec![0, 2, 4, 6, 8, 10, 12, 14]);
+        assert_eq!(cfgs[0].pattern.delta, 16);
+        assert_eq!(cfgs[1].name, "mine");
+        assert_eq!(cfgs[1].pattern.indices, vec![0, 24, 48]);
+        // Table-5 name resolves with its own delta.
+        assert_eq!(cfgs[2].pattern.delta, 4);
+        assert_eq!(cfgs[2].pattern.vector_len(), 16);
+    }
+
+    #[test]
+    fn table5_delta_can_be_overridden() {
+        let cfgs = parse_config_text(
+            r#"[{"kernel": "Gather", "pattern": "PENNANT-G4", "delta": 99,
+                 "count": 10}]"#,
+        )
+        .unwrap();
+        assert_eq!(cfgs[0].pattern.delta, 99);
+    }
+
+    #[test]
+    fn default_count_applied() {
+        let cfgs = parse_config_text(
+            r#"[{"kernel": "Gather", "pattern": "UNIFORM:4:1", "delta": 4}]"#,
+        )
+        .unwrap();
+        assert_eq!(cfgs[0].pattern.count, 1 << 20);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        for bad in [
+            "{}",
+            "[]",
+            r#"[{"pattern": "UNIFORM:8:1"}]"#,
+            r#"[{"kernel": "Gather"}]"#,
+            r#"[{"kernel": "Gather", "pattern": 42}]"#,
+            r#"[{"kernel": "Gather", "pattern": "UNIFORM:8:1", "count": 0}]"#,
+            r#"[{"kernel": "Gather", "pattern": [-1, 2]}]"#,
+        ] {
+            assert!(parse_config_text(bad).is_err(), "should reject: {bad}");
+        }
+    }
+}

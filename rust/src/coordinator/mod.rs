@@ -1,0 +1,9 @@
+//! The run coordinator: Spatter's L3 contribution — turn parsed
+//! configurations into executed runs with the paper's measurement
+//! protocol, and aggregate the results.
+
+mod config;
+mod runner;
+
+pub use config::{parse_config_file, parse_config_text, RunConfig};
+pub use runner::{run_configs, run_one, Aggregate, RunRecord};

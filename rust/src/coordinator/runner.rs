@@ -1,0 +1,167 @@
+//! Run execution + aggregation (paper §3.5 output protocol).
+
+use crate::backends::Backend;
+use crate::error::Result;
+use crate::json::{obj, Value};
+use crate::pattern::{Kernel, Pattern};
+use crate::stats;
+
+use super::RunConfig;
+
+/// The outcome of one pattern run.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub name: String,
+    pub kernel: Kernel,
+    pub spec: String,
+    pub delta: i64,
+    pub count: usize,
+    pub vector_len: usize,
+    pub seconds: f64,
+    pub bandwidth_gbs: f64,
+    /// Which simulated resource bound the run ("dram-bw", "tlb", ...);
+    /// empty for real-execution backends.
+    pub bottleneck: String,
+}
+
+impl RunRecord {
+    /// Machine-readable form.
+    pub fn to_json(&self) -> Value {
+        obj(&[
+            ("name", Value::from(self.name.clone())),
+            ("kernel", Value::from(self.kernel.name())),
+            ("pattern", Value::from(self.spec.clone())),
+            ("delta", Value::from(self.delta)),
+            ("count", Value::from(self.count)),
+            ("vector_len", Value::from(self.vector_len)),
+            ("seconds", Value::from(self.seconds)),
+            ("bandwidth_gbs", Value::from(self.bandwidth_gbs)),
+            ("bottleneck", Value::from(self.bottleneck.clone())),
+        ])
+    }
+}
+
+/// Execute one pattern on a backend.
+pub fn run_one(
+    backend: &mut dyn Backend,
+    name: &str,
+    pattern: &Pattern,
+    kernel: Kernel,
+) -> Result<RunRecord> {
+    let r = backend.run(pattern, kernel)?;
+    Ok(RunRecord {
+        name: name.to_string(),
+        kernel,
+        spec: pattern.spec.clone(),
+        delta: pattern.delta,
+        count: pattern.count,
+        vector_len: pattern.vector_len(),
+        seconds: r.seconds,
+        bandwidth_gbs: r.bandwidth_gbs(),
+        bottleneck: r.breakdown.bottleneck().to_string(),
+    })
+}
+
+/// Execute a whole JSON config set.
+pub fn run_configs(
+    backend: &mut dyn Backend,
+    configs: &[RunConfig],
+) -> Result<Vec<RunRecord>> {
+    configs
+        .iter()
+        .map(|c| run_one(backend, &c.name, &c.pattern, c.kernel))
+        .collect()
+}
+
+/// The paper's multi-run aggregate: min/max bandwidth and the harmonic
+/// mean across configurations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Aggregate {
+    pub runs: usize,
+    pub min_gbs: f64,
+    pub max_gbs: f64,
+    pub harmonic_mean_gbs: f64,
+}
+
+impl Aggregate {
+    pub fn from_records(records: &[RunRecord]) -> Option<Aggregate> {
+        let bws: Vec<f64> = records.iter().map(|r| r.bandwidth_gbs).collect();
+        let (min, max) = stats::min_max(&bws)?;
+        Some(Aggregate {
+            runs: records.len(),
+            min_gbs: min,
+            max_gbs: max,
+            harmonic_mean_gbs: stats::harmonic_mean(&bws)?,
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(&[
+            ("runs", Value::from(self.runs)),
+            ("min_gbs", Value::from(self.min_gbs)),
+            ("max_gbs", Value::from(self.max_gbs)),
+            ("harmonic_mean_gbs", Value::from(self.harmonic_mean_gbs)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::OpenMpSim;
+    use crate::coordinator::parse_config_text;
+    use crate::platforms;
+
+    fn backend() -> OpenMpSim {
+        OpenMpSim::new(&platforms::by_name("skx").unwrap())
+    }
+
+    #[test]
+    fn run_one_produces_record() {
+        let mut b = backend();
+        let p = Pattern::parse("UNIFORM:8:1")
+            .unwrap()
+            .with_delta(8)
+            .with_count(1 << 16);
+        let r = run_one(&mut b, "stream-like", &p, Kernel::Gather).unwrap();
+        assert_eq!(r.name, "stream-like");
+        assert!(r.bandwidth_gbs > 10.0);
+        assert_eq!(r.vector_len, 8);
+        assert_eq!(r.bottleneck, "dram-bw");
+    }
+
+    #[test]
+    fn config_set_runs_and_aggregates() {
+        let cfgs = parse_config_text(
+            r#"[
+              {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+               "count": 65536},
+              {"kernel": "Gather", "pattern": "UNIFORM:8:8", "delta": 64,
+               "count": 65536}
+            ]"#,
+        )
+        .unwrap();
+        let mut b = backend();
+        let recs = run_configs(&mut b, &cfgs).unwrap();
+        assert_eq!(recs.len(), 2);
+        // stride-1 beats stride-8
+        assert!(recs[0].bandwidth_gbs > recs[1].bandwidth_gbs);
+        let agg = Aggregate::from_records(&recs).unwrap();
+        assert_eq!(agg.runs, 2);
+        assert!(agg.min_gbs <= agg.harmonic_mean_gbs);
+        assert!(agg.harmonic_mean_gbs <= agg.max_gbs);
+    }
+
+    #[test]
+    fn record_json_shape() {
+        let mut b = backend();
+        let p = Pattern::parse("UNIFORM:4:2")
+            .unwrap()
+            .with_delta(8)
+            .with_count(1024);
+        let r = run_one(&mut b, "x", &p, Kernel::Scatter).unwrap();
+        let j = r.to_json();
+        assert_eq!(j.get("kernel").unwrap().as_str().unwrap(), "Scatter");
+        assert!(j.get("bandwidth_gbs").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

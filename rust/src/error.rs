@@ -1,0 +1,82 @@
+//! Crate-wide error type.
+//!
+//! Hand-rolled (no `thiserror` in the offline vendor set); a small enum
+//! keeps failure modes explicit for library users.
+
+use std::fmt;
+
+/// All the ways a Spatter operation can fail.
+#[derive(Debug)]
+pub enum Error {
+    /// Malformed pattern spec (`UNIFORM:8:x`, bad MS1 params, ...).
+    PatternParse(String),
+    /// Malformed CLI invocation.
+    Cli(String),
+    /// JSON syntax or schema error in a config / manifest file.
+    Json(String),
+    /// Run configuration that cannot be executed (zero count, address
+    /// overflow, source buffer too small, ...).
+    Config(String),
+    /// Artifact discovery / PJRT runtime failure.
+    Runtime(String),
+    /// Platform registry miss.
+    UnknownPlatform(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+    /// Error bubbled up from the `xla` crate.
+    Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::PatternParse(m) => write!(f, "pattern parse error: {m}"),
+            Error::Cli(m) => write!(f, "cli error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::UnknownPlatform(m) => write!(f, "unknown platform: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_are_prefixed() {
+        let cases: Vec<(Error, &str)> = vec![
+            (Error::PatternParse("x".into()), "pattern parse error"),
+            (Error::Cli("x".into()), "cli error"),
+            (Error::Json("x".into()), "json error"),
+            (Error::Config("x".into()), "config error"),
+            (Error::Runtime("x".into()), "runtime error"),
+            (Error::UnknownPlatform("x".into()), "unknown platform"),
+            (Error::Xla("x".into()), "xla error"),
+        ];
+        for (e, prefix) in cases {
+            assert!(e.to_string().starts_with(prefix), "{e}");
+        }
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+    }
+}

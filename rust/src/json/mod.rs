@@ -1,0 +1,193 @@
+//! Minimal JSON substrate (no `serde` in the offline vendor set).
+//!
+//! Spatter needs JSON in three places: multi-pattern run configs
+//! (paper §3.3 “JSON Specification”), the AOT artifact manifest written
+//! by `python/compile/aot.py`, and machine-readable result output.
+//! This module provides a strict RFC-8259 parser, a value model, and a
+//! writer — enough for all three, with real error positions.
+
+mod parse;
+mod write;
+
+pub use parse::parse;
+pub use write::{to_string, to_string_pretty};
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed JSON value. Objects use a BTreeMap so output is
+/// deterministic (useful for golden-file tests).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<Value>),
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Fetch `key` from an object, or a schema error naming the key.
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        match self {
+            Value::Object(m) => m
+                .get(key)
+                .ok_or_else(|| Error::Json(format!("missing key '{key}'"))),
+            _ => Err(Error::Json(format!(
+                "expected object while looking up '{key}'"
+            ))),
+        }
+    }
+
+    /// Optional object lookup.
+    pub fn get_opt(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Object(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::String(s) => Ok(s),
+            v => Err(Error::Json(format!("expected string, got {}", v.kind()))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Number(n) => Ok(*n),
+            v => Err(Error::Json(format!("expected number, got {}", v.kind()))),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        let n = self.as_f64()?;
+        if n.fract() != 0.0 || n.abs() > 9.0e15 {
+            return Err(Error::Json(format!("expected integer, got {n}")));
+        }
+        Ok(n as i64)
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_i64()?;
+        usize::try_from(n)
+            .map_err(|_| Error::Json(format!("expected non-negative integer, got {n}")))
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            v => Err(Error::Json(format!("expected bool, got {}", v.kind()))),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[Value]> {
+        match self {
+            Value::Array(a) => Ok(a),
+            v => Err(Error::Json(format!("expected array, got {}", v.kind()))),
+        }
+    }
+
+    pub fn as_object(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(m) => Ok(m),
+            v => Err(Error::Json(format!("expected object, got {}", v.kind()))),
+        }
+    }
+
+    /// Human-readable kind name for error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Number(_) => "number",
+            Value::String(_) => "string",
+            Value::Array(_) => "array",
+            Value::Object(_) => "object",
+        }
+    }
+}
+
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Number(n)
+    }
+}
+impl From<i64> for Value {
+    fn from(n: i64) -> Self {
+        Value::Number(n as f64)
+    }
+}
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Number(n as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::String(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::String(s)
+    }
+}
+impl From<Vec<Value>> for Value {
+    fn from(a: Vec<Value>) -> Self {
+        Value::Array(a)
+    }
+}
+
+/// Convenience builder for objects: `obj(&[("k", v)])`.
+pub fn obj(pairs: &[(&str, Value)]) -> Value {
+    Value::Object(
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors_roundtrip() {
+        let v = obj(&[
+            ("a", Value::from(1i64)),
+            ("b", Value::from("x")),
+            ("c", Value::from(true)),
+            ("d", Value::Array(vec![Value::from(2i64)])),
+        ]);
+        assert_eq!(v.get("a").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(v.get("b").unwrap().as_str().unwrap(), "x");
+        assert!(v.get("c").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("d").unwrap().as_array().unwrap().len(), 1);
+        assert!(v.get("missing").is_err());
+        assert!(v.get("a").unwrap().as_str().is_err());
+    }
+
+    #[test]
+    fn integer_bounds() {
+        assert!(Value::Number(1.5).as_i64().is_err());
+        assert!(Value::Number(-1.0).as_usize().is_err());
+        assert_eq!(Value::Number(42.0).as_usize().unwrap(), 42);
+    }
+
+    #[test]
+    fn kind_names() {
+        assert_eq!(Value::Null.kind(), "null");
+        assert_eq!(Value::Number(0.0).kind(), "number");
+        assert_eq!(Value::Array(vec![]).kind(), "array");
+    }
+}

@@ -1,0 +1,54 @@
+//! # Spatter — a tool for evaluating gather/scatter performance
+//!
+//! Rust + JAX + Pallas reproduction of *“Spatter: A Tool for Evaluating
+//! Gather / Scatter Performance”* (Lavin et al., 2018).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas gather/scatter kernels (`python/compile/kernels/`),
+//!   AOT-lowered to HLO text at build time.
+//! * **L2** — JAX run graphs (`python/compile/model.py`), one artifact
+//!   per (kernel × geometry) variant.
+//! * **L3** — this crate: the Spatter pattern language, run protocol,
+//!   statistics, backends (memory-hierarchy simulators for the paper's
+//!   ten platforms plus real execution through PJRT-CPU), the trace
+//!   analysis pipeline for mini-app pattern extraction, and the
+//!   experiment suite that regenerates every table and figure in the
+//!   paper's evaluation.
+//!
+//! Python never runs at benchmark time: `make artifacts` is the only
+//! Python entry point, and the `spatter` binary is self-contained after
+//! artifacts exist.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use spatter::pattern::{Pattern, Kernel};
+//! use spatter::platforms;
+//! use spatter::backends::{Backend, OpenMpSim};
+//!
+//! // STREAM-like run: ./spatter -k Gather -p UNIFORM:8:1 -d 8 -l N
+//! let pat = Pattern::parse("UNIFORM:8:1").unwrap()
+//!     .with_delta(8).with_count(1 << 20);
+//! let skx = platforms::by_name("skx").unwrap();
+//! let mut backend = OpenMpSim::new(&skx);
+//! let res = backend.run(&pat, Kernel::Gather).unwrap();
+//! println!("{:.1} GB/s", res.bandwidth_gbs());
+//! ```
+
+pub mod backends;
+pub mod cli;
+pub mod coordinator;
+pub mod error;
+pub mod json;
+pub mod pattern;
+pub mod platforms;
+pub mod prop;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod suite;
+pub mod trace;
+
+pub use error::{Error, Result};

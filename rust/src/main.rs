@@ -1,0 +1,199 @@
+//! `spatter` — the benchmark CLI (paper §3 usage).
+//!
+//! ```text
+//! spatter -k Gather -p UNIFORM:8:1 -d 8 -l 2^24 -a skx
+//! spatter -j config.json -a bdw -b scalar
+//! spatter --suite all --out bench_out
+//! ```
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use spatter::backends::{Backend, CudaSim, OpenMpSim, PjrtBackend, ScalarSim};
+use spatter::cli::{self, BackendKind, Command, CommonArgs};
+use spatter::coordinator::{self, Aggregate, RunRecord};
+use spatter::error::{Error, Result};
+use spatter::json::{self, Value};
+use spatter::pattern::table5;
+use spatter::platforms;
+use spatter::report::Table;
+use spatter::suite;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("spatter: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    match cli::parse_args(args)? {
+        Command::Help => {
+            println!("{}", cli::USAGE);
+            Ok(())
+        }
+        Command::ListPlatforms => {
+            let mut t = Table::new(&["name", "type", "description", "STREAM GB/s"]);
+            for p in platforms::all() {
+                t.row(&[
+                    p.name().to_string(),
+                    if p.is_gpu() { "GPU" } else { "CPU" }.to_string(),
+                    p.full_name().to_string(),
+                    format!("{:.1}", p.stream_gbs()),
+                ]);
+            }
+            println!("{}", t.render());
+            Ok(())
+        }
+        Command::ListPatterns => {
+            let mut t = Table::new(&["name", "kernel", "delta", "class", "index buffer (head)"]);
+            for p in table5::all() {
+                t.row(&[
+                    p.name.to_string(),
+                    p.kernel.name().to_string(),
+                    p.delta.to_string(),
+                    if p.class.is_empty() { "Complex" } else { p.class }.to_string(),
+                    format!("{:?}...", &p.indices[..6.min(p.indices.len())]),
+                ]);
+            }
+            println!("{}", t.render());
+            Ok(())
+        }
+        Command::Suite { name, out_dir } => {
+            let ctx = suite::SuiteContext::new(Path::new(&out_dir));
+            let report = suite::run(&name, &ctx)?;
+            println!("{report}");
+            println!("CSV series written to {out_dir}/");
+            Ok(())
+        }
+        Command::Run(r) => {
+            let record = with_backend(&r.common, |backend| {
+                coordinator::run_one(backend, &r.pattern.spec, &r.pattern, r.kernel)
+            })?;
+            emit(&[record], &r.common);
+            Ok(())
+        }
+        Command::Json { path, common } => {
+            let configs = coordinator::parse_config_file(Path::new(&path))?;
+            let records = with_backend(&common, |backend| {
+                coordinator::run_configs(backend, &configs)
+            })?;
+            emit(&records, &common);
+            Ok(())
+        }
+    }
+}
+
+/// Build the selected backend and run `f` against it.
+fn with_backend<T>(
+    common: &CommonArgs,
+    f: impl FnOnce(&mut dyn Backend) -> Result<T>,
+) -> Result<T> {
+    match common.backend {
+        BackendKind::OpenMp => {
+            let p = platforms::by_name(&common.platform)?;
+            let mut b = OpenMpSim::new(&p);
+            f(&mut b)
+        }
+        BackendKind::Scalar => {
+            let p = platforms::by_name(&common.platform)?;
+            let mut b = ScalarSim::new(&p);
+            f(&mut b)
+        }
+        BackendKind::Cuda => {
+            let p = platforms::gpu_by_name(&common.platform).map_err(|_| {
+                Error::Cli(format!(
+                    "backend cuda needs a GPU platform (got '{}'); try k40c, \
+                     titanxp, p100, v100",
+                    common.platform
+                ))
+            })?;
+            let mut b = CudaSim::new(&p);
+            f(&mut b)
+        }
+        BackendKind::Pjrt => {
+            let mut b = PjrtBackend::open_default()?;
+            if common.validate {
+                b.validate()?;
+            }
+            b.runs = common.runs;
+            f(&mut b)
+        }
+    }
+}
+
+/// Print records as a table (default) or JSON (--json-out), plus the
+/// paper's aggregate stats for multi-run sets.
+fn emit(records: &[RunRecord], common: &CommonArgs) {
+    if common.json_out {
+        let arr: Vec<Value> = records.iter().map(|r| r.to_json()).collect();
+        let mut doc = vec![("runs".to_string(), Value::Array(arr))];
+        if let Some(agg) = Aggregate::from_records(records) {
+            doc.push(("aggregate".to_string(), agg.to_json()));
+        }
+        let obj = Value::Object(doc.into_iter().collect());
+        println!("{}", json::to_string_pretty(&obj));
+        return;
+    }
+    let mut t = Table::new(&["name", "kernel", "V", "delta", "count", "time (s)", "GB/s", "bound by"]);
+    for r in records {
+        t.row(&[
+            r.name.clone(),
+            r.kernel.name().to_string(),
+            r.vector_len.to_string(),
+            r.delta.to_string(),
+            r.count.to_string(),
+            format!("{:.6}", r.seconds),
+            format!("{:.2}", r.bandwidth_gbs),
+            r.bottleneck.clone(),
+        ]);
+    }
+    println!("{}", t.render());
+    if records.len() > 1 {
+        if let Some(agg) = Aggregate::from_records(records) {
+            println!(
+                "aggregate over {} configs: min {:.2} GB/s, max {:.2} GB/s, \
+                 harmonic mean {:.2} GB/s",
+                agg.runs, agg.min_gbs, agg.max_gbs, agg.harmonic_mean_gbs
+            );
+        }
+    }
+}
+
+/// One gather kernel invocation used by tests to assert the binary
+/// wiring stays intact.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_id_on_cli() {
+        let args: Vec<String> = "-k Gather -p PENNANT-G4 -l 1024 -a skx"
+            .split_whitespace()
+            .map(|s| s.to_string())
+            .collect();
+        run(&args).unwrap();
+    }
+
+    #[test]
+    fn run_invocation_end_to_end() {
+        let args: Vec<String> = "-k Gather -p UNIFORM:8:2 -d 16 -l 4096 -a bdw"
+            .split_whitespace()
+            .map(|s| s.to_string())
+            .collect();
+        run(&args).unwrap();
+    }
+
+    #[test]
+    fn bad_platform_is_error() {
+        let args: Vec<String> = "-k Gather -p UNIFORM:8:2 -d 16 -a nope"
+            .split_whitespace()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(run(&args).is_err());
+    }
+}

@@ -1,0 +1,217 @@
+//! Built-in parameterized index buffers (paper §3.3.1–3.3.3).
+
+use crate::error::{Error, Result};
+
+/// `UNIFORM:N:STRIDE` — N indices, uniform stride.
+/// Paper example: `UNIFORM:8:4` → `[0,4,8,12,...]` (their text shows the
+/// first four of eight).
+pub fn uniform(n: usize, stride: usize) -> Result<Vec<i64>> {
+    if n == 0 {
+        return Err(Error::PatternParse("UNIFORM: N must be > 0".into()));
+    }
+    if stride == 0 {
+        return Err(Error::PatternParse("UNIFORM: stride must be > 0".into()));
+    }
+    Ok((0..n).map(|i| (i * stride) as i64).collect())
+}
+
+/// `MS1:N:BREAKS:GAPS` — mostly-stride-1: runs of consecutive indices
+/// with jumps at positions BREAKS of sizes GAPS.
+///
+/// Paper example: `MS1:8:4:20` → `[0,1,2,3,23,24,25,26]`: at position 4
+/// the index jumps by 20 instead of 1.
+///
+/// BREAKS and GAPS may be comma-separated lists of equal length (or a
+/// single gap shared across all breaks).
+pub fn ms1(n: usize, breaks: &[usize], gaps: &[i64]) -> Result<Vec<i64>> {
+    if n == 0 {
+        return Err(Error::PatternParse("MS1: N must be > 0".into()));
+    }
+    if breaks.is_empty() {
+        return Err(Error::PatternParse("MS1: need at least one break".into()));
+    }
+    if gaps.len() != breaks.len() && gaps.len() != 1 {
+        return Err(Error::PatternParse(format!(
+            "MS1: {} breaks but {} gaps (need equal or a single gap)",
+            breaks.len(),
+            gaps.len()
+        )));
+    }
+    for (k, &b) in breaks.iter().enumerate() {
+        if b == 0 || b >= n {
+            return Err(Error::PatternParse(format!(
+                "MS1: break {b} out of range 1..{n}"
+            )));
+        }
+        if k > 0 && breaks[k - 1] >= b {
+            return Err(Error::PatternParse(
+                "MS1: breaks must be strictly increasing".into(),
+            ));
+        }
+    }
+    if gaps.iter().any(|&g| g < 1) {
+        return Err(Error::PatternParse("MS1: gaps must be >= 1".into()));
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut cur: i64 = 0;
+    let mut bk = 0usize;
+    for i in 0..n {
+        if i > 0 {
+            let jump = if bk < breaks.len() && breaks[bk] == i {
+                let g = if gaps.len() == 1 { gaps[0] } else { gaps[bk] };
+                bk += 1;
+                g
+            } else {
+                1
+            };
+            cur += jump;
+        }
+        out.push(cur);
+    }
+    Ok(out)
+}
+
+/// `LAPLACIAN:D:L:SIZE` — D-dimensional Laplacian stencil with branch
+/// length L on a SIZE^D problem (paper §3.3.3).
+///
+/// Offsets are `{0} ∪ {± l * SIZE^d : d < D, 1 <= l <= L}`, shifted so
+/// the smallest is zero (Spatter buffers are zero-based).
+///
+/// Paper example: `LAPLACIAN:2:2:100` →
+/// `[0,100,198,199,200,201,202,300,400]`
+/// (the zero-based form of `[-200,-100,-2,-1,0,1,2,100,200]`).
+pub fn laplacian(dims: usize, branch: usize, size: usize) -> Result<Vec<i64>> {
+    if !(1..=3).contains(&dims) {
+        return Err(Error::PatternParse(format!(
+            "LAPLACIAN: D must be 1, 2, or 3 (got {dims})"
+        )));
+    }
+    if branch == 0 {
+        return Err(Error::PatternParse("LAPLACIAN: L must be > 0".into()));
+    }
+    if size == 0 {
+        return Err(Error::PatternParse("LAPLACIAN: SIZE must be > 0".into()));
+    }
+    let mut offsets: Vec<i64> = vec![0];
+    let mut scale: i64 = 1;
+    for _ in 0..dims {
+        for l in 1..=branch as i64 {
+            offsets.push(l * scale);
+            offsets.push(-l * scale);
+        }
+        scale = scale
+            .checked_mul(size as i64)
+            .ok_or_else(|| Error::PatternParse("LAPLACIAN: size overflow".into()))?;
+    }
+    offsets.sort_unstable();
+    offsets.dedup();
+    let min = *offsets.first().unwrap();
+    Ok(offsets.into_iter().map(|o| o - min).collect())
+}
+
+/// `RANDOM:N:RANGE[:SEED]` — N uniform-random indices in `[0, RANGE)`,
+/// deterministic per seed. Extension covering the paper's §6 remark
+/// that Spatter "contains kernels for modeling random access"
+/// (GUPS/RandomAccess-like streams).
+pub fn random(n: usize, range: usize, seed: u64) -> Result<Vec<i64>> {
+    if n == 0 {
+        return Err(Error::PatternParse("RANDOM: N must be > 0".into()));
+    }
+    if range == 0 {
+        return Err(Error::PatternParse("RANDOM: RANGE must be > 0".into()));
+    }
+    let mut g = crate::prop::Gen::new(seed ^ 0x5747_7445_5221_4e44);
+    Ok((0..n).map(|_| g.i64_in(0, range as i64 - 1)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_matches_paper() {
+        assert_eq!(uniform(4, 4).unwrap(), vec![0, 4, 8, 12]);
+        assert_eq!(uniform(8, 1).unwrap(), (0..8).collect::<Vec<i64>>());
+        assert!(uniform(0, 1).is_err());
+        assert!(uniform(8, 0).is_err());
+    }
+
+    #[test]
+    fn ms1_matches_paper() {
+        // MS1:8:4:20 -> [0,1,2,3,23,24,25,26]
+        assert_eq!(
+            ms1(8, &[4], &[20]).unwrap(),
+            vec![0, 1, 2, 3, 23, 24, 25, 26]
+        );
+    }
+
+    #[test]
+    fn ms1_multiple_breaks() {
+        // breaks at 2 and 5, gaps 10 and 100
+        assert_eq!(
+            ms1(7, &[2, 5], &[10, 100]).unwrap(),
+            vec![0, 1, 11, 12, 13, 113, 114]
+        );
+        // single shared gap
+        assert_eq!(
+            ms1(6, &[2, 4], &[5]).unwrap(),
+            vec![0, 1, 6, 7, 12, 13]
+        );
+    }
+
+    #[test]
+    fn ms1_rejects_bad_params() {
+        assert!(ms1(0, &[1], &[2]).is_err());
+        assert!(ms1(8, &[], &[2]).is_err());
+        assert!(ms1(8, &[0], &[2]).is_err());
+        assert!(ms1(8, &[9], &[2]).is_err());
+        assert!(ms1(8, &[4, 2], &[2, 2]).is_err());
+        assert!(ms1(8, &[2, 4], &[2, 2, 2]).is_err());
+        assert!(ms1(8, &[4], &[0]).is_err());
+    }
+
+    #[test]
+    fn laplacian_matches_paper() {
+        // LAPLACIAN:2:2:100 -> [0,100,198,199,200,201,202,300,400]
+        assert_eq!(
+            laplacian(2, 2, 100).unwrap(),
+            vec![0, 100, 198, 199, 200, 201, 202, 300, 400]
+        );
+    }
+
+    #[test]
+    fn laplacian_1d_5point() {
+        // classic 1-D 3-point: [-1,0,1] -> [0,1,2]
+        assert_eq!(laplacian(1, 1, 50).unwrap(), vec![0, 1, 2]);
+        // 2-D 5-point: [-100,-1,0,1,100] -> [0,99,100,101,200]
+        assert_eq!(
+            laplacian(2, 1, 100).unwrap(),
+            vec![0, 99, 100, 101, 200]
+        );
+    }
+
+    #[test]
+    fn laplacian_3d_7point() {
+        let idx = laplacian(3, 1, 10).unwrap();
+        // offsets {-100,-10,-1,0,1,10,100} shifted +100
+        assert_eq!(idx, vec![0, 90, 99, 100, 101, 110, 200]);
+    }
+
+    #[test]
+    fn laplacian_rejects_bad_params() {
+        assert!(laplacian(0, 1, 10).is_err());
+        assert!(laplacian(4, 1, 10).is_err());
+        assert!(laplacian(2, 0, 10).is_err());
+        assert!(laplacian(2, 1, 0).is_err());
+    }
+
+    #[test]
+    fn laplacian_dedups_small_sizes() {
+        // size 1 collapses cross-dimension offsets; must stay sorted+unique
+        let idx = laplacian(2, 1, 1).unwrap();
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(idx, sorted);
+    }
+}

@@ -1,0 +1,422 @@
+//! The Spatter pattern language (paper §3.3).
+//!
+//! A memory access pattern is `(kernel, index-buffer, delta, count)`:
+//! at base address `delta*i` (elements, i.e. doubles), perform a gather
+//! or scatter with the offsets in the index buffer.
+//!
+//! Built-in parameterized index buffers:
+//!
+//! * `UNIFORM:N:STRIDE` — N indices with uniform stride.
+//! * `MS1:N:BREAKS:GAPS` — mostly-stride-1 with jumps at BREAKS of size
+//!   GAPS (both may be comma-separated lists).
+//! * `LAPLACIAN:D:L:SIZE` — D-dimensional Laplacian stencil, branch
+//!   length L, problem size SIZE per dimension.
+//! * custom — an explicit comma-separated index list.
+
+mod builtin;
+mod spec;
+pub mod table5;
+
+pub use builtin::{laplacian, ms1, uniform};
+pub use spec::parse_spec;
+
+use crate::error::{Error, Result};
+
+/// Gather (indexed read) or Scatter (indexed write) — paper Algorithm 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kernel {
+    Gather,
+    Scatter,
+}
+
+impl Kernel {
+    pub fn parse(s: &str) -> Result<Kernel> {
+        match s.to_ascii_lowercase().as_str() {
+            "gather" | "g" => Ok(Kernel::Gather),
+            "scatter" | "s" => Ok(Kernel::Scatter),
+            _ => Err(Error::PatternParse(format!(
+                "unknown kernel '{s}' (expected Gather or Scatter)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Gather => "Gather",
+            Kernel::Scatter => "Scatter",
+        }
+    }
+}
+
+/// The paper's taxonomy of observed G/S pattern classes (§2, Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PatternClass {
+    /// Every index a fixed distance from its predecessor.
+    UniformStride(usize),
+    /// Some indices repeat (elements of a gather share an index).
+    Broadcast,
+    /// Runs of stride-1 with occasional jumps.
+    MostlyStride1,
+    /// Anything else.
+    Complex,
+}
+
+impl PatternClass {
+    pub fn name(&self) -> String {
+        match self {
+            PatternClass::UniformStride(1) => "Stride-1".to_string(),
+            PatternClass::UniformStride(s) => format!("Stride-{s}"),
+            PatternClass::Broadcast => "Broadcast".to_string(),
+            PatternClass::MostlyStride1 => "Mostly Stride-1".to_string(),
+            PatternClass::Complex => "Complex".to_string(),
+        }
+    }
+}
+
+/// A fully-specified Spatter run input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pattern {
+    /// Human-readable spec (what the user typed, or a pattern name).
+    pub spec: String,
+    /// The index buffer (element offsets, not bytes).
+    pub indices: Vec<i64>,
+    /// Elements between consecutive gather/scatter base addresses.
+    pub delta: i64,
+    /// Extension (paper §7 future work 1, "time delta patterns"):
+    /// when non-empty, the base advance *cycles* through this list
+    /// instead of using the single `delta` — e.g. `[0, 0, 0, 16]`
+    /// revisits the same base three times before jumping, expressing
+    /// temporal locality. Empty = classic single-delta behaviour.
+    pub deltas: Vec<i64>,
+    /// Number of gathers or scatters to perform (`-l` in the CLI).
+    pub count: usize,
+}
+
+impl Pattern {
+    /// Parse a pattern spec string (builtin or custom index list).
+    /// Delta defaults to 0 gathers... callers set delta/count via the
+    /// `with_*` builders or CLI flags.
+    pub fn parse(spec: &str) -> Result<Pattern> {
+        let indices = parse_spec(spec)?;
+        Ok(Pattern {
+            spec: spec.to_string(),
+            indices,
+            delta: 1,
+            deltas: Vec::new(),
+            count: 1,
+        })
+    }
+
+    /// Build directly from an explicit index buffer.
+    pub fn from_indices(name: &str, indices: Vec<i64>) -> Pattern {
+        Pattern {
+            spec: name.to_string(),
+            indices,
+            delta: 1,
+            deltas: Vec::new(),
+            count: 1,
+        }
+    }
+
+    pub fn with_delta(mut self, delta: i64) -> Pattern {
+        self.delta = delta;
+        self.deltas.clear();
+        self
+    }
+
+    /// Cycle through a list of deltas (temporal-locality extension).
+    /// A single-element list degrades to `with_delta`.
+    pub fn with_deltas(mut self, deltas: &[i64]) -> Pattern {
+        if deltas.len() == 1 {
+            return self.with_delta(deltas[0]);
+        }
+        self.deltas = deltas.to_vec();
+        self.delta = if deltas.is_empty() { 1 } else { deltas[0] };
+        self
+    }
+
+    /// Base element address of gather/scatter `i`.
+    pub fn base(&self, i: usize) -> i64 {
+        if self.deltas.len() <= 1 {
+            return self.delta * i as i64;
+        }
+        let k = self.deltas.len();
+        let cycle: i64 = self.deltas.iter().sum();
+        let mut b = cycle * (i / k) as i64;
+        for &d in &self.deltas[..i % k] {
+            b += d;
+        }
+        b
+    }
+
+    /// The advance applied after gather/scatter `i` (for incremental
+    /// base tracking in the hot loops).
+    pub fn delta_at(&self, i: usize) -> i64 {
+        if self.deltas.len() <= 1 {
+            self.delta
+        } else {
+            self.deltas[i % self.deltas.len()]
+        }
+    }
+
+    /// Average base advance per iteration (for pattern-level
+    /// heuristics: TLB sparseness, coherence overlap).
+    pub fn mean_delta(&self) -> f64 {
+        if self.deltas.len() <= 1 {
+            self.delta as f64
+        } else {
+            self.deltas.iter().sum::<i64>() as f64 / self.deltas.len() as f64
+        }
+    }
+
+    pub fn with_count(mut self, count: usize) -> Pattern {
+        self.count = count;
+        self
+    }
+
+    pub fn with_name(mut self, name: &str) -> Pattern {
+        self.spec = name.to_string();
+        self
+    }
+
+    /// Index-buffer length (the paper's V / vector length).
+    pub fn vector_len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Largest index in the buffer.
+    pub fn max_index(&self) -> i64 {
+        self.indices.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Number of data elements the target array must hold:
+    /// `base(count-1) + max(idx) + 1` (paper: "Spatter will determine
+    /// the amount of memory required from these inputs").
+    pub fn required_elements(&self) -> usize {
+        let last_base = self.base(self.count.saturating_sub(1)).max(0) as usize;
+        last_base + self.max_index().max(0) as usize + 1
+    }
+
+    /// Useful bytes moved by the whole run (the paper's bandwidth
+    /// numerator): `sizeof(double) * len(index) * count`.
+    pub fn moved_bytes(&self) -> usize {
+        8 * self.indices.len() * self.count
+    }
+
+    /// Validate that the pattern is executable.
+    pub fn validate(&self) -> Result<()> {
+        if self.indices.is_empty() {
+            return Err(Error::Config("empty index buffer".into()));
+        }
+        if self.count == 0 {
+            return Err(Error::Config("count must be > 0".into()));
+        }
+        if let Some(&neg) = self.indices.iter().find(|&&i| i < 0) {
+            return Err(Error::Config(format!(
+                "negative index {neg} (index buffers are zero-based)"
+            )));
+        }
+        if self.delta < 0 {
+            return Err(Error::Config(format!("negative delta {}", self.delta)));
+        }
+        if let Some(&neg) = self.deltas.iter().find(|&&d| d < 0) {
+            return Err(Error::Config(format!("negative delta {neg} in list")));
+        }
+        // Guard against address-space overflow in the simulators.
+        let span = self.required_elements();
+        if span.checked_mul(8).is_none() || span > (1usize << 46) {
+            return Err(Error::Config(format!(
+                "pattern spans {span} elements — address overflow"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Classify the index buffer per the paper's taxonomy (§2).
+    pub fn classify(&self) -> PatternClass {
+        classify_indices(&self.indices)
+    }
+
+    /// The `(i, j) -> element address` map, materialized lazily.
+    /// `addr = base(i) + idx[j]`.
+    pub fn address(&self, i: usize, j: usize) -> i64 {
+        self.base(i) + self.indices[j]
+    }
+}
+
+/// Classify an index buffer per the paper's pattern taxonomy.
+pub fn classify_indices(indices: &[i64]) -> PatternClass {
+    if indices.len() < 2 {
+        return PatternClass::UniformStride(1);
+    }
+    // Broadcast: any repeated index.
+    let mut sorted = indices.to_vec();
+    sorted.sort_unstable();
+    if sorted.windows(2).any(|w| w[0] == w[1]) {
+        return PatternClass::Broadcast;
+    }
+    // Uniform stride: constant positive difference.
+    let d0 = indices[1] - indices[0];
+    if d0 > 0 && indices.windows(2).all(|w| w[1] - w[0] == d0) {
+        return PatternClass::UniformStride(d0 as usize);
+    }
+    // Mostly stride-1: >= half of the consecutive diffs are exactly 1
+    // and the buffer is monotone increasing.
+    let diffs: Vec<i64> = indices.windows(2).map(|w| w[1] - w[0]).collect();
+    let ones = diffs.iter().filter(|&&d| d == 1).count();
+    if diffs.iter().all(|&d| d > 0) && ones * 2 >= diffs.len() {
+        return PatternClass::MostlyStride1;
+    }
+    PatternClass::Complex
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_parse() {
+        assert_eq!(Kernel::parse("Gather").unwrap(), Kernel::Gather);
+        assert_eq!(Kernel::parse("scatter").unwrap(), Kernel::Scatter);
+        assert_eq!(Kernel::parse("G").unwrap(), Kernel::Gather);
+        assert!(Kernel::parse("both").is_err());
+    }
+
+    #[test]
+    fn stream_like_sizing() {
+        // Paper §3.4: ./spatter -k Gather -p UNIFORM:8:1 -d 8 -l 2^24
+        let p = Pattern::parse("UNIFORM:8:1")
+            .unwrap()
+            .with_delta(8)
+            .with_count(1 << 24);
+        assert_eq!(p.vector_len(), 8);
+        assert_eq!(p.moved_bytes(), 8 * 8 * (1 << 24));
+        assert_eq!(p.required_elements(), 8 * ((1 << 24) - 1) + 7 + 1);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn address_map() {
+        let p = Pattern::from_indices("t", vec![0, 4, 8])
+            .with_delta(2)
+            .with_count(4);
+        assert_eq!(p.address(0, 0), 0);
+        assert_eq!(p.address(3, 2), 6 + 8);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        assert!(Pattern::from_indices("e", vec![])
+            .with_count(1)
+            .validate()
+            .is_err());
+        assert!(Pattern::from_indices("n", vec![-1])
+            .validate()
+            .is_err());
+        assert!(Pattern::from_indices("z", vec![0])
+            .with_count(0)
+            .validate()
+            .is_err());
+        assert!(Pattern::from_indices("d", vec![0])
+            .with_delta(-3)
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn delta_zero_is_valid() {
+        // LULESH-S3 is a scatter with delta 0 — must be accepted.
+        let p = Pattern::from_indices("s3", vec![0, 24, 48])
+            .with_delta(0)
+            .with_count(100);
+        p.validate().unwrap();
+        assert_eq!(p.required_elements(), 49);
+    }
+
+    #[test]
+    fn classify_taxonomy() {
+        assert_eq!(
+            classify_indices(&[0, 1, 2, 3]),
+            PatternClass::UniformStride(1)
+        );
+        assert_eq!(
+            classify_indices(&[0, 24, 48, 72]),
+            PatternClass::UniformStride(24)
+        );
+        assert_eq!(
+            classify_indices(&[0, 0, 1, 1]),
+            PatternClass::Broadcast
+        );
+        assert_eq!(
+            classify_indices(&[0, 1, 2, 3, 23, 24, 25, 26]),
+            PatternClass::MostlyStride1
+        );
+        assert_eq!(
+            classify_indices(&[4, 8, 12, 0, 20, 24, 28, 16]),
+            PatternClass::Complex
+        );
+    }
+
+    #[test]
+    fn multi_delta_base_cycles() {
+        // deltas [0, 0, 0, 16]: three revisits, then a jump.
+        let p = Pattern::from_indices("t", vec![0, 1])
+            .with_deltas(&[0, 0, 0, 16])
+            .with_count(9);
+        let bases: Vec<i64> = (0..9).map(|i| p.base(i)).collect();
+        assert_eq!(bases, vec![0, 0, 0, 0, 16, 16, 16, 16, 32]);
+        assert_eq!(p.delta_at(3), 16);
+        assert_eq!(p.delta_at(4), 0);
+        assert!((p.mean_delta() - 4.0).abs() < 1e-12);
+        // count must not be reset by with_deltas; with_count preserved.
+        assert_eq!(p.count, 9);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn multi_delta_required_elements() {
+        let p = Pattern::from_indices("t", vec![0, 7])
+            .with_deltas(&[2, 10])
+            .with_count(4);
+        // bases: 0, 2, 12, 14 -> last base 14, max idx 7 -> 22 elems
+        assert_eq!(p.required_elements(), 22);
+    }
+
+    #[test]
+    fn single_element_delta_list_degrades() {
+        let a = Pattern::from_indices("t", vec![0]).with_deltas(&[5]);
+        let b = Pattern::from_indices("t", vec![0]).with_delta(5);
+        assert_eq!(a, b);
+        assert!(a.deltas.is_empty());
+    }
+
+    #[test]
+    fn negative_delta_in_list_rejected() {
+        let p = Pattern::from_indices("t", vec![0])
+            .with_deltas(&[1, -2])
+            .with_count(4);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn random_spec_is_deterministic_and_bounded() {
+        let a = parse_spec("RANDOM:32:1000").unwrap();
+        let b = parse_spec("RANDOM:32:1000").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 32);
+        assert!(a.iter().all(|&i| (0..1000).contains(&i)));
+        // different seed -> different buffer (overwhelmingly)
+        let c = parse_spec("RANDOM:32:1000:7").unwrap();
+        assert_ne!(a, c);
+        assert!(parse_spec("RANDOM:0:10").is_err());
+        assert!(parse_spec("RANDOM:8:0").is_err());
+        assert!(parse_spec("RANDOM:8").is_err());
+    }
+
+    #[test]
+    fn classify_names() {
+        assert_eq!(PatternClass::UniformStride(1).name(), "Stride-1");
+        assert_eq!(PatternClass::UniformStride(24).name(), "Stride-24");
+        assert_eq!(PatternClass::Broadcast.name(), "Broadcast");
+    }
+}

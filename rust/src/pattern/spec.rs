@@ -1,0 +1,140 @@
+//! Pattern spec string parsing: `UNIFORM:..`, `MS1:..`, `LAPLACIAN:..`,
+//! or a custom comma-separated index list (paper §3.3.4).
+
+use super::builtin::{laplacian, ms1, random, uniform};
+use crate::error::{Error, Result};
+
+/// Parse a pattern spec into an index buffer.
+pub fn parse_spec(spec: &str) -> Result<Vec<i64>> {
+    let s = spec.trim();
+    if s.is_empty() {
+        return Err(Error::PatternParse("empty pattern spec".into()));
+    }
+    let upper = s.to_ascii_uppercase();
+    if upper.starts_with("UNIFORM:") {
+        let parts = tail_parts(s, 2, "UNIFORM:N:STRIDE")?;
+        return uniform(parse_num(&parts[0])?, parse_num(&parts[1])?);
+    }
+    if upper.starts_with("MS1:") {
+        let parts = tail_parts(s, 3, "MS1:N:BREAKS:GAPS")?;
+        let n: usize = parse_num(&parts[0])?;
+        let breaks = parse_list::<usize>(&parts[1])?;
+        let gaps = parse_list::<i64>(&parts[2])?;
+        return ms1(n, &breaks, &gaps);
+    }
+    if upper.starts_with("LAPLACIAN:") {
+        let parts = tail_parts(s, 3, "LAPLACIAN:D:L:SIZE")?;
+        return laplacian(
+            parse_num(&parts[0])?,
+            parse_num(&parts[1])?,
+            parse_num(&parts[2])?,
+        );
+    }
+    if upper.starts_with("RANDOM:") {
+        // RANDOM:N:RANGE or RANDOM:N:RANGE:SEED
+        let tail = &s[s.find(':').unwrap() + 1..];
+        let parts: Vec<&str> = tail.split(':').map(|p| p.trim()).collect();
+        if parts.len() == 2 {
+            return random(parse_num(parts[0])?, parse_num(parts[1])?, 0);
+        }
+        if parts.len() == 3 {
+            return random(
+                parse_num(parts[0])?,
+                parse_num(parts[1])?,
+                parse_num(parts[2])?,
+            );
+        }
+        return Err(Error::PatternParse(format!(
+            "expected RANDOM:N:RANGE[:SEED], got '{s}'"
+        )));
+    }
+    // Custom: comma-separated index list.
+    let idx: Result<Vec<i64>> = s
+        .split(',')
+        .map(|t| {
+            t.trim().parse::<i64>().map_err(|_| {
+                Error::PatternParse(format!("bad index '{}' in custom pattern", t.trim()))
+            })
+        })
+        .collect();
+    let idx = idx?;
+    if idx.is_empty() {
+        return Err(Error::PatternParse("empty custom pattern".into()));
+    }
+    Ok(idx)
+}
+
+/// Split `KIND:a:b:...` after the first ':' into exactly `n` fields.
+fn tail_parts(s: &str, n: usize, usage: &str) -> Result<Vec<String>> {
+    let tail = &s[s.find(':').unwrap() + 1..];
+    let parts: Vec<String> = tail.split(':').map(|p| p.trim().to_string()).collect();
+    if parts.len() != n || parts.iter().any(|p| p.is_empty()) {
+        return Err(Error::PatternParse(format!(
+            "expected {usage}, got '{s}'"
+        )));
+    }
+    Ok(parts)
+}
+
+fn parse_num<T: std::str::FromStr>(s: &str) -> Result<T> {
+    s.parse::<T>()
+        .map_err(|_| Error::PatternParse(format!("bad number '{s}'")))
+}
+
+fn parse_list<T: std::str::FromStr>(s: &str) -> Result<Vec<T>> {
+    s.split(',').map(|t| parse_num::<T>(t.trim())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_spec() {
+        assert_eq!(parse_spec("UNIFORM:4:4").unwrap(), vec![0, 4, 8, 12]);
+        assert_eq!(parse_spec("uniform:2:1").unwrap(), vec![0, 1]);
+    }
+
+    #[test]
+    fn ms1_spec() {
+        assert_eq!(
+            parse_spec("MS1:8:4:20").unwrap(),
+            vec![0, 1, 2, 3, 23, 24, 25, 26]
+        );
+        // list forms
+        assert_eq!(
+            parse_spec("MS1:6:2,4:5,7").unwrap(),
+            vec![0, 1, 6, 7, 14, 15]
+        );
+    }
+
+    #[test]
+    fn laplacian_spec() {
+        assert_eq!(
+            parse_spec("LAPLACIAN:2:2:100").unwrap(),
+            vec![0, 100, 198, 199, 200, 201, 202, 300, 400]
+        );
+    }
+
+    #[test]
+    fn custom_spec() {
+        assert_eq!(parse_spec("0,24,48").unwrap(), vec![0, 24, 48]);
+        assert_eq!(parse_spec(" 1 , 2 ,3 ").unwrap(), vec![1, 2, 3]);
+        // Table 5 PENNANT-G4 broadcast buffer
+        assert_eq!(
+            parse_spec("0,0,0,0,1,1,1,1").unwrap(),
+            vec![0, 0, 0, 0, 1, 1, 1, 1]
+        );
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "", "UNIFORM", "UNIFORM:8", "UNIFORM:8:1:2", "UNIFORM:x:1",
+            "MS1:8:4", "MS1:8:4:20:1", "LAPLACIAN:2:2", "0,,2", "a,b",
+            "UNIFORM::1", "MS1:8::20",
+        ] {
+            assert!(parse_spec(bad).is_err(), "should reject: {bad:?}");
+        }
+    }
+}

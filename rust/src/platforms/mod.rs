@@ -1,0 +1,497 @@
+//! The paper's evaluation platforms (Table 3), expressed as simulator
+//! configurations.
+//!
+//! Peak DRAM bandwidths are the Table 3 STREAM / BabelStream column
+//! (the paper's own calibration anchor); micro-architectural knobs
+//! (cache geometry, prefetcher kind, gather/scatter issue costs, TLB
+//! reach, coherence penalty) are set from the mechanisms the paper
+//! identifies per platform plus public spec sheets.
+
+use crate::error::{Error, Result};
+use crate::sim::PrefetchKind;
+
+/// A simulated CPU platform (the paper's OpenMP/Scalar targets).
+#[derive(Debug, Clone)]
+pub struct CpuPlatform {
+    /// Short name used on the CLI and in reports ("bdw", "skx", ...).
+    pub name: &'static str,
+    /// Table 3 description.
+    pub full_name: &'static str,
+    /// Threads used by the paper's single-socket OpenMP protocol.
+    pub threads: usize,
+    pub freq_ghz: f64,
+    pub l1_kb: usize,
+    pub l1_assoc: usize,
+    pub l2_kb: usize,
+    pub l2_assoc: usize,
+    pub l3_mb: usize,
+    pub l3_assoc: usize,
+    /// STREAM bandwidth from Table 3 (GB/s) — DRAM calibration anchor.
+    pub stream_gbs: f64,
+    /// Per-thread L2 bandwidth (GB/s) and shared L3 bandwidth.
+    pub l2_gbs_per_thread: f64,
+    pub l3_gbs: f64,
+    pub dram_latency_ns: f64,
+    /// Outstanding-miss parallelism with vector G/S vs scalar loads.
+    pub mlp_vector: f64,
+    pub mlp_scalar: f64,
+    pub prefetch: PrefetchKind,
+    /// Issue cost of one element through a hardware gather, in cycles
+    /// per element per thread. `None` = no gather instruction (TX2).
+    pub gather_cycles_per_elem: Option<f64>,
+    /// Same for scatter. `None` = no scatter instruction (Naples AVX2,
+    /// BDW AVX2, TX2).
+    pub scatter_cycles_per_elem: Option<f64>,
+    /// Scalar load/store issue cost, cycles per element per thread.
+    pub scalar_cycles_per_elem: f64,
+    /// Relative DRAM efficiency of scalar-issued request streams vs
+    /// hardware G/S (paper §5.3: vector G/S "reduces overall unique
+    /// instruction count and overall request pressure on the memory
+    /// system"). < 1: scalar wastes bandwidth; > 1: the platform's
+    /// microcoded G/S is itself the less efficient requester (BDW).
+    pub scalar_dram_efficiency: f64,
+    /// dTLB entries (4 KiB pages) and page-walk cost.
+    pub tlb_entries: usize,
+    pub tlb_walk_ns: f64,
+    /// Cost per contended (cross-thread) write, ns.
+    pub coherence_ns: f64,
+    /// TX2's observed ability to absorb repeated overwrites of the same
+    /// lines (paper §5.4.2 item 1).
+    pub absorbs_repeated_writes: bool,
+}
+
+/// A simulated GPU platform (the paper's CUDA targets).
+#[derive(Debug, Clone)]
+pub struct GpuPlatform {
+    pub name: &'static str,
+    pub full_name: &'static str,
+    /// BabelStream bandwidth from Table 3 (GB/s).
+    pub stream_gbs: f64,
+    /// Memory-transaction granularity in bytes: 32 (sectored, Maxwell+)
+    /// or 128 (K40-era, L1-line transactions) — the Fig 5 coalescing
+    /// difference.
+    pub sector_bytes: u64,
+    /// DRAM row size and activation overhead (expressed as equivalent
+    /// bytes of transfer) — drives the slow decline past stride-8.
+    pub row_bytes: u64,
+    pub row_activate_bytes: f64,
+    /// L2 cache (bytes) and line size.
+    pub l2_kb: usize,
+    pub l2_assoc: usize,
+    /// Effective L2 bandwidth (GB/s) — caps in-cache reuse bandwidth.
+    pub l2_gbs: f64,
+    /// GPU TLB: entries x 64 KiB pages, miss cost in ns, and the
+    /// miss-level parallelism of the walkers.
+    pub tlb_entries: usize,
+    pub tlb_page_bytes: u64,
+    pub tlb_walk_ns: f64,
+    pub tlb_mlp: f64,
+    /// Write serialization cost for same-sector contention (delta-0
+    /// scatter), ns per write.
+    pub write_contend_ns: f64,
+    /// Aggregate memory-issue rate: transactions per nanosecond the
+    /// SMs can generate (caps small-stride in-cache patterns).
+    pub txn_per_ns: f64,
+}
+
+/// CPU registry, Table 3 order (plus Naples which appears in Figs 3/6
+/// and Table 4 with STREAM 97 GB/s).
+pub fn cpus() -> Vec<CpuPlatform> {
+    vec![
+        CpuPlatform {
+            name: "knl",
+            full_name: "Knights Landing (cache mode)",
+            threads: 64,
+            freq_ghz: 1.4,
+            l1_kb: 32, l1_assoc: 8,
+            l2_kb: 512, l2_assoc: 16,
+            l3_mb: 16, l3_assoc: 16, // MCDRAM direct-mapped cache stand-in
+            stream_gbs: 249.313,
+            l2_gbs_per_thread: 18.0,
+            l3_gbs: 380.0,
+            dram_latency_ns: 150.0,
+            mlp_vector: 24.0,
+            mlp_scalar: 6.0,
+            prefetch: PrefetchKind::Stride { degree: 2 },
+            // 2 AVX-512 VPUs but slow cores: vector G/S is the only way
+            // to keep the memory system busy (Fig 6: biggest win, best
+            // at small strides) — yet the gather itself is microcoded
+            // and port-bound, so cache-resident patterns stay far from
+            // the MCDRAM roofline (Table 4: KNL's AMG/Nekbone columns
+            // sit *below* its STREAM, decorrelating CPU R-values).
+            gather_cycles_per_elem: Some(3.2),
+            scatter_cycles_per_elem: Some(4.0),
+            // In-order-ish Silvermont-derived cores: scalar indexed
+            // loads are very slow — the Fig 6 "vectorize or starve".
+            scalar_cycles_per_elem: 6.0,
+            scalar_dram_efficiency: 0.50,
+            tlb_entries: 256,
+            tlb_walk_ns: 120.0,
+            coherence_ns: 260.0,
+            absorbs_repeated_writes: false,
+        },
+        CpuPlatform {
+            name: "bdw",
+            full_name: "Broadwell (E5-2695 v4, one socket)",
+            threads: 16,
+            freq_ghz: 2.4,
+            l1_kb: 32, l1_assoc: 8,
+            l2_kb: 256, l2_assoc: 8,
+            l3_mb: 40, l3_assoc: 16,
+            stream_gbs: 43.885,
+            l2_gbs_per_thread: 24.0,
+            l3_gbs: 180.0,
+            dram_latency_ns: 90.0,
+            mlp_vector: 10.0,
+            mlp_scalar: 8.0,
+            // Adjacent-line pair fetch that shuts off at 512 B strides
+            // (the §5.1.1 finding: two lines at small strides, one at
+            // stride-64).
+            prefetch: PrefetchKind::AdjacentLine { disable_at_bytes: 512 },
+            // AVX2 gather is microcoded on BDW: slower than scalar
+            // loads per element (Fig 6: negative improvement).
+            gather_cycles_per_elem: Some(2.8),
+            scatter_cycles_per_elem: None, // AVX2 has no scatter
+            scalar_cycles_per_elem: 2.2,
+            scalar_dram_efficiency: 1.10,
+            tlb_entries: 1536,
+            tlb_walk_ns: 70.0,
+            coherence_ns: 220.0,
+            absorbs_repeated_writes: false,
+        },
+        CpuPlatform {
+            name: "skx",
+            full_name: "Skylake (Platinum 8160, one socket)",
+            threads: 16,
+            freq_ghz: 2.1,
+            l1_kb: 32, l1_assoc: 8,
+            l2_kb: 1024, l2_assoc: 16,
+            l3_mb: 33, l3_assoc: 11,
+            stream_gbs: 97.163,
+            l2_gbs_per_thread: 42.0,
+            l3_gbs: 300.0,
+            dram_latency_ns: 85.0,
+            mlp_vector: 16.0,
+            mlp_scalar: 10.0,
+            // "always brings in two cache lines, no matter the stride"
+            prefetch: PrefetchKind::NextLine { degree: 1 },
+            gather_cycles_per_elem: Some(0.95),
+            scatter_cycles_per_elem: Some(1.6),
+            scalar_cycles_per_elem: 2.0,
+            scalar_dram_efficiency: 0.78,
+            tlb_entries: 1536,
+            tlb_walk_ns: 55.0,
+            coherence_ns: 240.0,
+            absorbs_repeated_writes: false,
+        },
+        CpuPlatform {
+            name: "clx",
+            full_name: "Cascade Lake (Platinum 8260L, one socket)",
+            threads: 12,
+            freq_ghz: 2.4,
+            l1_kb: 32, l1_assoc: 8,
+            l2_kb: 1024, l2_assoc: 16,
+            l3_mb: 36, l3_assoc: 11,
+            stream_gbs: 66.661,
+            l2_gbs_per_thread: 46.0,
+            l3_gbs: 320.0,
+            dram_latency_ns: 80.0,
+            mlp_vector: 18.0,
+            mlp_scalar: 10.0,
+            prefetch: PrefetchKind::NextLine { degree: 1 },
+            gather_cycles_per_elem: Some(0.9),
+            // CLX tweaks help hard-to-optimize scatters (§5.4.2 item 4)
+            scatter_cycles_per_elem: Some(1.3),
+            scalar_cycles_per_elem: 2.0,
+            scalar_dram_efficiency: 0.80,
+            tlb_entries: 1536,
+            tlb_walk_ns: 50.0,
+            coherence_ns: 190.0,
+            absorbs_repeated_writes: false,
+        },
+        CpuPlatform {
+            name: "tx2",
+            full_name: "ThunderX2 (28-core ARM, one socket)",
+            threads: 28,
+            freq_ghz: 2.2,
+            l1_kb: 32, l1_assoc: 8,
+            l2_kb: 256, l2_assoc: 8,
+            l3_mb: 32, l3_assoc: 16,
+            stream_gbs: 120.0,
+            l2_gbs_per_thread: 22.0,
+            l3_gbs: 260.0,
+            dram_latency_ns: 110.0,
+            mlp_vector: 12.0,
+            mlp_scalar: 12.0,
+            // Aggressive next-2-lines streamer: keeps over-fetching far
+            // past stride-16 (the paper's steep-drop suspicion).
+            prefetch: PrefetchKind::NextLine { degree: 2 },
+            gather_cycles_per_elem: None, // no G/S support at all
+            scatter_cycles_per_elem: None,
+            scalar_cycles_per_elem: 1.4,
+            scalar_dram_efficiency: 1.0,
+            tlb_entries: 2048,
+            tlb_walk_ns: 80.0,
+            coherence_ns: 200.0,
+            // §5.4.2 item 1: handles writing the same location over and
+            // over very well.
+            absorbs_repeated_writes: true,
+        },
+        CpuPlatform {
+            name: "naples",
+            full_name: "AMD Naples (EPYC 7601, one socket)",
+            threads: 16,
+            freq_ghz: 2.2,
+            l1_kb: 32, l1_assoc: 8,
+            l2_kb: 512, l2_assoc: 8,
+            // Victim L3 split across CCXs: model a smaller effective
+            // shared capacity with modest bandwidth (the Fig 9 "cache
+            // architecture much less capable" observation).
+            l3_mb: 8, l3_assoc: 16,
+            stream_gbs: 97.0,
+            l2_gbs_per_thread: 28.0,
+            l3_gbs: 140.0,
+            dram_latency_ns: 105.0,
+            mlp_vector: 14.0,
+            mlp_scalar: 9.0,
+            // Stride prefetcher: useful prefetches only, page-bounded —
+            // the flat 1/8 plateau after stride-8 in Fig 3.
+            prefetch: PrefetchKind::Stride { degree: 4 },
+            gather_cycles_per_elem: Some(1.5),
+            scatter_cycles_per_elem: None, // AVX2: no scatter insn
+            scalar_cycles_per_elem: 2.0,
+            scalar_dram_efficiency: 0.85,
+            tlb_entries: 1536,
+            tlb_walk_ns: 75.0,
+            coherence_ns: 320.0,
+            absorbs_repeated_writes: false,
+        },
+    ]
+}
+
+/// GPU registry, Table 3 order.
+pub fn gpus() -> Vec<GpuPlatform> {
+    vec![
+        GpuPlatform {
+            name: "k40c",
+            full_name: "Kepler K40c",
+            stream_gbs: 193.855,
+            // Kepler global loads move full 128 B L1 lines — the "less
+            // able to coalesce" curve of Fig 5.
+            sector_bytes: 128,
+            row_bytes: 1024,
+            row_activate_bytes: 64.0,
+            l2_kb: 1536, l2_assoc: 16,
+            l2_gbs: 450.0,
+            tlb_entries: 512,
+            tlb_page_bytes: 64 * 1024,
+            tlb_walk_ns: 600.0,
+            tlb_mlp: 8.0,
+            write_contend_ns: 9.0,
+            txn_per_ns: 12.0,
+        },
+        GpuPlatform {
+            name: "titanxp",
+            full_name: "Titan Xp (Pascal)",
+            stream_gbs: 443.533,
+            sector_bytes: 32,
+            row_bytes: 2048,
+            row_activate_bytes: 48.0,
+            l2_kb: 3072, l2_assoc: 16,
+            l2_gbs: 1100.0,
+            tlb_entries: 2048,
+            tlb_page_bytes: 64 * 1024,
+            tlb_walk_ns: 450.0,
+            tlb_mlp: 16.0,
+            write_contend_ns: 4.0,
+            txn_per_ns: 28.0,
+        },
+        GpuPlatform {
+            name: "p100",
+            full_name: "Pascal P100 (HBM2)",
+            stream_gbs: 541.835,
+            sector_bytes: 32,
+            row_bytes: 2048,
+            row_activate_bytes: 40.0,
+            l2_kb: 4096, l2_assoc: 16,
+            l2_gbs: 1400.0,
+            tlb_entries: 2048,
+            tlb_page_bytes: 64 * 1024,
+            tlb_walk_ns: 400.0,
+            tlb_mlp: 16.0,
+            write_contend_ns: 3.5,
+            txn_per_ns: 32.0,
+        },
+        GpuPlatform {
+            name: "v100",
+            full_name: "Volta V100 (HBM2)",
+            stream_gbs: 868.0,
+            sector_bytes: 32,
+            row_bytes: 2048,
+            row_activate_bytes: 32.0,
+            // Big unified L1 + 6 MB L2: the Fig 7 "V100 peeks above the
+            // 100% ring" caching behaviour.
+            l2_kb: 6144, l2_assoc: 16,
+            l2_gbs: 2400.0,
+            tlb_entries: 4096,
+            tlb_page_bytes: 64 * 1024,
+            tlb_walk_ns: 350.0,
+            tlb_mlp: 24.0,
+            write_contend_ns: 2.5,
+            txn_per_ns: 80.0,
+        },
+    ]
+}
+
+/// Either kind of platform, as stored in the registry.
+#[derive(Debug, Clone)]
+pub enum Platform {
+    Cpu(CpuPlatform),
+    Gpu(GpuPlatform),
+}
+
+impl Platform {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Platform::Cpu(c) => c.name,
+            Platform::Gpu(g) => g.name,
+        }
+    }
+
+    pub fn full_name(&self) -> &'static str {
+        match self {
+            Platform::Cpu(c) => c.full_name,
+            Platform::Gpu(g) => g.full_name,
+        }
+    }
+
+    pub fn stream_gbs(&self) -> f64 {
+        match self {
+            Platform::Cpu(c) => c.stream_gbs,
+            Platform::Gpu(g) => g.stream_gbs,
+        }
+    }
+
+    pub fn is_gpu(&self) -> bool {
+        matches!(self, Platform::Gpu(_))
+    }
+}
+
+/// Full registry (CPUs then GPUs, Table 3 order).
+pub fn all() -> Vec<Platform> {
+    cpus()
+        .into_iter()
+        .map(Platform::Cpu)
+        .chain(gpus().into_iter().map(Platform::Gpu))
+        .collect()
+}
+
+/// Look up a CPU platform by short name.
+pub fn by_name(name: &str) -> Result<CpuPlatform> {
+    cpus()
+        .into_iter()
+        .find(|p| p.name.eq_ignore_ascii_case(name))
+        .ok_or_else(|| Error::UnknownPlatform(name.to_string()))
+}
+
+/// Look up a GPU platform by short name.
+pub fn gpu_by_name(name: &str) -> Result<GpuPlatform> {
+    gpus()
+        .into_iter()
+        .find(|p| p.name.eq_ignore_ascii_case(name))
+        .ok_or_else(|| Error::UnknownPlatform(name.to_string()))
+}
+
+/// Look up either kind.
+pub fn any_by_name(name: &str) -> Result<Platform> {
+    all()
+        .into_iter()
+        .find(|p| p.name().eq_ignore_ascii_case(name))
+        .ok_or_else(|| Error::UnknownPlatform(name.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_table3() {
+        assert_eq!(cpus().len(), 6);
+        assert_eq!(gpus().len(), 4);
+        assert_eq!(all().len(), 10);
+        // Table 3 STREAM anchors
+        assert!((by_name("knl").unwrap().stream_gbs - 249.313).abs() < 1e-9);
+        assert!((by_name("bdw").unwrap().stream_gbs - 43.885).abs() < 1e-9);
+        assert!((by_name("skx").unwrap().stream_gbs - 97.163).abs() < 1e-9);
+        assert!((by_name("clx").unwrap().stream_gbs - 66.661).abs() < 1e-9);
+        assert!((by_name("tx2").unwrap().stream_gbs - 120.0).abs() < 1e-9);
+        assert!((gpu_by_name("k40c").unwrap().stream_gbs - 193.855).abs() < 1e-9);
+        assert!((gpu_by_name("v100").unwrap().stream_gbs - 868.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        assert!(by_name("SKX").is_ok());
+        assert!(gpu_by_name("P100").is_ok());
+        assert!(any_by_name("Naples").is_ok());
+        assert!(by_name("epyc2").is_err());
+    }
+
+    #[test]
+    fn paper_isa_facts() {
+        // TX2 has no G/S support at all (Fig 6 flat 0%).
+        let tx2 = by_name("tx2").unwrap();
+        assert!(tx2.gather_cycles_per_elem.is_none());
+        assert!(tx2.scatter_cycles_per_elem.is_none());
+        assert!(tx2.absorbs_repeated_writes);
+        // Naples and BDW lack scatter instructions.
+        assert!(by_name("naples").unwrap().scatter_cycles_per_elem.is_none());
+        assert!(by_name("bdw").unwrap().scatter_cycles_per_elem.is_none());
+        // SKX/CLX/KNL have both.
+        for n in ["skx", "clx", "knl"] {
+            let p = by_name(n).unwrap();
+            assert!(p.gather_cycles_per_elem.is_some(), "{n}");
+            assert!(p.scatter_cycles_per_elem.is_some(), "{n}");
+        }
+        // BDW gather is slower than its scalar loads (Fig 6 negative).
+        let bdw = by_name("bdw").unwrap();
+        assert!(bdw.gather_cycles_per_elem.unwrap() > bdw.scalar_cycles_per_elem);
+    }
+
+    #[test]
+    fn prefetcher_kinds_per_paper() {
+        assert!(matches!(
+            by_name("bdw").unwrap().prefetch,
+            PrefetchKind::AdjacentLine { .. }
+        ));
+        assert!(matches!(
+            by_name("skx").unwrap().prefetch,
+            PrefetchKind::NextLine { degree: 1 }
+        ));
+        assert!(matches!(
+            by_name("tx2").unwrap().prefetch,
+            PrefetchKind::NextLine { degree: 2 }
+        ));
+        assert!(matches!(
+            by_name("naples").unwrap().prefetch,
+            PrefetchKind::Stride { .. }
+        ));
+    }
+
+    #[test]
+    fn k40_coalesces_at_line_granularity() {
+        assert_eq!(gpu_by_name("k40c").unwrap().sector_bytes, 128);
+        assert_eq!(gpu_by_name("p100").unwrap().sector_bytes, 32);
+    }
+
+    #[test]
+    fn platform_enum_accessors() {
+        let p = any_by_name("v100").unwrap();
+        assert!(p.is_gpu());
+        assert_eq!(p.name(), "v100");
+        assert!(p.stream_gbs() > 800.0);
+        let c = any_by_name("bdw").unwrap();
+        assert!(!c.is_gpu());
+        assert!(c.full_name().contains("Broadwell"));
+    }
+}

@@ -1,0 +1,114 @@
+//! Bandwidth-bandwidth plot data (Fig 9): pattern bandwidth as a
+//! function of the platform's stride-1 bandwidth. Stride-1 sits on the
+//! x = y diagonal; a point's vertical distance from the diagonal is the
+//! platform's bandwidth-utilization on that pattern; unit-slope lines
+//! are constant fractional bandwidth.
+
+use crate::json::{obj, Value};
+
+/// One point: (platform stride-1 bandwidth, pattern bandwidth).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BwBwPoint {
+    pub platform: String,
+    pub is_gpu: bool,
+    pub stride1_gbs: f64,
+    pub pattern_gbs: f64,
+}
+
+impl BwBwPoint {
+    /// Fraction of available bandwidth the pattern achieves (distance
+    /// below the diagonal, as a ratio).
+    pub fn fraction(&self) -> f64 {
+        if self.stride1_gbs > 0.0 {
+            self.pattern_gbs / self.stride1_gbs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// All platforms' points for one pattern.
+#[derive(Debug, Clone)]
+pub struct BwBwSeries {
+    pub pattern: String,
+    pub points: Vec<BwBwPoint>,
+}
+
+impl BwBwSeries {
+    pub fn new(pattern: &str) -> BwBwSeries {
+        BwBwSeries {
+            pattern: pattern.to_string(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, platform: &str, is_gpu: bool, stride1: f64, bw: f64) {
+        self.points.push(BwBwPoint {
+            platform: platform.to_string(),
+            is_gpu,
+            stride1_gbs: stride1,
+            pattern_gbs: bw,
+        });
+    }
+
+    /// The paper's Fig 9 comparisons: relative slope between two
+    /// platforms — > 1 means `a` is better in *relative* terms too.
+    pub fn relative_slope(&self, a: &str, b: &str) -> Option<f64> {
+        let pa = self.points.iter().find(|p| p.platform == a)?;
+        let pb = self.points.iter().find(|p| p.platform == b)?;
+        if pb.fraction() == 0.0 {
+            return None;
+        }
+        Some(pa.fraction() / pb.fraction())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let pts: Vec<Value> = self
+            .points
+            .iter()
+            .map(|p| {
+                obj(&[
+                    ("platform", Value::from(p.platform.clone())),
+                    ("is_gpu", Value::from(p.is_gpu)),
+                    ("stride1_gbs", Value::from(p.stride1_gbs)),
+                    ("pattern_gbs", Value::from(p.pattern_gbs)),
+                    ("fraction", Value::from(p.fraction())),
+                ])
+            })
+            .collect();
+        obj(&[
+            ("pattern", Value::from(self.pattern.clone())),
+            ("points", Value::Array(pts)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fraction_and_slope() {
+        let mut s = BwBwSeries::new("PENNANT-G12");
+        s.add("clx", false, 66.0, 16.5); // 1/4 of peak
+        s.add("bdw", false, 43.9, 2.74); // 1/16 of peak
+        assert!((s.points[0].fraction() - 0.25).abs() < 1e-9);
+        // CLX better in relative terms (the Fig 9a observation).
+        let slope = s.relative_slope("clx", "bdw").unwrap();
+        assert!(slope > 1.0, "{slope}");
+        assert!(s.relative_slope("clx", "nope").is_none());
+    }
+
+    #[test]
+    fn json_has_fraction() {
+        let mut s = BwBwSeries::new("x");
+        s.add("v100", true, 868.0, 86.8);
+        let j = s.to_json();
+        let f = j.get("points").unwrap().as_array().unwrap()[0]
+            .get("fraction")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!((f - 0.1).abs() < 1e-9);
+    }
+}

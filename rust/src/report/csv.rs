@@ -1,0 +1,104 @@
+//! CSV series output — one file per paper figure, consumable by any
+//! plotting tool.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// A CSV document under construction.
+#[derive(Debug, Clone, Default)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Csv {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Csv {
+        let owned: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&escape_row(&self.header));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&escape_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `dir/name`, creating the directory if needed.
+    pub fn write(&self, dir: &Path, name: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(name))?;
+        f.write_all(self.render().as_bytes())?;
+        Ok(())
+    }
+}
+
+fn escape_row(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_escapes() {
+        let mut c = Csv::new(&["name", "gbs"]);
+        c.row_display(&[&"plain", &43.885]);
+        c.row_display(&[&"with,comma", &1]);
+        c.row_display(&[&"with\"quote", &2]);
+        let s = c.render();
+        assert!(s.starts_with("name,gbs\n"));
+        assert!(s.contains("plain,43.885"));
+        assert!(s.contains("\"with,comma\",1"));
+        assert!(s.contains("\"with\"\"quote\",2"));
+    }
+
+    #[test]
+    fn writes_to_disk() {
+        let dir = std::env::temp_dir().join("spatter-csv-test");
+        let mut c = Csv::new(&["a"]);
+        c.row_display(&[&7]);
+        c.write(&dir, "t.csv").unwrap();
+        let read = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        assert_eq!(read, "a\n7\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,13 @@
+//! Result presentation: ASCII tables, CSV series, and the data behind
+//! the paper's radar plots (Figs 7/8) and bandwidth-bandwidth plots
+//! (Fig 9).
+
+mod bwbw;
+mod csv;
+mod radar;
+mod table;
+
+pub use bwbw::{BwBwPoint, BwBwSeries};
+pub use csv::Csv;
+pub use radar::{RadarChart, RadarSpoke};
+pub use table::Table;

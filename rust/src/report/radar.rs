@@ -1,0 +1,140 @@
+//! Radar-plot data (Figs 7 and 8): per pattern, each platform's
+//! bandwidth as a percentage of that platform's stride-1 bandwidth.
+//! Values above 100% mean the pattern exploits caching (the paper's
+//! "inner circle" interpretation).
+
+use crate::json::{obj, Value};
+
+/// One spoke: a platform's relative performance on a pattern.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RadarSpoke {
+    pub platform: String,
+    pub is_gpu: bool,
+    /// Pattern bandwidth / platform stride-1 bandwidth, as a fraction
+    /// (1.0 == the "100%" ring).
+    pub relative: f64,
+}
+
+/// One radar circle: a single pattern across all platforms.
+#[derive(Debug, Clone)]
+pub struct RadarChart {
+    pub pattern: String,
+    pub spokes: Vec<RadarSpoke>,
+}
+
+impl RadarChart {
+    pub fn new(pattern: &str) -> RadarChart {
+        RadarChart {
+            pattern: pattern.to_string(),
+            spokes: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, platform: &str, is_gpu: bool, pattern_gbs: f64, stride1_gbs: f64) {
+        let relative = if stride1_gbs > 0.0 {
+            pattern_gbs / stride1_gbs
+        } else {
+            0.0
+        };
+        self.spokes.push(RadarSpoke {
+            platform: platform.to_string(),
+            is_gpu,
+            relative,
+        });
+    }
+
+    /// Platforms that beat their own stride-1 bandwidth (caching).
+    pub fn above_ring(&self) -> Vec<&RadarSpoke> {
+        self.spokes.iter().filter(|s| s.relative > 1.0).collect()
+    }
+
+    /// Render as a compact text "radar": one bar per spoke, the `|`
+    /// marks the 100% ring.
+    pub fn render_text(&self) -> String {
+        let mut out = format!("{}\n", self.pattern);
+        for s in &self.spokes {
+            let frac = s.relative.min(2.0);
+            let filled = (frac * 20.0).round() as usize;
+            let mut bar = String::new();
+            for i in 0..40 {
+                if i == 20 {
+                    bar.push('|');
+                }
+                bar.push(if i < filled { '#' } else { ' ' });
+            }
+            out.push_str(&format!(
+                "  {:>8} [{}] {:5.1}%{}\n",
+                s.platform,
+                bar,
+                s.relative * 100.0,
+                if s.is_gpu { " (gpu)" } else { "" },
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        let spokes: Vec<Value> = self
+            .spokes
+            .iter()
+            .map(|s| {
+                obj(&[
+                    ("platform", Value::from(s.platform.clone())),
+                    ("is_gpu", Value::from(s.is_gpu)),
+                    ("relative", Value::from(s.relative)),
+                ])
+            })
+            .collect();
+        obj(&[
+            ("pattern", Value::from(self.pattern.clone())),
+            ("spokes", Value::Array(spokes)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relative_math() {
+        let mut r = RadarChart::new("AMG-G0");
+        r.add("skx", false, 328.0, 97.163);
+        r.add("k40c", true, 108.0, 193.855);
+        assert!(r.spokes[0].relative > 3.0);
+        assert!(r.spokes[1].relative < 1.0);
+        assert_eq!(r.above_ring().len(), 1);
+        assert_eq!(r.above_ring()[0].platform, "skx");
+    }
+
+    #[test]
+    fn text_render_marks_ring() {
+        let mut r = RadarChart::new("p");
+        r.add("a", false, 50.0, 100.0);
+        let s = r.render_text();
+        assert!(s.contains('|'));
+        assert!(s.contains("50.0%"));
+    }
+
+    #[test]
+    fn zero_stride1_is_safe() {
+        let mut r = RadarChart::new("p");
+        r.add("a", false, 50.0, 0.0);
+        assert_eq!(r.spokes[0].relative, 0.0);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut r = RadarChart::new("p");
+        r.add("a", true, 10.0, 20.0);
+        let j = r.to_json();
+        assert_eq!(
+            j.get("spokes").unwrap().as_array().unwrap()[0]
+                .get("relative")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            0.5
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! ASCII table rendering for terminal reports.
+
+/// A simple left-aligned table with a header row.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width must match header"
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Table {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with column auto-sizing.
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].chars().count());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            for w in &widths {
+                out.push('+');
+                for _ in 0..w + 2 {
+                    out.push('-');
+                }
+            }
+            out.push_str("+\n");
+        };
+        let line = |out: &mut String, cells: &[String]| {
+            for (c, cell) in cells.iter().enumerate() {
+                out.push_str("| ");
+                out.push_str(cell);
+                for _ in cell.chars().count()..widths[c] + 1 {
+                    out.push(' ');
+                }
+            }
+            out.push_str("|\n");
+        };
+        sep(&mut out);
+        line(&mut out, &self.header);
+        sep(&mut out);
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        sep(&mut out);
+        out
+    }
+}
+
+/// Format a bandwidth like the paper's tables (integer GB/s for large
+/// values, one decimal under 10).
+pub fn fmt_gbs(bw: f64) -> String {
+    if bw >= 10.0 {
+        format!("{bw:.0}")
+    } else {
+        format!("{bw:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["Platform", "GB/s"]);
+        t.row_strs(&["bdw", "43.9"]);
+        t.row_strs(&["skylake-long-name", "97"]);
+        let s = t.render();
+        assert!(s.contains("| Platform"));
+        assert!(s.contains("| skylake-long-name"));
+        // all lines same width
+        let widths: Vec<usize> =
+            s.lines().map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn gbs_formatting() {
+        assert_eq!(fmt_gbs(123.4), "123");
+        assert_eq!(fmt_gbs(6.25), "6.2");
+        assert_eq!(fmt_gbs(0.53), "0.5");
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut t = Table::new(&["x"]);
+        assert!(t.is_empty());
+        t.row_strs(&["1"]);
+        assert_eq!(t.len(), 1);
+    }
+}

@@ -1,0 +1,197 @@
+//! Artifact manifest: the JSON file `python/compile/aot.py` writes next
+//! to the HLO-text artifacts, describing each variant's geometry and
+//! argument order.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::json;
+
+/// One argument of a variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled graph variant.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub file: String,
+    /// "gather" | "scatter" | "gather_checksum" | "scatter_checksum".
+    pub kernel: String,
+    /// "pallas" (through the L1 kernel) or "ref" (jnp oracle).
+    pub family: String,
+    /// Index-buffer length.
+    pub v: usize,
+    /// Gathers/scatters per execution.
+    pub count: usize,
+    /// Source/destination array length.
+    pub n: usize,
+    pub args: Vec<ArgSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read manifest {} ({e}) — run `make artifacts`",
+                path.display()
+            ))
+        })?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = json::parse(text)?;
+        let fmt = root.get("format")?.as_str()?;
+        if fmt != "hlo-text" {
+            return Err(Error::Runtime(format!(
+                "unsupported artifact format '{fmt}'"
+            )));
+        }
+        let mut variants = Vec::new();
+        for v in root.get("variants")?.as_array()? {
+            let args = v
+                .get("args")?
+                .as_array()?
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        name: a.get("name")?.as_str()?.to_string(),
+                        shape: a
+                            .get("shape")?
+                            .as_array()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<Vec<_>>>()?,
+                        dtype: a.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            variants.push(Variant {
+                name: v.get("name")?.as_str()?.to_string(),
+                file: v.get("file")?.as_str()?.to_string(),
+                kernel: v.get("kernel")?.as_str()?.to_string(),
+                family: v.get("family")?.as_str()?.to_string(),
+                v: v.get("v")?.as_usize()?,
+                count: v.get("count")?.as_usize()?,
+                n: v.get("n")?.as_usize()?,
+                args,
+            });
+        }
+        Ok(Manifest { variants })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    /// Find a variant by kernel/family/index-length, optionally pinning
+    /// the per-execution count.
+    pub fn find(
+        &self,
+        kernel: &str,
+        family: &str,
+        v: usize,
+        count: Option<usize>,
+    ) -> Option<&Variant> {
+        self.variants.iter().find(|x| {
+            x.kernel == kernel
+                && x.family == family
+                && x.v == v
+                && count.map_or(true, |c| x.count == c)
+        })
+    }
+
+    /// The largest-count variant matching kernel/family/v (preferred
+    /// for throughput timing); ties prefer the smallest source array
+    /// (§Perf: smaller buffers mean smaller per-execution copies).
+    pub fn find_largest(
+        &self,
+        kernel: &str,
+        family: &str,
+        v: usize,
+    ) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .filter(|x| x.kernel == kernel && x.family == family && x.v == v)
+            .max_by_key(|x| (x.count, std::cmp::Reverse(x.n)))
+    }
+
+    /// Index-buffer lengths available for a kernel/family.
+    pub fn available_v(&self, kernel: &str, family: &str) -> Vec<usize> {
+        let mut vs: Vec<usize> = self
+            .variants
+            .iter()
+            .filter(|x| x.kernel == kernel && x.family == family)
+            .map(|x| x.v)
+            .collect();
+        vs.sort_unstable();
+        vs.dedup();
+        vs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "variants": [
+        {"name": "gather_ref_v8_c64_n4096", "file": "gather_ref_v8_c64_n4096.hlo.txt",
+         "kernel": "gather", "family": "ref", "v": 8, "count": 64, "n": 4096,
+         "dtype": "f64",
+         "args": [
+           {"name": "src", "shape": [4096], "dtype": "f64"},
+           {"name": "idx", "shape": [8], "dtype": "s32"},
+           {"name": "delta", "shape": [1], "dtype": "s32"}],
+         "out": {"shape": [64, 8], "dtype": "f64"}},
+        {"name": "gather_ref_v8_c4096_n64", "file": "g2.hlo.txt",
+         "kernel": "gather", "family": "ref", "v": 8, "count": 4096, "n": 64,
+         "dtype": "f64", "args": [], "out": {"shape": [4096, 8], "dtype": "f64"}},
+        {"name": "scatter_pallas_v16_c64_n4096", "file": "s.hlo.txt",
+         "kernel": "scatter", "family": "pallas", "v": 16, "count": 64, "n": 4096,
+         "dtype": "f64", "args": [], "out": {"shape": [4096], "dtype": "f64"}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.variants.len(), 3);
+        let g = m.by_name("gather_ref_v8_c64_n4096").unwrap();
+        assert_eq!(g.v, 8);
+        assert_eq!(g.count, 64);
+        assert_eq!(g.args.len(), 3);
+        assert_eq!(g.args[1].name, "idx");
+        assert_eq!(g.args[1].shape, vec![8]);
+    }
+
+    #[test]
+    fn find_variants() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find("gather", "ref", 8, Some(64)).is_some());
+        assert!(m.find("gather", "ref", 8, Some(65)).is_none());
+        assert!(m.find("gather", "pallas", 8, None).is_none());
+        assert_eq!(m.find_largest("gather", "ref", 8).unwrap().count, 4096);
+        assert_eq!(m.available_v("gather", "ref"), vec![8]);
+        assert_eq!(m.available_v("scatter", "pallas"), vec![16]);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format": "proto", "variants": []}"#).is_err());
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("[]").is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! Rust hot path. Python never runs here — `make artifacts` produced
+//! `artifacts/*.hlo.txt` + `manifest.json` at build time.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example).
+
+mod manifest;
+
+pub use manifest::{ArgSpec, Manifest, Variant};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Map an `xla` crate error into ours.
+fn xe(e: xla::Error) -> Error {
+    Error::Xla(e.to_string())
+}
+
+/// Locate the artifacts directory: `$SPATTER_ARTIFACTS`, else
+/// `./artifacts`, else `../artifacts` (for tests run from rust/).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("SPATTER_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    for cand in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// The runtime: a PJRT CPU client plus a compile cache of loaded
+/// executables, one per artifact variant.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the runtime over an artifact directory.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(xe)?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Open using the default artifact location.
+    pub fn open_default() -> Result<Runtime> {
+        Runtime::open(&default_artifact_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an executable for a variant.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let variant = self
+                .manifest
+                .by_name(name)
+                .ok_or_else(|| Error::Runtime(format!("no variant '{name}'")))?;
+            let path = self.dir.join(&variant.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+            )
+            .map_err(xe)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(xe)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Stage a f64 host array on the device.
+    pub fn stage_f64(&self, data: &[f64]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, &[data.len()], None)
+            .map_err(xe)
+    }
+
+    /// Stage a 2-D f64 host array on the device.
+    pub fn stage_f64_2d(
+        &self,
+        data: &[f64],
+        rows: usize,
+        cols: usize,
+    ) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, &[rows, cols], None)
+            .map_err(xe)
+    }
+
+    /// Stage an i32 host array on the device.
+    pub fn stage_i32(&self, data: &[i32]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, &[data.len()], None)
+            .map_err(xe)
+    }
+
+    /// Execute a loaded variant over staged buffers; returns the result
+    /// tuple's first element as a Literal (synchronized).
+    pub fn execute(
+        &mut self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::Literal> {
+        self.load(name)?;
+        let exe = &self.cache[name];
+        let outs = exe.execute_b(args).map_err(xe)?;
+        let lit = outs[0][0].to_literal_sync().map_err(xe)?;
+        lit.to_tuple1().map_err(xe)
+    }
+
+    /// Execute and return the scalar f64 result (checksum variants).
+    pub fn execute_scalar(
+        &mut self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<f64> {
+        let lit = self.execute(name, args)?;
+        lit.get_first_element::<f64>().map_err(xe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        default_artifact_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_discovery() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::open_default().unwrap();
+        assert!(rt.manifest().variants.len() >= 10);
+    }
+
+    #[test]
+    fn smoke_gather_executes_correctly() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let mut rt = Runtime::open_default().unwrap();
+        // Smoke geometry: gather_ref_v8_c64_n4096.
+        let v = rt
+            .manifest()
+            .find("gather", "ref", 8, Some(64))
+            .expect("smoke gather variant")
+            .clone();
+        let src: Vec<f64> = (0..v.n).map(|i| i as f64).collect();
+        let idx: Vec<i32> = (0..8).map(|j| (j * 2) as i32).collect();
+        let delta = vec![8i32];
+        let sb = rt.stage_f64(&src).unwrap();
+        let ib = rt.stage_i32(&idx).unwrap();
+        let db = rt.stage_i32(&delta).unwrap();
+        let out = rt.execute(&v.name, &[&sb, &ib, &db]).unwrap();
+        let vals = out.to_vec::<f64>().unwrap();
+        assert_eq!(vals.len(), 64 * 8);
+        // out[i,j] = src[8*i + 2*j] = 8i + 2j
+        for i in 0..64 {
+            for j in 0..8 {
+                assert_eq!(vals[i * 8 + j], (8 * i + 2 * j) as f64, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn checksum_matches_host_computation() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let mut rt = Runtime::open_default().unwrap();
+        let v = rt
+            .manifest()
+            .find("gather_checksum", "ref", 8, Some(64))
+            .expect("smoke checksum variant")
+            .clone();
+        let src: Vec<f64> = (0..v.n).map(|i| (i % 97) as f64 * 0.5).collect();
+        let idx: Vec<i32> = vec![0, 3, 9, 1, 7, 7, 2, 5];
+        let delta = vec![4i32];
+        let expected: f64 = (0..64)
+            .flat_map(|i| idx.iter().map(move |&ix| (4 * i + ix) as usize))
+            .map(|a| src[a])
+            .sum();
+        let sb = rt.stage_f64(&src).unwrap();
+        let ib = rt.stage_i32(&idx).unwrap();
+        let db = rt.stage_i32(&delta).unwrap();
+        let got = rt.execute_scalar(&v.name, &[&sb, &ib, &db]).unwrap();
+        assert!((got - expected).abs() < 1e-9, "{got} vs {expected}");
+    }
+
+    #[test]
+    fn pallas_and_ref_variants_agree() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let mut rt = Runtime::open_default().unwrap();
+        let vp = rt.manifest().find("gather", "pallas", 8, Some(64)).cloned();
+        let vr = rt.manifest().find("gather", "ref", 8, Some(64)).cloned();
+        let (vp, vr) = match (vp, vr) {
+            (Some(a), Some(b)) => (a, b),
+            _ => return,
+        };
+        let src: Vec<f64> = (0..vr.n).map(|i| ((i * 37) % 1009) as f64).collect();
+        let idx: Vec<i32> = vec![5, 0, 2, 63, 11, 8, 1, 30];
+        let delta = vec![7i32];
+        let sb = rt.stage_f64(&src).unwrap();
+        let ib = rt.stage_i32(&idx).unwrap();
+        let db = rt.stage_i32(&delta).unwrap();
+        let a = rt
+            .execute(&vp.name, &[&sb, &ib, &db])
+            .unwrap()
+            .to_vec::<f64>()
+            .unwrap();
+        let b = rt
+            .execute(&vr.name, &[&sb, &ib, &db])
+            .unwrap()
+            .to_vec::<f64>()
+            .unwrap();
+        assert_eq!(a, b, "L1 Pallas kernel must match the jnp oracle in HLO");
+    }
+}

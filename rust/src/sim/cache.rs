@@ -1,0 +1,477 @@
+//! Set-associative, write-back, write-allocate cache model with LRU
+//! replacement — the building block of the simulated memory hierarchy.
+//!
+//! Addresses are *line* addresses (byte address / line size); the
+//! hierarchy layer does the conversion. Each line tracks a dirty bit
+//! and whether it arrived via prefetch (for prefetch-accuracy
+//! accounting in the Fig 4 study).
+
+/// Result of a cache probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Probe {
+    /// Line present. `was_prefetched` is true the first time a
+    /// demand access touches a line that a prefetcher brought in.
+    Hit { was_prefetched: bool },
+    Miss,
+}
+
+/// One way, packed to 16 bytes so a whole 16-way set spans 4 cache
+/// lines of host memory (§Perf: set scans dominate the hot path).
+#[derive(Debug, Clone, Copy)]
+struct Way {
+    tag: u64,
+    /// LRU timestamp (wraps far beyond any simulated run length).
+    stamp: u32,
+    /// Bit 0 = valid, bit 1 = dirty, bit 2 = prefetched-untouched.
+    flags: u8,
+}
+
+const F_VALID: u8 = 1;
+const F_DIRTY: u8 = 2;
+const F_PREFETCHED: u8 = 4;
+
+impl Way {
+    #[inline]
+    fn valid(&self) -> bool {
+        self.flags & F_VALID != 0
+    }
+    #[inline]
+    fn dirty(&self) -> bool {
+        self.flags & F_DIRTY != 0
+    }
+    #[inline]
+    fn prefetched(&self) -> bool {
+        self.flags & F_PREFETCHED != 0
+    }
+}
+
+const EMPTY: Way = Way {
+    tag: 0,
+    stamp: 0,
+    flags: 0,
+};
+
+/// Largest power of two <= n (n >= 1).
+fn prev_power_of_two(n: usize) -> usize {
+    1 << (usize::BITS - 1 - n.leading_zeros())
+}
+
+/// One cache level.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    sets: usize,
+    assoc: usize,
+    ways: Vec<Way>,
+    /// LRU clock (u32: capped sim lengths never approach wrap; reset per run).
+    clock: u32,
+    /// Statistics.
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+    pub prefetch_fills: u64,
+    pub prefetch_hits: u64,
+}
+
+impl Cache {
+    /// `capacity_bytes` / `line_bytes` / `assoc` must be power-of-two
+    /// consistent; sets = capacity / (line * assoc).
+    pub fn new(capacity_bytes: usize, line_bytes: usize, assoc: usize) -> Cache {
+        assert!(capacity_bytes > 0 && line_bytes > 0 && assoc > 0);
+        let lines = capacity_bytes / line_bytes;
+        assert!(lines >= assoc, "capacity too small for associativity");
+        // Round sets down to a power of two for mask indexing (real
+        // parts with non-power-of-two capacity, e.g. 33 MB 11-way SKX
+        // L3, are modelled slightly small rather than slightly large).
+        let sets = prev_power_of_two((lines / assoc).max(1));
+        Cache {
+            sets,
+            assoc,
+            ways: vec![EMPTY; sets * assoc],
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+            prefetch_fills: 0,
+            prefetch_hits: 0,
+        }
+    }
+
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+
+    pub fn assoc(&self) -> usize {
+        self.assoc
+    }
+
+    fn set_of(&self, line: u64) -> usize {
+        (line as usize) & (self.sets - 1)
+    }
+
+    fn slot_range(&self, set: usize) -> std::ops::Range<usize> {
+        set * self.assoc..(set + 1) * self.assoc
+    }
+
+    /// Issue a host software-prefetch for the set `line` maps to
+    /// (§Perf: large simulated caches make every probe a host cache
+    /// miss; hinting the three levels up front overlaps the misses).
+    #[inline]
+    pub fn prefetch_host(&self, line: u64) {
+        #[cfg(target_arch = "x86_64")]
+        unsafe {
+            use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+            let idx = self.set_of(line) * self.assoc;
+            let ptr = self.ways.as_ptr().add(idx) as *const i8;
+            _mm_prefetch(ptr, _MM_HINT_T0);
+            // Sets larger than one host line: touch the tail too.
+            if self.assoc > 4 {
+                _mm_prefetch(ptr.add(64), _MM_HINT_T0);
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = line;
+    }
+
+    /// Demand access. On hit, updates LRU and clears the prefetched
+    /// flag (the prefetch has now been consumed). Does NOT fill on
+    /// miss — the hierarchy decides fill policy.
+    pub fn access(&mut self, line: u64, is_write: bool) -> Probe {
+        self.clock += 1;
+        let set = self.set_of(line);
+        for i in self.slot_range(set) {
+            let w = &mut self.ways[i];
+            if w.valid() && w.tag == line {
+                let was_prefetched = w.prefetched();
+                if was_prefetched {
+                    self.prefetch_hits += 1;
+                }
+                w.flags &= !F_PREFETCHED;
+                w.stamp = self.clock;
+                if is_write {
+                    w.flags |= F_DIRTY;
+                }
+                self.hits += 1;
+                return Probe::Hit { was_prefetched };
+            }
+        }
+        self.misses += 1;
+        Probe::Miss
+    }
+
+    /// Probe without statistics or LRU update (used by prefetchers to
+    /// avoid redundant fills).
+    pub fn contains(&self, line: u64) -> bool {
+        let set = self.set_of(line);
+        self.ways[self.slot_range(set)]
+            .iter()
+            .any(|w| w.valid() && w.tag == line)
+    }
+
+    /// Insert a line, evicting LRU if needed. Returns the evicted dirty
+    /// line (for writeback accounting), if any.
+    pub fn fill(&mut self, line: u64, is_write: bool, prefetched: bool) -> Option<u64> {
+        let set = self.set_of(line);
+        // Already present (e.g. prefetch raced with demand): refresh.
+        for i in self.slot_range(set) {
+            if self.ways[i].valid() && self.ways[i].tag == line {
+                self.clock += 1;
+                let clock = self.clock;
+                let w = &mut self.ways[i];
+                w.stamp = clock;
+                if is_write {
+                    w.flags |= F_DIRTY;
+                }
+                return None;
+            }
+        }
+        self.fill_after_miss(line, is_write, prefetched)
+    }
+
+    /// Insert a line the caller has just verified to be absent (the
+    /// demand-miss path). Skips the presence re-scan that `fill` pays
+    /// (§Perf: the miss path previously scanned every set twice).
+    pub fn fill_after_miss(
+        &mut self,
+        line: u64,
+        is_write: bool,
+        prefetched: bool,
+    ) -> Option<u64> {
+        self.clock += 1;
+        let set = self.set_of(line);
+        let range = self.slot_range(set);
+        debug_assert!(!self.contains(line));
+        if prefetched {
+            self.prefetch_fills += 1;
+        }
+        // Find invalid or LRU victim.
+        let mut victim = range.start;
+        let mut best = u32::MAX;
+        for i in range {
+            let w = &self.ways[i];
+            if !w.valid() {
+                victim = i;
+                break;
+            }
+            if w.stamp < best {
+                best = w.stamp;
+                victim = i;
+            }
+        }
+        let evicted = {
+            let w = &self.ways[victim];
+            if w.valid() && w.dirty() {
+                self.writebacks += 1;
+                Some(w.tag)
+            } else {
+                None
+            }
+        };
+        self.ways[victim] = Way {
+            tag: line,
+            stamp: self.clock,
+            flags: F_VALID
+                | if is_write { F_DIRTY } else { 0 }
+                | if prefetched { F_PREFETCHED } else { 0 },
+        };
+        evicted
+    }
+
+    /// Fused demand access + fill-on-miss in a single set scan (§Perf:
+    /// the miss path previously paid one scan to probe and another to
+    /// pick the victim). On hit behaves exactly like [`access`]; on
+    /// miss inserts the line and returns the evicted dirty line.
+    pub fn access_fill(
+        &mut self,
+        line: u64,
+        is_write: bool,
+    ) -> (Probe, Option<u64>) {
+        self.clock += 1;
+        let set = self.set_of(line);
+        let range = self.slot_range(set);
+        let mut victim = range.start;
+        let mut best = u32::MAX;
+        for i in range {
+            let w = &mut self.ways[i];
+            if w.valid() {
+                if w.tag == line {
+                    let was_prefetched = w.prefetched();
+                    if was_prefetched {
+                        self.prefetch_hits += 1;
+                    }
+                    w.flags &= !F_PREFETCHED;
+                    w.stamp = self.clock;
+                    if is_write {
+                        w.flags |= F_DIRTY;
+                    }
+                    self.hits += 1;
+                    return (Probe::Hit { was_prefetched }, None);
+                }
+                if w.stamp < best {
+                    best = w.stamp;
+                    victim = i;
+                }
+            } else if best != 0 {
+                // Remember the first invalid way (beats any LRU pick)
+                // but keep scanning for a hit.
+                best = 0;
+                victim = i;
+            }
+        }
+        self.misses += 1;
+        let evicted = {
+            let w = &self.ways[victim];
+            if w.valid() && w.dirty() {
+                self.writebacks += 1;
+                Some(w.tag)
+            } else {
+                None
+            }
+        };
+        self.ways[victim] = Way {
+            tag: line,
+            stamp: self.clock,
+            flags: F_VALID | if is_write { F_DIRTY } else { 0 },
+        };
+        (Probe::Miss, evicted)
+    }
+
+    /// Fill only when absent, reporting whether an insert happened
+    /// (fuses the `contains` + `fill` pair the prefetch path used to
+    /// pay — §Perf). Returns `(inserted, evicted_dirty_line)`.
+    pub fn fill_if_absent(
+        &mut self,
+        line: u64,
+        is_write: bool,
+        prefetched: bool,
+    ) -> (bool, Option<u64>) {
+        let set = self.set_of(line);
+        for i in self.slot_range(set) {
+            if self.ways[i].valid() && self.ways[i].tag == line {
+                return (false, None);
+            }
+        }
+        (true, self.fill_after_miss(line, is_write, prefetched))
+    }
+
+    /// Invalidate a line (coherence). Returns true if it was present.
+    pub fn invalidate(&mut self, line: u64) -> bool {
+        let set = self.set_of(line);
+        for i in self.slot_range(set) {
+            if self.ways[i].valid() && self.ways[i].tag == line {
+                self.ways[i] = EMPTY;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Clear contents and statistics.
+    pub fn reset(&mut self) {
+        self.ways.fill(EMPTY);
+        self.clock = 0;
+        self.hits = 0;
+        self.misses = 0;
+        self.writebacks = 0;
+        self.prefetch_fills = 0;
+        self.prefetch_hits = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Cache {
+        // 4 sets x 2 ways x 64B lines = 512 B
+        Cache::new(512, 64, 2)
+    }
+
+    #[test]
+    fn geometry() {
+        let c = small();
+        assert_eq!(c.sets(), 4);
+        assert_eq!(c.assoc(), 2);
+        let big = Cache::new(32 * 1024, 64, 8);
+        assert_eq!(big.sets(), 64);
+    }
+
+    #[test]
+    fn miss_then_fill_then_hit() {
+        let mut c = small();
+        assert_eq!(c.access(5, false), Probe::Miss);
+        c.fill(5, false, false);
+        assert_eq!(c.access(5, false), Probe::Hit { was_prefetched: false });
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = small();
+        // set 0 holds lines 0, 4, 8, ... (4 sets). Fill two ways.
+        c.fill(0, false, false);
+        c.fill(4, false, false);
+        // touch 0 so 4 becomes LRU
+        c.access(0, false);
+        // fill 8 -> evicts 4
+        c.fill(8, false, false);
+        assert!(c.contains(0));
+        assert!(!c.contains(4));
+        assert!(c.contains(8));
+    }
+
+    #[test]
+    fn dirty_eviction_counts_writeback() {
+        let mut c = small();
+        c.fill(0, true, false); // dirty
+        c.fill(4, false, false);
+        let evicted = c.fill(8, false, false); // evicts LRU = 0 (dirty)
+        assert_eq!(evicted, Some(0));
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn clean_eviction_no_writeback() {
+        let mut c = small();
+        c.fill(0, false, false);
+        c.fill(4, false, false);
+        let evicted = c.fill(8, false, false);
+        assert_eq!(evicted, None);
+        assert_eq!(c.writebacks, 0);
+    }
+
+    #[test]
+    fn write_hit_marks_dirty() {
+        let mut c = small();
+        c.fill(0, false, false);
+        c.access(0, true); // write hit -> dirty
+        c.fill(4, false, false);
+        let evicted = c.fill(8, false, false);
+        assert_eq!(evicted, Some(0));
+    }
+
+    #[test]
+    fn prefetch_accounting() {
+        let mut c = small();
+        c.fill(3, false, true); // prefetched
+        assert_eq!(c.prefetch_fills, 1);
+        assert_eq!(c.access(3, false), Probe::Hit { was_prefetched: true });
+        assert_eq!(c.prefetch_hits, 1);
+        // second touch: no longer "prefetched"
+        assert_eq!(c.access(3, false), Probe::Hit { was_prefetched: false });
+        assert_eq!(c.prefetch_hits, 1);
+    }
+
+    #[test]
+    fn refill_existing_line_is_idempotent() {
+        let mut c = small();
+        c.fill(0, false, false);
+        assert_eq!(c.fill(0, true, false), None); // refresh, mark dirty
+        c.fill(4, false, false);
+        assert_eq!(c.fill(8, false, false), Some(0)); // 0 dirty via refill
+    }
+
+    #[test]
+    fn invalidate() {
+        let mut c = small();
+        c.fill(0, true, false);
+        assert!(c.invalidate(0));
+        assert!(!c.contains(0));
+        assert!(!c.invalidate(0));
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut c = small();
+        c.fill(0, false, false);
+        c.access(0, false);
+        c.access(1, false);
+        c.reset();
+        assert!(!c.contains(0));
+        assert_eq!(c.hits, 0);
+        assert_eq!(c.misses, 0);
+    }
+
+    #[test]
+    fn different_sets_do_not_conflict() {
+        let mut c = small();
+        // lines 0..4 map to sets 0..4 — all coexist with assoc 2
+        for l in 0..4 {
+            c.fill(l, false, false);
+        }
+        for l in 0..4 {
+            assert!(c.contains(l), "line {l}");
+        }
+    }
+
+    #[test]
+    fn associativity_respected() {
+        let mut c = small(); // 2-way
+        // three lines in set 0: 0, 4, 8 -> one must be evicted
+        c.fill(0, false, false);
+        c.fill(4, false, false);
+        c.fill(8, false, false);
+        let present = [0u64, 4, 8].iter().filter(|&&l| c.contains(l)).count();
+        assert_eq!(present, 2);
+    }
+}

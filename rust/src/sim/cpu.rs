@@ -1,0 +1,782 @@
+//! CPU memory-system engine: L1/L2/L3 + TLB + prefetcher + a
+//! bottleneck timing model.
+//!
+//! One engine simulates the union access stream of all OpenMP threads
+//! through a representative private L1/L2 and the shared L3 (with the
+//! paper's static chunked iteration distribution, every thread's
+//! stream has identical locality structure, so the union stream seen
+//! by one hierarchy is a faithful stand-in). Timing then splits
+//! resources: per-thread issue rate and L2 bandwidth scale with the
+//! thread count, while L3 and DRAM bandwidth are shared.
+//!
+//! The run time is the **max** over resource occupancies (a roofline /
+//! bottleneck model):
+//!
+//! ```text
+//! t = max( issue, L2-bw, L3-bw, DRAM-bw, miss-latency/MLP, TLB, coherence )
+//! ```
+//!
+//! This is what makes the paper's curves emerge: at stride-1 DRAM
+//! bandwidth binds (STREAM); at large strides DRAM still binds but the
+//! traffic is inflated by unused line fragments and prefetch
+//! over-fetch; for cache-resident app patterns the issue rate or L2
+//! bandwidth binds (bandwidths above STREAM, §5.4); for huge deltas
+//! the TLB binds (PENNANT); for delta-0 multi-thread scatter the
+//! coherence penalty binds (LULESH-S3).
+
+use std::collections::HashSet;
+
+use super::cache::{Cache, Probe};
+use super::prefetch::Prefetcher;
+use super::{PrefetchKind, SimCounters, SimResult, TimeBreakdown};
+use crate::error::Result;
+use crate::pattern::{Kernel, Pattern};
+use crate::platforms::CpuPlatform;
+
+/// Knobs for a simulated run.
+#[derive(Debug, Clone)]
+pub struct CpuSimOptions {
+    /// Model hardware prefetching (the Fig 4 MSR toggle).
+    pub prefetch_enabled: bool,
+    /// Use the vector G/S instructions where the platform has them
+    /// (the OpenMP backend); `false` = the Scalar backend.
+    pub vectorized: bool,
+    /// Cap on simulated accesses in the measured pass; counts beyond
+    /// this are extrapolated linearly (steady state).
+    pub max_sim_accesses: usize,
+    /// Warmup iterations before measurement (models the paper's
+    /// min-of-10-runs protocol, where later runs find warm caches).
+    pub warmup_iterations: usize,
+}
+
+impl Default for CpuSimOptions {
+    fn default() -> Self {
+        CpuSimOptions {
+            prefetch_enabled: true,
+            vectorized: true,
+            max_sim_accesses: 1 << 21,
+            warmup_iterations: 1 << 15,
+        }
+    }
+}
+
+const LINE: u64 = 64;
+const PAGE: u64 = 4096;
+
+/// The engine. Reusable across runs (state resets per run).
+pub struct CpuEngine {
+    platform: CpuPlatform,
+    opts: CpuSimOptions,
+    l1: Cache,
+    l2: Cache,
+    l3: Cache,
+    /// TLB modelled as a cache of page numbers (one "line" per page).
+    tlb: Cache,
+    prefetcher: Prefetcher,
+    pf_buf: Vec<u64>,
+    /// Open-row tracker for the DRAM row-locality model.
+    last_row: u64,
+    /// Same-page TLB short-circuit (§Perf: consecutive accesses hit
+    /// the same page almost always; skip the set scan).
+    last_page: u64,
+}
+
+/// DRAM row size for the row-locality model (2 KiB = 32 lines).
+const ROW_LINES: u64 = 32;
+/// Row-activation cost in equivalent bytes of transfer.
+const ROW_PENALTY_BYTES: f64 = 64.0;
+
+impl CpuEngine {
+    pub fn new(platform: &CpuPlatform) -> CpuEngine {
+        CpuEngine::with_options(platform, CpuSimOptions::default())
+    }
+
+    pub fn with_options(platform: &CpuPlatform, opts: CpuSimOptions) -> CpuEngine {
+        let p = platform.clone();
+        CpuEngine {
+            l1: Cache::new(p.l1_kb * 1024, LINE as usize, p.l1_assoc),
+            l2: Cache::new(p.l2_kb * 1024, LINE as usize, p.l2_assoc),
+            l3: Cache::new(p.l3_mb * 1024 * 1024, LINE as usize, p.l3_assoc),
+            tlb: Cache::new(p.tlb_entries * LINE as usize, LINE as usize, 4),
+            prefetcher: Prefetcher::new(if opts.prefetch_enabled {
+                p.prefetch
+            } else {
+                PrefetchKind::None
+            }),
+            platform: p,
+            opts,
+            pf_buf: Vec::with_capacity(8),
+            last_row: u64::MAX,
+            last_page: u64::MAX,
+        }
+    }
+
+    pub fn platform(&self) -> &CpuPlatform {
+        &self.platform
+    }
+
+    pub fn options(&self) -> &CpuSimOptions {
+        &self.opts
+    }
+
+    fn reset(&mut self) {
+        self.l1.reset();
+        self.l2.reset();
+        self.l3.reset();
+        self.tlb.reset();
+        self.prefetcher.reset();
+        self.last_row = u64::MAX;
+        self.last_page = u64::MAX;
+    }
+
+    /// Track DRAM row transitions for the fill stream.
+    #[inline]
+    fn note_row(&mut self, line: u64, c: &mut SimCounters) {
+        let row = line / ROW_LINES;
+        if row != self.last_row {
+            c.row_activations += 1;
+            self.last_row = row;
+        }
+    }
+
+    /// Simulate one Spatter run and return modelled time + counters.
+    pub fn run(&mut self, pattern: &Pattern, kernel: Kernel) -> Result<SimResult> {
+        pattern.validate()?;
+        self.reset();
+
+        let v = pattern.vector_len();
+        let cap_iters = (self.opts.max_sim_accesses / v).max(1);
+        let measured = pattern.count.min(cap_iters);
+        let is_write = kernel == Kernel::Scatter;
+        let streaming = is_write && write_density(pattern) >= 0.99;
+
+        // Warmup pass: the paper reports the min of 10 runs, so the
+        // measured run starts with caches/TLB warm from the *end* of
+        // the previous run — simulate the tail iterations uncounted.
+        let warmup = pattern.count.min(self.opts.warmup_iterations);
+        let wstart = pattern.count - warmup;
+        let mut scratch = SimCounters::default();
+        self.pass(pattern, wstart, pattern.count, is_write, streaming, &mut scratch);
+
+        // Measured pass: iterations [0, measured) of the next run.
+        let mut counters = SimCounters::default();
+        self.pass(pattern, 0, measured, is_write, streaming, &mut counters);
+        counters.coherence_events = self.coherence_events(pattern, kernel, measured);
+
+        // Page walks miss the cache hierarchy when touched pages are
+        // sparse (PTE lines cover 64 consecutive pages = 256 KiB of
+        // address space): each walk then costs a DRAM access too.
+        let sparse_walks = pattern.mean_delta() * 8.0 >= 256.0 * 1024.0;
+
+        let breakdown = self.timing(&counters, kernel, sparse_walks);
+        let scale = pattern.count as f64 / measured as f64;
+        let seconds = breakdown.total() * scale;
+        Ok(SimResult {
+            seconds,
+            useful_bytes: pattern.moved_bytes() as u64,
+            counters,
+            breakdown,
+            simulated_iterations: measured,
+        })
+    }
+
+    /// Simulate iterations [begin, end) of the pattern.
+    fn pass(
+        &mut self,
+        pattern: &Pattern,
+        begin: usize,
+        end: usize,
+        is_write: bool,
+        streaming: bool,
+        c: &mut SimCounters,
+    ) {
+        let mut last_stream_line = u64::MAX;
+        let mut base = pattern.base(begin);
+        for i in begin..end {
+            for &idx in &pattern.indices {
+                let byte = ((base + idx) as u64) * 8;
+                self.access(byte, is_write, streaming, &mut last_stream_line, c);
+            }
+            base += pattern.delta_at(i);
+        }
+    }
+
+    #[inline]
+    fn access(
+        &mut self,
+        byte: u64,
+        is_write: bool,
+        streaming: bool,
+        last_stream_line: &mut u64,
+        c: &mut SimCounters,
+    ) {
+        c.accesses += 1;
+        let line = byte / LINE;
+        let page = byte / PAGE;
+
+        // Overlap the host-memory misses of the three dependent set
+        // scans (§Perf).
+        self.l1.prefetch_host(line);
+        self.l2.prefetch_host(line);
+        self.l3.prefetch_host(line);
+
+        // TLB (same-page short-circuit: the repeat access would hit
+        // and only refresh LRU).
+        if page != self.last_page {
+            if self.tlb.access(page, false) == Probe::Miss {
+                c.tlb_misses += 1;
+                self.tlb.fill_after_miss(page, false, false);
+            }
+            self.last_page = page;
+        }
+
+        // Non-temporal stores bypass the hierarchy entirely (the
+        // stride-1 scatter / STREAM-store path): one DRAM line write
+        // per line, no RFO, no fill.
+        if streaming {
+            if let Probe::Hit { .. } = self.l1.access(line, is_write) {
+                c.l1_hits += 1;
+                return;
+            }
+            if line != *last_stream_line {
+                c.streaming_store_lines += 1;
+                self.note_row(line, c);
+                *last_stream_line = line;
+            }
+            return;
+        }
+
+        // L1. (Plain probe first: hit paths dominate most patterns and
+        // the probe loop is cheaper than a fused probe+victim scan —
+        // §Perf iteration 4 measured the fused variant 33% slower on
+        // cache-resident patterns for a ~3% miss-path gain.)
+        if let Probe::Hit { .. } = self.l1.access(line, is_write) {
+            c.l1_hits += 1;
+            return;
+        }
+        // L2.
+        match self.l2.access(line, is_write) {
+            Probe::Hit { was_prefetched } => {
+                c.l2_hits += 1;
+                if was_prefetched {
+                    c.prefetch_useful += 1;
+                }
+                self.fill_l1(line, is_write, c);
+                return;
+            }
+            Probe::Miss => {}
+        }
+        // L3.
+        match self.l3.access(line, is_write) {
+            Probe::Hit { was_prefetched } => {
+                c.l3_hits += 1;
+                if was_prefetched {
+                    c.prefetch_useful += 1;
+                }
+                self.fill_l2(line, is_write, c);
+                self.fill_l1(line, is_write, c);
+                return;
+            }
+            Probe::Miss => {}
+        }
+
+        // DRAM demand fill (write-allocate for scatter).
+        c.dram_demand_lines += 1;
+        self.note_row(line, c);
+        if self.l3.fill_after_miss(line, false, false).is_some() {
+            c.writeback_lines += 1;
+        }
+        self.fill_l2(line, is_write, c);
+        self.fill_l1(line, is_write, c);
+
+        // Prefetch on the DRAM demand miss. Presence is resolved by
+        // the fused fill (L2 first — the streamer's target; L1 copies
+        // are covered by inclusion through L2/L3).
+        let mut buf = std::mem::take(&mut self.pf_buf);
+        self.prefetcher.on_miss(byte, line, &mut buf);
+        for &pl in &buf {
+            let (inserted_l2, ev) = self.l2.fill_if_absent(pl, false, true);
+            if inserted_l2 {
+                if let Some(ev) = ev {
+                    if self.l3.fill(ev, true, false).is_some() {
+                        c.writeback_lines += 1;
+                    }
+                }
+                let (inserted_l3, _) = self.l3.fill_if_absent(pl, false, true);
+                if inserted_l3 {
+                    c.dram_prefetch_lines += 1;
+                    self.note_row(pl, c);
+                }
+            }
+        }
+        self.pf_buf = buf;
+    }
+
+    /// Fill L1 after an L1 miss, propagating a dirty eviction into L2
+    /// (and onward).
+    #[inline]
+    fn fill_l1(&mut self, line: u64, is_write: bool, c: &mut SimCounters) {
+        if let Some(ev) = self.l1.fill_after_miss(line, is_write, false) {
+            // Dirty L1 victim updates L2; if L2 doesn't have it (rare
+            // with inclusive fills), it cascades to L3.
+            if !self.l2.contains(ev) {
+                if self.l3.fill(ev, true, false).is_some() {
+                    c.writeback_lines += 1;
+                }
+            } else {
+                self.l2.fill(ev, true, false);
+            }
+        }
+    }
+
+    /// Fill L2 after an L2 miss, propagating a dirty eviction into L3.
+    #[inline]
+    fn fill_l2(&mut self, line: u64, is_write: bool, c: &mut SimCounters) {
+        if let Some(ev) = self.l2.fill_after_miss(line, is_write, false) {
+            if self.l3.fill(ev, true, false).is_some() {
+                c.writeback_lines += 1;
+            }
+        }
+    }
+
+    /// Cross-thread write-contention events (pattern-level model).
+    ///
+    /// With the chunked OpenMP schedule, thread t's scatter bases start
+    /// `delta * count/T` elements apart. When the index-buffer span
+    /// exceeds that thread stride, thread footprints overlap and every
+    /// write into the overlap is a coherence transaction. delta = 0
+    /// (LULESH-S3) is total overlap: every write contends.
+    fn coherence_events(
+        &self,
+        pattern: &Pattern,
+        kernel: Kernel,
+        measured: usize,
+    ) -> u64 {
+        if kernel != Kernel::Scatter
+            || self.platform.threads <= 1
+            || self.platform.absorbs_repeated_writes
+        {
+            return 0;
+        }
+        let idx_span = (pattern.max_index() + 1) as f64;
+        let chunk = (pattern.count as f64 / self.platform.threads as f64).max(1.0);
+        let thread_stride = pattern.mean_delta() * chunk;
+        let overlap = if thread_stride <= 0.0 {
+            1.0
+        } else {
+            ((idx_span - thread_stride) / idx_span).clamp(0.0, 1.0)
+        };
+        (measured as f64 * pattern.vector_len() as f64 * overlap) as u64
+    }
+
+    /// Bottleneck timing over the measured counters.
+    fn timing(&self, c: &SimCounters, kernel: Kernel, sparse_walks: bool) -> TimeBreakdown {
+        let p = &self.platform;
+        let t = p.threads as f64;
+        let hz = p.freq_ghz * 1e9;
+
+        // Issue cost per element: hardware G/S when vectorized and the
+        // instruction exists; scalar loads/stores otherwise.
+        let vector_cpe = match kernel {
+            Kernel::Gather => p.gather_cycles_per_elem,
+            Kernel::Scatter => p.scatter_cycles_per_elem,
+        };
+        let (cpe, mlp, scalar_issue) = if self.opts.vectorized {
+            match vector_cpe {
+                Some(cost) => (cost, p.mlp_vector, false),
+                None => (p.scalar_cycles_per_elem, p.mlp_scalar, true),
+            }
+        } else {
+            (p.scalar_cycles_per_elem, p.mlp_scalar, true)
+        };
+        // Scalar-issued request streams put more pressure on the
+        // memory system per byte (paper §5.3); the platform factor
+        // scales effective DRAM bandwidth. BDW's factor is > 1: its
+        // microcoded AVX2 gather is the worse requester.
+        let dram_eff = if scalar_issue {
+            p.scalar_dram_efficiency
+        } else {
+            1.0
+        };
+
+        let issue_s = c.accesses as f64 * cpe / hz / t;
+        let l2_s = c.l2_hits as f64 * LINE as f64
+            / (p.l2_gbs_per_thread * 1e9)
+            / t;
+        let l3_s = c.l3_hits as f64 * LINE as f64 / (p.l3_gbs * 1e9);
+        // DRAM occupancy: line traffic + row-activation overhead +
+        // page-walk traffic when the walk itself misses the caches
+        // (sparse pages — each walk is another random DRAM access).
+        let walk_lines = if sparse_walks { c.tlb_misses } else { 0 };
+        // A cold radix walk touches ~2 uncached page-table lines (PTE +
+        // PMD level), each a random DRAM access with a row miss.
+        let dram_bytes = (c.dram_read_bytes() + c.dram_write_bytes()) as f64
+            + c.row_activations as f64 * ROW_PENALTY_BYTES
+            + walk_lines as f64 * 2.0 * (64.0 + ROW_PENALTY_BYTES);
+        let dram_s = dram_bytes / (p.stream_gbs * 1e9 * dram_eff);
+        let latency_s =
+            c.dram_demand_lines as f64 * p.dram_latency_ns * 1e-9 / mlp / t;
+        // Page walks overlap about two deep per thread.
+        let tlb_s = c.tlb_misses as f64 * p.tlb_walk_ns * 1e-9 / t / 2.0;
+        let coherence_s = c.coherence_events as f64 * p.coherence_ns * 1e-9 / t;
+
+        TimeBreakdown {
+            issue_s,
+            l2_s,
+            l3_s,
+            dram_s,
+            latency_s,
+            tlb_s,
+            coherence_s,
+        }
+    }
+}
+
+/// Streaming-store (non-temporal) eligibility: compilers/hardware use
+/// NT stores when the scatter covers whole lines exactly once (the
+/// STREAM-copy shape). Two conditions, estimated over up to 4096
+/// iterations: (a) writes cover ~every byte of each touched line, and
+/// (b) elements are not rewritten (temporal reuse wants the cache).
+fn write_density(pattern: &Pattern) -> f64 {
+    let iters = pattern.count.min(4096);
+    let mut elems: HashSet<i64> = HashSet::new();
+    let mut lines: HashSet<i64> = HashSet::new();
+    let mut writes = 0u64;
+    for i in 0..iters {
+        let base = pattern.base(i);
+        for &idx in &pattern.indices {
+            let e = base + idx;
+            elems.insert(e);
+            lines.insert(e / 8);
+            writes += 1;
+        }
+    }
+    if lines.is_empty() {
+        return 0.0;
+    }
+    let rewrite_ratio = writes as f64 / elems.len() as f64;
+    if rewrite_ratio > 1.25 {
+        return 0.0; // temporal reuse: keep writes in the cache
+    }
+    elems.len() as f64 / (lines.len() * 8) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platforms;
+
+    fn uniform(stride: usize, count: usize) -> Pattern {
+        Pattern::parse(&format!("UNIFORM:8:{stride}"))
+            .unwrap()
+            .with_delta(8 * stride as i64)
+            .with_count(count)
+    }
+
+    const N: usize = 1 << 18;
+
+    #[test]
+    fn stride1_gather_approximates_stream() {
+        // Fig 3 anchor: stride-1 gather == STREAM read bandwidth.
+        for name in ["bdw", "skx", "clx", "naples", "tx2", "knl"] {
+            let p = platforms::by_name(name).unwrap();
+            let mut e = CpuEngine::new(&p);
+            let r = e.run(&uniform(1, N), Kernel::Gather).unwrap();
+            let bw = r.bandwidth_gbs();
+            assert!(
+                (bw / p.stream_gbs - 1.0).abs() < 0.25,
+                "{name}: stride-1 {bw:.1} GB/s vs STREAM {:.1}",
+                p.stream_gbs
+            );
+        }
+    }
+
+    #[test]
+    fn bandwidth_halves_with_stride_doubling_small_strides() {
+        // "as stride increases by a factor of 2, bandwidth should drop
+        // by half" (until the line is exhausted at stride-8).
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let bw1 = e.run(&uniform(1, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        let bw2 = e.run(&uniform(2, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        let bw4 = e.run(&uniform(4, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!((bw1 / bw2 - 2.0).abs() < 0.35, "1->2 ratio {:.2}", bw1 / bw2);
+        assert!((bw2 / bw4 - 2.0).abs() < 0.35, "2->4 ratio {:.2}", bw2 / bw4);
+    }
+
+    #[test]
+    fn skx_floor_is_one_sixteenth() {
+        // Fig 4: SKX always fetches two lines -> 1/16 of peak at
+        // strides past the line size.
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let bw1 = e.run(&uniform(1, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        let bw32 = e.run(&uniform(32, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        let frac = bw32 / bw1;
+        assert!(
+            (frac - 1.0 / 16.0).abs() < 0.02,
+            "SKX stride-32 fraction {frac:.4} (want ~1/16)"
+        );
+    }
+
+    #[test]
+    fn bdw_recovers_at_stride_64() {
+        // Fig 3: BDW increases at stride-64 (adjacent-line prefetch
+        // shuts off at 512 B).
+        let p = platforms::by_name("bdw").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let bw32 = e.run(&uniform(32, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        let bw64 = e.run(&uniform(64, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!(
+            bw64 > bw32 * 1.5,
+            "BDW should recover at stride-64: {bw32:.2} -> {bw64:.2}"
+        );
+    }
+
+    #[test]
+    fn bdw_without_prefetch_bottoms_at_stride8() {
+        // Fig 4a: with prefetching off, no stride-64 bump — flat floor
+        // from stride-8 onward (1 line per element).
+        let p = platforms::by_name("bdw").unwrap();
+        let opts = CpuSimOptions {
+            prefetch_enabled: false,
+            ..Default::default()
+        };
+        let mut e = CpuEngine::with_options(&p, opts);
+        let bw8 = e.run(&uniform(8, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        let bw64 = e.run(&uniform(64, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!(
+            (bw8 / bw64 - 1.0).abs() < 0.25,
+            "no-prefetch floor should be flat: {bw8:.2} vs {bw64:.2}"
+        );
+    }
+
+    #[test]
+    fn naples_flat_after_stride_8() {
+        // Fig 3: Naples plateaus at 1/8 from stride-8 (useful-only
+        // stride prefetcher).
+        let p = platforms::by_name("naples").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let bw1 = e.run(&uniform(1, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        let bw8 = e.run(&uniform(8, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        let bw32 = e.run(&uniform(32, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!((bw8 / bw1 - 1.0 / 8.0).abs() < 0.03, "{:.3}", bw8 / bw1);
+        assert!(
+            (bw32 / bw8 - 1.0).abs() < 0.3,
+            "Naples should be flat 8->32: {bw8:.2} vs {bw32:.2}"
+        );
+    }
+
+    #[test]
+    fn tx2_keeps_dropping() {
+        // Fig 3: TX2 falls past 1/16 (degree-2 over-fetch).
+        let p = platforms::by_name("tx2").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let bw1 = e.run(&uniform(1, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        let bw64 = e.run(&uniform(64, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!(
+            bw64 / bw1 < 1.0 / 16.0,
+            "TX2 should drop below 1/16: {:.4}",
+            bw64 / bw1
+        );
+    }
+
+    #[test]
+    fn cached_pattern_beats_stream() {
+        // §5.4: AMG-like delta-1 patterns exceed STREAM via caching.
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let amg = crate::pattern::table5::by_name("AMG-G0")
+            .unwrap()
+            .to_pattern(N);
+        let bw = e.run(&amg, Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!(
+            bw > p.stream_gbs,
+            "cached AMG pattern should beat STREAM: {bw:.1} vs {:.1}",
+            p.stream_gbs
+        );
+    }
+
+    #[test]
+    fn huge_delta_tanks_bandwidth() {
+        // §5.4.2 item 5: delta is a primary performance indicator.
+        let p = platforms::by_name("bdw").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let g4 = crate::pattern::table5::by_name("PENNANT-G4")
+            .unwrap()
+            .to_pattern(N); // delta 4
+        // Count large enough that the touched-line footprint exceeds
+        // the caches (at tiny counts the second run would legitimately
+        // find everything in L3 — min-of-10 semantics).
+        let g9 = crate::pattern::table5::by_name("PENNANT-G9")
+            .unwrap()
+            .to_pattern(1 << 21); // delta 388852
+        let bw_small = e.run(&g4, Kernel::Gather).unwrap().bandwidth_gbs();
+        let bw_large = e.run(&g9, Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!(
+            bw_small > 5.0 * bw_large,
+            "large delta should tank: {bw_small:.1} vs {bw_large:.1}"
+        );
+    }
+
+    #[test]
+    fn delta0_scatter_collapses_except_tx2() {
+        // LULESH-S3: delta-0 scatter triggers coherence storms on all
+        // CPUs except TX2 (§5.4.2 item 1).
+        let s3 = crate::pattern::table5::by_name("LULESH-S3")
+            .unwrap()
+            .to_pattern(1 << 16);
+        let skx = platforms::by_name("skx").unwrap();
+        let tx2 = platforms::by_name("tx2").unwrap();
+        let bw_skx = CpuEngine::new(&skx)
+            .run(&s3, Kernel::Scatter)
+            .unwrap()
+            .bandwidth_gbs();
+        let bw_tx2 = CpuEngine::new(&tx2)
+            .run(&s3, Kernel::Scatter)
+            .unwrap()
+            .bandwidth_gbs();
+        assert!(
+            bw_skx < 0.3 * skx.stream_gbs,
+            "SKX S3 should collapse: {bw_skx:.1}"
+        );
+        assert!(
+            bw_tx2 > 0.8 * tx2.stream_gbs,
+            "TX2 should absorb S3: {bw_tx2:.1} vs stream {:.1}",
+            tx2.stream_gbs
+        );
+    }
+
+    #[test]
+    fn stride1_scatter_uses_streaming_stores() {
+        // Full-line writes go non-temporal: scatter stride-1 should be
+        // near peak, not half (no RFO).
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let r = e.run(&uniform(1, N), Kernel::Scatter).unwrap();
+        assert!(r.counters.streaming_store_lines > 0);
+        assert_eq!(r.counters.dram_demand_lines, 0);
+        let bw = r.bandwidth_gbs();
+        assert!(
+            bw > 0.7 * p.stream_gbs,
+            "streaming scatter {bw:.1} vs {:.1}",
+            p.stream_gbs
+        );
+    }
+
+    #[test]
+    fn strided_scatter_pays_rfo() {
+        // Partial-line scatter must read-for-ownership: DRAM traffic
+        // roughly doubles vs the equivalent gather.
+        let p = platforms::by_name("naples").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let g = e.run(&uniform(8, N), Kernel::Gather).unwrap();
+        let s = e.run(&uniform(8, N), Kernel::Scatter).unwrap();
+        let gt = g.counters.dram_read_bytes() + g.counters.dram_write_bytes();
+        let st = s.counters.dram_read_bytes() + s.counters.dram_write_bytes();
+        let ratio = st as f64 / gt as f64;
+        assert!(
+            (1.4..=2.4).contains(&ratio),
+            "scatter/gather DRAM traffic ratio {ratio:.2} (RFO + writeback \
+             roughly doubles write traffic vs read-only gather)"
+        );
+    }
+
+    #[test]
+    fn scalar_backend_slower_on_simd_platforms() {
+        // Fig 6 direction: KNL vectorized >> scalar at small strides.
+        let p = platforms::by_name("knl").unwrap();
+        let mut vec_e = CpuEngine::new(&p);
+        let mut sca_e = CpuEngine::with_options(
+            &p,
+            CpuSimOptions {
+                vectorized: false,
+                ..Default::default()
+            },
+        );
+        let pat = uniform(1, N);
+        let bv = vec_e.run(&pat, Kernel::Gather).unwrap().bandwidth_gbs();
+        let bs = sca_e.run(&pat, Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!(bv > 1.3 * bs, "KNL vector {bv:.1} vs scalar {bs:.1}");
+    }
+
+    #[test]
+    fn bdw_gather_can_lose_to_scalar() {
+        // Fig 6: BDW's microcoded AVX2 gather is often worse.
+        let p = platforms::by_name("bdw").unwrap();
+        let pat = {
+            // cache-resident so the issue rate binds
+            crate::pattern::table5::by_name("AMG-G0").unwrap().to_pattern(N)
+        };
+        let bv = CpuEngine::new(&p).run(&pat, Kernel::Gather).unwrap().bandwidth_gbs();
+        let bs = CpuEngine::with_options(
+            &p,
+            CpuSimOptions {
+                vectorized: false,
+                ..Default::default()
+            },
+        )
+        .run(&pat, Kernel::Gather)
+        .unwrap()
+        .bandwidth_gbs();
+        assert!(bs > bv, "BDW scalar {bs:.1} should beat gather {bv:.1}");
+    }
+
+    #[test]
+    fn tx2_vector_equals_scalar() {
+        // No G/S instructions: the OpenMP backend compiles to scalar.
+        let p = platforms::by_name("tx2").unwrap();
+        let pat = uniform(4, N);
+        let bv = CpuEngine::new(&p).run(&pat, Kernel::Gather).unwrap().bandwidth_gbs();
+        let bs = CpuEngine::with_options(
+            &p,
+            CpuSimOptions {
+                vectorized: false,
+                ..Default::default()
+            },
+        )
+        .run(&pat, Kernel::Gather)
+        .unwrap()
+        .bandwidth_gbs();
+        assert!(
+            (bv / bs - 1.0).abs() < 1e-9,
+            "TX2 vector {bv:.2} == scalar {bs:.2}"
+        );
+    }
+
+    #[test]
+    fn extrapolation_is_linear() {
+        // Doubling count beyond the cap should double time, keeping
+        // bandwidth fixed.
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let r1 = e.run(&uniform(4, 1 << 19), Kernel::Gather).unwrap();
+        let r2 = e.run(&uniform(4, 1 << 20), Kernel::Gather).unwrap();
+        assert!((r2.seconds / r1.seconds - 2.0).abs() < 0.1);
+        assert!((r2.bandwidth_gbs() / r1.bandwidth_gbs() - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn counters_are_consistent() {
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let r = e.run(&uniform(2, 1 << 16), Kernel::Gather).unwrap();
+        let c = &r.counters;
+        assert_eq!(
+            c.accesses,
+            c.l1_hits + c.l2_hits + c.l3_hits + c.dram_demand_lines,
+            "every access must resolve somewhere"
+        );
+        assert!(c.tlb_misses <= c.accesses);
+    }
+
+    #[test]
+    fn determinism() {
+        let p = platforms::by_name("bdw").unwrap();
+        let pat = uniform(16, 1 << 16);
+        let a = CpuEngine::new(&p).run(&pat, Kernel::Gather).unwrap();
+        let b = CpuEngine::new(&p).run(&pat, Kernel::Gather).unwrap();
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.seconds, b.seconds);
+    }
+}

@@ -1,0 +1,450 @@
+//! GPU memory-system engine: warp-level sector coalescing + L2 + DRAM
+//! row model + GPU TLB (the Fig 5 / Table 4 GPU mechanisms).
+//!
+//! Model of the paper's CUDA backend (§3.2): a thread block performs
+//! one Spatter iteration; the index buffer sits in shared memory; each
+//! warp of 32 threads issues 32 consecutive elements of the gather.
+//! The memory system coalesces each warp's addresses into unique
+//! *sectors* (32 B on Pascal+, 128 B line-transactions on Kepler — the
+//! coalescing difference the paper observes between the K40c and the
+//! newer parts).
+//!
+//! Timing is the same bottleneck-max style as the CPU engine:
+//!
+//! ```text
+//! t = max( txn-issue, L2-bw, DRAM-bw (+row activations), TLB, write-contention )
+//! ```
+//!
+//! Scatter pays a read-modify-write for partially covered sectors
+//! (gather plateaus at 1/4 of peak, scatter at 1/8 — Fig 5), and
+//! delta-0 scatters serialize on sector ownership (LULESH-S3).
+
+use super::cache::{Cache, Probe};
+use super::{SimCounters, SimResult, TimeBreakdown};
+use crate::error::Result;
+use crate::pattern::{Kernel, Pattern};
+use crate::platforms::GpuPlatform;
+
+/// Warp width (threads / elements per coalescing window).
+const WARP: usize = 32;
+
+/// Options for a simulated GPU run.
+#[derive(Debug, Clone)]
+pub struct GpuSimOptions {
+    /// Cap on simulated accesses in the measured pass.
+    pub max_sim_accesses: usize,
+    /// Warmup iterations (min-of-10 protocol, warm L2/TLB).
+    pub warmup_iterations: usize,
+}
+
+impl Default for GpuSimOptions {
+    fn default() -> Self {
+        GpuSimOptions {
+            max_sim_accesses: 1 << 21,
+            warmup_iterations: 1 << 13,
+        }
+    }
+}
+
+/// The GPU engine. Reusable across runs.
+pub struct GpuEngine {
+    platform: GpuPlatform,
+    opts: GpuSimOptions,
+    /// L2 tracked at sector granularity.
+    l2: Cache,
+    /// GPU TLB (one "line" per large page).
+    tlb: Cache,
+    last_row: u64,
+    /// Scratch: sector ids of the current warp.
+    warp_sectors: Vec<(u64, u32)>,
+}
+
+impl GpuEngine {
+    pub fn new(platform: &GpuPlatform) -> GpuEngine {
+        GpuEngine::with_options(platform, GpuSimOptions::default())
+    }
+
+    pub fn with_options(platform: &GpuPlatform, opts: GpuSimOptions) -> GpuEngine {
+        let p = platform.clone();
+        GpuEngine {
+            l2: Cache::new(p.l2_kb * 1024, p.sector_bytes as usize, p.l2_assoc),
+            tlb: Cache::new(p.tlb_entries * 64, 64, 4),
+            last_row: u64::MAX,
+            warp_sectors: Vec::with_capacity(WARP),
+            platform: p,
+            opts,
+        }
+    }
+
+    pub fn platform(&self) -> &GpuPlatform {
+        &self.platform
+    }
+
+    fn reset(&mut self) {
+        self.l2.reset();
+        self.tlb.reset();
+        self.last_row = u64::MAX;
+    }
+
+    /// Simulate one Spatter run on the GPU model.
+    pub fn run(&mut self, pattern: &Pattern, kernel: Kernel) -> Result<SimResult> {
+        pattern.validate()?;
+        self.reset();
+
+        let v = pattern.vector_len();
+        let cap_iters = (self.opts.max_sim_accesses / v).max(1);
+        let measured = pattern.count.min(cap_iters);
+        let is_write = kernel == Kernel::Scatter;
+
+        // Warmup (tail iterations of the "previous" run).
+        let warmup = pattern.count.min(self.opts.warmup_iterations);
+        let mut scratch = SimCounters::default();
+        self.pass(
+            pattern,
+            pattern.count - warmup,
+            pattern.count,
+            is_write,
+            &mut scratch,
+        );
+
+        let mut counters = SimCounters::default();
+        self.pass(pattern, 0, measured, is_write, &mut counters);
+
+        let breakdown = self.timing(&counters, pattern, kernel, measured);
+        let scale = pattern.count as f64 / measured as f64;
+        Ok(SimResult {
+            seconds: breakdown.total() * scale,
+            useful_bytes: pattern.moved_bytes() as u64,
+            counters,
+            breakdown,
+            simulated_iterations: measured,
+        })
+    }
+
+    fn pass(
+        &mut self,
+        pattern: &Pattern,
+        begin: usize,
+        end: usize,
+        is_write: bool,
+        c: &mut SimCounters,
+    ) {
+        let v = pattern.vector_len();
+        let mut base = pattern.base(begin);
+        for i in begin..end {
+            // Each warp covers 32 consecutive index-buffer slots.
+            let mut j = 0;
+            while j < v {
+                let hi = (j + WARP).min(v);
+                self.warp(pattern, base, j, hi, is_write, c);
+                j = hi;
+            }
+            base += pattern.delta_at(i);
+        }
+    }
+
+    /// Coalesce one warp's addresses into unique sectors and charge
+    /// the memory system.
+    fn warp(
+        &mut self,
+        pattern: &Pattern,
+        base: i64,
+        j0: usize,
+        j1: usize,
+        is_write: bool,
+        c: &mut SimCounters,
+    ) {
+        let sector_b = self.platform.sector_bytes;
+        self.warp_sectors.clear();
+        for &idx in &pattern.indices[j0..j1] {
+            c.accesses += 1;
+            let byte = ((base + idx) as u64) * 8;
+            let sector = byte / sector_b;
+            // Count elements per unique sector (coverage for the
+            // scatter RMW rule).
+            match self
+                .warp_sectors
+                .iter_mut()
+                .find(|(s, _)| *s == sector)
+            {
+                Some((_, n)) => *n += 1,
+                None => self.warp_sectors.push((sector, 1)),
+            }
+        }
+        // Keep row-locality realistic within a warp.
+        self.warp_sectors.sort_unstable_by_key(|(s, _)| *s);
+
+        let sectors = std::mem::take(&mut self.warp_sectors);
+        for &(sector, elems) in &sectors {
+            c.transactions += 1;
+
+            // GPU TLB at large-page granularity.
+            let page = sector * sector_b / self.platform.tlb_page_bytes;
+            if self.tlb.access(page, false) == Probe::Miss {
+                c.tlb_misses += 1;
+                self.tlb.fill(page, false, false);
+            }
+
+            // Scatter: partially covered sectors read-modify-write
+            // (Fig 5's 1/8 scatter plateau vs 1/4 gather plateau).
+            let coverage = (elems as u64 * 8) as f64 / sector_b as f64;
+            let needs_rmw = is_write && coverage < 0.5;
+
+            match self.l2.access(sector, is_write) {
+                Probe::Hit { .. } => {
+                    c.l2_hits += 1;
+                }
+                Probe::Miss => {
+                    // DRAM sector fetch (gather or scatter-RMW read) or
+                    // a pure write allocation for covered sectors.
+                    if !is_write || needs_rmw {
+                        c.dram_demand_lines += 1; // unit = one sector
+                    }
+                    self.note_row(sector, c);
+                    if self.l2.fill_after_miss(sector, is_write, false).is_some() {
+                        c.writeback_lines += 1;
+                    }
+                }
+            }
+        }
+        self.warp_sectors = sectors;
+    }
+
+    #[inline]
+    fn note_row(&mut self, sector: u64, c: &mut SimCounters) {
+        let row = sector * self.platform.sector_bytes / self.platform.row_bytes;
+        if row != self.last_row {
+            c.row_activations += 1;
+            self.last_row = row;
+        }
+    }
+
+    fn timing(
+        &self,
+        c: &SimCounters,
+        pattern: &Pattern,
+        kernel: Kernel,
+        measured: usize,
+    ) -> TimeBreakdown {
+        let p = &self.platform;
+        let sector_b = p.sector_bytes as f64;
+
+        // DRAM: demand sector reads (gather + scatter-RMW) + dirty
+        // writebacks (dirty L2 sectors drain on eviction; in steady
+        // state evictions match the write rate) + row activations.
+        let dram_bytes = c.dram_demand_lines as f64 * sector_b
+            + c.writeback_lines as f64 * sector_b
+            + c.row_activations as f64 * p.row_activate_bytes;
+        let dram_s = dram_bytes / (p.stream_gbs * 1e9);
+
+        // L2 bandwidth serves hits.
+        let l2_s = c.l2_hits as f64 * sector_b / (p.l2_gbs * 1e9);
+
+        // SM transaction issue rate.
+        let issue_s = c.transactions as f64 / (p.txn_per_ns * 1e9);
+
+        // TLB walks (highly parallel walkers).
+        let tlb_s = c.tlb_misses as f64 * p.tlb_walk_ns * 1e-9 / p.tlb_mlp;
+
+        // Same-sector write contention: delta-0 scatter makes every
+        // block hammer the same sectors; ownership serializes.
+        let coherence_s = if kernel == Kernel::Scatter && pattern.delta == 0 {
+            (measured * pattern.vector_len()) as f64 * p.write_contend_ns * 1e-9
+        } else {
+            0.0
+        };
+
+        TimeBreakdown {
+            issue_s,
+            l2_s,
+            l3_s: 0.0,
+            dram_s,
+            latency_s: 0.0,
+            tlb_s,
+            coherence_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platforms;
+
+    /// GPU-style uniform pattern: V=256 (paper's GPU index buffer).
+    fn guniform(stride: usize, count: usize) -> Pattern {
+        Pattern::parse(&format!("UNIFORM:256:{stride}"))
+            .unwrap()
+            .with_delta(256 * stride as i64)
+            .with_count(count)
+    }
+
+    const N: usize = 1 << 13;
+
+    #[test]
+    fn stride1_gather_approximates_stream() {
+        for name in ["k40c", "titanxp", "p100", "v100"] {
+            let p = platforms::gpu_by_name(name).unwrap();
+            let mut e = GpuEngine::new(&p);
+            let bw = e.run(&guniform(1, N), Kernel::Gather).unwrap().bandwidth_gbs();
+            assert!(
+                (bw / p.stream_gbs - 1.0).abs() < 0.25,
+                "{name}: {bw:.0} vs {:.0}",
+                p.stream_gbs
+            );
+        }
+    }
+
+    #[test]
+    fn gather_plateau_quarter_from_stride4_to_8() {
+        // Fig 5a: P100/TitanXp hold ~1/4 of peak from stride-4 to
+        // stride-8 (32 B sector coalescing).
+        for name in ["p100", "titanxp"] {
+            let p = platforms::gpu_by_name(name).unwrap();
+            let mut e = GpuEngine::new(&p);
+            let bw1 = e.run(&guniform(1, N), Kernel::Gather).unwrap().bandwidth_gbs();
+            let bw4 = e.run(&guniform(4, N), Kernel::Gather).unwrap().bandwidth_gbs();
+            let bw8 = e.run(&guniform(8, N), Kernel::Gather).unwrap().bandwidth_gbs();
+            assert!(
+                (bw4 / bw1 - 0.25).abs() < 0.06,
+                "{name} stride-4 fraction {:.3}",
+                bw4 / bw1
+            );
+            assert!(
+                (bw8 / bw4 - 1.0).abs() < 0.15,
+                "{name} should plateau 4->8: {bw4:.0} vs {bw8:.0}"
+            );
+        }
+    }
+
+    #[test]
+    fn k40_coalesces_worse() {
+        // Fig 5a: the K40c (128 B transactions) falls off harder at
+        // stride-8 than the sectored GPUs.
+        let k40 = platforms::gpu_by_name("k40c").unwrap();
+        let p100 = platforms::gpu_by_name("p100").unwrap();
+        let frac = |p: &platforms::GpuPlatform| {
+            let mut e = GpuEngine::new(p);
+            let bw1 = e.run(&guniform(1, N), Kernel::Gather).unwrap().bandwidth_gbs();
+            let bw8 = e.run(&guniform(8, N), Kernel::Gather).unwrap().bandwidth_gbs();
+            bw8 / bw1
+        };
+        assert!(
+            frac(&k40) < 0.6 * frac(&p100),
+            "k40 {:.3} vs p100 {:.3}",
+            frac(&k40),
+            frac(&p100)
+        );
+    }
+
+    #[test]
+    fn scatter_plateaus_at_one_eighth() {
+        // Fig 5b: scatter plateaus at ~1/8 instead of 1/4 (RMW).
+        let p = platforms::gpu_by_name("p100").unwrap();
+        let mut e = GpuEngine::new(&p);
+        let bw1 = e.run(&guniform(1, N), Kernel::Scatter).unwrap().bandwidth_gbs();
+        let bw4 = e.run(&guniform(4, N), Kernel::Scatter).unwrap().bandwidth_gbs();
+        let bw8 = e.run(&guniform(8, N), Kernel::Scatter).unwrap().bandwidth_gbs();
+        assert!(
+            (bw4 / bw1 - 0.125).abs() < 0.04,
+            "scatter stride-4 fraction {:.3}",
+            bw4 / bw1
+        );
+        assert!((bw8 / bw4 - 1.0).abs() < 0.2, "{bw4:.0} vs {bw8:.0}");
+    }
+
+    #[test]
+    fn bandwidth_keeps_declining_at_large_strides() {
+        // Fig 5: row-activation overhead keeps pulling bandwidth down
+        // past the plateau.
+        let p = platforms::gpu_by_name("p100").unwrap();
+        let mut e = GpuEngine::new(&p);
+        let bw8 = e.run(&guniform(8, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        let bw128 = e.run(&guniform(128, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!(
+            bw128 < 0.75 * bw8,
+            "stride-128 {bw128:.0} should sit below stride-8 {bw8:.0}"
+        );
+    }
+
+    #[test]
+    fn broadcast_coalesces_perfectly() {
+        // PENNANT-G4-style broadcast: 32 threads hitting 4 distinct
+        // elements need very few transactions.
+        let p = platforms::gpu_by_name("v100").unwrap();
+        let mut e = GpuEngine::new(&p);
+        let idx: Vec<i64> = (0..256).map(|j| (j / 64) as i64).collect();
+        let pat = Pattern::from_indices("bcast", idx)
+            .with_delta(4)
+            .with_count(N);
+        let r = e.run(&pat, Kernel::Gather).unwrap();
+        // 8 warps x 1 sector each per iteration (4 elems span 32 B)
+        let per_iter = r.counters.transactions as f64 / r.simulated_iterations as f64;
+        assert!(per_iter <= 9.0, "broadcast txn/iter {per_iter}");
+    }
+
+    #[test]
+    fn large_delta_hits_gpu_tlb() {
+        // Fig 9a: GPUs handle large PENNANT deltas much worse in
+        // relative terms (TLB + row misses).
+        let p = platforms::gpu_by_name("p100").unwrap();
+        let mut e = GpuEngine::new(&p);
+        let g12 = crate::pattern::table5::by_name("PENNANT-G12")
+            .unwrap()
+            .to_pattern(N);
+        let bw1 = e.run(&guniform(1, N), Kernel::Gather).unwrap().bandwidth_gbs();
+        let bw = e.run(&g12, Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!(
+            bw < 0.15 * bw1,
+            "large-delta pattern {bw:.0} vs stride-1 {bw1:.0}"
+        );
+    }
+
+    #[test]
+    fn delta0_scatter_contends() {
+        let p = platforms::gpu_by_name("titanxp").unwrap();
+        let mut e = GpuEngine::new(&p);
+        let s3 = crate::pattern::table5::by_name("LULESH-S3")
+            .unwrap()
+            .to_pattern(1 << 14);
+        let r = e.run(&s3, Kernel::Scatter).unwrap();
+        let bw = r.bandwidth_gbs();
+        assert!(
+            bw < 0.35 * p.stream_gbs,
+            "delta-0 scatter should contend: {bw:.0}"
+        );
+        assert_eq!(r.breakdown.bottleneck(), "coherence");
+    }
+
+    #[test]
+    fn cached_pattern_can_beat_stream_on_v100() {
+        // Fig 7: V100 peeks above the 100%-of-stride-1 ring on cached
+        // patterns; older GPUs largely cannot.
+        let v100 = platforms::gpu_by_name("v100").unwrap();
+        let amg = crate::pattern::table5::by_name("AMG-G0")
+            .unwrap()
+            .to_pattern(1 << 14);
+        let bw = GpuEngine::new(&v100)
+            .run(&amg, Kernel::Gather)
+            .unwrap()
+            .bandwidth_gbs();
+        assert!(
+            bw > 0.9 * v100.stream_gbs,
+            "V100 cached AMG {bw:.0} vs stream {:.0}",
+            v100.stream_gbs
+        );
+    }
+
+    #[test]
+    fn determinism_and_counter_consistency() {
+        let p = platforms::gpu_by_name("p100").unwrap();
+        let pat = guniform(4, 1 << 12);
+        let a = GpuEngine::new(&p).run(&pat, Kernel::Gather).unwrap();
+        let b = GpuEngine::new(&p).run(&pat, Kernel::Gather).unwrap();
+        assert_eq!(a.counters, b.counters);
+        let c = &a.counters;
+        assert_eq!(c.accesses as usize, 256 * a.simulated_iterations);
+        assert!(c.transactions <= c.accesses);
+        assert_eq!(c.l2_hits + c.dram_demand_lines, c.transactions);
+    }
+}

@@ -1,0 +1,189 @@
+//! Memory-hierarchy timing simulator — the substitute substrate for the
+//! paper's ten physical machines (DESIGN.md §2).
+//!
+//! The paper's evaluation figures are *explained* by micro-architectural
+//! mechanisms the authors name explicitly: cache-line granularity,
+//! Broadwell's adjacent-line prefetcher, Skylake's always-two-lines
+//! fetch, GPU warp coalescing at sector granularity, write-allocate
+//! traffic for scatter, coherence storms on delta-0 scatter, and TLB
+//! pressure at large deltas. This module models exactly those
+//! mechanisms:
+//!
+//! * [`cache`] — set-associative LRU write-back caches (also used as a
+//!   TLB by treating one "line" as one page).
+//! * [`prefetch`] — per-platform prefetcher models (Figs 3/4).
+//! * [`cpu`] — the CPU engine: L1/L2/L3 + TLB + prefetcher + a
+//!   bottleneck ("roofline-max") timing model over issue rate, cache
+//!   bandwidths, DRAM traffic, miss latency, and coherence.
+//! * [`gpu`] — the GPU engine: warp-level sector coalescing, an L2
+//!   cache, DRAM row-activation overhead, and a GPU TLB (Fig 5).
+//!
+//! Absolute GB/s are calibrated to the Table 3 STREAM column; curve
+//! *shapes* (who wins, crossover strides, plateau fractions) are the
+//! reproduction target.
+
+pub mod cache;
+pub mod cpu;
+pub mod gpu;
+pub mod prefetch;
+
+pub use cache::{Cache, Probe};
+pub use cpu::{CpuEngine, CpuSimOptions};
+pub use gpu::GpuEngine;
+pub use prefetch::{PrefetchKind, Prefetcher};
+
+/// Event counters from one simulated pattern run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimCounters {
+    /// Demand accesses simulated (gathers or scatters × index length).
+    pub accesses: u64,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub l3_hits: u64,
+    /// Demand line fills from DRAM.
+    pub dram_demand_lines: u64,
+    /// Prefetched line fills from DRAM.
+    pub dram_prefetch_lines: u64,
+    /// Demand accesses that landed on a line a prefetcher brought in.
+    pub prefetch_useful: u64,
+    /// Dirty lines written back to DRAM.
+    pub writeback_lines: u64,
+    /// Non-temporal (streaming) store lines sent straight to DRAM.
+    pub streaming_store_lines: u64,
+    pub tlb_misses: u64,
+    /// Cross-thread contended writes (coherence model).
+    pub coherence_events: u64,
+    /// GPU: memory transactions (sectors) issued.
+    pub transactions: u64,
+    /// GPU: DRAM row activations.
+    pub row_activations: u64,
+}
+
+impl SimCounters {
+    /// Total DRAM read traffic in bytes (64-byte lines).
+    pub fn dram_read_bytes(&self) -> u64 {
+        (self.dram_demand_lines + self.dram_prefetch_lines) * 64
+    }
+
+    /// Total DRAM write traffic in bytes.
+    pub fn dram_write_bytes(&self) -> u64 {
+        (self.writeback_lines + self.streaming_store_lines) * 64
+    }
+}
+
+/// Where the modelled time went (seconds, per bottleneck resource).
+/// The run time is the max over these (bottleneck model) — see
+/// `cpu::CpuEngine::timing`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TimeBreakdown {
+    pub issue_s: f64,
+    pub l2_s: f64,
+    pub l3_s: f64,
+    pub dram_s: f64,
+    pub latency_s: f64,
+    pub tlb_s: f64,
+    pub coherence_s: f64,
+}
+
+impl TimeBreakdown {
+    /// The binding bottleneck.
+    pub fn total(&self) -> f64 {
+        [
+            self.issue_s,
+            self.l2_s,
+            self.l3_s,
+            self.dram_s,
+            self.latency_s,
+            self.tlb_s,
+            self.coherence_s,
+        ]
+        .into_iter()
+        .fold(0.0, f64::max)
+    }
+
+    /// Name of the binding bottleneck (for reports). Real-execution
+    /// backends have no modelled breakdown: "measured".
+    pub fn bottleneck(&self) -> &'static str {
+        if self.total() == 0.0 {
+            return "measured";
+        }
+        let items = [
+            (self.issue_s, "issue"),
+            (self.l2_s, "l2-bw"),
+            (self.l3_s, "l3-bw"),
+            (self.dram_s, "dram-bw"),
+            (self.latency_s, "latency"),
+            (self.tlb_s, "tlb"),
+            (self.coherence_s, "coherence"),
+        ];
+        items
+            .into_iter()
+            .max_by(|a, b| a.0.total_cmp(&b.0))
+            .map(|(_, n)| n)
+            .unwrap_or("none")
+    }
+}
+
+/// Result of one simulated Spatter run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Modelled wall time for the *full* pattern (scaled from the
+    /// simulated sample when count exceeds the simulation cap).
+    pub seconds: f64,
+    /// Useful bytes (the paper's bandwidth numerator).
+    pub useful_bytes: u64,
+    pub counters: SimCounters,
+    pub breakdown: TimeBreakdown,
+    /// Iterations actually simulated (<= pattern count).
+    pub simulated_iterations: usize,
+}
+
+impl SimResult {
+    /// The paper's reported metric: useful bytes / min time, in GB/s
+    /// (decimal GB, matching STREAM's MB/s convention).
+    pub fn bandwidth_gbs(&self) -> f64 {
+        self.useful_bytes as f64 / self.seconds / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total_is_max() {
+        let b = TimeBreakdown {
+            issue_s: 0.5,
+            dram_s: 2.0,
+            latency_s: 1.0,
+            ..Default::default()
+        };
+        assert_eq!(b.total(), 2.0);
+        assert_eq!(b.bottleneck(), "dram-bw");
+    }
+
+    #[test]
+    fn counters_traffic_math() {
+        let c = SimCounters {
+            dram_demand_lines: 10,
+            dram_prefetch_lines: 5,
+            writeback_lines: 3,
+            streaming_store_lines: 2,
+            ..Default::default()
+        };
+        assert_eq!(c.dram_read_bytes(), 15 * 64);
+        assert_eq!(c.dram_write_bytes(), 5 * 64);
+    }
+
+    #[test]
+    fn bandwidth_units() {
+        let r = SimResult {
+            seconds: 1.0,
+            useful_bytes: 43_885_000_000,
+            counters: SimCounters::default(),
+            breakdown: TimeBreakdown::default(),
+            simulated_iterations: 1,
+        };
+        assert!((r.bandwidth_gbs() - 43.885).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,183 @@
+//! Statistics for Spatter runs (paper §3.5):
+//! minimum time over N runs, the bandwidth formula, harmonic mean over
+//! configurations, and Pearson's R for the STREAM-correlation study
+//! (Table 4, Eq. 1).
+
+/// The paper's run protocol: report the minimum time over 10 runs.
+pub const RUNS_PER_PATTERN: usize = 10;
+
+/// Bandwidth in bytes/second per paper §3.5:
+/// `(sizeof(double) * len(index) * n) / time`.
+/// "the rate at which the processor is able to consume data for each
+/// pattern" — cache reuse may push this above DRAM bandwidth.
+pub fn bandwidth_bytes_per_sec(index_len: usize, n: usize, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return f64::INFINITY;
+    }
+    (8 * index_len * n) as f64 / seconds
+}
+
+/// Summary over the per-run times of one pattern.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSummary {
+    pub min_seconds: f64,
+    pub max_seconds: f64,
+    pub mean_seconds: f64,
+    pub runs: usize,
+}
+
+impl RunSummary {
+    /// Summarize a set of run times; the paper reports min.
+    pub fn from_times(times: &[f64]) -> Option<RunSummary> {
+        if times.is_empty() {
+            return None;
+        }
+        let min = times.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = times.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        Some(RunSummary {
+            min_seconds: min,
+            max_seconds: max,
+            mean_seconds: mean,
+            runs: times.len(),
+        })
+    }
+}
+
+/// Harmonic mean — the paper's aggregate for JSON multi-config runs and
+/// the per-app columns of Table 4. Zero/negative entries are rejected
+/// (bandwidths are strictly positive).
+pub fn harmonic_mean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() || xs.iter().any(|&x| x <= 0.0) {
+        return None;
+    }
+    Some(xs.len() as f64 / xs.iter().map(|x| 1.0 / x).sum::<f64>())
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        None
+    } else {
+        Some(xs.iter().sum::<f64>() / xs.len() as f64)
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> Option<f64> {
+    let m = mean(xs)?;
+    Some(
+        (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+            .sqrt(),
+    )
+}
+
+/// Population covariance of two equal-length series.
+pub fn covariance(xs: &[f64], ys: &[f64]) -> Option<f64> {
+    if xs.len() != ys.len() || xs.is_empty() {
+        return None;
+    }
+    let mx = mean(xs)?;
+    let my = mean(ys)?;
+    Some(
+        xs.iter()
+            .zip(ys)
+            .map(|(x, y)| (x - mx) * (y - my))
+            .sum::<f64>()
+            / xs.len() as f64,
+    )
+}
+
+/// Pearson's correlation coefficient (paper Eq. 1):
+/// `R = cov(X, STREAM) / (std(X) * std(STREAM))`.
+/// Returns None for degenerate series (zero variance or length < 2).
+pub fn pearson_r(xs: &[f64], ys: &[f64]) -> Option<f64> {
+    if xs.len() < 2 {
+        return None;
+    }
+    let sx = std_dev(xs)?;
+    let sy = std_dev(ys)?;
+    if sx == 0.0 || sy == 0.0 {
+        return None;
+    }
+    Some(covariance(xs, ys)? / (sx * sy))
+}
+
+/// Min and max over a series (for the JSON-run aggregate report).
+pub fn min_max(xs: &[f64]) -> Option<(f64, f64)> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mn = xs.iter().copied().fold(f64::INFINITY, f64::min);
+    let mx = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    Some((mn, mx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * b.abs().max(1.0)
+    }
+
+    #[test]
+    fn bandwidth_formula_matches_paper() {
+        // 8 bytes * 8 indices * 2^24 gathers in 1 second
+        let bw = bandwidth_bytes_per_sec(8, 1 << 24, 1.0);
+        assert!(close(bw, (8 * 8 * (1 << 24)) as f64));
+        assert!(bandwidth_bytes_per_sec(8, 1, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn run_summary_min_of_10() {
+        let times = [5.0, 3.0, 4.0, 3.5, 9.0, 3.2, 3.1, 3.05, 3.9, 4.2];
+        let s = RunSummary::from_times(&times).unwrap();
+        assert!(close(s.min_seconds, 3.0));
+        assert!(close(s.max_seconds, 9.0));
+        assert_eq!(s.runs, 10);
+        assert!(RunSummary::from_times(&[]).is_none());
+    }
+
+    #[test]
+    fn harmonic_mean_properties() {
+        assert!(close(harmonic_mean(&[2.0, 2.0, 2.0]).unwrap(), 2.0));
+        // hmean of {1, 3} = 1.5 — dominated by the small value
+        assert!(close(harmonic_mean(&[1.0, 3.0]).unwrap(), 1.5));
+        assert!(harmonic_mean(&[]).is_none());
+        assert!(harmonic_mean(&[1.0, 0.0]).is_none());
+        assert!(harmonic_mean(&[1.0, -2.0]).is_none());
+        // hmean <= amean always
+        let xs = [3.0, 7.0, 11.0, 2.0];
+        assert!(harmonic_mean(&xs).unwrap() <= mean(&xs).unwrap());
+    }
+
+    #[test]
+    fn pearson_r_known_values() {
+        // perfectly correlated
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [10.0, 20.0, 30.0, 40.0];
+        assert!(close(pearson_r(&x, &y).unwrap(), 1.0));
+        // perfectly anti-correlated
+        let y2 = [40.0, 30.0, 20.0, 10.0];
+        assert!(close(pearson_r(&x, &y2).unwrap(), -1.0));
+        // independent-ish: R of orthogonal series is 0
+        let x3 = [1.0, -1.0, 1.0, -1.0];
+        let y3 = [1.0, 1.0, -1.0, -1.0];
+        assert!(pearson_r(&x3, &y3).unwrap().abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_r_degenerate() {
+        assert!(pearson_r(&[1.0], &[2.0]).is_none());
+        assert!(pearson_r(&[1.0, 1.0], &[2.0, 3.0]).is_none());
+        assert!(pearson_r(&[1.0, 2.0], &[3.0, 3.0]).is_none());
+        assert!(pearson_r(&[1.0, 2.0], &[3.0]).is_none());
+    }
+
+    #[test]
+    fn min_max_works() {
+        assert_eq!(min_max(&[3.0, 1.0, 2.0]), Some((1.0, 3.0)));
+        assert!(min_max(&[]).is_none());
+    }
+}

@@ -1,0 +1,133 @@
+//! The experiment suite: one entry per table/figure of the paper's
+//! evaluation (§4–5). Each experiment runs the relevant backends,
+//! writes a CSV series into the output directory, and returns a
+//! human-readable report with the paper's takeaway checks.
+//!
+//! | name | paper artifact |
+//! |---|---|
+//! | `fig3` | CPU uniform-stride gather+scatter bandwidth |
+//! | `fig4` | BDW/SKX gather with prefetching on/off |
+//! | `fig5` | GPU uniform-stride gather+scatter bandwidth |
+//! | `fig6` | SIMD vs scalar % improvement |
+//! | `table1` | mini-app G/S characterization (trace pipeline) |
+//! | `table4` | mini-app pattern bandwidths + STREAM correlation |
+//! | `fig7` | radar, app-derived gather patterns |
+//! | `fig8` | radar, app-derived scatter patterns |
+//! | `fig9` | bandwidth-bandwidth plots |
+//! | `all` | everything above |
+
+mod apps;
+mod ustride;
+
+pub use apps::{fig7_radar, fig8_radar, fig9_bwbw, table1_characterization, table4_miniapps};
+pub use ustride::{fig3_cpu_ustride, fig4_prefetch, fig5_gpu_ustride, fig6_simd_scalar};
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Shared experiment options.
+#[derive(Debug, Clone)]
+pub struct SuiteContext {
+    /// Where CSV series land.
+    pub out_dir: PathBuf,
+    /// Reduce simulated counts (CI-speed runs). Shapes are preserved;
+    /// absolute numbers get noisier.
+    pub fast: bool,
+}
+
+impl SuiteContext {
+    pub fn new(out_dir: &Path) -> SuiteContext {
+        SuiteContext {
+            out_dir: out_dir.to_path_buf(),
+            fast: false,
+        }
+    }
+
+    pub fn fast(out_dir: &Path) -> SuiteContext {
+        SuiteContext {
+            out_dir: out_dir.to_path_buf(),
+            fast: true,
+        }
+    }
+
+    /// Uniform-stride iteration count (paper: >= 8-16 GB of traffic;
+    /// the simulator extrapolates past its measurement cap anyway).
+    pub fn ustride_count(&self) -> usize {
+        if self.fast {
+            1 << 16
+        } else {
+            1 << 20
+        }
+    }
+
+    /// App-pattern iteration count (paper: >= 2 GB of traffic).
+    pub fn app_count(&self) -> usize {
+        if self.fast {
+            1 << 14
+        } else {
+            1 << 18
+        }
+    }
+
+    /// Trace-emulator scale (sweeps per kernel).
+    pub fn trace_scale(&self) -> usize {
+        1
+    }
+}
+
+/// The strides of the uniform-stride studies (1..128, powers of two).
+pub const STRIDES: &[usize] = &[1, 2, 4, 8, 16, 32, 64, 128];
+
+/// Run one experiment by name; returns the textual report.
+pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
+    match name.to_ascii_lowercase().as_str() {
+        "fig3" => fig3_cpu_ustride(ctx),
+        "fig4" => fig4_prefetch(ctx),
+        "fig5" => fig5_gpu_ustride(ctx),
+        "fig6" => fig6_simd_scalar(ctx),
+        "table1" => table1_characterization(ctx),
+        "table4" => table4_miniapps(ctx),
+        "fig7" => fig7_radar(ctx),
+        "fig8" => fig8_radar(ctx),
+        "fig9" => fig9_bwbw(ctx),
+        "all" => {
+            let mut out = String::new();
+            for n in [
+                "table1", "fig3", "fig4", "fig5", "fig6", "table4", "fig7",
+                "fig8", "fig9",
+            ] {
+                out.push_str(&run(n, ctx)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        other => Err(Error::Cli(format!(
+            "unknown suite '{other}' (fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|all)"
+        ))),
+    }
+}
+
+/// Names of all experiments (for listings).
+pub const EXPERIMENTS: &[&str] = &[
+    "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1", "table4",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_suite_errors() {
+        let ctx = SuiteContext::fast(Path::new("/tmp/spatter-suite-x"));
+        assert!(run("fig99", &ctx).is_err());
+    }
+
+    #[test]
+    fn context_scaling() {
+        let slow = SuiteContext::new(Path::new("x"));
+        let fast = SuiteContext::fast(Path::new("x"));
+        assert!(slow.ustride_count() > fast.ustride_count());
+        assert!(slow.app_count() > fast.app_count());
+    }
+}

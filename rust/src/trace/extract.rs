@@ -1,0 +1,214 @@
+//! The pattern extractor: turn a raw G/S instruction trace into ranked
+//! (index-buffer, delta) proxy patterns — the paper's §2 post-
+//! processing, which produced Table 5.
+//!
+//! Algorithm:
+//! 1. Normalize each record's offset vector (min lane offset = 0,
+//!    preserving lane order) and fold the shift into the base.
+//! 2. Cluster records by (kernel, normalized offsets).
+//! 3. Within a cluster, the *delta* is the modal difference between
+//!    consecutive normalized bases.
+//! 4. Rank clusters by data moved; classify each buffer with the
+//!    paper's taxonomy.
+
+use std::collections::HashMap;
+
+use super::{GsRecord, KernelTrace};
+use crate::pattern::{classify_indices, Kernel, Pattern, PatternClass};
+
+/// One extracted proxy pattern (a Table 5 row candidate).
+#[derive(Debug, Clone)]
+pub struct ExtractedPattern {
+    pub kernel: Kernel,
+    /// Normalized index buffer, lane order preserved.
+    pub indices: Vec<i64>,
+    /// Modal base-to-base distance.
+    pub delta: i64,
+    /// Instructions in the cluster.
+    pub occurrences: u64,
+    /// Bytes moved by the cluster.
+    pub bytes: u64,
+    pub class: PatternClass,
+}
+
+impl ExtractedPattern {
+    /// Materialize as a runnable Spatter pattern.
+    pub fn to_pattern(&self, name: &str, count: usize) -> Pattern {
+        Pattern::from_indices(name, self.indices.clone())
+            .with_delta(self.delta.max(0))
+            .with_count(count)
+    }
+}
+
+/// Extract ranked patterns from a trace. `top` limits the output
+/// (0 = all). Clusters are ranked by bytes moved, descending.
+pub fn extract_patterns(records: &[GsRecord], top: usize) -> Vec<ExtractedPattern> {
+    // Cluster by (kernel, normalized offsets); keep bases in trace order.
+    #[allow(clippy::type_complexity)]
+    let mut clusters: HashMap<(Kernel, Vec<i64>), Vec<i64>> = HashMap::new();
+    let mut order: Vec<(Kernel, Vec<i64>)> = Vec::new();
+    for r in records {
+        let (base, norm) = r.normalized();
+        let key = (r.kernel, norm);
+        match clusters.get_mut(&key) {
+            Some(bases) => bases.push(base),
+            None => {
+                order.push(key.clone());
+                clusters.insert(key, vec![base]);
+            }
+        }
+    }
+
+    let mut out: Vec<ExtractedPattern> = order
+        .into_iter()
+        .map(|key| {
+            let bases = &clusters[&key];
+            let (kernel, indices) = key;
+            let delta = modal_delta(bases);
+            let occurrences = bases.len() as u64;
+            let bytes = occurrences * indices.len() as u64 * 8;
+            let class = classify_indices(&indices);
+            ExtractedPattern {
+                kernel,
+                indices,
+                delta,
+                occurrences,
+                bytes,
+                class,
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| b.bytes.cmp(&a.bytes));
+    if top > 0 {
+        out.truncate(top);
+    }
+    out
+}
+
+/// Extract from a whole kernel trace.
+pub fn extract_from_trace(trace: &KernelTrace, top: usize) -> Vec<ExtractedPattern> {
+    extract_patterns(&trace.records, top)
+}
+
+/// The most common difference between consecutive bases (0 for a
+/// single-record cluster).
+fn modal_delta(bases: &[i64]) -> i64 {
+    if bases.len() < 2 {
+        return 0;
+    }
+    let mut counts: HashMap<i64, u64> = HashMap::new();
+    for w in bases.windows(2) {
+        *counts.entry(w[1] - w[0]).or_insert(0) += 1;
+    }
+    counts
+        .into_iter()
+        .max_by_key(|&(delta, n)| (n, -delta))
+        .map(|(d, _)| d)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gather(base: i64, offsets: &[i64]) -> GsRecord {
+        GsRecord {
+            kernel: Kernel::Gather,
+            base,
+            offsets: offsets.to_vec(),
+        }
+    }
+
+    #[test]
+    fn single_uniform_cluster() {
+        // stride-4 gathers marching with delta 2
+        let offsets: Vec<i64> = (0..16).map(|j| j * 4).collect();
+        let records: Vec<GsRecord> =
+            (0..100).map(|i| gather(2 * i, &offsets)).collect();
+        let pats = extract_patterns(&records, 0);
+        assert_eq!(pats.len(), 1);
+        let p = &pats[0];
+        assert_eq!(p.indices, offsets);
+        assert_eq!(p.delta, 2);
+        assert_eq!(p.occurrences, 100);
+        assert_eq!(p.class, PatternClass::UniformStride(4));
+    }
+
+    #[test]
+    fn normalization_folds_into_base() {
+        // offsets [8, 12, 16] at base b == [0, 4, 8] at base b+8.
+        let records: Vec<GsRecord> =
+            (0..10).map(|i| gather(3 * i, &[8, 12, 16])).collect();
+        let pats = extract_patterns(&records, 0);
+        assert_eq!(pats[0].indices, vec![0, 4, 8]);
+        assert_eq!(pats[0].delta, 3);
+    }
+
+    #[test]
+    fn lane_order_is_preserved() {
+        // PENNANT-style quad order [4, 8, 12, 0] must not be sorted.
+        let records: Vec<GsRecord> =
+            (0..10).map(|i| gather(4 * i, &[4, 8, 12, 0])).collect();
+        let pats = extract_patterns(&records, 0);
+        assert_eq!(pats[0].indices, vec![4, 8, 12, 0]);
+        assert_eq!(pats[0].class, PatternClass::Complex);
+    }
+
+    #[test]
+    fn clusters_ranked_by_bytes() {
+        let mut records = Vec::new();
+        for i in 0..5 {
+            records.push(gather(i, &[0, 1])); // 5 * 16 B
+        }
+        for i in 0..100 {
+            records.push(gather(i, &[0, 2, 4, 6])); // 100 * 32 B
+        }
+        let pats = extract_patterns(&records, 0);
+        assert_eq!(pats.len(), 2);
+        assert_eq!(pats[0].indices, vec![0, 2, 4, 6]);
+        assert_eq!(pats[1].indices, vec![0, 1]);
+        // top-1 truncation
+        assert_eq!(extract_patterns(&records, 1).len(), 1);
+    }
+
+    #[test]
+    fn gather_and_scatter_do_not_merge() {
+        let mut records = vec![gather(0, &[0, 1])];
+        records.push(GsRecord {
+            kernel: Kernel::Scatter,
+            base: 0,
+            offsets: vec![0, 1],
+        });
+        let pats = extract_patterns(&records, 0);
+        assert_eq!(pats.len(), 2);
+    }
+
+    #[test]
+    fn modal_delta_picks_majority() {
+        // bases mostly advance by 4, with one irregular jump
+        assert_eq!(modal_delta(&[0, 4, 8, 12, 100, 104, 108]), 4);
+        assert_eq!(modal_delta(&[7]), 0);
+        assert_eq!(modal_delta(&[]), 0);
+    }
+
+    #[test]
+    fn broadcast_cluster_classified() {
+        let b: Vec<i64> = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        let records: Vec<GsRecord> = (0..20).map(|i| gather(4 * i, &b)).collect();
+        let pats = extract_patterns(&records, 0);
+        assert_eq!(pats[0].class, PatternClass::Broadcast);
+        assert_eq!(pats[0].delta, 4);
+    }
+
+    #[test]
+    fn to_pattern_roundtrip() {
+        let records: Vec<GsRecord> =
+            (0..10).map(|i| gather(8 * i, &[0, 1, 2, 3])).collect();
+        let pats = extract_patterns(&records, 0);
+        let p = pats[0].to_pattern("extracted", 100);
+        assert_eq!(p.indices, vec![0, 1, 2, 3]);
+        assert_eq!(p.delta, 8);
+        assert_eq!(p.count, 100);
+        p.validate().unwrap();
+    }
+}

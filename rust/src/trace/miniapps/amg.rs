@@ -1,0 +1,134 @@
+//! AMG (LLNL algebraic multigrid benchmark) — the
+//! `hypre_CSRMatrixMatvecOutOfPlace` hot kernel (Table 2:
+//! `-problem 1 -n 36 36 36 -P 4 4 4`).
+//!
+//! Problem 1 assembles a 27-point Laplacian on a 36³ grid; hypre's CSR
+//! stores the diagonal entry *first*, then the off-diagonals in column
+//! order. The vectorized SpMV gathers `x[colidx[k .. k+16]]` — for an
+//! interior row the first 16 columns are
+//! `[diag, all 26 neighbours in ascending order][..16]`, which after
+//! zero-normalization is exactly the paper's AMG-G0 buffer
+//! `[1333, 0, 1, 36, 37, 72, 73, 1296, 1297, 1332, 1368, 1369, 2592,
+//!   2593, 2628, 2629]` with delta 1 (consecutive rows).
+
+use crate::trace::{KernelTrace, SVE_LANES};
+
+/// Grid edge (paper: -n 36 36 36).
+pub const N: i64 = 36;
+
+/// 27-point stencil column offsets for a point of an N³ grid in hypre
+/// layout: diagonal first, then off-diagonals ascending. `clip_xmax`
+/// prunes the dx=+1 neighbours (a row on the local x-max boundary) and
+/// `clip_xmin` the dx=-1 ones.
+fn stencil_columns(clip_xmin: bool, clip_xmax: bool) -> Vec<i64> {
+    let mut offs = Vec::with_capacity(27);
+    for dz in -1i64..=1 {
+        for dy in -1i64..=1 {
+            for dx in -1i64..=1 {
+                if (dx, dy, dz) == (0, 0, 0)
+                    || (clip_xmax && dx == 1)
+                    || (clip_xmin && dx == -1)
+                {
+                    continue;
+                }
+                offs.push(dz * N * N + dy * N + dx);
+            }
+        }
+    }
+    offs.sort_unstable();
+    let mut cols = vec![0i64]; // diagonal first
+    cols.extend(offs);
+    cols
+}
+
+/// Emulate the SpMV over `scale` sweeps of the local 36³ block,
+/// emitting one 16-lane gather per 16 columns of each row (a full
+/// stencil has 27 columns: one full vector + a scalar tail).
+///
+/// Interior rows produce the paper's AMG-G1 buffer; x-boundary rows
+/// (pruned stencil) produce exactly AMG-G0.
+pub fn matvec_out_of_place(scale: usize) -> KernelTrace {
+    let mut t = KernelTrace::new("AMG", "hypre_CSRMatrixMatvecOutOfPlace");
+    let interior = stencil_columns(false, false);
+    let xmax = stencil_columns(false, true);
+    let xmin = stencil_columns(true, false);
+    for _ in 0..scale {
+        for z in 1..N - 1 {
+            for y in 1..N - 1 {
+                for x in 0..N {
+                    let cols = if x == 0 {
+                        &xmin
+                    } else if x == N - 1 {
+                        &xmax
+                    } else {
+                        &interior
+                    };
+                    let row = z * N * N + y * N + x;
+                    // Vector body: first 16 columns.
+                    let lanes: Vec<i64> =
+                        cols[..SVE_LANES].iter().map(|c| row + c).collect();
+                    let min = *lanes.iter().min().unwrap();
+                    let offsets: Vec<i64> =
+                        lanes.iter().map(|l| l - min).collect();
+                    t.gather(min, &offsets);
+                    // Scalar tail columns + result store + matrix value
+                    // loads + colidx loads.
+                    let ncols = cols.len() as u64;
+                    t.scalar_loads += (ncols - SVE_LANES as u64) + 2 * ncols;
+                    t.scalar_stores += 1;
+                }
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::table5;
+    use crate::trace::extract::extract_from_trace;
+
+    #[test]
+    fn stencil_has_27_points_diag_first() {
+        let cols = stencil_columns(false, false);
+        assert_eq!(cols.len(), 27);
+        assert_eq!(cols[0], 0);
+        assert!(cols[1..].windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(cols[1], -(N * N) - N - 1);
+        assert_eq!(stencil_columns(false, true).len(), 18);
+    }
+
+    #[test]
+    fn extraction_recovers_amg_g1_and_g0() {
+        // Interior rows dominate -> top pattern is AMG-G1; the pruned
+        // x-max boundary rows are AMG-G0 (both Table 5 rows).
+        let trace = matvec_out_of_place(1);
+        let pats = extract_from_trace(&trace, 3);
+        let g1 = table5::by_name("AMG-G1").unwrap();
+        assert_eq!(pats[0].indices, g1.indices, "top pattern must be AMG-G1");
+        assert_eq!(pats[0].delta, g1.delta);
+        let g0 = table5::by_name("AMG-G0").unwrap();
+        let found = pats
+            .iter()
+            .find(|p| p.indices == g0.indices)
+            .expect("AMG-G0 among top extracted patterns");
+        // Boundary rows are N apart (one per grid line).
+        assert_eq!(found.delta, N);
+    }
+
+    #[test]
+    fn gathers_only_no_scatters() {
+        // Table 1: AMG's matvec has 1.7M gathers, 0 scatters.
+        let trace = matvec_out_of_place(1);
+        assert!(trace.gather_count() > 0);
+        assert_eq!(trace.scatter_count(), 0);
+    }
+
+    #[test]
+    fn traffic_fraction_in_table1_ballpark() {
+        // Table 1 reports 17.8% G/S traffic for this kernel.
+        let f = matvec_out_of_place(1).gs_traffic_fraction();
+        assert!((0.1..0.35).contains(&f), "fraction {f}");
+    }
+}

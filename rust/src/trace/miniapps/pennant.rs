@@ -1,0 +1,316 @@
+//! PENNANT 0.9 — `Hydro::doCycle`, `Mesh::calcSurfVecs`,
+//! `QCS::setForce`, `QCS::setQCnForce` (Table 2: sedovflat,
+//! `meshparams 1920 2160`, cstop 5).
+//!
+//! PENNANT is a staggered-grid Lagrangian hydro code over an
+//! unstructured quad mesh; the sedovflat mesh is logically rectangular
+//! with ~480 sides per row in each rank-local chunk, which is where the
+//! 480/482/484 constants in Table 5's edge buffers come from:
+//!
+//! * side loops gather the two endpoints of each edge plus the
+//!   wrap-around pair of the neighbouring row — the
+//!   `[2,484,482,0, 4,486,484,2, ...]` buffers (G0/G1) marching with
+//!   delta 2, and the same buffers at row-pitch deltas 480/482 (G6/G7).
+//! * zone-to-corner broadcasts: each zone value feeds its 4 corners —
+//!   `[0,0,0,0,1,1,1,1,2,2,2,2,3,3,3,3]` (G4) with delta 4 in the
+//!   side-major phase and at chunk-pitch deltas in the later passes
+//!   (G9–G11, G15).
+//! * corner-major quad gathers `[4,8,12,0, 20,24,28,16, ...]` (G3/G5)
+//!   and `[6,0,2,4, 14,8,10,12, ...]` (G12–G14) — rotated corner
+//!   numbering, at small and chunk-pitch deltas.
+//! * `[2,0,0,0,...]` (G8): the first-point-of-zone load with three
+//!   masked-off lanes repeating per chunk.
+
+use crate::trace::KernelTrace;
+
+/// Sides per mesh row in a rank-local chunk (the 480/482/484 family).
+pub const ROW: i64 = 480;
+/// Rank-local chunk pitches observed between kernel passes (element
+/// units). These reproduce Table 5's large deltas exactly:
+/// 129608 ≈ one side-chunk, 388848/388852 ≈ one zone-array pass,
+/// 518408 ≈ one corner-array pass, 1036816 = two corner passes,
+/// 1882384 ≈ the full-mesh point array.
+pub const CHUNK_SIDES: i64 = 129_608;
+pub const CHUNK_ZONES: i64 = 388_848;
+pub const CHUNK_CORNERS: i64 = 518_408;
+pub const CHUNK_POINTS: i64 = 1_882_384;
+
+/// Rows emulated per kernel pass (scaled from the real mesh).
+const ROWS: i64 = 64;
+
+/// The edge-pair buffer of G0: lane groups (p2, p2+row+2, p2+row,
+/// p1) per side.
+fn edge_buf_g0() -> Vec<i64> {
+    let mut v = Vec::with_capacity(16);
+    for s in 0..4i64 {
+        let p = 2 * s;
+        v.extend_from_slice(&[p + 2, p + ROW + 4, p + ROW + 2, p]);
+    }
+    v
+}
+
+/// The edge-pair buffer of G1: rotated lane order (p1, p2, ...).
+fn edge_buf_g1() -> Vec<i64> {
+    let mut v = Vec::with_capacity(16);
+    for s in 0..4i64 {
+        let p = 2 * s;
+        v.extend_from_slice(&[p, p + 2, p + ROW + 4, p + ROW + 2]);
+    }
+    v
+}
+
+fn broadcast_buf() -> Vec<i64> {
+    (0..16).map(|j| j / 4).collect()
+}
+
+fn quad_buf() -> Vec<i64> {
+    // [4,8,12,0, 20,24,28,16, ...] — rotated corner numbering.
+    (0..16)
+        .map(|j| {
+            let group = j / 4;
+            let lane = j % 4;
+            group * 16 + ((lane + 1) % 4) * 4
+        })
+        .collect()
+}
+
+fn quad2_buf() -> Vec<i64> {
+    // [6,0,2,4, 14,8,10,12, ...]
+    (0..16)
+        .map(|j| {
+            let group = j / 4;
+            let lane = j % 4;
+            group * 8 + ((lane + 3) % 4) * 2
+        })
+        .collect()
+}
+
+fn first_point_buf() -> Vec<i64> {
+    // [2,0,0,0, 2,0,0,0, ...] — first-point loads with masked lanes.
+    (0..16).map(|j| if j % 4 == 0 { 2 } else { 0 }).collect()
+}
+
+/// `Hydro::doCycle` — the main cycle: point gathers along side rows
+/// (G0/G1 at delta 2), corner quads (G3 at delta 2), and zone
+/// broadcasts (G4 at delta 4).
+pub fn hydro_do_cycle(scale: usize) -> KernelTrace {
+    let mut t = KernelTrace::new("PENNANT", "Hydro::doCycle");
+    let g0 = edge_buf_g0();
+    let g1 = edge_buf_g1();
+    let g3 = quad_buf();
+    let g4 = broadcast_buf();
+    for _ in 0..scale {
+        // Side-major point gathers, marching two points per vector.
+        for s in 0..ROWS * 8 {
+            t.gather(2 * s, &g0);
+        }
+        for s in 0..ROWS * 8 {
+            t.gather(2 * s, &g1);
+        }
+        // Corner-major quads.
+        for s in 0..ROWS * 4 {
+            t.gather(2 * s, &g3);
+        }
+        // Zone-to-corner broadcast.
+        for z in 0..ROWS * 4 {
+            t.gather(4 * z, &g4);
+        }
+        // Side/zone state loads, EOS math, accumulator stores —
+        // calibrated to Table 1's 13.9% G/S share for doCycle.
+        t.scalar_loads += (ROWS * 2000) as u64;
+        t.scalar_stores += (ROWS * 380) as u64;
+    }
+    t
+}
+
+/// `Mesh::calcSurfVecs` — surface vectors per side: stride-4 component
+/// gathers (G2, delta 2) and the side scatter (S0, delta 1).
+pub fn calc_surf_vecs(scale: usize) -> KernelTrace {
+    let mut t = KernelTrace::new("PENNANT", "Mesh::calcSurfVecs");
+    let s4: Vec<i64> = (0..16).map(|i| i * 4).collect();
+    for _ in 0..scale {
+        for s in 0..ROWS * 4 {
+            t.gather(2 * s, &s4);
+        }
+        for s in 0..ROWS * 4 {
+            t.scatter(s, &s4);
+        }
+        // Table 1: 39.5% G/S share for calcSurfVecs.
+        t.scalar_loads += (ROWS * 150) as u64;
+        t.scalar_stores += (ROWS * 45) as u64;
+    }
+    t
+}
+
+/// `QCS::setForce` — edge gathers at row pitch (G6/G7) and the
+/// rotated quad at delta 4 (G5).
+pub fn set_force(scale: usize) -> KernelTrace {
+    let mut t = KernelTrace::new("PENNANT", "QCS::setForce");
+    let edge0 = {
+        // G6/G7 buffer: [482,0,2,484, 484,2,4,486, ...]
+        let mut v = Vec::with_capacity(16);
+        for s in 0..4i64 {
+            let p = 2 * s;
+            v.extend_from_slice(&[p + ROW + 2, p, p + 2, p + ROW + 4]);
+        }
+        v
+    };
+    let g5 = quad_buf();
+    for _ in 0..scale {
+        // Row-major pass: pitch ROW (G6).
+        for r in 0..ROWS {
+            t.gather(r * ROW, &edge0);
+        }
+        // Diagonal pass: pitch ROW + 2 (G7).
+        for r in 0..ROWS {
+            t.gather(r * (ROW + 2), &edge0);
+        }
+        for s in 0..ROWS * 2 {
+            t.gather(4 * s, &g5);
+        }
+        // Table 1: 45.5% G/S share for setForce.
+        t.scalar_loads += (ROWS * 70) as u64;
+        t.scalar_stores += (ROWS * 7) as u64;
+    }
+    t
+}
+
+/// `QCS::setQCnForce` — the chunk-strided passes: broadcasts and quads
+/// at the large Table 5 deltas (G8–G15), plus a scatter phase.
+pub fn set_qcn_force(scale: usize) -> KernelTrace {
+    let mut t = KernelTrace::new("PENNANT", "QCS::setQCnForce");
+    let bcast = broadcast_buf();
+    let q2 = quad2_buf();
+    let fp = first_point_buf();
+    let s4: Vec<i64> = (0..16).map(|i| i * 4).collect();
+    let chunks = 8i64;
+    for _ in 0..scale {
+        // G8: first-point loads, one per side-chunk.
+        for c in 0..chunks {
+            t.gather(c * CHUNK_SIDES, &fp);
+        }
+        // G9/G10/G11: zone broadcasts at zone-pass pitch (the paper
+        // lists the buffer three times: three consecutive QCS passes).
+        for pass in 0..3 {
+            for c in 0..chunks {
+                t.gather(pass * 4 + c * (CHUNK_ZONES + if pass == 0 { 4 } else { 0 }), &bcast);
+            }
+        }
+        // G12/G13: corner quads at corner-pass pitch; G14 at double.
+        for c in 0..chunks {
+            t.gather(c * CHUNK_CORNERS, &q2);
+        }
+        for c in 0..chunks {
+            t.gather(c * CHUNK_CORNERS, &q2);
+        }
+        for c in 0..chunks {
+            t.gather(c * 2 * CHUNK_CORNERS, &q2);
+        }
+        // G15: point-array broadcast at full-mesh pitch.
+        for c in 0..chunks {
+            t.gather(c * CHUNK_POINTS, &bcast);
+        }
+        // The scatter phase (Table 1: ~324k scatters in setQCnForce).
+        for s in 0..chunks * 8 {
+            t.scatter(s, &s4);
+        }
+        // Table 1: 64.5% G/S share for setQCnForce.
+        t.scalar_loads += (chunks * 130) as u64;
+        t.scalar_stores += (chunks * 10) as u64;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::{table5, Kernel, PatternClass};
+    use crate::trace::extract::extract_from_trace;
+
+    #[test]
+    fn buffers_match_table5_exactly() {
+        assert_eq!(edge_buf_g0(), table5::by_name("PENNANT-G0").unwrap().indices);
+        assert_eq!(edge_buf_g1(), table5::by_name("PENNANT-G1").unwrap().indices);
+        assert_eq!(broadcast_buf(), table5::by_name("PENNANT-G4").unwrap().indices);
+        assert_eq!(quad_buf(), table5::by_name("PENNANT-G3").unwrap().indices);
+        assert_eq!(quad2_buf(), table5::by_name("PENNANT-G12").unwrap().indices);
+        assert_eq!(first_point_buf(), table5::by_name("PENNANT-G8").unwrap().indices);
+    }
+
+    #[test]
+    fn do_cycle_recovers_edge_and_broadcast() {
+        let pats = extract_from_trace(&hydro_do_cycle(1), 0);
+        let g0 = table5::by_name("PENNANT-G0").unwrap();
+        let e = pats
+            .iter()
+            .find(|p| p.indices == g0.indices)
+            .expect("G0 cluster");
+        assert_eq!(e.delta, 2);
+        let g4 = table5::by_name("PENNANT-G4").unwrap();
+        let b = pats
+            .iter()
+            .find(|p| p.indices == g4.indices)
+            .expect("G4 cluster");
+        assert_eq!(b.delta, 4);
+        assert_eq!(b.class, PatternClass::Broadcast);
+    }
+
+    #[test]
+    fn set_force_recovers_row_pitch_deltas() {
+        let pats = extract_from_trace(&set_force(1), 0);
+        let g6 = table5::by_name("PENNANT-G6").unwrap();
+        let e = pats
+            .iter()
+            .find(|p| p.indices == g6.indices)
+            .expect("edge cluster");
+        // Two interleaved pitches (480 and 482); modal is one of them.
+        assert!([480, 482].contains(&e.delta), "delta {}", e.delta);
+    }
+
+    #[test]
+    fn qcn_force_recovers_large_deltas() {
+        let pats = extract_from_trace(&set_qcn_force(1), 0);
+        let g9 = table5::by_name("PENNANT-G9").unwrap();
+        let bcasts: Vec<&_> = pats
+            .iter()
+            .filter(|p| p.kernel == Kernel::Gather && p.indices == g9.indices)
+            .collect();
+        assert!(!bcasts.is_empty());
+        assert!(
+            bcasts.iter().any(|p| p.delta >= 388_848),
+            "deltas {:?}",
+            bcasts.iter().map(|p| p.delta).collect::<Vec<_>>()
+        );
+        let g12 = table5::by_name("PENNANT-G12").unwrap();
+        let quads = pats
+            .iter()
+            .find(|p| p.indices == g12.indices)
+            .expect("quad2 cluster");
+        assert_eq!(quads.delta, 518_408);
+        let g8 = table5::by_name("PENNANT-G8").unwrap();
+        let fp = pats
+            .iter()
+            .find(|p| p.indices == g8.indices)
+            .expect("first-point cluster");
+        assert_eq!(fp.delta, 129_608);
+    }
+
+    #[test]
+    fn calc_surf_vecs_has_gathers_and_scatters() {
+        // Table 1 lists calcSurfVecs gathers; PENNANT-S0 is the
+        // stride-4 scatter with delta 1.
+        let pats = extract_from_trace(&calc_surf_vecs(1), 0);
+        let s0 = table5::by_name("PENNANT-S0").unwrap();
+        let sc = pats
+            .iter()
+            .find(|p| p.kernel == Kernel::Scatter && p.indices == s0.indices)
+            .expect("S0 cluster");
+        assert_eq!(sc.delta, 1);
+        let g2 = table5::by_name("PENNANT-G2").unwrap();
+        let ga = pats
+            .iter()
+            .find(|p| p.kernel == Kernel::Gather && p.indices == g2.indices)
+            .expect("G2 cluster");
+        assert_eq!(ga.delta, 2);
+    }
+}

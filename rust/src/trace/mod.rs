@@ -1,0 +1,165 @@
+//! Trace capture + gather/scatter pattern extraction — the paper's §2
+//! methodology, rebuilt end-to-end.
+//!
+//! The paper ran DoE mini-apps through an instrumented (closed-source)
+//! SVE-1024 QEMU and post-processed the G/S instruction stream into
+//! (index-buffer, delta) proxy patterns. Here:
+//!
+//! * [`miniapps`] — emulators of the hot kernels of AMG, LULESH,
+//!   Nekbone, and PENNANT at the paper's Table 2 problem shapes
+//!   (scaled), emitting the same SVE-style G/S records (16 × 64-bit
+//!   lanes) plus scalar load/store counts.
+//! * [`extract`] — the pattern extractor: cluster records by their
+//!   normalized offset vector, recover the per-cluster delta from
+//!   consecutive base addresses, rank by data motion.
+//!
+//! Ground truth: the paper's own Table 5. `suite::table1` runs the
+//! emulators through the extractor and checks the recovered patterns
+//! against `pattern::table5`.
+
+pub mod extract;
+pub mod miniapps;
+
+pub use extract::{extract_patterns, ExtractedPattern};
+
+use crate::pattern::Kernel;
+
+/// SVE vector length in 64-bit lanes (1024-bit vectors, paper §2).
+pub const SVE_LANES: usize = 16;
+
+/// One gather/scatter instruction record from a trace: a base address
+/// (in elements) and the per-lane offset vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GsRecord {
+    pub kernel: Kernel,
+    /// Base element address of the instruction.
+    pub base: i64,
+    /// Per-lane element offsets (length == SVE_LANES for full vectors).
+    pub offsets: Vec<i64>,
+}
+
+impl GsRecord {
+    /// Offsets normalized so the minimum is zero, preserving lane
+    /// order (Spatter index buffers are zero-based).
+    pub fn normalized(&self) -> (i64, Vec<i64>) {
+        let min = self.offsets.iter().copied().min().unwrap_or(0);
+        (
+            self.base + min,
+            self.offsets.iter().map(|o| o - min).collect(),
+        )
+    }
+}
+
+/// The trace of one application kernel (one Table 1 row).
+#[derive(Debug, Clone)]
+pub struct KernelTrace {
+    /// Application name ("AMG", "LULESH", ...).
+    pub app: &'static str,
+    /// Kernel name as in Table 1 (e.g. "hypre_CSRMatrixMatvecOutOfPlace").
+    pub kernel: &'static str,
+    pub records: Vec<GsRecord>,
+    /// Scalar (non-G/S) loads and stores, for the Table 1 G/S-traffic
+    /// percentage column. Counted as 64-bit like the paper does.
+    pub scalar_loads: u64,
+    pub scalar_stores: u64,
+}
+
+impl KernelTrace {
+    pub fn new(app: &'static str, kernel: &'static str) -> KernelTrace {
+        KernelTrace {
+            app,
+            kernel,
+            records: Vec::new(),
+            scalar_loads: 0,
+            scalar_stores: 0,
+        }
+    }
+
+    /// Emit one gather record.
+    pub fn gather(&mut self, base: i64, offsets: &[i64]) {
+        self.records.push(GsRecord {
+            kernel: Kernel::Gather,
+            base,
+            offsets: offsets.to_vec(),
+        });
+    }
+
+    /// Emit one scatter record.
+    pub fn scatter(&mut self, base: i64, offsets: &[i64]) {
+        self.records.push(GsRecord {
+            kernel: Kernel::Scatter,
+            base,
+            offsets: offsets.to_vec(),
+        });
+    }
+
+    /// Table 1 columns.
+    pub fn gather_count(&self) -> u64 {
+        self.records
+            .iter()
+            .filter(|r| r.kernel == Kernel::Gather)
+            .count() as u64
+    }
+
+    pub fn scatter_count(&self) -> u64 {
+        self.records
+            .iter()
+            .filter(|r| r.kernel == Kernel::Scatter)
+            .count() as u64
+    }
+
+    /// Bytes moved by G/S instructions.
+    pub fn gs_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.offsets.len() as u64 * 8).sum()
+    }
+
+    /// G/S share of all load/store traffic (Table 1 "G/S MB (%)").
+    pub fn gs_traffic_fraction(&self) -> f64 {
+        let gs = self.gs_bytes() as f64;
+        let total = gs + (self.scalar_loads + self.scalar_stores) as f64 * 8.0;
+        if total == 0.0 {
+            0.0
+        } else {
+            gs / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_normalization() {
+        let r = GsRecord {
+            kernel: Kernel::Gather,
+            base: 100,
+            offsets: vec![5, 3, 9, 3],
+        };
+        let (base, norm) = r.normalized();
+        assert_eq!(base, 103);
+        assert_eq!(norm, vec![2, 0, 6, 0]);
+    }
+
+    #[test]
+    fn trace_accounting() {
+        let mut t = KernelTrace::new("TEST", "k");
+        t.gather(0, &[0, 1, 2, 3]);
+        t.gather(4, &[0, 1, 2, 3]);
+        t.scatter(0, &[0, 8]);
+        t.scalar_loads = 10;
+        t.scalar_stores = 2;
+        assert_eq!(t.gather_count(), 2);
+        assert_eq!(t.scatter_count(), 1);
+        assert_eq!(t.gs_bytes(), (4 + 4 + 2) * 8);
+        let frac = t.gs_traffic_fraction();
+        let want = 80.0 / (80.0 + 96.0);
+        assert!((frac - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_fraction_is_zero() {
+        let t = KernelTrace::new("TEST", "k");
+        assert_eq!(t.gs_traffic_fraction(), 0.0);
+    }
+}

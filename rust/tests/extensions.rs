@@ -1,0 +1,123 @@
+//! Tests for the extension features beyond the paper's §3 core:
+//! RANDOM (GUPS-like) patterns (§6) and multi-delta temporal-locality
+//! patterns (§7 future-work item 1).
+
+use spatter::backends::{Backend, OpenMpSim};
+use spatter::coordinator;
+use spatter::pattern::{Kernel, Pattern};
+use spatter::platforms;
+
+#[test]
+fn temporal_deltas_express_reuse() {
+    // Same mean advance (8 elems/iter), different temporal structure:
+    // [0,0,0,32] revisits each base three times — those revisits hit
+    // L1, so the modelled bandwidth must be well above the uniform
+    // delta-8 stream at the same stride.
+    let p = platforms::by_name("skx").unwrap();
+    let idx: Vec<i64> = (0..8).collect();
+    let uniform = Pattern::from_indices("uniform-d8", idx.clone())
+        .with_delta(8)
+        .with_count(1 << 18);
+    let temporal = Pattern::from_indices("temporal", idx)
+        .with_deltas(&[0, 0, 0, 32])
+        .with_count(1 << 18);
+    let bw_u = OpenMpSim::new(&p)
+        .run(&uniform, Kernel::Gather)
+        .unwrap()
+        .bandwidth_gbs();
+    let bw_t = OpenMpSim::new(&p)
+        .run(&temporal, Kernel::Gather)
+        .unwrap()
+        .bandwidth_gbs();
+    assert!(
+        bw_t > 1.7 * bw_u,
+        "temporal revisits should look cached: {bw_t:.1} vs uniform {bw_u:.1}"
+    );
+}
+
+#[test]
+fn random_pattern_runs_slower_than_stride1() {
+    // GUPS-like random gather: 256 random offsets within a 16 MB
+    // window, window advancing fully each iteration — every access is
+    // a fresh random DRAM line, far below stream.
+    let p = platforms::by_name("bdw").unwrap();
+    let rand = Pattern::parse("RANDOM:256:2097152")
+        .unwrap()
+        .with_delta(2_097_152)
+        .with_count(1 << 12);
+    let stream = Pattern::parse("UNIFORM:8:1")
+        .unwrap()
+        .with_delta(8)
+        .with_count(1 << 18);
+    let bw_r = OpenMpSim::new(&p)
+        .run(&rand, Kernel::Gather)
+        .unwrap()
+        .bandwidth_gbs();
+    let bw_s = OpenMpSim::new(&p)
+        .run(&stream, Kernel::Gather)
+        .unwrap()
+        .bandwidth_gbs();
+    assert!(
+        bw_r < 0.5 * bw_s,
+        "random gather {bw_r:.1} should sit far below stream {bw_s:.1}"
+    );
+}
+
+#[test]
+fn json_config_accepts_delta_lists() {
+    let cfgs = coordinator::parse_config_text(
+        r#"[
+          {"kernel": "Gather", "pattern": "UNIFORM:8:1",
+           "delta": [0, 0, 0, 16], "count": 4096},
+          {"kernel": "Gather", "pattern": "RANDOM:16:4096:3",
+           "delta": 16, "count": 1024}
+        ]"#,
+    )
+    .unwrap();
+    assert_eq!(cfgs[0].pattern.deltas, vec![0, 0, 0, 16]);
+    assert_eq!(cfgs[1].pattern.vector_len(), 16);
+    let p = platforms::by_name("clx").unwrap();
+    let mut b = OpenMpSim::new(&p);
+    let recs = coordinator::run_configs(&mut b, &cfgs).unwrap();
+    assert!(recs.iter().all(|r| r.bandwidth_gbs > 0.0));
+}
+
+#[test]
+fn cli_accepts_delta_lists() {
+    use spatter::cli::{parse_args, Command};
+    let argv: Vec<String> = "-k Gather -p UNIFORM:8:1 -d 0,0,0,16 -l 1024"
+        .split_whitespace()
+        .map(String::from)
+        .collect();
+    match parse_args(&argv).unwrap() {
+        Command::Run(r) => {
+            assert_eq!(r.pattern.deltas, vec![0, 0, 0, 16]);
+            assert_eq!(r.pattern.count, 1024);
+        }
+        other => panic!("{other:?}"),
+    }
+    // Bad lists rejected.
+    let bad: Vec<String> = "-k Gather -p UNIFORM:8:1 -d 1,,2"
+        .split_whitespace()
+        .map(String::from)
+        .collect();
+    assert!(parse_args(&bad).is_err());
+}
+
+#[test]
+fn multi_delta_equivalence_when_constant() {
+    // A constant delta list must model identically to the single
+    // delta (engine-level equivalence of the two code paths).
+    let p = platforms::by_name("naples").unwrap();
+    let idx: Vec<i64> = (0..8).map(|i| i * 4).collect();
+    let single = Pattern::from_indices("s", idx.clone())
+        .with_delta(32)
+        .with_count(1 << 16);
+    let multi = Pattern::from_indices("m", idx)
+        .with_deltas(&[32, 32])
+        .with_count(1 << 16);
+    let a = OpenMpSim::new(&p).run(&single, Kernel::Gather).unwrap();
+    let b = OpenMpSim::new(&p).run(&multi, Kernel::Gather).unwrap();
+    assert_eq!(a.counters, b.counters);
+    assert!((a.seconds - b.seconds).abs() < 1e-12);
+}

@@ -1,0 +1,241 @@
+//! Cross-module integration tests: pattern language → coordinator →
+//! simulated backends → stats/report, plus the trace pipeline feeding
+//! the simulator (the full §2 → §5.4 flow without hardware).
+
+use std::path::Path;
+
+use spatter::backends::{Backend, CudaSim, OpenMpSim, ScalarSim};
+use spatter::coordinator::{self, Aggregate};
+use spatter::pattern::{table5, Kernel, Pattern};
+use spatter::platforms;
+use spatter::stats;
+use spatter::suite::{self, SuiteContext};
+use spatter::trace::extract::extract_from_trace;
+use spatter::trace::miniapps;
+
+#[test]
+fn json_config_to_simulated_run_to_aggregate() {
+    let cfg = r#"[
+      {"name": "stream", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+       "delta": 8, "count": 65536},
+      {"name": "strided", "kernel": "Gather", "pattern": "UNIFORM:8:16",
+       "delta": 128, "count": 65536},
+      {"name": "lulesh", "kernel": "Scatter", "pattern": "LULESH-S1",
+       "count": 65536},
+      {"name": "laplacian", "kernel": "Gather",
+       "pattern": "LAPLACIAN:2:1:100", "delta": 1, "count": 65536}
+    ]"#;
+    let configs = coordinator::parse_config_text(cfg).unwrap();
+    let p = platforms::by_name("clx").unwrap();
+    let mut backend = OpenMpSim::new(&p);
+    let records = coordinator::run_configs(&mut backend, &configs).unwrap();
+    assert_eq!(records.len(), 4);
+    // stream >> strided
+    assert!(records[0].bandwidth_gbs > 4.0 * records[1].bandwidth_gbs);
+    // Laplacian with delta 1 has massive reuse: beats STREAM.
+    assert!(records[3].bandwidth_gbs > p.stream_gbs);
+    let agg = Aggregate::from_records(&records).unwrap();
+    assert!(agg.min_gbs <= agg.harmonic_mean_gbs);
+    assert!(agg.harmonic_mean_gbs <= agg.max_gbs);
+}
+
+#[test]
+fn trace_extraction_feeds_simulator() {
+    // Extract the top AMG pattern from the emulated trace and run it
+    // through the SKX model — it must reproduce the above-STREAM
+    // caching behaviour the paper reports for AMG (Table 4).
+    let trace = miniapps::amg::matvec_out_of_place(1);
+    let pats = extract_from_trace(&trace, 1);
+    let pattern = pats[0].to_pattern("amg-extracted", 1 << 18);
+    let p = platforms::by_name("skx").unwrap();
+    let bw = OpenMpSim::new(&p)
+        .run(&pattern, Kernel::Gather)
+        .unwrap()
+        .bandwidth_gbs();
+    assert!(
+        bw > p.stream_gbs,
+        "extracted AMG pattern should exploit caches: {bw:.1} vs {:.1}",
+        p.stream_gbs
+    );
+}
+
+#[test]
+fn every_table5_pattern_runs_on_every_platform() {
+    // No pattern x platform combination may error or produce a
+    // non-finite bandwidth.
+    for pat in table5::all() {
+        let runnable = pat.to_pattern(1 << 12);
+        for cpu in platforms::cpus() {
+            let bw = OpenMpSim::new(&cpu)
+                .run(&runnable, pat.kernel)
+                .unwrap()
+                .bandwidth_gbs();
+            assert!(bw.is_finite() && bw > 0.0, "{} on {}", pat.name, cpu.name);
+        }
+        for gpu in platforms::gpus() {
+            let bw = CudaSim::new(&gpu)
+                .run(&runnable, pat.kernel)
+                .unwrap()
+                .bandwidth_gbs();
+            assert!(bw.is_finite() && bw > 0.0, "{} on {}", pat.name, gpu.name);
+        }
+    }
+}
+
+#[test]
+fn fig6_directional_shape() {
+    // The Fig 6 signs: KNL gains a lot from vector G/S, TX2 exactly
+    // nothing, Naples nothing on scatter (no scatter instruction).
+    let count = 1 << 16;
+    let pat = Pattern::parse("UNIFORM:8:2")
+        .unwrap()
+        .with_delta(16)
+        .with_count(count);
+    let imp = |name: &str, kernel: Kernel| -> f64 {
+        let p = platforms::by_name(name).unwrap();
+        let bo = OpenMpSim::new(&p).run(&pat, kernel).unwrap().bandwidth_gbs();
+        let bs = ScalarSim::new(&p).run(&pat, kernel).unwrap().bandwidth_gbs();
+        (bo - bs) / bs * 100.0
+    };
+    assert!(imp("knl", Kernel::Gather) > 20.0);
+    assert!(imp("tx2", Kernel::Gather).abs() < 1e-9);
+    assert!(imp("tx2", Kernel::Scatter).abs() < 1e-9);
+    assert!(imp("naples", Kernel::Scatter).abs() < 1e-9);
+    // In DRAM-bound regimes the backends tie; the scatter-instruction
+    // benefit shows where the issue rate binds (cache-resident
+    // pattern: stride-2 with delta 1 -> heavy reuse).
+    let cached = Pattern::parse("UNIFORM:8:2")
+        .unwrap()
+        .with_delta(1)
+        .with_count(count);
+    let p = platforms::by_name("skx").unwrap();
+    let bo = OpenMpSim::new(&p)
+        .run(&cached, Kernel::Scatter)
+        .unwrap()
+        .bandwidth_gbs();
+    let bs = ScalarSim::new(&p)
+        .run(&cached, Kernel::Scatter)
+        .unwrap()
+        .bandwidth_gbs();
+    assert!(bo > bs, "SKX scatter instruction should win when issue-bound: {bo:.1} vs {bs:.1}");
+}
+
+#[test]
+fn table4_shape_invariants() {
+    // Condensed Table 4 checks: per-platform app h-means vs STREAM.
+    // The count must be large enough that large-delta patterns'
+    // touched-line footprints exceed the caches (the paper moves
+    // >= 2 GB per pattern) — at small counts L3 residency would
+    // legitimately inflate PENNANT.
+    let count = 1 << 20;
+    let hmean = |plat: &str, app: &str| -> f64 {
+        let p = platforms::by_name(plat).unwrap();
+        let bws: Vec<f64> = table5::by_app(app)
+            .into_iter()
+            .map(|pat| {
+                OpenMpSim::new(&p)
+                    .run(&pat.to_pattern(count), pat.kernel)
+                    .unwrap()
+                    .bandwidth_gbs()
+            })
+            .collect();
+        stats::harmonic_mean(&bws).unwrap()
+    };
+    let skx = platforms::by_name("skx").unwrap();
+    // AMG and Nekbone beat STREAM on SKX (caching).
+    assert!(hmean("skx", "AMG") > skx.stream_gbs);
+    assert!(hmean("skx", "Nekbone") > skx.stream_gbs);
+    // LULESH collapses on SKX (S3) but not on TX2.
+    let tx2 = platforms::by_name("tx2").unwrap();
+    assert!(hmean("skx", "LULESH") < 0.5 * skx.stream_gbs);
+    assert!(hmean("tx2", "LULESH") > 0.5 * tx2.stream_gbs);
+    // PENNANT is far below STREAM everywhere (large deltas).
+    assert!(hmean("skx", "PENNANT") < 0.6 * skx.stream_gbs);
+    assert!(hmean("bdw", "PENNANT") < 0.6 * 43.885);
+}
+
+#[test]
+fn suite_experiments_all_run_fast() {
+    let dir = std::env::temp_dir().join("spatter-it-suite");
+    let ctx = SuiteContext::fast(&dir);
+    for name in suite::EXPERIMENTS {
+        let report = suite::run(name, &ctx).unwrap();
+        assert!(!report.is_empty(), "{name}");
+    }
+    // Every experiment must have written its CSV.
+    for csv in [
+        "fig3_cpu_ustride.csv",
+        "fig4_prefetch.csv",
+        "fig5_gpu_ustride.csv",
+        "fig6_simd_scalar.csv",
+        "fig7_radar_gather.csv",
+        "fig8_radar_scatter.csv",
+        "fig9_bwbw.csv",
+        "table1_apps.csv",
+        "table4_miniapps.csv",
+    ] {
+        assert!(dir.join(csv).exists(), "{csv}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_binary_contract() {
+    // The CLI grammar end-to-end through the library entry points
+    // (the binary itself is exercised by `main.rs` unit tests).
+    use spatter::cli::{parse_args, Command};
+    let argv: Vec<String> = "-j cfg.json -a knl --json-out"
+        .split_whitespace()
+        .map(String::from)
+        .collect();
+    match parse_args(&argv).unwrap() {
+        Command::Json { path, common } => {
+            assert_eq!(path, "cfg.json");
+            assert!(common.json_out);
+            assert_eq!(common.platform, "knl");
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn config_failure_injection() {
+    // Malformed configs must fail loudly, not run garbage.
+    for bad in [
+        r#"[{"kernel": "Gather", "pattern": "UNIFORM:0:1"}]"#,
+        r#"[{"kernel": "Gather", "pattern": "MS1:8:9:1"}]"#,
+        r#"[{"kernel": "Smear", "pattern": "UNIFORM:8:1"}]"#,
+        r#"[{"kernel": "Gather", "pattern": [0, -5]}]"#,
+        r#"[{"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": -2}]"#,
+    ] {
+        assert!(
+            coordinator::parse_config_text(bad).is_err(),
+            "should reject {bad}"
+        );
+    }
+    // Missing file surfaces as a Config error with the path.
+    let err = coordinator::parse_config_file(Path::new("/nonexistent/x.json"))
+        .unwrap_err();
+    assert!(err.to_string().contains("/nonexistent/x.json"));
+}
+
+#[test]
+fn gpu_vs_cpu_paper_headline() {
+    // "GPUs typically outperform CPUs for these operations" (abstract):
+    // absolute stride-1..8 bandwidths on V100 >> any CPU.
+    let v100 = platforms::gpu_by_name("v100").unwrap();
+    let skx = platforms::by_name("skx").unwrap();
+    for stride in [1usize, 4, 8] {
+        let gp = Pattern::parse(&format!("UNIFORM:256:{stride}"))
+            .unwrap()
+            .with_delta(256 * stride as i64)
+            .with_count(1 << 12);
+        let cp = Pattern::parse(&format!("UNIFORM:8:{stride}"))
+            .unwrap()
+            .with_delta(8 * stride as i64)
+            .with_count(1 << 17);
+        let g = CudaSim::new(&v100).run(&gp, Kernel::Gather).unwrap().bandwidth_gbs();
+        let c = OpenMpSim::new(&skx).run(&cp, Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!(g > 2.0 * c, "stride {stride}: gpu {g:.0} vs cpu {c:.0}");
+    }
+}

@@ -1,0 +1,152 @@
+//! End-to-end tests over the real-execution path: AOT artifacts →
+//! PJRT-CPU → numerics vs host reference. Skipped (with a notice) when
+//! artifacts are missing; `make artifacts` generates them.
+
+use spatter::backends::{Backend, PjrtBackend};
+use spatter::pattern::{table5, Kernel, Pattern};
+use spatter::runtime::{default_artifact_dir, Runtime};
+
+fn have_artifacts() -> bool {
+    let ok = default_artifact_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("pjrt_e2e: SKIP (no artifacts; run `make artifacts`)");
+    }
+    ok
+}
+
+/// Host oracle for the gather checksum.
+fn host_checksum(src: &[f64], idx: &[i32], delta: i64, count: usize) -> f64 {
+    let mut sum = 0.0;
+    for i in 0..count {
+        for &ix in idx {
+            sum += src[(delta * i as i64 + ix as i64) as usize];
+        }
+    }
+    sum
+}
+
+#[test]
+fn gather_checksum_many_patterns() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::open_default().unwrap();
+    let v = rt
+        .manifest()
+        .find("gather_checksum", "ref", 8, Some(64))
+        .unwrap()
+        .clone();
+    let src: Vec<f64> = (0..v.n).map(|i| ((i * 31) % 509) as f64 * 0.25).collect();
+    let sb = rt.stage_f64(&src).unwrap();
+
+    // A spread of pattern shapes, all within the smoke geometry.
+    let cases: Vec<(Vec<i32>, i64)> = vec![
+        ((0..8).collect(), 8),                    // stride-1 stream
+        ((0..8).map(|j| j * 4).collect(), 32),    // stride-4
+        (vec![0, 0, 1, 1, 2, 2, 3, 3], 4),        // broadcast
+        (vec![0, 1, 2, 3, 23, 24, 25, 26], 2),    // MS1:8:4:20
+        (vec![5, 3, 9, 1, 7, 7, 2, 0], 0),        // irregular, delta 0
+        (vec![0, 9, 1, 8, 2, 7, 3, 6], 13),       // zigzag
+    ];
+    for (idx, delta) in cases {
+        let ib = rt.stage_i32(&idx).unwrap();
+        let db = rt.stage_i32(&[delta as i32]).unwrap();
+        let got = rt.execute_scalar(&v.name, &[&sb, &ib, &db]).unwrap();
+        let want = host_checksum(&src, &idx, delta, v.count);
+        assert!(
+            (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+            "idx {idx:?} delta {delta}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn scatter_artifact_places_values() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::open_default().unwrap();
+    let v = rt
+        .manifest()
+        .find("scatter", "ref", 8, Some(64))
+        .unwrap()
+        .clone();
+    let vals: Vec<f64> = (0..v.count * 8).map(|i| 1000.0 + i as f64).collect();
+    let idx: Vec<i32> = (0..8).collect();
+    let delta = 8i32;
+    let dst = vec![0.0f64; v.n];
+    let vb = rt.stage_f64_2d(&vals, v.count, 8).unwrap();
+    let ib = rt.stage_i32(&idx).unwrap();
+    let db = rt.stage_i32(&[delta]).unwrap();
+    let sb = rt.stage_f64(&dst).unwrap();
+    let out = rt
+        .execute(&v.name, &[&vb, &ib, &db, &sb])
+        .unwrap()
+        .to_vec::<f64>()
+        .unwrap();
+    // Disjoint stride-1 scatter == flattened vals in the prefix.
+    for (i, &x) in out[..v.count * 8].iter().enumerate() {
+        assert_eq!(x, 1000.0 + i as f64, "slot {i}");
+    }
+    assert!(out[v.count * 8..].iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn pallas_family_matches_ref_family_on_table5_shapes() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rt = Runtime::open_default().unwrap();
+    // v16 smoke-sized comparison uses the big v16 variants (c4096);
+    // compare pallas vs ref on one PENNANT buffer.
+    let (vp, vr) = match (
+        rt.manifest().find("gather", "pallas", 16, None).cloned(),
+        rt.manifest().find("gather", "ref", 16, None).cloned(),
+    ) {
+        (Some(a), Some(b)) => (a, b),
+        _ => {
+            eprintln!("pjrt_e2e: no v16 variants, skip");
+            return;
+        }
+    };
+    assert_eq!(vp.count, vr.count);
+    let src: Vec<f64> = (0..vr.n).map(|i| ((i * 7) % 8191) as f64).collect();
+    let g4 = table5::by_name("PENNANT-G4").unwrap();
+    let idx: Vec<i32> = g4.indices.iter().map(|&i| i as i32).collect();
+    let sb = rt.stage_f64(&src).unwrap();
+    let ib = rt.stage_i32(&idx).unwrap();
+    let db = rt.stage_i32(&[4]).unwrap();
+    let a = rt
+        .execute(&vp.name, &[&sb, &ib, &db])
+        .unwrap()
+        .to_vec::<f64>()
+        .unwrap();
+    let b = rt
+        .execute(&vr.name, &[&sb, &ib, &db])
+        .unwrap()
+        .to_vec::<f64>()
+        .unwrap();
+    assert_eq!(a, b);
+    // Spot-check semantics against the host:
+    // out[i, j] = src[4*i + idx[j]]; idx[0] = 0.
+    assert_eq!(a[0], src[0]);
+    assert_eq!(a[16], src[4]);
+    assert_eq!(a[4], src[1]); // idx[4] = 1
+}
+
+#[test]
+fn backend_bandwidth_sane() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut b = PjrtBackend::open_default().unwrap();
+    b.runs = 3;
+    let pat = Pattern::parse("UNIFORM:8:1")
+        .unwrap()
+        .with_delta(8)
+        .with_count(1 << 18);
+    let r = b.run(&pat, Kernel::Gather).unwrap();
+    let bw = r.bandwidth_gbs();
+    // Real hardware: somewhere between 0.05 and 500 GB/s.
+    assert!(bw > 0.05 && bw < 500.0, "{bw}");
+}

@@ -1,0 +1,295 @@
+//! Property-based invariants over the coordinator substrates, using
+//! the in-crate `prop` mini-framework (no proptest in the offline
+//! vendor set).
+
+use spatter::json;
+use spatter::pattern::{self, Kernel, Pattern};
+use spatter::platforms;
+use spatter::prop::{check, Gen};
+use spatter::sim::cpu::CpuEngine;
+use spatter::sim::Cache;
+use spatter::stats;
+use spatter::trace::extract::extract_patterns;
+use spatter::trace::GsRecord;
+
+// ---------------------------------------------------------------------------
+// JSON: parse(write(v)) == v
+// ---------------------------------------------------------------------------
+
+fn arbitrary_json(g: &mut Gen, depth: usize) -> json::Value {
+    use json::Value;
+    let pick = if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) };
+    match pick {
+        0 => Value::Null,
+        1 => Value::Bool(g.bool()),
+        2 => {
+            // representable numbers only (the writer normalizes ints)
+            if g.bool() {
+                Value::Number(g.i64_in(-1_000_000, 1_000_000) as f64)
+            } else {
+                Value::Number((g.i64_in(-1000, 1000) as f64) / 8.0)
+            }
+        }
+        3 => {
+            let len = g.usize_in(0, 8);
+            let s: String = (0..len)
+                .map(|_| char::from(g.usize_in(32, 126) as u8))
+                .collect();
+            Value::String(s)
+        }
+        4 => {
+            let n = g.usize_in(0, 4);
+            Value::Array((0..n).map(|_| arbitrary_json(g, depth - 1)).collect())
+        }
+        _ => {
+            let n = g.usize_in(0, 4);
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..n {
+                m.insert(format!("k{i}"), arbitrary_json(g, depth - 1));
+            }
+            Value::Object(m)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json parse∘write == id", 200, |g| {
+        let v = arbitrary_json(g, 3);
+        let compact = json::parse(&json::to_string(&v)).unwrap();
+        assert_eq!(compact, v);
+        let pretty = json::parse(&json::to_string_pretty(&v)).unwrap();
+        assert_eq!(pretty, v);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Pattern language
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_uniform_spec_roundtrip() {
+    check("UNIFORM spec -> indices -> properties", 100, |g| {
+        let n = g.usize_in(1, 64);
+        let s = g.usize_in(1, 64);
+        let idx = pattern::parse_spec(&format!("UNIFORM:{n}:{s}")).unwrap();
+        assert_eq!(idx.len(), n);
+        assert_eq!(idx[0], 0);
+        assert!(idx.windows(2).all(|w| w[1] - w[0] == s as i64));
+    });
+}
+
+#[test]
+fn prop_custom_spec_roundtrip() {
+    check("custom index list roundtrips through spec parsing", 100, |g| {
+        let idx = g.vec_of(1, 24, |g| g.i64_in(0, 10_000));
+        let spec = idx
+            .iter()
+            .map(|i| i.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        assert_eq!(pattern::parse_spec(&spec).unwrap(), idx);
+    });
+}
+
+#[test]
+fn prop_required_elements_bounds_addresses() {
+    check("required_elements covers every generated address", 100, |g| {
+        let idx = g.vec_of(1, 16, |g| g.i64_in(0, 512));
+        let p = Pattern::from_indices("t", idx)
+            .with_delta(g.i64_in(0, 64))
+            .with_count(g.usize_in(1, 256));
+        let n = p.required_elements() as i64;
+        for i in [0, p.count / 2, p.count - 1] {
+            for j in 0..p.vector_len() {
+                let a = p.address(i, j);
+                assert!(a < n, "addr {a} >= required {n}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_classifier_is_total_and_stable() {
+    check("classification is deterministic and total", 200, |g| {
+        let idx = g.vec_of(1, 20, |g| g.i64_in(0, 100));
+        let a = pattern::classify_indices(&idx);
+        let b = pattern::classify_indices(&idx);
+        assert_eq!(a, b);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Cache model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cache_hit_after_fill() {
+    check("a filled line hits until evicted by its own set", 100, |g| {
+        let assoc = g.usize_in(1, 8);
+        let sets_pow = g.usize_in(1, 6);
+        let cap = (1 << sets_pow) * assoc * 64;
+        let mut c = Cache::new(cap, 64, assoc);
+        let line = g.next_u64() % 10_000;
+        c.fill(line, false, false);
+        assert!(matches!(
+            c.access(line, false),
+            spatter::sim::Probe::Hit { .. }
+        ));
+    });
+}
+
+#[test]
+fn prop_cache_occupancy_never_exceeds_capacity() {
+    check("distinct resident lines <= capacity", 50, |g| {
+        let assoc = g.usize_in(1, 4);
+        let sets = 1 << g.usize_in(1, 4);
+        let mut c = Cache::new(sets * assoc * 64, 64, assoc);
+        let universe = g.usize_in(1, 512) as u64;
+        for _ in 0..2000 {
+            let line = g.next_u64() % universe;
+            if c.access(line, g.bool()) == spatter::sim::Probe::Miss {
+                c.fill(line, false, false);
+            }
+        }
+        let resident = (0..universe).filter(|&l| c.contains(l)).count();
+        assert!(resident <= sets * assoc, "{resident} > {}", sets * assoc);
+    });
+}
+
+#[test]
+fn prop_cache_stats_conserve() {
+    check("hits + misses == accesses", 50, |g| {
+        let mut c = Cache::new(4096, 64, 4);
+        let mut accesses = 0u64;
+        for _ in 0..1000 {
+            let line = g.next_u64() % 256;
+            accesses += 1;
+            if c.access(line, false) == spatter::sim::Probe::Miss {
+                c.fill(line, false, false);
+            }
+        }
+        assert_eq!(c.hits + c.misses, accesses);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Simulator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sim_deterministic_and_conserving() {
+    check("engine determinism + access conservation", 12, |g| {
+        let stride = 1 << g.usize_in(0, 5);
+        let v = *g.choose(&[4usize, 8, 16]);
+        let count = 1 << g.usize_in(8, 12);
+        let pat = Pattern::from_indices(
+            "p",
+            (0..v as i64).map(|i| i * stride).collect(),
+        )
+        .with_delta(g.i64_in(0, 64))
+        .with_count(count);
+        let kernel = if g.bool() { Kernel::Gather } else { Kernel::Scatter };
+        let plat = platforms::by_name(*g.choose(&["bdw", "skx", "naples", "tx2"])).unwrap();
+        let a = CpuEngine::new(&plat).run(&pat, kernel).unwrap();
+        let b = CpuEngine::new(&plat).run(&pat, kernel).unwrap();
+        assert_eq!(a.counters, b.counters);
+        let c = &a.counters;
+        if c.streaming_store_lines == 0 {
+            assert_eq!(
+                c.accesses,
+                c.l1_hits + c.l2_hits + c.l3_hits + c.dram_demand_lines
+            );
+        }
+        assert!(a.seconds > 0.0 && a.seconds.is_finite());
+    });
+}
+
+#[test]
+fn prop_bandwidth_monotone_in_stride() {
+    // Bandwidth never *increases* when stride doubles in the
+    // prefetch-free regime (strictly-fewer useful bytes per line).
+    check("no-prefetch bandwidth monotone non-increasing", 6, |g| {
+        let plat = platforms::by_name(*g.choose(&["skx", "naples"])).unwrap();
+        let mut e = CpuEngine::with_options(
+            &plat,
+            spatter::sim::cpu::CpuSimOptions {
+                prefetch_enabled: false,
+                ..Default::default()
+            },
+        );
+        let mut last = f64::INFINITY;
+        for stride in [1usize, 2, 4, 8, 16] {
+            let pat = Pattern::parse(&format!("UNIFORM:8:{stride}"))
+                .unwrap()
+                .with_delta(8 * stride as i64)
+                .with_count(1 << 16);
+            let bw = e.run(&pat, Kernel::Gather).unwrap().bandwidth_gbs();
+            assert!(
+                bw <= last * 1.02,
+                "stride {stride}: {bw:.2} > prior {last:.2}"
+            );
+            last = bw;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Extraction
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_extraction_recovers_synthetic_pattern() {
+    check("extractor inverts record generation", 60, |g| {
+        let v = g.usize_in(2, 16);
+        // Random normalized buffer containing 0.
+        let mut idx: Vec<i64> = g.vec_of(v, v, |g| g.i64_in(0, 500));
+        idx[0] = 0;
+        let delta = g.i64_in(1, 1000);
+        let count = g.usize_in(3, 100);
+        let records: Vec<GsRecord> = (0..count as i64)
+            .map(|i| GsRecord {
+                kernel: Kernel::Gather,
+                base: delta * i,
+                offsets: idx.clone(),
+            })
+            .collect();
+        let pats = extract_patterns(&records, 0);
+        assert_eq!(pats.len(), 1);
+        assert_eq!(pats[0].indices, idx);
+        assert_eq!(pats[0].delta, delta);
+        assert_eq!(pats[0].occurrences, count as u64);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Stats
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_hmean_bounds() {
+    check("min <= hmean <= amean <= max", 200, |g| {
+        let xs = g.vec_of(1, 20, |g| g.f64_in(0.1, 1000.0));
+        let h = stats::harmonic_mean(&xs).unwrap();
+        let a = stats::mean(&xs).unwrap();
+        let (mn, mx) = stats::min_max(&xs).unwrap();
+        assert!(mn - 1e-9 <= h && h <= a + 1e-9 && a <= mx + 1e-9);
+    });
+}
+
+#[test]
+fn prop_pearson_r_in_unit_interval() {
+    check("|R| <= 1 and scale-invariant", 100, |g| {
+        let n = g.usize_in(3, 20);
+        let xs = g.vec_of(n, n, |g| g.f64_in(-100.0, 100.0));
+        let ys = g.vec_of(n, n, |g| g.f64_in(-100.0, 100.0));
+        if let Some(r) = stats::pearson_r(&xs, &ys) {
+            assert!(r.abs() <= 1.0 + 1e-9, "{r}");
+            // invariance under positive affine transform of x
+            let xs2: Vec<f64> = xs.iter().map(|x| 3.5 * x + 11.0).collect();
+            if let Some(r2) = stats::pearson_r(&xs2, &ys) {
+                assert!((r - r2).abs() < 1e-6);
+            }
+        }
+    });
+}
