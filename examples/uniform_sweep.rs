@@ -1,9 +1,16 @@
 //! Uniform-stride sweep (the Fig 3 / Fig 5 experiment) on one platform.
 //!
 //! ```bash
-//! cargo run --release --example uniform_sweep -- [platform] [gather|scatter]
-//! cargo run --release --example uniform_sweep -- p100 gather   # GPU model
+//! cargo run --release --example uniform_sweep -- [platform] [gather|scatter] [page-size]
+//! cargo run --release --example uniform_sweep -- p100 gather     # GPU model
+//! cargo run --release --example uniform_sweep -- knl gather 2MB  # huge pages
 //! ```
+//!
+//! The third argument drives the `--page-size` knob of the simulated
+//! virtual-memory subsystem (4KB | 64KB | 2MB | 1GB). Compare
+//! `knl gather 4KB` against `knl gather 2MB` on a huge-delta pattern
+//! (or run `spatter --suite pagesize`) to watch translation stop being
+//! the binding resource.
 //!
 //! Prints the bandwidth curve with a log-style bar so the halving per
 //! stride doubling — and each platform's deviation from it — is
@@ -12,6 +19,7 @@
 use spatter::backends::{Backend, CudaSim, OpenMpSim};
 use spatter::pattern::{Kernel, Pattern};
 use spatter::platforms::{self, Platform};
+use spatter::sim::PageSize;
 
 fn main() -> spatter::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -19,6 +27,10 @@ fn main() -> spatter::Result<()> {
     let kernel = match args.get(1).map(|s| s.as_str()) {
         Some("scatter") => Kernel::Scatter,
         _ => Kernel::Gather,
+    };
+    let page: Option<PageSize> = match args.get(2) {
+        Some(s) => Some(PageSize::parse(s)?),
+        None => None,
     };
     let platform = platforms::any_by_name(plat)?;
 
@@ -29,10 +41,14 @@ fn main() -> spatter::Result<()> {
     };
 
     println!(
-        "uniform-stride {} sweep on {} ({})\n",
+        "uniform-stride {} sweep on {} ({}){}\n",
         kernel.name().to_lowercase(),
         platform.name(),
-        platform.full_name()
+        platform.full_name(),
+        match page {
+            Some(p) => format!(", {p} pages"),
+            None => String::new(),
+        }
     );
     println!("{:>7} {:>12}  {}", "stride", "GB/s", "log-scale");
     let mut peak = 0.0f64;
@@ -42,8 +58,20 @@ fn main() -> spatter::Result<()> {
             .with_delta((v * stride) as i64)
             .with_count(count);
         let bw = match &platform {
-            Platform::Cpu(c) => OpenMpSim::new(c).run(&pattern, kernel)?.bandwidth_gbs(),
-            Platform::Gpu(g) => CudaSim::new(g).run(&pattern, kernel)?.bandwidth_gbs(),
+            Platform::Cpu(c) => {
+                let mut b = match page {
+                    Some(p) => OpenMpSim::with_page_size(c, p),
+                    None => OpenMpSim::new(c),
+                };
+                b.run(&pattern, kernel)?.bandwidth_gbs()
+            }
+            Platform::Gpu(g) => {
+                let mut b = match page {
+                    Some(p) => CudaSim::with_page_size(g, p),
+                    None => CudaSim::new(g),
+                };
+                b.run(&pattern, kernel)?.bandwidth_gbs()
+            }
         };
         peak = peak.max(bw);
         rows.push((stride, bw));

@@ -20,8 +20,8 @@ use crate::error::Result;
 use crate::pattern::{Kernel, Pattern};
 use crate::platforms::{CpuPlatform, GpuPlatform};
 use crate::sim::cpu::{CpuEngine, CpuSimOptions};
-use crate::sim::gpu::GpuEngine;
-use crate::sim::SimResult;
+use crate::sim::gpu::{GpuEngine, GpuSimOptions};
+use crate::sim::{PageSize, SimResult};
 
 /// A Spatter execution backend: takes a fully-specified pattern, runs
 /// (or models) it, and reports time + bandwidth.
@@ -36,6 +36,18 @@ pub trait Backend {
     fn stream_gbs(&self) -> Option<f64> {
         None
     }
+
+    /// Reconfigure the translation page size before the next run:
+    /// `Some` overrides, `None` restores the backend's configured
+    /// default. Backends without a virtual-memory model (real
+    /// execution) ignore the knob.
+    fn set_page_size(&mut self, _page: Option<PageSize>) {}
+
+    /// The page size the next run will model, if the backend has a
+    /// virtual-memory model.
+    fn page_size(&self) -> Option<PageSize> {
+        None
+    }
 }
 
 /// The paper's OpenMP backend on a simulated CPU platform.
@@ -48,6 +60,21 @@ impl OpenMpSim {
     pub fn new(platform: &CpuPlatform) -> OpenMpSim {
         OpenMpSim {
             engine: CpuEngine::new(platform),
+            name: format!("openmp:{}", platform.name),
+        }
+    }
+
+    /// With an explicit translation page size (the `--page-size` CLI
+    /// knob).
+    pub fn with_page_size(platform: &CpuPlatform, page: PageSize) -> OpenMpSim {
+        OpenMpSim {
+            engine: CpuEngine::with_options(
+                platform,
+                CpuSimOptions {
+                    page_size: page,
+                    ..Default::default()
+                },
+            ),
             name: format!("openmp:{}", platform.name),
         }
     }
@@ -83,6 +110,14 @@ impl Backend for OpenMpSim {
     fn stream_gbs(&self) -> Option<f64> {
         Some(self.engine.platform().stream_gbs)
     }
+
+    fn set_page_size(&mut self, page: Option<PageSize>) {
+        self.engine.set_page_size(page);
+    }
+
+    fn page_size(&self) -> Option<PageSize> {
+        Some(self.engine.page_size())
+    }
 }
 
 /// The paper's Scalar backend (`#pragma novec` baseline) on a simulated
@@ -94,11 +129,17 @@ pub struct ScalarSim {
 
 impl ScalarSim {
     pub fn new(platform: &CpuPlatform) -> ScalarSim {
+        ScalarSim::with_page_size(platform, PageSize::FourKB)
+    }
+
+    /// With an explicit translation page size.
+    pub fn with_page_size(platform: &CpuPlatform, page: PageSize) -> ScalarSim {
         ScalarSim {
             engine: CpuEngine::with_options(
                 platform,
                 CpuSimOptions {
                     vectorized: false,
+                    page_size: page,
                     ..Default::default()
                 },
             ),
@@ -119,6 +160,14 @@ impl Backend for ScalarSim {
     fn stream_gbs(&self) -> Option<f64> {
         Some(self.engine.platform().stream_gbs)
     }
+
+    fn set_page_size(&mut self, page: Option<PageSize>) {
+        self.engine.set_page_size(page);
+    }
+
+    fn page_size(&self) -> Option<PageSize> {
+        Some(self.engine.page_size())
+    }
 }
 
 /// The paper's CUDA backend on a simulated GPU platform.
@@ -131,6 +180,21 @@ impl CudaSim {
     pub fn new(platform: &GpuPlatform) -> CudaSim {
         CudaSim {
             engine: GpuEngine::new(platform),
+            name: format!("cuda:{}", platform.name),
+        }
+    }
+
+    /// With an explicit translation page size (GPUs default to their
+    /// native 64 KiB large page).
+    pub fn with_page_size(platform: &GpuPlatform, page: PageSize) -> CudaSim {
+        CudaSim {
+            engine: GpuEngine::with_options(
+                platform,
+                GpuSimOptions {
+                    page_size: page,
+                    ..Default::default()
+                },
+            ),
             name: format!("cuda:{}", platform.name),
         }
     }
@@ -147,6 +211,14 @@ impl Backend for CudaSim {
 
     fn stream_gbs(&self) -> Option<f64> {
         Some(self.engine.platform().stream_gbs)
+    }
+
+    fn set_page_size(&mut self, page: Option<PageSize>) {
+        self.engine.set_page_size(page);
+    }
+
+    fn page_size(&self) -> Option<PageSize> {
+        Some(self.engine.page_size())
     }
 }
 
@@ -217,5 +289,25 @@ mod tests {
             bon.breakdown.latency_s,
             boff.breakdown.latency_s
         );
+    }
+
+    #[test]
+    fn page_size_knob_through_the_trait() {
+        let p = platforms::by_name("skx").unwrap();
+        let mut b: Box<dyn Backend> = Box::new(OpenMpSim::new(&p));
+        assert_eq!(b.page_size(), Some(PageSize::FourKB));
+        b.set_page_size(Some(PageSize::TwoMB));
+        assert_eq!(b.page_size(), Some(PageSize::TwoMB));
+        b.set_page_size(None);
+        assert_eq!(b.page_size(), Some(PageSize::FourKB));
+
+        let g = platforms::gpu_by_name("p100").unwrap();
+        let mut c: Box<dyn Backend> = Box::new(CudaSim::new(&g));
+        assert_eq!(c.page_size(), Some(PageSize::SixtyFourKB));
+        c.set_page_size(Some(PageSize::OneGB));
+        assert_eq!(c.page_size(), Some(PageSize::OneGB));
+
+        let s = ScalarSim::with_page_size(&p, PageSize::TwoMB);
+        assert_eq!(s.page_size(), Some(PageSize::TwoMB));
     }
 }

@@ -10,6 +10,7 @@
 
 use crate::error::{Error, Result};
 use crate::pattern::{Kernel, Pattern};
+use crate::sim::PageSize;
 
 /// Which backend executes the run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -75,6 +76,9 @@ pub struct CommonArgs {
     pub validate: bool,
     /// Emit JSON instead of a table (--json-out).
     pub json_out: bool,
+    /// Translation page size (--page-size). `None` keeps each
+    /// backend's default (4 KiB CPU, 64 KiB GPU large pages).
+    pub page_size: Option<PageSize>,
 }
 
 impl Default for CommonArgs {
@@ -85,6 +89,7 @@ impl Default for CommonArgs {
             runs: crate::stats::RUNS_PER_PATTERN,
             validate: false,
             json_out: false,
+            page_size: None,
         }
     }
 }
@@ -146,6 +151,10 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 if common.runs == 0 {
                     return Err(Error::Cli("--runs must be > 0".into()));
                 }
+            }
+            "--page-size" => {
+                common.page_size =
+                    Some(PageSize::parse(&take("--page-size")?)?)
             }
             "--validate" => common.validate = true,
             "--json-out" => common.json_out = true,
@@ -233,9 +242,14 @@ OPTIONS:
                        locality extension), e.g. -d 0,0,0,16
   -l, --count N        gathers/scatters to perform (accepts 2^N)
       --runs N         runs per pattern (default 10, paper protocol)
+      --page-size P    translation page size: 4KB | 64KB | 2MB | 1GB
+                       (default: 4KB on CPUs, 64KB native large pages
+                       on GPUs); e.g. --page-size 2MB shows huge-delta
+                       gathers flipping from TLB-bound to DRAM-bound
       --validate       cross-check numerics through the PJRT path
       --json-out       machine-readable output
-      --suite NAME     fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|all
+      --suite NAME     fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|
+                       pagesize|all
 ";
 
 #[cfg(test)]
@@ -315,6 +329,33 @@ mod tests {
         assert!(parse_args(&argv("-k Gather -p UNIFORM:8:1 -l 2^60")).is_err());
         assert!(parse_args(&argv("-k Gather -p UNIFORM:8:1 --runs 0")).is_err());
         assert!(parse_args(&argv("-b warp -k G -p 0,1")).is_err());
+    }
+
+    #[test]
+    fn page_size_flag() {
+        let cmd =
+            parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8 --page-size 2MB"))
+                .unwrap();
+        match cmd {
+            Command::Run(r) => {
+                assert_eq!(r.common.page_size, Some(PageSize::TwoMB))
+            }
+            other => panic!("{other:?}"),
+        }
+        // Default: no override (backends pick their native size).
+        match parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8")).unwrap() {
+            Command::Run(r) => assert_eq!(r.common.page_size, None),
+            other => panic!("{other:?}"),
+        }
+        // Case-insensitive; bad values rejected.
+        match parse_args(&argv("-j c.json --page-size 1gb")).unwrap() {
+            Command::Json { common, .. } => {
+                assert_eq!(common.page_size, Some(PageSize::OneGB))
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse_args(&argv("-j c.json --page-size 3MB")).is_err());
+        assert!(parse_args(&argv("-j c.json --page-size")).is_err());
     }
 
     #[test]

@@ -19,8 +19,9 @@
 use std::path::Path;
 
 use crate::error::{Error, Result};
-use crate::json::{self, Value};
+use crate::json::{self, obj, Value};
 use crate::pattern::{table5, Kernel, Pattern};
+use crate::sim::PageSize;
 
 /// One entry of a JSON config file.
 #[derive(Debug, Clone)]
@@ -28,6 +29,46 @@ pub struct RunConfig {
     pub name: String,
     pub kernel: Kernel,
     pub pattern: Pattern,
+    /// Optional `"page-size"` override for this run (`"4KB"`,
+    /// `"64KB"`, `"2MB"`, `"1GB"`); `None` keeps the backend's
+    /// configured default.
+    pub page_size: Option<PageSize>,
+}
+
+impl RunConfig {
+    /// Serialize back to the config-file schema. `parse_config_text`
+    /// of the serialized form reproduces this config (round-trip).
+    pub fn to_json(&self) -> Value {
+        let mut pairs: Vec<(&str, Value)> = vec![
+            ("name", Value::from(self.name.clone())),
+            ("kernel", Value::from(self.kernel.name())),
+            (
+                "pattern",
+                Value::Array(
+                    self.pattern
+                        .indices
+                        .iter()
+                        .map(|&i| Value::from(i))
+                        .collect(),
+                ),
+            ),
+            ("count", Value::from(self.pattern.count)),
+        ];
+        if self.pattern.deltas.len() > 1 {
+            pairs.push((
+                "delta",
+                Value::Array(
+                    self.pattern.deltas.iter().map(|&d| Value::from(d)).collect(),
+                ),
+            ));
+        } else {
+            pairs.push(("delta", Value::from(self.pattern.delta)));
+        }
+        if let Some(page) = self.page_size {
+            pairs.push(("page-size", Value::from(page.name())));
+        }
+        obj(&pairs)
+    }
 }
 
 /// Parse a config file from disk.
@@ -93,6 +134,13 @@ fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
     pattern
         .validate()
         .map_err(|e| Error::Config(format!("run {i}: {e}")))?;
+    let page_size = match v.get_opt("page-size") {
+        Some(ps) => Some(
+            PageSize::parse(ps.as_str()?)
+                .map_err(|e| Error::Config(format!("run {i}: {e}")))?,
+        ),
+        None => None,
+    };
     let name = match v.get_opt("name") {
         Some(n) => n.as_str()?.to_string(),
         None => pattern.spec.clone(),
@@ -101,6 +149,7 @@ fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
         name,
         kernel,
         pattern,
+        page_size,
     })
 }
 
@@ -148,6 +197,62 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfgs[0].pattern.count, 1 << 20);
+    }
+
+    #[test]
+    fn page_size_key_parses_and_roundtrips() {
+        let cfgs = parse_config_text(
+            r#"[
+              {"kernel": "Gather", "pattern": "UNIFORM:16:512",
+               "delta": 16384, "count": 1024, "page-size": "2MB"},
+              {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+               "count": 64}
+            ]"#,
+        )
+        .unwrap();
+        assert_eq!(cfgs[0].page_size, Some(PageSize::TwoMB));
+        assert_eq!(cfgs[1].page_size, None);
+
+        // Round-trip: serialize the whole set and parse it again.
+        let text = json::to_string(&Value::Array(
+            cfgs.iter().map(|c| c.to_json()).collect(),
+        ));
+        let back = parse_config_text(&text).unwrap();
+        assert_eq!(back.len(), cfgs.len());
+        for (a, b) in cfgs.iter().zip(&back) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.pattern.indices, b.pattern.indices);
+            assert_eq!(a.pattern.delta, b.pattern.delta);
+            assert_eq!(a.pattern.deltas, b.pattern.deltas);
+            assert_eq!(a.pattern.count, b.pattern.count);
+            assert_eq!(a.page_size, b.page_size);
+        }
+    }
+
+    #[test]
+    fn delta_list_roundtrips_through_to_json() {
+        let cfgs = parse_config_text(
+            r#"[{"name": "t", "kernel": "Gather", "pattern": [0, 1],
+                 "delta": [0, 0, 0, 16], "count": 32,
+                 "page-size": "1GB"}]"#,
+        )
+        .unwrap();
+        let text = json::to_string(&cfgs[0].to_json());
+        let back = parse_config_text(&format!("[{text}]")).unwrap();
+        assert_eq!(back[0].pattern.deltas, vec![0, 0, 0, 16]);
+        assert_eq!(back[0].page_size, Some(PageSize::OneGB));
+    }
+
+    #[test]
+    fn bad_page_size_rejected_with_run_index() {
+        let err = parse_config_text(
+            r#"[{"kernel": "Gather", "pattern": "UNIFORM:8:1",
+                 "page-size": "3MB"}]"#,
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("run 0") && msg.contains("3MB"), "{msg}");
     }
 
     #[test]

@@ -22,6 +22,12 @@ pub struct RunRecord {
     /// Which simulated resource bound the run ("dram-bw", "tlb", ...);
     /// empty for real-execution backends.
     pub bottleneck: String,
+    /// Translation page size the run modelled ("4KB", "2MB", ...);
+    /// `None` for backends without a virtual-memory model.
+    pub page_size: Option<String>,
+    /// TLB hit fraction over the run's translations; `None` when the
+    /// backend translated nothing (real execution).
+    pub tlb_hit_rate: Option<f64>,
 }
 
 impl RunRecord {
@@ -37,6 +43,20 @@ impl RunRecord {
             ("seconds", Value::from(self.seconds)),
             ("bandwidth_gbs", Value::from(self.bandwidth_gbs)),
             ("bottleneck", Value::from(self.bottleneck.clone())),
+            (
+                "page_size",
+                match &self.page_size {
+                    Some(p) => Value::from(p.clone()),
+                    None => Value::Null,
+                },
+            ),
+            (
+                "tlb_hit_rate",
+                match self.tlb_hit_rate {
+                    Some(r) => Value::from(r),
+                    None => Value::Null,
+                },
+            ),
         ])
     }
 }
@@ -59,17 +79,24 @@ pub fn run_one(
         seconds: r.seconds,
         bandwidth_gbs: r.bandwidth_gbs(),
         bottleneck: r.breakdown.bottleneck().to_string(),
+        page_size: backend.page_size().map(|p| p.name().to_string()),
+        tlb_hit_rate: r.counters.tlb.hit_rate(),
     })
 }
 
-/// Execute a whole JSON config set.
+/// Execute a whole JSON config set. Each config's `"page-size"`
+/// override is applied before its run; configs without one run at the
+/// backend's configured default.
 pub fn run_configs(
     backend: &mut dyn Backend,
     configs: &[RunConfig],
 ) -> Result<Vec<RunRecord>> {
     configs
         .iter()
-        .map(|c| run_one(backend, &c.name, &c.pattern, c.kernel))
+        .map(|c| {
+            backend.set_page_size(c.page_size);
+            run_one(backend, &c.name, &c.pattern, c.kernel)
+        })
         .collect()
 }
 
@@ -128,6 +155,43 @@ mod tests {
         assert!(r.bandwidth_gbs > 10.0);
         assert_eq!(r.vector_len, 8);
         assert_eq!(r.bottleneck, "dram-bw");
+        assert_eq!(r.page_size.as_deref(), Some("4KB"));
+        let rate = r.tlb_hit_rate.unwrap();
+        assert!((0.0..=1.0).contains(&rate));
+    }
+
+    #[test]
+    fn per_run_page_size_applies_and_resets() {
+        // A huge-delta gather at 2 MiB must report fewer TLB misses
+        // than the identical 4 KiB run, and a following config without
+        // the key must run at the default again.
+        let cfgs = parse_config_text(
+            r#"[
+              {"name": "huge-4k", "kernel": "Gather",
+               "pattern": "UNIFORM:16:512", "delta": 16384,
+               "count": 16384},
+              {"name": "huge-2m", "kernel": "Gather",
+               "pattern": "UNIFORM:16:512", "delta": 16384,
+               "count": 16384, "page-size": "2MB"},
+              {"name": "huge-again-4k", "kernel": "Gather",
+               "pattern": "UNIFORM:16:512", "delta": 16384,
+               "count": 16384}
+            ]"#,
+        )
+        .unwrap();
+        let mut b = backend();
+        let recs = run_configs(&mut b, &cfgs).unwrap();
+        assert_eq!(recs[0].page_size.as_deref(), Some("4KB"));
+        assert_eq!(recs[1].page_size.as_deref(), Some("2MB"));
+        assert_eq!(recs[2].page_size.as_deref(), Some("4KB"));
+        let hit = |i: usize| recs[i].tlb_hit_rate.unwrap();
+        assert!(
+            hit(1) > hit(0) + 0.5,
+            "2MB hit rate {:.3} should dwarf 4KB {:.3}",
+            hit(1),
+            hit(0)
+        );
+        assert!((hit(0) - hit(2)).abs() < 1e-9, "default must be restored");
     }
 
     #[test]

@@ -96,12 +96,18 @@ fn with_backend<T>(
     match common.backend {
         BackendKind::OpenMp => {
             let p = platforms::by_name(&common.platform)?;
-            let mut b = OpenMpSim::new(&p);
+            let mut b = match common.page_size {
+                Some(page) => OpenMpSim::with_page_size(&p, page),
+                None => OpenMpSim::new(&p),
+            };
             f(&mut b)
         }
         BackendKind::Scalar => {
             let p = platforms::by_name(&common.platform)?;
-            let mut b = ScalarSim::new(&p);
+            let mut b = match common.page_size {
+                Some(page) => ScalarSim::with_page_size(&p, page),
+                None => ScalarSim::new(&p),
+            };
             f(&mut b)
         }
         BackendKind::Cuda => {
@@ -112,7 +118,10 @@ fn with_backend<T>(
                     common.platform
                 ))
             })?;
-            let mut b = CudaSim::new(&p);
+            let mut b = match common.page_size {
+                Some(page) => CudaSim::with_page_size(&p, page),
+                None => CudaSim::new(&p),
+            };
             f(&mut b)
         }
         BackendKind::Pjrt => {
@@ -139,7 +148,10 @@ fn emit(records: &[RunRecord], common: &CommonArgs) {
         println!("{}", json::to_string_pretty(&obj));
         return;
     }
-    let mut t = Table::new(&["name", "kernel", "V", "delta", "count", "time (s)", "GB/s", "bound by"]);
+    let mut t = Table::new(&[
+        "name", "kernel", "V", "delta", "count", "page", "time (s)", "GB/s",
+        "TLB hit%", "bound by",
+    ]);
     for r in records {
         t.row(&[
             r.name.clone(),
@@ -147,8 +159,13 @@ fn emit(records: &[RunRecord], common: &CommonArgs) {
             r.vector_len.to_string(),
             r.delta.to_string(),
             r.count.to_string(),
+            r.page_size.clone().unwrap_or_else(|| "-".to_string()),
             format!("{:.6}", r.seconds),
             format!("{:.2}", r.bandwidth_gbs),
+            match r.tlb_hit_rate {
+                Some(rate) => format!("{:.1}", rate * 100.0),
+                None => "-".to_string(),
+            },
             r.bottleneck.clone(),
         ]);
     }

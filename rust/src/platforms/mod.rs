@@ -8,7 +8,7 @@
 //! identifies per platform plus public spec sheets.
 
 use crate::error::{Error, Result};
-use crate::sim::PrefetchKind;
+use crate::sim::{PrefetchKind, TlbGeometry, TlbTable};
 
 /// A simulated CPU platform (the paper's OpenMP/Scalar targets).
 #[derive(Debug, Clone)]
@@ -50,8 +50,9 @@ pub struct CpuPlatform {
     /// system"). < 1: scalar wastes bandwidth; > 1: the platform's
     /// microcoded G/S is itself the less efficient requester (BDW).
     pub scalar_dram_efficiency: f64,
-    /// dTLB entries (4 KiB pages) and page-walk cost.
-    pub tlb_entries: usize,
+    /// Per-page-size TLB geometries (cpuid-style table) and the cost
+    /// of a full-depth page walk.
+    pub tlb: TlbTable,
     pub tlb_walk_ns: f64,
     /// Cost per contended (cross-thread) write, ns.
     pub coherence_ns: f64,
@@ -80,10 +81,10 @@ pub struct GpuPlatform {
     pub l2_assoc: usize,
     /// Effective L2 bandwidth (GB/s) — caps in-cache reuse bandwidth.
     pub l2_gbs: f64,
-    /// GPU TLB: entries x 64 KiB pages, miss cost in ns, and the
-    /// miss-level parallelism of the walkers.
-    pub tlb_entries: usize,
-    pub tlb_page_bytes: u64,
+    /// Per-page-size TLB geometries (64 KiB native large pages are
+    /// the default translation granularity), full-depth walk cost in
+    /// ns, and the miss-level parallelism of the walkers.
+    pub tlb: TlbTable,
     pub tlb_walk_ns: f64,
     pub tlb_mlp: f64,
     /// Write serialization cost for same-sector contention (delta-0
@@ -125,7 +126,13 @@ pub fn cpus() -> Vec<CpuPlatform> {
             // loads are very slow — the Fig 6 "vectorize or starve".
             scalar_cycles_per_elem: 6.0,
             scalar_dram_efficiency: 0.50,
-            tlb_entries: 256,
+            tlb: TlbTable {
+                // KNL: 256-entry uTLB class; modest 2M/1G arrays.
+                four_kb: TlbGeometry { entries: 256, assoc: 4 },
+                sixty_four_kb: TlbGeometry { entries: 256, assoc: 4 },
+                two_mb: TlbGeometry { entries: 128, assoc: 4 },
+                one_gb: TlbGeometry { entries: 16, assoc: 4 },
+            },
             tlb_walk_ns: 120.0,
             coherence_ns: 260.0,
             absorbs_repeated_writes: false,
@@ -154,7 +161,13 @@ pub fn cpus() -> Vec<CpuPlatform> {
             scatter_cycles_per_elem: None, // AVX2 has no scatter
             scalar_cycles_per_elem: 2.2,
             scalar_dram_efficiency: 1.10,
-            tlb_entries: 1536,
+            tlb: TlbTable {
+                // BDW STLB: 1536 x 4K; small dedicated 2M/1G DTLBs.
+                four_kb: TlbGeometry { entries: 1536, assoc: 4 },
+                sixty_four_kb: TlbGeometry { entries: 1536, assoc: 4 },
+                two_mb: TlbGeometry { entries: 32, assoc: 4 },
+                one_gb: TlbGeometry { entries: 4, assoc: 4 },
+            },
             tlb_walk_ns: 70.0,
             coherence_ns: 220.0,
             absorbs_repeated_writes: false,
@@ -179,7 +192,13 @@ pub fn cpus() -> Vec<CpuPlatform> {
             scatter_cycles_per_elem: Some(1.6),
             scalar_cycles_per_elem: 2.0,
             scalar_dram_efficiency: 0.78,
-            tlb_entries: 1536,
+            tlb: TlbTable {
+                // SKX STLB shares 1536 entries for 4K/2M; 16 x 1G.
+                four_kb: TlbGeometry { entries: 1536, assoc: 4 },
+                sixty_four_kb: TlbGeometry { entries: 1536, assoc: 4 },
+                two_mb: TlbGeometry { entries: 1536, assoc: 4 },
+                one_gb: TlbGeometry { entries: 16, assoc: 4 },
+            },
             tlb_walk_ns: 55.0,
             coherence_ns: 240.0,
             absorbs_repeated_writes: false,
@@ -204,7 +223,13 @@ pub fn cpus() -> Vec<CpuPlatform> {
             scatter_cycles_per_elem: Some(1.3),
             scalar_cycles_per_elem: 2.0,
             scalar_dram_efficiency: 0.80,
-            tlb_entries: 1536,
+            tlb: TlbTable {
+                // CLX STLB shares 1536 entries for 4K/2M; 16 x 1G.
+                four_kb: TlbGeometry { entries: 1536, assoc: 4 },
+                sixty_four_kb: TlbGeometry { entries: 1536, assoc: 4 },
+                two_mb: TlbGeometry { entries: 1536, assoc: 4 },
+                one_gb: TlbGeometry { entries: 16, assoc: 4 },
+            },
             tlb_walk_ns: 50.0,
             coherence_ns: 190.0,
             absorbs_repeated_writes: false,
@@ -230,7 +255,13 @@ pub fn cpus() -> Vec<CpuPlatform> {
             scatter_cycles_per_elem: None,
             scalar_cycles_per_elem: 1.4,
             scalar_dram_efficiency: 1.0,
-            tlb_entries: 2048,
+            tlb: TlbTable {
+                // TX2: large unified L2 TLB for 4K/2M (64K native too).
+                four_kb: TlbGeometry { entries: 2048, assoc: 4 },
+                sixty_four_kb: TlbGeometry { entries: 2048, assoc: 4 },
+                two_mb: TlbGeometry { entries: 2048, assoc: 4 },
+                one_gb: TlbGeometry { entries: 16, assoc: 4 },
+            },
             tlb_walk_ns: 80.0,
             coherence_ns: 200.0,
             // §5.4.2 item 1: handles writing the same location over and
@@ -261,7 +292,13 @@ pub fn cpus() -> Vec<CpuPlatform> {
             scatter_cycles_per_elem: None, // AVX2: no scatter insn
             scalar_cycles_per_elem: 2.0,
             scalar_dram_efficiency: 0.85,
-            tlb_entries: 1536,
+            tlb: TlbTable {
+                // Naples L2 TLB holds 4K and 2M; 16 x 1G.
+                four_kb: TlbGeometry { entries: 1536, assoc: 4 },
+                sixty_four_kb: TlbGeometry { entries: 1536, assoc: 4 },
+                two_mb: TlbGeometry { entries: 1536, assoc: 4 },
+                one_gb: TlbGeometry { entries: 16, assoc: 4 },
+            },
             tlb_walk_ns: 75.0,
             coherence_ns: 320.0,
             absorbs_repeated_writes: false,
@@ -283,8 +320,14 @@ pub fn gpus() -> Vec<GpuPlatform> {
             row_activate_bytes: 64.0,
             l2_kb: 1536, l2_assoc: 16,
             l2_gbs: 450.0,
-            tlb_entries: 512,
-            tlb_page_bytes: 64 * 1024,
+            tlb: TlbTable {
+                // 64 KiB native large pages; 4 KiB modelled at the same
+                // entry count, bigger sizes with fewer entries.
+                four_kb: TlbGeometry { entries: 512, assoc: 4 },
+                sixty_four_kb: TlbGeometry { entries: 512, assoc: 4 },
+                two_mb: TlbGeometry { entries: 64, assoc: 4 },
+                one_gb: TlbGeometry { entries: 16, assoc: 4 },
+            },
             tlb_walk_ns: 600.0,
             tlb_mlp: 8.0,
             write_contend_ns: 9.0,
@@ -299,8 +342,14 @@ pub fn gpus() -> Vec<GpuPlatform> {
             row_activate_bytes: 48.0,
             l2_kb: 3072, l2_assoc: 16,
             l2_gbs: 1100.0,
-            tlb_entries: 2048,
-            tlb_page_bytes: 64 * 1024,
+            tlb: TlbTable {
+                // 64 KiB native large pages; 4 KiB modelled at the same
+                // entry count, bigger sizes with fewer entries.
+                four_kb: TlbGeometry { entries: 2048, assoc: 4 },
+                sixty_four_kb: TlbGeometry { entries: 2048, assoc: 4 },
+                two_mb: TlbGeometry { entries: 256, assoc: 4 },
+                one_gb: TlbGeometry { entries: 16, assoc: 4 },
+            },
             tlb_walk_ns: 450.0,
             tlb_mlp: 16.0,
             write_contend_ns: 4.0,
@@ -315,8 +364,14 @@ pub fn gpus() -> Vec<GpuPlatform> {
             row_activate_bytes: 40.0,
             l2_kb: 4096, l2_assoc: 16,
             l2_gbs: 1400.0,
-            tlb_entries: 2048,
-            tlb_page_bytes: 64 * 1024,
+            tlb: TlbTable {
+                // 64 KiB native large pages; 4 KiB modelled at the same
+                // entry count, bigger sizes with fewer entries.
+                four_kb: TlbGeometry { entries: 2048, assoc: 4 },
+                sixty_four_kb: TlbGeometry { entries: 2048, assoc: 4 },
+                two_mb: TlbGeometry { entries: 256, assoc: 4 },
+                one_gb: TlbGeometry { entries: 16, assoc: 4 },
+            },
             tlb_walk_ns: 400.0,
             tlb_mlp: 16.0,
             write_contend_ns: 3.5,
@@ -333,8 +388,14 @@ pub fn gpus() -> Vec<GpuPlatform> {
             // 100% ring" caching behaviour.
             l2_kb: 6144, l2_assoc: 16,
             l2_gbs: 2400.0,
-            tlb_entries: 4096,
-            tlb_page_bytes: 64 * 1024,
+            tlb: TlbTable {
+                // 64 KiB native large pages; 4 KiB modelled at the same
+                // entry count, bigger sizes with fewer entries.
+                four_kb: TlbGeometry { entries: 4096, assoc: 4 },
+                sixty_four_kb: TlbGeometry { entries: 4096, assoc: 4 },
+                two_mb: TlbGeometry { entries: 512, assoc: 4 },
+                one_gb: TlbGeometry { entries: 16, assoc: 4 },
+            },
             tlb_walk_ns: 350.0,
             tlb_mlp: 24.0,
             write_contend_ns: 2.5,
@@ -482,6 +543,32 @@ mod tests {
     fn k40_coalesces_at_line_granularity() {
         assert_eq!(gpu_by_name("k40c").unwrap().sector_bytes, 128);
         assert_eq!(gpu_by_name("p100").unwrap().sector_bytes, 32);
+    }
+
+    #[test]
+    fn tlb_tables_are_cpuid_shaped() {
+        use crate::sim::PageSize;
+        // Per-size tables: no machine has more huge-page than base-page
+        // entries, and every size has a usable geometry.
+        for p in cpus() {
+            let t = p.tlb;
+            assert!(t.two_mb.entries <= t.four_kb.entries, "{}", p.name);
+            assert!(t.one_gb.entries <= t.two_mb.entries, "{}", p.name);
+            for &size in PageSize::ALL {
+                let g = t.geometry(size);
+                assert!(g.entries >= g.assoc, "{} {size}", p.name);
+            }
+        }
+        for p in gpus() {
+            let t = p.tlb;
+            assert!(t.one_gb.entries <= t.sixty_four_kb.entries, "{}", p.name);
+        }
+        // The 4 KiB geometries match the seed model's dTLB reach.
+        assert_eq!(by_name("skx").unwrap().tlb.four_kb.entries, 1536);
+        assert_eq!(by_name("knl").unwrap().tlb.four_kb.entries, 256);
+        assert_eq!(gpu_by_name("v100").unwrap().tlb.sixty_four_kb.entries, 4096);
+        // BDW keeps only small dedicated huge-page DTLBs.
+        assert_eq!(by_name("bdw").unwrap().tlb.two_mb.entries, 32);
     }
 
     #[test]

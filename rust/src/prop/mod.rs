@@ -161,6 +161,36 @@ mod tests {
     }
 
     #[test]
+    fn prop_translation_identity_and_miss_bounds() {
+        use crate::sim::memory::{PageSize, Tlb, TlbGeometry, TlbStats, VirtualAddress};
+        // For every page size: translation is identity-preserving and
+        // `tlb_misses <= accesses` over arbitrary access streams.
+        check("translate == id, misses <= accesses", 40, |g| {
+            for &page in PageSize::ALL {
+                let geom = TlbGeometry {
+                    entries: 1 << g.usize_in(2, 6),
+                    assoc: 1 << g.usize_in(0, 2),
+                };
+                let mut tlb = Tlb::new(geom, page);
+                let mut stats = TlbStats::default();
+                let span = 1u64 << g.usize_in(10, 40);
+                for _ in 0..200 {
+                    let va = VirtualAddress(g.next_u64() % span);
+                    let t = tlb.translate(va, g.bool(), &mut stats);
+                    assert_eq!(
+                        t.physical.byte(),
+                        va.byte(),
+                        "translation must be identity-preserving"
+                    );
+                }
+                assert!(stats.misses() <= stats.accesses());
+                assert_eq!(stats.accesses(), 200);
+                assert_eq!(stats.hits() + stats.misses(), 200);
+            }
+        });
+    }
+
+    #[test]
     fn unit_floats_in_range() {
         let mut g = Gen::new(99);
         let mut sum = 0.0;

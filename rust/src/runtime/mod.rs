@@ -5,20 +5,20 @@
 //! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
 //! protos with 64-bit instruction ids which xla_extension 0.5.1
 //! rejects; the text parser reassigns ids (see /opt/xla-example).
+//!
+//! The `xla` crate comes from the offline vendor set, which not every
+//! build environment carries. The real runtime is therefore gated
+//! behind the `xla` cargo feature; the default build compiles a stub
+//! whose constructors return a clear "built without PJRT support"
+//! error. The stub's value types are uninhabited, so all downstream
+//! code (the pjrt backend, the e2e tests) typechecks unchanged and the
+//! unreachable paths cost nothing.
 
 mod manifest;
 
 pub use manifest::{ArgSpec, Manifest, Variant};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-use crate::error::{Error, Result};
-
-/// Map an `xla` crate error into ours.
-fn xe(e: xla::Error) -> Error {
-    Error::Xla(e.to_string())
-}
+use std::path::PathBuf;
 
 /// Locate the artifacts directory: `$SPATTER_ARTIFACTS`, else
 /// `./artifacts`, else `../artifacts` (for tests run from rust/).
@@ -35,111 +35,224 @@ pub fn default_artifact_dir() -> PathBuf {
     PathBuf::from("artifacts")
 }
 
-/// The runtime: a PJRT CPU client plus a compile cache of loaded
-/// executables, one per artifact variant.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-}
+#[cfg(feature = "xla")]
+mod backend_impl {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
 
-impl Runtime {
-    /// Open the runtime over an artifact directory.
-    pub fn open(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(&dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu().map_err(xe)?;
-        Ok(Runtime {
-            client,
-            dir: dir.to_path_buf(),
-            manifest,
-            cache: HashMap::new(),
-        })
+    use super::Manifest;
+    use crate::error::{Error, Result};
+
+    pub use xla::{Literal, PjRtBuffer};
+
+    /// Map an `xla` crate error into ours.
+    fn xe(e: xla::Error) -> Error {
+        Error::Xla(e.to_string())
     }
 
-    /// Open using the default artifact location.
-    pub fn open_default() -> Result<Runtime> {
-        Runtime::open(&default_artifact_dir())
+    /// The runtime: a PJRT CPU client plus a compile cache of loaded
+    /// executables, one per artifact variant.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) an executable for a variant.
-    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(name) {
-            let variant = self
-                .manifest
-                .by_name(name)
-                .ok_or_else(|| Error::Runtime(format!("no variant '{name}'")))?;
-            let path = self.dir.join(&variant.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str()
-                    .ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
-            )
-            .map_err(xe)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp).map_err(xe)?;
-            self.cache.insert(name.to_string(), exe);
+    impl Runtime {
+        /// Open the runtime over an artifact directory.
+        pub fn open(dir: &Path) -> Result<Runtime> {
+            let manifest = Manifest::load(&dir.join("manifest.json"))?;
+            let client = xla::PjRtClient::cpu().map_err(xe)?;
+            Ok(Runtime {
+                client,
+                dir: dir.to_path_buf(),
+                manifest,
+                cache: HashMap::new(),
+            })
         }
-        Ok(&self.cache[name])
-    }
 
-    /// Stage a f64 host array on the device.
-    pub fn stage_f64(&self, data: &[f64]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, &[data.len()], None)
-            .map_err(xe)
-    }
+        /// Open using the default artifact location.
+        pub fn open_default() -> Result<Runtime> {
+            Runtime::open(&super::default_artifact_dir())
+        }
 
-    /// Stage a 2-D f64 host array on the device.
-    pub fn stage_f64_2d(
-        &self,
-        data: &[f64],
-        rows: usize,
-        cols: usize,
-    ) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, &[rows, cols], None)
-            .map_err(xe)
-    }
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
 
-    /// Stage an i32 host array on the device.
-    pub fn stage_i32(&self, data: &[i32]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, &[data.len()], None)
-            .map_err(xe)
-    }
+        pub fn platform_name(&self) -> String {
+            self.client.platform_name()
+        }
 
-    /// Execute a loaded variant over staged buffers; returns the result
-    /// tuple's first element as a Literal (synchronized).
-    pub fn execute(
-        &mut self,
-        name: &str,
-        args: &[&xla::PjRtBuffer],
-    ) -> Result<xla::Literal> {
-        self.load(name)?;
-        let exe = &self.cache[name];
-        let outs = exe.execute_b(args).map_err(xe)?;
-        let lit = outs[0][0].to_literal_sync().map_err(xe)?;
-        lit.to_tuple1().map_err(xe)
-    }
+        /// Compile (or fetch from cache) an executable for a variant.
+        pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.cache.contains_key(name) {
+                let variant = self
+                    .manifest
+                    .by_name(name)
+                    .ok_or_else(|| Error::Runtime(format!("no variant '{name}'")))?;
+                let path = self.dir.join(&variant.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str()
+                        .ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+                )
+                .map_err(xe)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self.client.compile(&comp).map_err(xe)?;
+                self.cache.insert(name.to_string(), exe);
+            }
+            Ok(&self.cache[name])
+        }
 
-    /// Execute and return the scalar f64 result (checksum variants).
-    pub fn execute_scalar(
-        &mut self,
-        name: &str,
-        args: &[&xla::PjRtBuffer],
-    ) -> Result<f64> {
-        let lit = self.execute(name, args)?;
-        lit.get_first_element::<f64>().map_err(xe)
+        /// Stage a f64 host array on the device.
+        pub fn stage_f64(&self, data: &[f64]) -> Result<PjRtBuffer> {
+            self.client
+                .buffer_from_host_buffer(data, &[data.len()], None)
+                .map_err(xe)
+        }
+
+        /// Stage a 2-D f64 host array on the device.
+        pub fn stage_f64_2d(
+            &self,
+            data: &[f64],
+            rows: usize,
+            cols: usize,
+        ) -> Result<PjRtBuffer> {
+            self.client
+                .buffer_from_host_buffer(data, &[rows, cols], None)
+                .map_err(xe)
+        }
+
+        /// Stage an i32 host array on the device.
+        pub fn stage_i32(&self, data: &[i32]) -> Result<PjRtBuffer> {
+            self.client
+                .buffer_from_host_buffer(data, &[data.len()], None)
+                .map_err(xe)
+        }
+
+        /// Execute a loaded variant over staged buffers; returns the result
+        /// tuple's first element as a Literal (synchronized).
+        pub fn execute(
+            &mut self,
+            name: &str,
+            args: &[&PjRtBuffer],
+        ) -> Result<Literal> {
+            self.load(name)?;
+            let exe = &self.cache[name];
+            let outs = exe.execute_b(args).map_err(xe)?;
+            let lit = outs[0][0].to_literal_sync().map_err(xe)?;
+            lit.to_tuple1().map_err(xe)
+        }
+
+        /// Execute and return the scalar f64 result (checksum variants).
+        pub fn execute_scalar(
+            &mut self,
+            name: &str,
+            args: &[&PjRtBuffer],
+        ) -> Result<f64> {
+            let lit = self.execute(name, args)?;
+            lit.get_first_element::<f64>().map_err(xe)
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod backend_impl {
+    //! Stub runtime for builds without the vendored `xla` crate.
+    //!
+    //! `Runtime`, `PjRtBuffer`, and `Literal` are uninhabited: the only
+    //! way to obtain one is through `open`/`open_default`, which always
+    //! fail with a descriptive error, so every downstream method body
+    //! is statically unreachable (`match` on the uninhabited field).
+
+    use std::convert::Infallible;
+    use std::path::Path;
+
+    use super::Manifest;
+    use crate::error::{Error, Result};
+
+    const NO_XLA: &str = "spatter was built without the `xla` feature; \
+                          the PJRT real-execution backend is unavailable \
+                          (rebuild with `--features xla` and the vendored \
+                          xla crate)";
+
+    /// Uninhabited stand-in for `xla::PjRtBuffer`.
+    pub enum PjRtBuffer {}
+
+    /// Uninhabited stand-in for `xla::Literal`.
+    pub struct Literal {
+        never: Infallible,
+    }
+
+    impl Literal {
+        pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+            match self.never {}
+        }
+
+        pub fn get_first_element<T>(&self) -> Result<T> {
+            match self.never {}
+        }
+    }
+
+    /// Stub runtime: constructors fail, everything else is unreachable.
+    pub struct Runtime {
+        never: Infallible,
+    }
+
+    impl Runtime {
+        pub fn open(_dir: &Path) -> Result<Runtime> {
+            Err(Error::Runtime(NO_XLA.to_string()))
+        }
+
+        pub fn open_default() -> Result<Runtime> {
+            Runtime::open(&super::default_artifact_dir())
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            match self.never {}
+        }
+
+        pub fn platform_name(&self) -> String {
+            match self.never {}
+        }
+
+        pub fn stage_f64(&self, _data: &[f64]) -> Result<PjRtBuffer> {
+            match self.never {}
+        }
+
+        pub fn stage_f64_2d(
+            &self,
+            _data: &[f64],
+            _rows: usize,
+            _cols: usize,
+        ) -> Result<PjRtBuffer> {
+            match self.never {}
+        }
+
+        pub fn stage_i32(&self, _data: &[i32]) -> Result<PjRtBuffer> {
+            match self.never {}
+        }
+
+        pub fn execute(
+            &mut self,
+            _name: &str,
+            _args: &[&PjRtBuffer],
+        ) -> Result<Literal> {
+            match self.never {}
+        }
+
+        pub fn execute_scalar(
+            &mut self,
+            _name: &str,
+            _args: &[&PjRtBuffer],
+        ) -> Result<f64> {
+            match self.never {}
+        }
+    }
+}
+
+pub use backend_impl::{Literal, PjRtBuffer, Runtime};
 
 #[cfg(test)]
 mod tests {
@@ -155,14 +268,35 @@ mod tests {
             eprintln!("skipping: no artifacts (run `make artifacts`)");
             return;
         }
-        let rt = Runtime::open_default().unwrap();
+        let rt = match Runtime::open_default() {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                return;
+            }
+        };
         assert!(rt.manifest().variants.len() >= 10);
     }
 
     #[test]
+    fn stub_or_real_open_reports_clearly() {
+        // Without artifacts (or without the xla feature) opening must
+        // fail with a descriptive error, never panic.
+        if have_artifacts() && cfg!(feature = "xla") {
+            return; // covered by the e2e tests
+        }
+        let err = Runtime::open_default().unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("artifacts") || msg.contains("xla"),
+            "unhelpful error: {msg}"
+        );
+    }
+
+    #[test]
     fn smoke_gather_executes_correctly() {
-        if !have_artifacts() {
-            eprintln!("skipping: no artifacts");
+        if !have_artifacts() || !cfg!(feature = "xla") {
+            eprintln!("skipping: no artifacts or no xla feature");
             return;
         }
         let mut rt = Runtime::open_default().unwrap();
@@ -191,8 +325,8 @@ mod tests {
 
     #[test]
     fn checksum_matches_host_computation() {
-        if !have_artifacts() {
-            eprintln!("skipping: no artifacts");
+        if !have_artifacts() || !cfg!(feature = "xla") {
+            eprintln!("skipping: no artifacts or no xla feature");
             return;
         }
         let mut rt = Runtime::open_default().unwrap();
@@ -217,8 +351,8 @@ mod tests {
 
     #[test]
     fn pallas_and_ref_variants_agree() {
-        if !have_artifacts() {
-            eprintln!("skipping: no artifacts");
+        if !have_artifacts() || !cfg!(feature = "xla") {
+            eprintln!("skipping: no artifacts or no xla feature");
             return;
         }
         let mut rt = Runtime::open_default().unwrap();

@@ -27,6 +27,9 @@
 use std::collections::HashSet;
 
 use super::cache::{Cache, Probe};
+use super::memory::{
+    PageSize, PageTableWalker, PhysicalAddress, Tlb, VirtualAddress,
+};
 use super::prefetch::Prefetcher;
 use super::{PrefetchKind, SimCounters, SimResult, TimeBreakdown};
 use crate::error::Result;
@@ -47,6 +50,12 @@ pub struct CpuSimOptions {
     /// Warmup iterations before measurement (models the paper's
     /// min-of-10-runs protocol, where later runs find warm caches).
     pub warmup_iterations: usize,
+    /// Translation page size (the `--page-size` knob). The per-size
+    /// TLB geometry comes from the platform's [`TlbTable`]
+    /// (`platforms/mod.rs`).
+    ///
+    /// [`TlbTable`]: super::memory::TlbTable
+    pub page_size: PageSize,
 }
 
 impl Default for CpuSimOptions {
@@ -56,12 +65,16 @@ impl Default for CpuSimOptions {
             vectorized: true,
             max_sim_accesses: 1 << 21,
             warmup_iterations: 1 << 15,
+            page_size: PageSize::FourKB,
         }
     }
 }
 
 const LINE: u64 = 64;
-const PAGE: u64 = 4096;
+
+/// Page walks overlap about two deep per thread (the walker MLP the
+/// timing model charges against).
+const WALK_OVERLAP: f64 = 2.0;
 
 /// The engine. Reusable across runs (state resets per run).
 pub struct CpuEngine {
@@ -70,15 +83,15 @@ pub struct CpuEngine {
     l1: Cache,
     l2: Cache,
     l3: Cache,
-    /// TLB modelled as a cache of page numbers (one "line" per page).
-    tlb: Cache,
+    /// Shared virtual-memory subsystem: set-associative TLB (with the
+    /// same-page short-circuit) + radix page-table walker, both sized
+    /// for the configured [`PageSize`].
+    tlb: Tlb,
+    walker: PageTableWalker,
     prefetcher: Prefetcher,
     pf_buf: Vec<u64>,
     /// Open-row tracker for the DRAM row-locality model.
     last_row: u64,
-    /// Same-page TLB short-circuit (§Perf: consecutive accesses hit
-    /// the same page almost always; skip the set scan).
-    last_page: u64,
 }
 
 /// DRAM row size for the row-locality model (2 KiB = 32 lines).
@@ -93,11 +106,13 @@ impl CpuEngine {
 
     pub fn with_options(platform: &CpuPlatform, opts: CpuSimOptions) -> CpuEngine {
         let p = platform.clone();
+        let page = opts.page_size;
         CpuEngine {
             l1: Cache::new(p.l1_kb * 1024, LINE as usize, p.l1_assoc),
             l2: Cache::new(p.l2_kb * 1024, LINE as usize, p.l2_assoc),
             l3: Cache::new(p.l3_mb * 1024 * 1024, LINE as usize, p.l3_assoc),
-            tlb: Cache::new(p.tlb_entries * LINE as usize, LINE as usize, 4),
+            tlb: Tlb::new(p.tlb.geometry(page), page),
+            walker: PageTableWalker::new(p.tlb_walk_ns, page, WALK_OVERLAP),
             prefetcher: Prefetcher::new(if opts.prefetch_enabled {
                 p.prefetch
             } else {
@@ -107,7 +122,6 @@ impl CpuEngine {
             opts,
             pf_buf: Vec::with_capacity(8),
             last_row: u64::MAX,
-            last_page: u64::MAX,
         }
     }
 
@@ -119,6 +133,24 @@ impl CpuEngine {
         &self.opts
     }
 
+    /// The page size the next run will model.
+    pub fn page_size(&self) -> PageSize {
+        self.tlb.page_size()
+    }
+
+    /// Reconfigure the translation page size: `Some` overrides, `None`
+    /// restores the engine's configured default. Rebuilds the TLB and
+    /// walker from the platform's per-size table.
+    pub fn set_page_size(&mut self, page: Option<PageSize>) {
+        let page = page.unwrap_or(self.opts.page_size);
+        if page == self.page_size() {
+            return;
+        }
+        self.tlb = Tlb::new(self.platform.tlb.geometry(page), page);
+        self.walker =
+            PageTableWalker::new(self.platform.tlb_walk_ns, page, WALK_OVERLAP);
+    }
+
     fn reset(&mut self) {
         self.l1.reset();
         self.l2.reset();
@@ -126,13 +158,13 @@ impl CpuEngine {
         self.tlb.reset();
         self.prefetcher.reset();
         self.last_row = u64::MAX;
-        self.last_page = u64::MAX;
     }
 
-    /// Track DRAM row transitions for the fill stream.
+    /// Track DRAM row transitions for the fill stream. DRAM-facing:
+    /// only translated addresses may reach the row model.
     #[inline]
-    fn note_row(&mut self, line: u64, c: &mut SimCounters) {
-        let row = line / ROW_LINES;
+    fn note_row(&mut self, pa: PhysicalAddress, c: &mut SimCounters) {
+        let row = pa.line() / ROW_LINES;
         if row != self.last_row {
             c.row_activations += 1;
             self.last_row = row;
@@ -143,6 +175,11 @@ impl CpuEngine {
     pub fn run(&mut self, pattern: &Pattern, kernel: Kernel) -> Result<SimResult> {
         pattern.validate()?;
         self.reset();
+        debug_assert_eq!(
+            self.tlb.page_size(),
+            self.walker.page_size(),
+            "TLB and walker must be rebuilt together (set_page_size)"
+        );
 
         let v = pattern.vector_len();
         let cap_iters = (self.opts.max_sim_accesses / v).max(1);
@@ -164,9 +201,11 @@ impl CpuEngine {
         counters.coherence_events = self.coherence_events(pattern, kernel, measured);
 
         // Page walks miss the cache hierarchy when touched pages are
-        // sparse (PTE lines cover 64 consecutive pages = 256 KiB of
-        // address space): each walk then costs a DRAM access too.
-        let sparse_walks = pattern.mean_delta() * 8.0 >= 256.0 * 1024.0;
+        // sparse (one PTE line covers 64 consecutive pages — 256 KiB
+        // at 4 KiB pages, 128 MiB at 2 MiB): each walk then costs DRAM
+        // accesses too.
+        let sparse_walks =
+            pattern.mean_delta() * 8.0 >= self.walker.pte_line_coverage_bytes();
 
         let breakdown = self.timing(&counters, kernel, sparse_walks);
         let scale = pattern.count as f64 / measured as f64;
@@ -194,8 +233,8 @@ impl CpuEngine {
         let mut base = pattern.base(begin);
         for i in begin..end {
             for &idx in &pattern.indices {
-                let byte = ((base + idx) as u64) * 8;
-                self.access(byte, is_write, streaming, &mut last_stream_line, c);
+                let va = VirtualAddress(((base + idx) as u64) * 8);
+                self.access(va, is_write, streaming, &mut last_stream_line, c);
             }
             base += pattern.delta_at(i);
         }
@@ -204,31 +243,26 @@ impl CpuEngine {
     #[inline]
     fn access(
         &mut self,
-        byte: u64,
+        va: VirtualAddress,
         is_write: bool,
         streaming: bool,
         last_stream_line: &mut u64,
         c: &mut SimCounters,
     ) {
         c.accesses += 1;
-        let line = byte / LINE;
-        let page = byte / PAGE;
+
+        // Translate first: everything below the TLB deals only in
+        // physical addresses (the mapping is identity, so the line
+        // id is unchanged — see sim::memory).
+        let t = self.tlb.translate(va, is_write, &mut c.tlb);
+        let pa = t.physical;
+        let line = pa.line();
 
         // Overlap the host-memory misses of the three dependent set
         // scans (§Perf).
         self.l1.prefetch_host(line);
         self.l2.prefetch_host(line);
         self.l3.prefetch_host(line);
-
-        // TLB (same-page short-circuit: the repeat access would hit
-        // and only refresh LRU).
-        if page != self.last_page {
-            if self.tlb.access(page, false) == Probe::Miss {
-                c.tlb_misses += 1;
-                self.tlb.fill_after_miss(page, false, false);
-            }
-            self.last_page = page;
-        }
 
         // Non-temporal stores bypass the hierarchy entirely (the
         // stride-1 scatter / STREAM-store path): one DRAM line write
@@ -240,7 +274,7 @@ impl CpuEngine {
             }
             if line != *last_stream_line {
                 c.streaming_store_lines += 1;
-                self.note_row(line, c);
+                self.note_row(pa, c);
                 *last_stream_line = line;
             }
             return;
@@ -282,7 +316,7 @@ impl CpuEngine {
 
         // DRAM demand fill (write-allocate for scatter).
         c.dram_demand_lines += 1;
-        self.note_row(line, c);
+        self.note_row(pa, c);
         if self.l3.fill_after_miss(line, false, false).is_some() {
             c.writeback_lines += 1;
         }
@@ -293,7 +327,7 @@ impl CpuEngine {
         // the fused fill (L2 first — the streamer's target; L1 copies
         // are covered by inclusion through L2/L3).
         let mut buf = std::mem::take(&mut self.pf_buf);
-        self.prefetcher.on_miss(byte, line, &mut buf);
+        self.prefetcher.on_miss(pa.byte(), line, &mut buf);
         for &pl in &buf {
             let (inserted_l2, ev) = self.l2.fill_if_absent(pl, false, true);
             if inserted_l2 {
@@ -305,7 +339,7 @@ impl CpuEngine {
                 let (inserted_l3, _) = self.l3.fill_if_absent(pl, false, true);
                 if inserted_l3 {
                     c.dram_prefetch_lines += 1;
-                    self.note_row(pl, c);
+                    self.note_row(PhysicalAddress::from_line(pl), c);
                 }
             }
         }
@@ -407,17 +441,22 @@ impl CpuEngine {
         // DRAM occupancy: line traffic + row-activation overhead +
         // page-walk traffic when the walk itself misses the caches
         // (sparse pages — each walk is another random DRAM access).
-        let walk_lines = if sparse_walks { c.tlb_misses } else { 0 };
-        // A cold radix walk touches ~2 uncached page-table lines (PTE +
-        // PMD level), each a random DRAM access with a row miss.
+        let walks = if sparse_walks { c.tlb.misses() } else { 0 };
+        // A cold radix walk touches its deep page-table levels uncached
+        // (2 lines for a 4-level walk), each a random DRAM access with
+        // a row miss.
+        let walk_bytes = walks as f64
+            * self.walker.uncached_lines_per_walk() as f64
+            * (64.0 + ROW_PENALTY_BYTES);
         let dram_bytes = (c.dram_read_bytes() + c.dram_write_bytes()) as f64
             + c.row_activations as f64 * ROW_PENALTY_BYTES
-            + walk_lines as f64 * 2.0 * (64.0 + ROW_PENALTY_BYTES);
+            + walk_bytes;
         let dram_s = dram_bytes / (p.stream_gbs * 1e9 * dram_eff);
         let latency_s =
             c.dram_demand_lines as f64 * p.dram_latency_ns * 1e-9 / mlp / t;
-        // Page walks overlap about two deep per thread.
-        let tlb_s = c.tlb_misses as f64 * p.tlb_walk_ns * 1e-9 / t / 2.0;
+        // Depth-dependent walk latency from the shared walker model
+        // (walks overlap WALK_OVERLAP deep per thread).
+        let tlb_s = c.tlb.misses() as f64 * self.walker.ns_per_miss() * 1e-9 / t;
         let coherence_s = c.coherence_events as f64 * p.coherence_ns * 1e-9 / t;
 
         TimeBreakdown {
@@ -767,7 +806,60 @@ mod tests {
             c.l1_hits + c.l2_hits + c.l3_hits + c.dram_demand_lines,
             "every access must resolve somewhere"
         );
-        assert!(c.tlb_misses <= c.accesses);
+        assert_eq!(c.tlb.accesses(), c.accesses, "one translation per access");
+        assert!(c.tlb.misses() <= c.accesses);
+    }
+
+    #[test]
+    fn large_pages_cut_huge_delta_tlb_misses() {
+        // The PENNANT mechanism end-to-end: a gather advancing 128 KiB
+        // per iteration touches a fresh 4 KiB page per access but
+        // shares 2 MiB pages across iterations, so the miss rate must
+        // collapse (and bandwidth must not get worse).
+        let p = platforms::by_name("knl").unwrap();
+        let idx: Vec<i64> = (0..16).map(|j| j * 512).collect();
+        let pat = crate::pattern::Pattern::from_indices("huge-delta", idx)
+            .with_delta(16384)
+            .with_count(1 << 15);
+        let run = |page: PageSize| {
+            let mut e = CpuEngine::with_options(
+                &p,
+                CpuSimOptions {
+                    page_size: page,
+                    ..Default::default()
+                },
+            );
+            e.run(&pat, Kernel::Gather).unwrap()
+        };
+        let r4k = run(PageSize::FourKB);
+        let r2m = run(PageSize::TwoMB);
+        let m4k = r4k.counters.tlb.miss_rate().unwrap();
+        let m2m = r2m.counters.tlb.miss_rate().unwrap();
+        assert!(
+            m2m < 0.25 * m4k,
+            "2MB miss rate {m2m:.4} should collapse vs 4KB {m4k:.4}"
+        );
+        assert!(
+            r2m.bandwidth_gbs() > r4k.bandwidth_gbs(),
+            "2MB {:.1} GB/s should beat 4KB {:.1} GB/s",
+            r2m.bandwidth_gbs(),
+            r4k.bandwidth_gbs()
+        );
+        // On KNL this flips the binding resource: translation-bound at
+        // 4 KiB, DRAM-bound at 2 MiB.
+        assert_eq!(r4k.breakdown.bottleneck(), "tlb");
+        assert_eq!(r2m.breakdown.bottleneck(), "dram-bw");
+    }
+
+    #[test]
+    fn set_page_size_overrides_and_restores() {
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        assert_eq!(e.page_size(), PageSize::FourKB);
+        e.set_page_size(Some(PageSize::TwoMB));
+        assert_eq!(e.page_size(), PageSize::TwoMB);
+        e.set_page_size(None);
+        assert_eq!(e.page_size(), PageSize::FourKB);
     }
 
     #[test]

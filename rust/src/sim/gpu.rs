@@ -20,6 +20,9 @@
 //! delta-0 scatters serialize on sector ownership (LULESH-S3).
 
 use super::cache::{Cache, Probe};
+use super::memory::{
+    PageSize, PageTableWalker, PhysicalAddress, Tlb, VirtualAddress,
+};
 use super::{SimCounters, SimResult, TimeBreakdown};
 use crate::error::Result;
 use crate::pattern::{Kernel, Pattern};
@@ -35,6 +38,10 @@ pub struct GpuSimOptions {
     pub max_sim_accesses: usize,
     /// Warmup iterations (min-of-10 protocol, warm L2/TLB).
     pub warmup_iterations: usize,
+    /// Translation page size. GPUs translate at their native 64 KiB
+    /// large page by default (the granularity the platforms' walk
+    /// costs are calibrated at); `--page-size` overrides.
+    pub page_size: PageSize,
 }
 
 impl Default for GpuSimOptions {
@@ -42,6 +49,7 @@ impl Default for GpuSimOptions {
         GpuSimOptions {
             max_sim_accesses: 1 << 21,
             warmup_iterations: 1 << 13,
+            page_size: PageSize::SixtyFourKB,
         }
     }
 }
@@ -52,8 +60,10 @@ pub struct GpuEngine {
     opts: GpuSimOptions,
     /// L2 tracked at sector granularity.
     l2: Cache,
-    /// GPU TLB (one "line" per large page).
-    tlb: Cache,
+    /// Shared virtual-memory subsystem (same types as the CPU engine):
+    /// per-transaction translation + parallel-walker latency model.
+    tlb: Tlb,
+    walker: PageTableWalker,
     last_row: u64,
     /// Scratch: sector ids of the current warp.
     warp_sectors: Vec<(u64, u32)>,
@@ -66,9 +76,11 @@ impl GpuEngine {
 
     pub fn with_options(platform: &GpuPlatform, opts: GpuSimOptions) -> GpuEngine {
         let p = platform.clone();
+        let page = opts.page_size;
         GpuEngine {
             l2: Cache::new(p.l2_kb * 1024, p.sector_bytes as usize, p.l2_assoc),
-            tlb: Cache::new(p.tlb_entries * 64, 64, 4),
+            tlb: Tlb::new(p.tlb.geometry(page), page),
+            walker: PageTableWalker::new(p.tlb_walk_ns, page, p.tlb_mlp),
             last_row: u64::MAX,
             warp_sectors: Vec::with_capacity(WARP),
             platform: p,
@@ -78,6 +90,26 @@ impl GpuEngine {
 
     pub fn platform(&self) -> &GpuPlatform {
         &self.platform
+    }
+
+    /// The page size the next run will model.
+    pub fn page_size(&self) -> PageSize {
+        self.tlb.page_size()
+    }
+
+    /// Reconfigure the translation page size: `Some` overrides, `None`
+    /// restores the engine's configured default (64 KiB large pages).
+    pub fn set_page_size(&mut self, page: Option<PageSize>) {
+        let page = page.unwrap_or(self.opts.page_size);
+        if page == self.page_size() {
+            return;
+        }
+        self.tlb = Tlb::new(self.platform.tlb.geometry(page), page);
+        self.walker = PageTableWalker::new(
+            self.platform.tlb_walk_ns,
+            page,
+            self.platform.tlb_mlp,
+        );
     }
 
     fn reset(&mut self) {
@@ -90,6 +122,11 @@ impl GpuEngine {
     pub fn run(&mut self, pattern: &Pattern, kernel: Kernel) -> Result<SimResult> {
         pattern.validate()?;
         self.reset();
+        debug_assert_eq!(
+            self.tlb.page_size(),
+            self.walker.page_size(),
+            "TLB and walker must be rebuilt together (set_page_size)"
+        );
 
         let v = pattern.vector_len();
         let cap_iters = (self.opts.max_sim_accesses / v).max(1);
@@ -178,12 +215,14 @@ impl GpuEngine {
         for &(sector, elems) in &sectors {
             c.transactions += 1;
 
-            // GPU TLB at large-page granularity.
-            let page = sector * sector_b / self.platform.tlb_page_bytes;
-            if self.tlb.access(page, false) == Probe::Miss {
-                c.tlb_misses += 1;
-                self.tlb.fill(page, false, false);
-            }
+            // Translate the sector's base address through the shared
+            // TLB (one translation per coalesced transaction).
+            let t = self.tlb.translate(
+                VirtualAddress(sector * sector_b),
+                is_write,
+                &mut c.tlb,
+            );
+            let pa = t.physical;
 
             // Scatter: partially covered sectors read-modify-write
             // (Fig 5's 1/8 scatter plateau vs 1/4 gather plateau).
@@ -200,7 +239,7 @@ impl GpuEngine {
                     if !is_write || needs_rmw {
                         c.dram_demand_lines += 1; // unit = one sector
                     }
-                    self.note_row(sector, c);
+                    self.note_row(pa, c);
                     if self.l2.fill_after_miss(sector, is_write, false).is_some() {
                         c.writeback_lines += 1;
                     }
@@ -210,9 +249,11 @@ impl GpuEngine {
         self.warp_sectors = sectors;
     }
 
+    /// DRAM row tracker — DRAM-facing, so it accepts only translated
+    /// [`PhysicalAddress`]es.
     #[inline]
-    fn note_row(&mut self, sector: u64, c: &mut SimCounters) {
-        let row = sector * self.platform.sector_bytes / self.platform.row_bytes;
+    fn note_row(&mut self, pa: PhysicalAddress, c: &mut SimCounters) {
+        let row = pa.byte() / self.platform.row_bytes;
         if row != self.last_row {
             c.row_activations += 1;
             self.last_row = row;
@@ -243,8 +284,9 @@ impl GpuEngine {
         // SM transaction issue rate.
         let issue_s = c.transactions as f64 / (p.txn_per_ns * 1e9);
 
-        // TLB walks (highly parallel walkers).
-        let tlb_s = c.tlb_misses as f64 * p.tlb_walk_ns * 1e-9 / p.tlb_mlp;
+        // TLB walks: depth-dependent latency from the shared walker,
+        // divided by the walkers' parallelism.
+        let tlb_s = c.tlb.misses() as f64 * self.walker.ns_per_miss() * 1e-9;
 
         // Same-sector write contention: delta-0 scatter makes every
         // block hammer the same sectors; ownership serializes.

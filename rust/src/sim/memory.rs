@@ -1,0 +1,622 @@
+//! Unified typed virtual-memory subsystem shared by the CPU and GPU
+//! engines: address newtypes, page sizes, a set-associative TLB, and a
+//! radix page-table walker.
+//!
+//! # The model
+//!
+//! The simulated machines translate like a VIPT (virtually indexed,
+//! physically tagged) hierarchy: the TLB is probed in parallel with the
+//! L1 set index, so a TLB *hit* adds no time to an access, while a TLB
+//! *miss* charges a page-table walk whose latency scales with the radix
+//! depth of the page size (4-level for 4 KiB, 3-level for 2 MiB,
+//! 2-level for 1 GiB; the GPU's native 64 KiB large page is calibrated
+//! at the platform's measured walk cost, i.e. full depth). Walks can
+//! additionally miss the cache hierarchy: one 64-byte PTE line covers
+//! 64 consecutive pages, so when the access stream's mean advance
+//! exceeds `64 × page_bytes` the walker's PTE fetches are themselves
+//! cold DRAM accesses and the walk traffic shows up on the DRAM
+//! bottleneck (the PENNANT huge-delta mechanism, paper §5.4).
+//!
+//! # Simplifications
+//!
+//! * **Identity mapping.** Translation is VA == PA — the simulator has
+//!   no OS, so there is nothing to relocate. The
+//!   [`VirtualAddress`]/[`PhysicalAddress`] newtypes still pay their
+//!   way: cache/DRAM/row-model code takes only [`PhysicalAddress`], so
+//!   an untranslated address cannot reach the memory system by
+//!   construction, and a property test pins the identity invariant.
+//! * **One unified TLB per engine** (no L1/L2 TLB split); entry counts
+//!   and associativities come from cpuid-style per-page-size tables in
+//!   [`TlbTable`] (`platforms/mod.rs` instantiates one per machine).
+//! * **Same-page short-circuit.** Consecutive accesses overwhelmingly
+//!   hit the same page; the TLB caches the last VPN and skips the set
+//!   scan (and its LRU refresh) for repeats — preserved from the
+//!   original CPU engine, §Perf.
+//! * **No TLB shootdowns, no dirty/accessed bits, no multi-page-size
+//!   mixing** within one run: a run models exactly one [`PageSize`].
+
+use super::cache::{Cache, Probe};
+use crate::error::{Error, Result};
+
+/// Bytes per cache line / PTE line (the model is 64-byte everywhere).
+const LINE_BYTES: u64 = 64;
+
+/// A byte address in the simulated *virtual* address space — what the
+/// pattern generator produces. Must be translated (through [`Tlb`])
+/// before it can touch caches or DRAM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct VirtualAddress(pub u64);
+
+impl VirtualAddress {
+    /// The raw byte address.
+    #[inline]
+    pub fn byte(self) -> u64 {
+        self.0
+    }
+
+    /// Virtual page number under `page` (the TLB tag).
+    #[inline]
+    pub fn page_number(self, page: PageSize) -> u64 {
+        self.0 >> page.shift()
+    }
+}
+
+/// A byte address in the simulated *physical* address space — the only
+/// currency the cache hierarchy and the DRAM row model accept.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PhysicalAddress(pub u64);
+
+impl PhysicalAddress {
+    /// The raw byte address.
+    #[inline]
+    pub fn byte(self) -> u64 {
+        self.0
+    }
+
+    /// 64-byte cache-line number.
+    #[inline]
+    pub fn line(self) -> u64 {
+        self.0 / LINE_BYTES
+    }
+
+    /// Rebuild from a 64-byte line number (prefetch targets are
+    /// generated at line granularity).
+    #[inline]
+    pub fn from_line(line: u64) -> PhysicalAddress {
+        PhysicalAddress(line * LINE_BYTES)
+    }
+}
+
+/// Translation page size. `FourKB`/`TwoMB`/`OneGB` are the x86-64 radix
+/// sizes; `SixtyFourKB` is the GPU's native large page (the seed model
+/// translated GPU sectors at 64 KiB granularity and the GPU platforms'
+/// walk costs are calibrated at that size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PageSize {
+    FourKB,
+    SixtyFourKB,
+    TwoMB,
+    OneGB,
+}
+
+impl PageSize {
+    /// Every size, in ascending order (for sweeps and property tests).
+    pub const ALL: &'static [PageSize] = &[
+        PageSize::FourKB,
+        PageSize::SixtyFourKB,
+        PageSize::TwoMB,
+        PageSize::OneGB,
+    ];
+
+    /// log2(page bytes).
+    #[inline]
+    pub fn shift(self) -> u32 {
+        match self {
+            PageSize::FourKB => 12,
+            PageSize::SixtyFourKB => 16,
+            PageSize::TwoMB => 21,
+            PageSize::OneGB => 30,
+        }
+    }
+
+    /// Page size in bytes.
+    #[inline]
+    pub fn bytes(self) -> u64 {
+        1u64 << self.shift()
+    }
+
+    /// Radix page-walk depth: how many page-table levels a cold walk
+    /// traverses. Larger pages terminate earlier (2 MiB at the PMD,
+    /// 1 GiB at the PUD). 64 KiB is a full-depth walk: it is the unit
+    /// the GPU platforms' walk latencies were calibrated against.
+    #[inline]
+    pub fn walk_levels(self) -> u32 {
+        match self {
+            PageSize::FourKB | PageSize::SixtyFourKB => 4,
+            PageSize::TwoMB => 3,
+            PageSize::OneGB => 2,
+        }
+    }
+
+    /// Display name (also the CLI/JSON syntax).
+    pub fn name(self) -> &'static str {
+        match self {
+            PageSize::FourKB => "4KB",
+            PageSize::SixtyFourKB => "64KB",
+            PageSize::TwoMB => "2MB",
+            PageSize::OneGB => "1GB",
+        }
+    }
+
+    /// Parse the CLI/JSON syntax (`--page-size 2MB`, `"page-size":
+    /// "2MB"`). Case-insensitive; the `B` is optional.
+    pub fn parse(s: &str) -> Result<PageSize> {
+        match s.to_ascii_lowercase().as_str() {
+            "4kb" | "4k" | "4096" => Ok(PageSize::FourKB),
+            "64kb" | "64k" | "65536" => Ok(PageSize::SixtyFourKB),
+            "2mb" | "2m" => Ok(PageSize::TwoMB),
+            "1gb" | "1g" => Ok(PageSize::OneGB),
+            _ => Err(Error::Config(format!(
+                "unknown page size '{s}' (expected 4KB, 64KB, 2MB, or 1GB)"
+            ))),
+        }
+    }
+}
+
+impl Default for PageSize {
+    /// The architectural default (CPU base page).
+    fn default() -> PageSize {
+        PageSize::FourKB
+    }
+}
+
+impl std::fmt::Display for PageSize {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Geometry of one TLB structure: entry count and associativity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TlbGeometry {
+    pub entries: usize,
+    pub assoc: usize,
+}
+
+/// Per-page-size TLB geometries for one machine — the cpuid-style
+/// table that replaces the old single `tlb_entries` scalar. Real parts
+/// size their TLBs very differently per page size (e.g. thousands of
+/// 4 KiB entries but a handful of 1 GiB ones); the per-machine tables
+/// live in `platforms/mod.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TlbTable {
+    pub four_kb: TlbGeometry,
+    pub sixty_four_kb: TlbGeometry,
+    pub two_mb: TlbGeometry,
+    pub one_gb: TlbGeometry,
+}
+
+impl TlbTable {
+    /// The geometry used when translating at `page`.
+    pub fn geometry(&self, page: PageSize) -> TlbGeometry {
+        match page {
+            PageSize::FourKB => self.four_kb,
+            PageSize::SixtyFourKB => self.sixty_four_kb,
+            PageSize::TwoMB => self.two_mb,
+            PageSize::OneGB => self.one_gb,
+        }
+    }
+}
+
+/// Read/write-split TLB hit/miss counters. Both engines report their
+/// translation statistics through this one type (the regression test
+/// in this module pins that), and `SimCounters` embeds it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TlbStats {
+    pub read_hits: u64,
+    pub read_misses: u64,
+    pub write_hits: u64,
+    pub write_misses: u64,
+}
+
+impl TlbStats {
+    /// Record one translation outcome.
+    #[inline]
+    pub fn record(&mut self, is_write: bool, hit: bool) {
+        match (is_write, hit) {
+            (false, true) => self.read_hits += 1,
+            (false, false) => self.read_misses += 1,
+            (true, true) => self.write_hits += 1,
+            (true, false) => self.write_misses += 1,
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.read_hits + self.write_hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.read_misses + self.write_misses
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.hits() + self.misses()
+    }
+
+    /// Hit fraction, `None` when nothing was translated (real-execution
+    /// backends have no TLB model).
+    pub fn hit_rate(&self) -> Option<f64> {
+        let n = self.accesses();
+        if n == 0 {
+            None
+        } else {
+            Some(self.hits() as f64 / n as f64)
+        }
+    }
+
+    /// Miss fraction, `None` when nothing was translated.
+    pub fn miss_rate(&self) -> Option<f64> {
+        self.hit_rate().map(|h| 1.0 - h)
+    }
+}
+
+/// One translation outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Translation {
+    pub physical: PhysicalAddress,
+    /// Whether the TLB held the mapping (same-page repeats count as
+    /// hits — the hardware would not even probe).
+    pub hit: bool,
+}
+
+/// Set-associative LRU TLB over virtual page numbers, built on the
+/// same [`Cache`] model as the data hierarchy (one "line" per page).
+/// Replaces the two divergent ad-hoc TLBs the CPU and GPU engines used
+/// to build by hand.
+#[derive(Debug, Clone)]
+pub struct Tlb {
+    cache: Cache,
+    page_size: PageSize,
+    /// Same-page short-circuit (§Perf): consecutive accesses hit the
+    /// same page almost always; skip the set scan for repeats.
+    last_vpn: u64,
+}
+
+impl Tlb {
+    pub fn new(geometry: TlbGeometry, page_size: PageSize) -> Tlb {
+        // One entry == one 64-byte "line" in the underlying cache
+        // model, so capacity = entries × 64 with 64-byte lines.
+        Tlb {
+            cache: Cache::new(
+                geometry.entries * LINE_BYTES as usize,
+                LINE_BYTES as usize,
+                geometry.assoc,
+            ),
+            page_size,
+            last_vpn: u64::MAX,
+        }
+    }
+
+    pub fn page_size(&self) -> PageSize {
+        self.page_size
+    }
+
+    /// Number of sets in the underlying structure (entries may round
+    /// down to a power-of-two set count, matching the cache model).
+    pub fn sets(&self) -> usize {
+        self.cache.sets()
+    }
+
+    pub fn assoc(&self) -> usize {
+        self.cache.assoc()
+    }
+
+    /// Translate `va`, recording the outcome into `stats`. The mapping
+    /// is identity (see module docs); the value of the call is the
+    /// hit/miss outcome and the type change — downstream memory-system
+    /// code only accepts the result.
+    ///
+    /// `is_write` classifies the access for the split statistics; it
+    /// does not affect TLB state (the model tracks no dirty bits).
+    #[inline]
+    pub fn translate(
+        &mut self,
+        va: VirtualAddress,
+        is_write: bool,
+        stats: &mut TlbStats,
+    ) -> Translation {
+        let vpn = va.page_number(self.page_size);
+        let physical = PhysicalAddress(va.0);
+        if vpn == self.last_vpn {
+            stats.record(is_write, true);
+            return Translation { physical, hit: true };
+        }
+        let hit = match self.cache.access(vpn, false) {
+            Probe::Hit { .. } => true,
+            Probe::Miss => {
+                self.cache.fill_after_miss(vpn, false, false);
+                false
+            }
+        };
+        stats.record(is_write, hit);
+        self.last_vpn = vpn;
+        Translation { physical, hit }
+    }
+
+    /// Clear contents and the short-circuit state.
+    pub fn reset(&mut self) {
+        self.cache.reset();
+        self.last_vpn = u64::MAX;
+    }
+}
+
+/// Radix page-table walker: latency model for TLB misses, shared by
+/// both engines. Replaces the inline `tlb_walk_ns / 2.0` heuristic the
+/// CPU engine used to carry.
+#[derive(Debug, Clone, Copy)]
+pub struct PageTableWalker {
+    /// Platform walk cost for a full-depth (4-level) walk, ns.
+    base_walk_ns: f64,
+    page: PageSize,
+    /// How many walks proceed concurrently (CPU: ~2 per thread; GPU:
+    /// the platform's walker MLP).
+    overlap: f64,
+}
+
+impl PageTableWalker {
+    pub fn new(base_walk_ns: f64, page: PageSize, overlap: f64) -> PageTableWalker {
+        assert!(overlap > 0.0, "walker overlap must be positive");
+        PageTableWalker {
+            base_walk_ns,
+            page,
+            overlap,
+        }
+    }
+
+    pub fn page_size(&self) -> PageSize {
+        self.page
+    }
+
+    /// Depth of one walk for this page size.
+    pub fn levels(&self) -> u32 {
+        self.page.walk_levels()
+    }
+
+    /// Latency of one cold walk: the platform's measured full-depth
+    /// cost scaled by radix depth (larger pages skip levels).
+    pub fn walk_ns(&self) -> f64 {
+        self.base_walk_ns * self.levels() as f64 / 4.0
+    }
+
+    /// Effective serialized cost per TLB miss once walk overlap is
+    /// accounted for — what the bottleneck timing charges.
+    pub fn ns_per_miss(&self) -> f64 {
+        self.walk_ns() / self.overlap
+    }
+
+    /// Page-table lines a cold walk fetches from DRAM when the touched
+    /// pages are sparse. The top two radix levels are tiny and stay hot
+    /// in the cache hierarchy; deeper levels are one line per walk.
+    pub fn uncached_lines_per_walk(&self) -> u64 {
+        self.levels().saturating_sub(2) as u64
+    }
+
+    /// Address span covered by one 64-byte PTE line (64 entries × page
+    /// size). When the access stream's mean advance exceeds this, every
+    /// walk touches cold PTE lines and the walk traffic hits DRAM.
+    pub fn pte_line_coverage_bytes(&self) -> f64 {
+        64.0 * self.page.bytes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::{Kernel, Pattern};
+    use crate::platforms;
+    use crate::sim::cpu::CpuEngine;
+    use crate::sim::gpu::GpuEngine;
+
+    #[test]
+    fn page_size_table() {
+        assert_eq!(PageSize::FourKB.bytes(), 4096);
+        assert_eq!(PageSize::SixtyFourKB.bytes(), 64 * 1024);
+        assert_eq!(PageSize::TwoMB.bytes(), 2 * 1024 * 1024);
+        assert_eq!(PageSize::OneGB.bytes(), 1024 * 1024 * 1024);
+        assert_eq!(PageSize::FourKB.walk_levels(), 4);
+        assert_eq!(PageSize::TwoMB.walk_levels(), 3);
+        assert_eq!(PageSize::OneGB.walk_levels(), 2);
+        assert_eq!(PageSize::default(), PageSize::FourKB);
+    }
+
+    #[test]
+    fn page_size_parse_roundtrip() {
+        for &p in PageSize::ALL {
+            assert_eq!(PageSize::parse(p.name()).unwrap(), p);
+            assert_eq!(PageSize::parse(&p.name().to_lowercase()).unwrap(), p);
+        }
+        assert_eq!(PageSize::parse("2m").unwrap(), PageSize::TwoMB);
+        assert_eq!(PageSize::parse("4096").unwrap(), PageSize::FourKB);
+        assert!(PageSize::parse("3MB").is_err());
+        assert!(PageSize::parse("").is_err());
+    }
+
+    #[test]
+    fn address_newtypes() {
+        let va = VirtualAddress(2 * 1024 * 1024 + 4096 + 8);
+        assert_eq!(va.page_number(PageSize::FourKB), 513);
+        assert_eq!(va.page_number(PageSize::TwoMB), 1);
+        let pa = PhysicalAddress(va.byte());
+        assert_eq!(pa.line(), va.byte() / 64);
+        assert_eq!(PhysicalAddress::from_line(pa.line()).byte(), pa.byte() & !63);
+    }
+
+    fn small_tlb(page: PageSize) -> Tlb {
+        // 4 sets × 2 ways = 8 entries.
+        Tlb::new(TlbGeometry { entries: 8, assoc: 2 }, page)
+    }
+
+    #[test]
+    fn tlb_translation_is_identity() {
+        let mut t = small_tlb(PageSize::FourKB);
+        let mut stats = TlbStats::default();
+        for addr in [0u64, 7, 4096, 1 << 30, u64::MAX >> 8] {
+            let tr = t.translate(VirtualAddress(addr), false, &mut stats);
+            assert_eq!(tr.physical.byte(), addr);
+        }
+        assert_eq!(stats.accesses(), 5);
+    }
+
+    #[test]
+    fn tlb_set_indexing_keeps_distinct_sets_resident() {
+        let mut t = small_tlb(PageSize::FourKB);
+        let mut stats = TlbStats::default();
+        // VPNs 0..4 map to the 4 different sets: all coexist.
+        for vpn in 0..4u64 {
+            let miss =
+                !t.translate(VirtualAddress(vpn * 4096), false, &mut stats).hit;
+            assert!(miss, "first touch of vpn {vpn} must miss");
+        }
+        for vpn in (0..4u64).rev() {
+            assert!(
+                t.translate(VirtualAddress(vpn * 4096), false, &mut stats).hit,
+                "vpn {vpn} should still be resident"
+            );
+        }
+    }
+
+    #[test]
+    fn tlb_lru_eviction_within_a_set() {
+        let mut t = small_tlb(PageSize::FourKB);
+        let mut st = TlbStats::default();
+        // VPNs 0, 4, 8 all land in set 0 of the 4-set, 2-way TLB.
+        let page = |vpn: u64| VirtualAddress(vpn * 4096);
+        assert!(!t.translate(page(0), false, &mut st).hit);
+        assert!(!t.translate(page(4), false, &mut st).hit);
+        // Touch 0 so 4 becomes LRU; inserting 8 must evict 4.
+        assert!(t.translate(page(0), false, &mut st).hit);
+        assert!(!t.translate(page(8), false, &mut st).hit);
+        assert!(t.translate(page(0), false, &mut st).hit, "0 was MRU");
+        assert!(!t.translate(page(4), false, &mut st).hit, "4 was evicted");
+        assert_eq!(st.misses(), 4);
+    }
+
+    #[test]
+    fn tlb_same_page_short_circuit_counts_hits() {
+        let mut t = small_tlb(PageSize::FourKB);
+        let mut stats = TlbStats::default();
+        // 8 consecutive doubles on one page: 1 miss, 7 short-circuits.
+        for j in 0..8u64 {
+            t.translate(VirtualAddress(j * 8), false, &mut stats);
+        }
+        assert_eq!(stats.read_misses, 1);
+        assert_eq!(stats.read_hits, 7);
+        assert_eq!(stats.accesses(), 8);
+        assert!((stats.hit_rate().unwrap() - 7.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tlb_page_size_changes_reach() {
+        // A 128 KiB-spaced stream: every access a new 4 KiB page, but
+        // sixteen accesses per 2 MiB page.
+        let count = 64u64;
+        for (page, expect_misses) in
+            [(PageSize::FourKB, count), (PageSize::TwoMB, count / 16)]
+        {
+            let mut t = Tlb::new(TlbGeometry { entries: 64, assoc: 4 }, page);
+            let mut stats = TlbStats::default();
+            for i in 0..count {
+                t.translate(VirtualAddress(i * 128 * 1024), false, &mut stats);
+            }
+            assert_eq!(stats.misses(), expect_misses, "page {page}");
+        }
+    }
+
+    #[test]
+    fn tlb_reset_clears_residency() {
+        let mut t = small_tlb(PageSize::FourKB);
+        let mut st = TlbStats::default();
+        assert!(!t.translate(VirtualAddress(0), false, &mut st).hit);
+        assert!(t.translate(VirtualAddress(0), false, &mut st).hit);
+        t.reset();
+        assert!(!t.translate(VirtualAddress(0), false, &mut st).hit);
+    }
+
+    #[test]
+    fn walker_latency_scales_with_depth() {
+        let base = 80.0;
+        let w4k = PageTableWalker::new(base, PageSize::FourKB, 2.0);
+        let w64k = PageTableWalker::new(base, PageSize::SixtyFourKB, 2.0);
+        let w2m = PageTableWalker::new(base, PageSize::TwoMB, 2.0);
+        let w1g = PageTableWalker::new(base, PageSize::OneGB, 2.0);
+        // The platform cost calibrates the full-depth walk.
+        assert!((w4k.walk_ns() - base).abs() < 1e-12);
+        assert!((w64k.walk_ns() - base).abs() < 1e-12);
+        assert!((w2m.walk_ns() - base * 0.75).abs() < 1e-12);
+        assert!((w1g.walk_ns() - base * 0.5).abs() < 1e-12);
+        // Overlap divides the charged cost.
+        assert!((w4k.ns_per_miss() - base / 2.0).abs() < 1e-12);
+        // Deeper walks touch more cold PTE lines.
+        assert_eq!(w4k.uncached_lines_per_walk(), 2);
+        assert_eq!(w2m.uncached_lines_per_walk(), 1);
+        assert_eq!(w1g.uncached_lines_per_walk(), 0);
+        // One PTE line covers 64 pages.
+        assert!((w4k.pte_line_coverage_bytes() - 64.0 * 4096.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tlb_table_selects_per_size_geometry() {
+        let table = TlbTable {
+            four_kb: TlbGeometry { entries: 1536, assoc: 4 },
+            sixty_four_kb: TlbGeometry { entries: 1536, assoc: 4 },
+            two_mb: TlbGeometry { entries: 32, assoc: 4 },
+            one_gb: TlbGeometry { entries: 4, assoc: 4 },
+        };
+        assert_eq!(table.geometry(PageSize::FourKB).entries, 1536);
+        assert_eq!(table.geometry(PageSize::TwoMB).entries, 32);
+        assert_eq!(table.geometry(PageSize::OneGB).entries, 4);
+    }
+
+    /// Regression test for the old duplicated TLBs: both engines must
+    /// report translation statistics through the one shared `TlbStats`
+    /// type, with conserving counts.
+    #[test]
+    fn cpu_and_gpu_report_tlb_stats_through_the_same_type() {
+        fn check_stats(stats: &TlbStats, accesses: u64) {
+            assert_eq!(stats.hits() + stats.misses(), stats.accesses());
+            assert!(stats.misses() <= accesses);
+            let rate = stats.hit_rate().unwrap();
+            assert!((0.0..=1.0).contains(&rate));
+        }
+
+        let cpu = platforms::by_name("skx").unwrap();
+        let pat = Pattern::parse("UNIFORM:8:4")
+            .unwrap()
+            .with_delta(32)
+            .with_count(1 << 14);
+        let rc = CpuEngine::new(&cpu).run(&pat, Kernel::Gather).unwrap();
+        check_stats(&rc.counters.tlb, rc.counters.accesses);
+        // CPU translates once per access.
+        assert_eq!(rc.counters.tlb.accesses(), rc.counters.accesses);
+
+        let gpu = platforms::gpu_by_name("p100").unwrap();
+        let gpat = Pattern::parse("UNIFORM:256:4")
+            .unwrap()
+            .with_delta(1024)
+            .with_count(1 << 11);
+        let rg = GpuEngine::new(&gpu).run(&gpat, Kernel::Scatter).unwrap();
+        check_stats(&rg.counters.tlb, rg.counters.accesses);
+        // GPU translates once per coalesced transaction.
+        assert_eq!(rg.counters.tlb.accesses(), rg.counters.transactions);
+    }
+
+    #[test]
+    fn gpu_engine_defaults_to_its_native_large_page() {
+        let gpu = platforms::gpu_by_name("v100").unwrap();
+        let e = GpuEngine::new(&gpu);
+        assert_eq!(e.page_size(), PageSize::SixtyFourKB);
+        let cpu = platforms::by_name("bdw").unwrap();
+        let c = CpuEngine::new(&cpu);
+        assert_eq!(c.page_size(), PageSize::FourKB);
+    }
+}

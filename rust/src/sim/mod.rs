@@ -9,8 +9,11 @@
 //! pressure at large deltas. This module models exactly those
 //! mechanisms:
 //!
-//! * [`cache`] — set-associative LRU write-back caches (also used as a
-//!   TLB by treating one "line" as one page).
+//! * [`cache`] — set-associative LRU write-back caches.
+//! * [`memory`] — the shared virtual-memory subsystem: typed
+//!   virtual/physical addresses, configurable page sizes, one
+//!   set-associative [`Tlb`] and one [`PageTableWalker`] used by both
+//!   engines (TLB pressure at large deltas, §5.4).
 //! * [`prefetch`] — per-platform prefetcher models (Figs 3/4).
 //! * [`cpu`] — the CPU engine: L1/L2/L3 + TLB + prefetcher + a
 //!   bottleneck ("roofline-max") timing model over issue rate, cache
@@ -25,11 +28,16 @@
 pub mod cache;
 pub mod cpu;
 pub mod gpu;
+pub mod memory;
 pub mod prefetch;
 
 pub use cache::{Cache, Probe};
 pub use cpu::{CpuEngine, CpuSimOptions};
 pub use gpu::GpuEngine;
+pub use memory::{
+    PageSize, PageTableWalker, PhysicalAddress, Tlb, TlbGeometry, TlbStats,
+    TlbTable, VirtualAddress,
+};
 pub use prefetch::{PrefetchKind, Prefetcher};
 
 /// Event counters from one simulated pattern run.
@@ -50,7 +58,10 @@ pub struct SimCounters {
     pub writeback_lines: u64,
     /// Non-temporal (streaming) store lines sent straight to DRAM.
     pub streaming_store_lines: u64,
-    pub tlb_misses: u64,
+    /// Read/write-split TLB statistics, the same [`TlbStats`] type for
+    /// both engines (CPU: one translation per access; GPU: one per
+    /// coalesced transaction).
+    pub tlb: TlbStats,
     /// Cross-thread contended writes (coherence model).
     pub coherence_events: u64,
     /// GPU: memory transactions (sectors) issued.

@@ -14,13 +14,17 @@
 //! | `fig7` | radar, app-derived gather patterns |
 //! | `fig8` | radar, app-derived scatter patterns |
 //! | `fig9` | bandwidth-bandwidth plots |
+//! | `pagesize` | huge-delta gather vs `--page-size` (TLB mechanism) |
 //! | `all` | everything above |
 
 mod apps;
 mod ustride;
 
 pub use apps::{fig7_radar, fig8_radar, fig9_bwbw, table1_characterization, table4_miniapps};
-pub use ustride::{fig3_cpu_ustride, fig4_prefetch, fig5_gpu_ustride, fig6_simd_scalar};
+pub use ustride::{
+    fig3_cpu_ustride, fig4_prefetch, fig5_gpu_ustride, fig6_simd_scalar,
+    pagesize_sweep,
+};
 
 use std::path::{Path, PathBuf};
 
@@ -91,11 +95,12 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
         "fig7" => fig7_radar(ctx),
         "fig8" => fig8_radar(ctx),
         "fig9" => fig9_bwbw(ctx),
+        "pagesize" => pagesize_sweep(ctx),
         "all" => {
             let mut out = String::new();
             for n in [
                 "table1", "fig3", "fig4", "fig5", "fig6", "table4", "fig7",
-                "fig8", "fig9",
+                "fig8", "fig9", "pagesize",
             ] {
                 out.push_str(&run(n, ctx)?);
                 out.push('\n');
@@ -103,14 +108,16 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
             Ok(out)
         }
         other => Err(Error::Cli(format!(
-            "unknown suite '{other}' (fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|all)"
+            "unknown suite '{other}' \
+             (fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|pagesize|all)"
         ))),
     }
 }
 
 /// Names of all experiments (for listings).
 pub const EXPERIMENTS: &[&str] = &[
-    "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1", "table4",
+    "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1",
+    "table4", "pagesize",
 ];
 
 #[cfg(test)]

@@ -173,6 +173,7 @@ fn suite_experiments_all_run_fast() {
         "fig9_bwbw.csv",
         "table1_apps.csv",
         "table4_miniapps.csv",
+        "pagesize_sweep.csv",
     ] {
         assert!(dir.join(csv).exists(), "{csv}");
     }
@@ -217,6 +218,64 @@ fn config_failure_injection() {
     let err = coordinator::parse_config_file(Path::new("/nonexistent/x.json"))
         .unwrap_err();
     assert!(err.to_string().contains("/nonexistent/x.json"));
+}
+
+#[test]
+fn page_size_knob_cli_and_json_end_to_end() {
+    use spatter::cli::{parse_args, Command};
+    use spatter::sim::PageSize;
+
+    // CLI: `spatter --page-size 2MB` parses into the common args and
+    // builds an engine translating at 2 MiB.
+    let argv: Vec<String> =
+        "-k Gather -p UNIFORM:16:512 -d 16384 -l 16384 -a knl --page-size 2MB"
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+    let (kernel, pattern, page) = match parse_args(&argv).unwrap() {
+        Command::Run(r) => (r.kernel, r.pattern, r.common.page_size),
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(page, Some(PageSize::TwoMB));
+    let knl = platforms::by_name("knl").unwrap();
+    let mut b4k = OpenMpSim::new(&knl);
+    let mut b2m = OpenMpSim::with_page_size(&knl, PageSize::TwoMB);
+    let r4k = b4k.run(&pattern, kernel).unwrap();
+    let r2m = b2m.run(&pattern, kernel).unwrap();
+    let m4k = r4k.counters.tlb.miss_rate().unwrap();
+    let m2m = r2m.counters.tlb.miss_rate().unwrap();
+    assert!(
+        m2m < 0.25 * m4k,
+        "--page-size 2MB must cut the huge-delta TLB miss rate: \
+         {m4k:.4} -> {m2m:.4}"
+    );
+    assert!(r2m.bandwidth_gbs() > r4k.bandwidth_gbs());
+
+    // JSON: the `"page-size"` key drives the same mechanism through
+    // the coordinator, per run.
+    let cfg = r#"[
+      {"name": "huge-4k", "kernel": "Gather", "pattern": "UNIFORM:16:512",
+       "delta": 16384, "count": 16384},
+      {"name": "huge-2m", "kernel": "Gather", "pattern": "UNIFORM:16:512",
+       "delta": 16384, "count": 16384, "page-size": "2MB"}
+    ]"#;
+    let configs = coordinator::parse_config_text(cfg).unwrap();
+    let mut backend = OpenMpSim::new(&knl);
+    let recs = coordinator::run_configs(&mut backend, &configs).unwrap();
+    assert_eq!(recs[0].page_size.as_deref(), Some("4KB"));
+    assert_eq!(recs[1].page_size.as_deref(), Some("2MB"));
+    let miss = |i: usize| 1.0 - recs[i].tlb_hit_rate.unwrap();
+    assert!(
+        miss(1) < 0.25 * miss(0),
+        "JSON page-size must cut the miss rate: {:.4} -> {:.4}",
+        miss(0),
+        miss(1)
+    );
+    assert!(recs[1].bandwidth_gbs > recs[0].bandwidth_gbs);
+    // The record JSON carries the knob for downstream tooling (output
+    // schema is snake_case; the config-file input key is "page-size").
+    let j = recs[1].to_json();
+    assert_eq!(j.get("page_size").unwrap().as_str().unwrap(), "2MB");
 }
 
 #[test]

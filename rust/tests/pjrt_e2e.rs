@@ -7,9 +7,13 @@ use spatter::pattern::{table5, Kernel, Pattern};
 use spatter::runtime::{default_artifact_dir, Runtime};
 
 fn have_artifacts() -> bool {
-    let ok = default_artifact_dir().join("manifest.json").exists();
+    let ok = cfg!(feature = "xla")
+        && default_artifact_dir().join("manifest.json").exists();
     if !ok {
-        eprintln!("pjrt_e2e: SKIP (no artifacts; run `make artifacts`)");
+        eprintln!(
+            "pjrt_e2e: SKIP (needs the `xla` feature and artifacts from \
+             `make artifacts`)"
+        );
     }
     ok
 }
