@@ -48,6 +48,18 @@ pub trait Backend {
     fn page_size(&self) -> Option<PageSize> {
         None
     }
+
+    /// Reconfigure the simulated OpenMP thread count before the next
+    /// run: `Some` overrides, `None` restores the backend's configured
+    /// default. Backends without a thread model (GPU, real execution)
+    /// ignore the knob.
+    fn set_threads(&mut self, _threads: Option<usize>) {}
+
+    /// The thread count the next run will model, if the backend has a
+    /// thread model.
+    fn threads(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// The paper's OpenMP backend on a simulated CPU platform.
@@ -67,11 +79,23 @@ impl OpenMpSim {
     /// With an explicit translation page size (the `--page-size` CLI
     /// knob).
     pub fn with_page_size(platform: &CpuPlatform, page: PageSize) -> OpenMpSim {
+        OpenMpSim::configured(platform, Some(page), None)
+    }
+
+    /// Fully-configured constructor for the CLI knobs: translation
+    /// page size (`--page-size`) and thread count (`--threads`);
+    /// `None` keeps the platform defaults.
+    pub fn configured(
+        platform: &CpuPlatform,
+        page: Option<PageSize>,
+        threads: Option<usize>,
+    ) -> OpenMpSim {
         OpenMpSim {
             engine: CpuEngine::with_options(
                 platform,
                 CpuSimOptions {
-                    page_size: page,
+                    page_size: page.unwrap_or(PageSize::FourKB),
+                    threads,
                     ..Default::default()
                 },
             ),
@@ -118,6 +142,14 @@ impl Backend for OpenMpSim {
     fn page_size(&self) -> Option<PageSize> {
         Some(self.engine.page_size())
     }
+
+    fn set_threads(&mut self, threads: Option<usize>) {
+        self.engine.set_threads(threads);
+    }
+
+    fn threads(&self) -> Option<usize> {
+        Some(self.engine.threads())
+    }
 }
 
 /// The paper's Scalar backend (`#pragma novec` baseline) on a simulated
@@ -134,12 +166,23 @@ impl ScalarSim {
 
     /// With an explicit translation page size.
     pub fn with_page_size(platform: &CpuPlatform, page: PageSize) -> ScalarSim {
+        ScalarSim::configured(platform, Some(page), None)
+    }
+
+    /// Fully-configured constructor for the CLI knobs (`--page-size`,
+    /// `--threads`); `None` keeps the platform defaults.
+    pub fn configured(
+        platform: &CpuPlatform,
+        page: Option<PageSize>,
+        threads: Option<usize>,
+    ) -> ScalarSim {
         ScalarSim {
             engine: CpuEngine::with_options(
                 platform,
                 CpuSimOptions {
                     vectorized: false,
-                    page_size: page,
+                    page_size: page.unwrap_or(PageSize::FourKB),
+                    threads,
                     ..Default::default()
                 },
             ),
@@ -167,6 +210,14 @@ impl Backend for ScalarSim {
 
     fn page_size(&self) -> Option<PageSize> {
         Some(self.engine.page_size())
+    }
+
+    fn set_threads(&mut self, threads: Option<usize>) {
+        self.engine.set_threads(threads);
+    }
+
+    fn threads(&self) -> Option<usize> {
+        Some(self.engine.threads())
     }
 }
 
@@ -309,5 +360,57 @@ mod tests {
 
         let s = ScalarSim::with_page_size(&p, PageSize::TwoMB);
         assert_eq!(s.page_size(), Some(PageSize::TwoMB));
+    }
+
+    #[test]
+    fn threads_knob_through_the_trait() {
+        let p = platforms::by_name("skx").unwrap();
+        let mut b: Box<dyn Backend> = Box::new(OpenMpSim::new(&p));
+        assert_eq!(b.threads(), Some(16));
+        b.set_threads(Some(4));
+        assert_eq!(b.threads(), Some(4));
+        b.set_threads(None);
+        assert_eq!(b.threads(), Some(16));
+
+        // A CLI-level --threads value is the restore target, not a
+        // transient override.
+        let mut c: Box<dyn Backend> =
+            Box::new(OpenMpSim::configured(&p, None, Some(2)));
+        assert_eq!(c.threads(), Some(2));
+        c.set_threads(Some(8));
+        c.set_threads(None);
+        assert_eq!(c.threads(), Some(2));
+
+        let mut s: Box<dyn Backend> =
+            Box::new(ScalarSim::configured(&p, Some(PageSize::TwoMB), Some(3)));
+        assert_eq!(s.threads(), Some(3));
+        assert_eq!(s.page_size(), Some(PageSize::TwoMB));
+        s.set_threads(None);
+        assert_eq!(s.threads(), Some(3));
+
+        // GPUs have no thread knob: the setter is a no-op.
+        let g = platforms::gpu_by_name("p100").unwrap();
+        let mut cu: Box<dyn Backend> = Box::new(CudaSim::new(&g));
+        assert_eq!(cu.threads(), None);
+        cu.set_threads(Some(64));
+        assert_eq!(cu.threads(), None);
+    }
+
+    #[test]
+    fn fewer_threads_lower_stream_bandwidth() {
+        let p = platforms::by_name("skx").unwrap();
+        let dense = Pattern::parse("UNIFORM:8:1")
+            .unwrap()
+            .with_delta(8)
+            .with_count(1 << 16);
+        let full = OpenMpSim::new(&p)
+            .run(&dense, Kernel::Gather)
+            .unwrap()
+            .bandwidth_gbs();
+        let one = OpenMpSim::configured(&p, None, Some(1))
+            .run(&dense, Kernel::Gather)
+            .unwrap()
+            .bandwidth_gbs();
+        assert!(one < full, "1 thread {one:.1} vs {} threads {full:.1}", p.threads);
     }
 }

@@ -56,7 +56,14 @@ pub enum Command {
     /// Run every configuration in a JSON file (-j).
     Json { path: String, common: CommonArgs },
     /// Regenerate a paper experiment (--suite fig3 ...).
-    Suite { name: String, out_dir: String },
+    Suite {
+        name: String,
+        out_dir: String,
+        /// Worker threads for the run queue (--jobs).
+        jobs: usize,
+        /// Reduced-count CI mode (--fast).
+        fast: bool,
+    },
     /// Informational listings.
     ListPlatforms,
     ListPatterns,
@@ -79,6 +86,14 @@ pub struct CommonArgs {
     /// Translation page size (--page-size). `None` keeps each
     /// backend's default (4 KiB CPU, 64 KiB GPU large pages).
     pub page_size: Option<PageSize>,
+    /// Simulated OpenMP thread count (--threads). `None` keeps each
+    /// CPU platform's single-socket default; GPU and real-execution
+    /// backends reject the flag.
+    pub threads: Option<usize>,
+    /// Worker threads for multi-config sweeps (--jobs). Default: the
+    /// machine's available parallelism. Output is byte-identical for
+    /// any value (order-preserving scheduler).
+    pub jobs: usize,
 }
 
 impl Default for CommonArgs {
@@ -90,6 +105,8 @@ impl Default for CommonArgs {
             validate: false,
             json_out: false,
             page_size: None,
+            threads: None,
+            jobs: crate::coordinator::default_jobs(),
         }
     }
 }
@@ -111,6 +128,8 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
     let mut json_path: Option<String> = None;
     let mut suite: Option<String> = None;
     let mut out_dir = "bench_out".to_string();
+    let mut fast = false;
+    let mut jobs_set = false;
     let mut common = CommonArgs::default();
 
     let mut it = args.iter().peekable();
@@ -156,6 +175,27 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 common.page_size =
                     Some(PageSize::parse(&take("--page-size")?)?)
             }
+            "--threads" => {
+                let v = take("--threads")?;
+                let t: usize = v
+                    .parse()
+                    .map_err(|_| Error::Cli(format!("bad --threads '{v}'")))?;
+                if t == 0 {
+                    return Err(Error::Cli("--threads must be > 0".into()));
+                }
+                common.threads = Some(t);
+            }
+            "--jobs" => {
+                let v = take("--jobs")?;
+                common.jobs = v
+                    .parse()
+                    .map_err(|_| Error::Cli(format!("bad --jobs '{v}'")))?;
+                if common.jobs == 0 {
+                    return Err(Error::Cli("--jobs must be > 0".into()));
+                }
+                jobs_set = true;
+            }
+            "--fast" => fast = true,
             "--validate" => common.validate = true,
             "--json-out" => common.json_out = true,
             "--suite" => suite = Some(take("--suite")?),
@@ -170,7 +210,30 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
     }
 
     if let Some(name) = suite {
-        return Ok(Command::Suite { name, out_dir });
+        if common.threads.is_some() {
+            return Err(Error::Cli(
+                "--threads does not apply to suites (threadscale sweeps the \
+                 thread axis itself); use it with -k/-p or -j runs"
+                    .into(),
+            ));
+        }
+        return Ok(Command::Suite {
+            name,
+            out_dir,
+            jobs: common.jobs,
+            fast,
+        });
+    }
+    if fast {
+        return Err(Error::Cli(
+            "--fast only applies to --suite runs".into(),
+        ));
+    }
+    if json_path.is_none() && jobs_set {
+        return Err(Error::Cli(
+            "--jobs needs a run queue: use it with -j CONFIG.json or --suite"
+                .into(),
+        ));
     }
     if let Some(path) = json_path {
         return Ok(Command::Json { path, common });
@@ -246,10 +309,19 @@ OPTIONS:
                        (default: 4KB on CPUs, 64KB native large pages
                        on GPUs); e.g. --page-size 2MB shows huge-delta
                        gathers flipping from TLB-bound to DRAM-bound
+      --threads N      simulated OpenMP thread count (CPU backends;
+                       default: the platform's single-socket count,
+                       e.g. 16 on skx). JSON configs may override per
+                       run with a \"threads\" key
+      --jobs N         worker threads for multi-config sweeps and
+                       suites (default: available parallelism). Output
+                       is byte-identical for any N: results are
+                       collected in config order
+      --fast           reduced-count suite mode (CI smoke runs)
       --validate       cross-check numerics through the PJRT path
       --json-out       machine-readable output
       --suite NAME     fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|
-                       pagesize|all
+                       pagesize|ustride|threadscale|all
 ";
 
 #[cfg(test)]
@@ -302,14 +374,66 @@ mod tests {
 
     #[test]
     fn suite_mode() {
-        let cmd = parse_args(&argv("--suite fig3 --out outdir")).unwrap();
-        assert_eq!(
-            cmd,
+        match parse_args(&argv("--suite fig3 --out outdir")).unwrap() {
             Command::Suite {
-                name: "fig3".into(),
-                out_dir: "outdir".into()
+                name,
+                out_dir,
+                jobs,
+                fast,
+            } => {
+                assert_eq!(name, "fig3");
+                assert_eq!(out_dir, "outdir");
+                assert!(jobs >= 1, "default jobs = available parallelism");
+                assert!(!fast);
             }
-        );
+            other => panic!("{other:?}"),
+        }
+        match parse_args(&argv("--suite threadscale --jobs 2 --fast")).unwrap()
+        {
+            Command::Suite {
+                name, jobs, fast, ..
+            } => {
+                assert_eq!(name, "threadscale");
+                assert_eq!(jobs, 2);
+                assert!(fast);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn threads_and_jobs_flags() {
+        let cmd = parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8 --threads 4"))
+            .unwrap();
+        match cmd {
+            Command::Run(r) => assert_eq!(r.common.threads, Some(4)),
+            other => panic!("{other:?}"),
+        }
+        match parse_args(&argv("-j c.json --threads 4 --jobs 3")).unwrap() {
+            Command::Json { common, .. } => {
+                assert_eq!(common.threads, Some(4));
+                assert_eq!(common.jobs, 3);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Defaults: no thread override, jobs >= 1.
+        match parse_args(&argv("-j c.json")).unwrap() {
+            Command::Json { common, .. } => {
+                assert_eq!(common.threads, None);
+                assert!(common.jobs >= 1);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Zero and junk rejected.
+        assert!(parse_args(&argv("-j c.json --threads 0")).is_err());
+        assert!(parse_args(&argv("-j c.json --jobs 0")).is_err());
+        assert!(parse_args(&argv("-j c.json --threads x")).is_err());
+        assert!(parse_args(&argv("-j c.json --jobs")).is_err());
+        // Flags that would be silently dropped are rejected instead.
+        assert!(parse_args(&argv("--suite threadscale --threads 4")).is_err());
+        assert!(parse_args(&argv("-j c.json --fast")).is_err());
+        assert!(parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8 --fast")).is_err());
+        assert!(parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8 --jobs 8")).is_err());
     }
 
     #[test]

@@ -33,6 +33,11 @@ pub struct RunConfig {
     /// `"64KB"`, `"2MB"`, `"1GB"`); `None` keeps the backend's
     /// configured default.
     pub page_size: Option<PageSize>,
+    /// Optional `"threads"` override for this run (simulated OpenMP
+    /// thread count, the paper's §3.1 concurrency axis); `None` keeps
+    /// the backend's configured default. Ignored by backends without a
+    /// thread model (GPU, real execution).
+    pub threads: Option<usize>,
 }
 
 impl RunConfig {
@@ -66,6 +71,9 @@ impl RunConfig {
         }
         if let Some(page) = self.page_size {
             pairs.push(("page-size", Value::from(page.name())));
+        }
+        if let Some(threads) = self.threads {
+            pairs.push(("threads", Value::from(threads)));
         }
         obj(&pairs)
     }
@@ -141,6 +149,20 @@ fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
         ),
         None => None,
     };
+    let threads = match v.get_opt("threads") {
+        Some(t) => {
+            let n = t
+                .as_usize()
+                .map_err(|e| Error::Config(format!("run {i}: threads: {e}")))?;
+            if n == 0 {
+                return Err(Error::Config(format!(
+                    "run {i}: threads must be > 0"
+                )));
+            }
+            Some(n)
+        }
+        None => None,
+    };
     let name = match v.get_opt("name") {
         Some(n) => n.as_str()?.to_string(),
         None => pattern.spec.clone(),
@@ -150,6 +172,7 @@ fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
         kernel,
         pattern,
         page_size,
+        threads,
     })
 }
 
@@ -227,6 +250,49 @@ mod tests {
             assert_eq!(a.pattern.deltas, b.pattern.deltas);
             assert_eq!(a.pattern.count, b.pattern.count);
             assert_eq!(a.page_size, b.page_size);
+            assert_eq!(a.threads, b.threads);
+        }
+    }
+
+    #[test]
+    fn threads_key_parses_and_roundtrips() {
+        let cfgs = parse_config_text(
+            r#"[
+              {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+               "count": 1024, "threads": 4},
+              {"kernel": "Scatter", "pattern": "LULESH-S3", "count": 512,
+               "threads": 28, "page-size": "2MB"},
+              {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+               "count": 64}
+            ]"#,
+        )
+        .unwrap();
+        assert_eq!(cfgs[0].threads, Some(4));
+        assert_eq!(cfgs[1].threads, Some(28));
+        assert_eq!(cfgs[1].page_size, Some(PageSize::TwoMB));
+        assert_eq!(cfgs[2].threads, None);
+
+        let text = json::to_string(&Value::Array(
+            cfgs.iter().map(|c| c.to_json()).collect(),
+        ));
+        let back = parse_config_text(&text).unwrap();
+        for (a, b) in cfgs.iter().zip(&back) {
+            assert_eq!(a.threads, b.threads);
+            assert_eq!(a.page_size, b.page_size);
+        }
+    }
+
+    #[test]
+    fn bad_threads_rejected_with_run_index() {
+        for bad in [
+            r#"[{"kernel": "Gather", "pattern": "UNIFORM:8:1", "threads": 0}]"#,
+            r#"[{"kernel": "Gather", "pattern": "UNIFORM:8:1",
+                 "threads": "many"}]"#,
+            r#"[{"kernel": "Gather", "pattern": "UNIFORM:8:1",
+                 "threads": -4}]"#,
+        ] {
+            let err = parse_config_text(bad).unwrap_err();
+            assert!(err.to_string().contains("run 0"), "{bad}: {err}");
         }
     }
 

@@ -1,9 +1,15 @@
 //! The run coordinator: Spatter's L3 contribution — turn parsed
 //! configurations into executed runs with the paper's measurement
-//! protocol, and aggregate the results.
+//! protocol, schedule them across a worker pool (`--jobs`), and
+//! aggregate + render the results.
 
 mod config;
 mod runner;
+mod schedule;
 
 pub use config::{parse_config_file, parse_config_text, RunConfig};
-pub use runner::{run_configs, run_one, Aggregate, RunRecord};
+pub use runner::{
+    render_json, render_table, run_configs, run_configs_jobs, run_one,
+    Aggregate, BackendFactory, RunRecord,
+};
+pub use schedule::{default_jobs, parallel_map_with};

@@ -1,11 +1,16 @@
-//! Run execution + aggregation (paper §3.5 output protocol).
+//! Run execution + aggregation (paper §3.5 output protocol), plus the
+//! shared table/JSON renderers — one formatting path for the CLI, the
+//! suites, and the determinism tests, so `--jobs N` output can be
+//! byte-compared against serial output.
 
 use crate::backends::Backend;
 use crate::error::Result;
-use crate::json::{obj, Value};
+use crate::json::{self, obj, Value};
 use crate::pattern::{Kernel, Pattern};
+use crate::report::Table;
 use crate::stats;
 
+use super::schedule::parallel_map_with;
 use super::RunConfig;
 
 /// The outcome of one pattern run.
@@ -28,6 +33,9 @@ pub struct RunRecord {
     /// TLB hit fraction over the run's translations; `None` when the
     /// backend translated nothing (real execution).
     pub tlb_hit_rate: Option<f64>,
+    /// Simulated OpenMP thread count the run modelled; `None` for
+    /// backends without a thread model (GPU, real execution).
+    pub threads: Option<usize>,
 }
 
 impl RunRecord {
@@ -57,6 +65,13 @@ impl RunRecord {
                     None => Value::Null,
                 },
             ),
+            (
+                "threads",
+                match self.threads {
+                    Some(t) => Value::from(t),
+                    None => Value::Null,
+                },
+            ),
         ])
     }
 }
@@ -81,12 +96,13 @@ pub fn run_one(
         bottleneck: r.breakdown.bottleneck().to_string(),
         page_size: backend.page_size().map(|p| p.name().to_string()),
         tlb_hit_rate: r.counters.tlb.hit_rate(),
+        threads: backend.threads(),
     })
 }
 
-/// Execute a whole JSON config set. Each config's `"page-size"`
-/// override is applied before its run; configs without one run at the
-/// backend's configured default.
+/// Execute a whole JSON config set on one backend. Each config's
+/// `"page-size"` / `"threads"` override is applied before its run;
+/// configs without one run at the backend's configured default.
 pub fn run_configs(
     backend: &mut dyn Backend,
     configs: &[RunConfig],
@@ -95,9 +111,86 @@ pub fn run_configs(
         .iter()
         .map(|c| {
             backend.set_page_size(c.page_size);
+            backend.set_threads(c.threads);
             run_one(backend, &c.name, &c.pattern, c.kernel)
         })
         .collect()
+}
+
+/// A thread-safe source of backends for parallel sweeps. Engines are
+/// stateful and not `Send`, so every worker builds its own.
+pub type BackendFactory<'a> =
+    &'a (dyn Fn() -> Result<Box<dyn Backend>> + Sync);
+
+/// Execute a config set on a worker pool (the `--jobs` knob).
+///
+/// Configs are claimed dynamically off a shared queue; every worker
+/// runs them on its own backend built from `factory`, and results land
+/// in config order. Because each simulated run resets its engine
+/// state, the records — and therefore the rendered table/JSON/CSV
+/// output — are byte-identical to serial execution for any `jobs`.
+pub fn run_configs_jobs(
+    factory: BackendFactory,
+    configs: &[RunConfig],
+    jobs: usize,
+) -> Result<Vec<RunRecord>> {
+    parallel_map_with(configs, jobs, factory, |backend, c, _| {
+        backend.set_page_size(c.page_size);
+        backend.set_threads(c.threads);
+        run_one(backend.as_mut(), &c.name, &c.pattern, c.kernel)
+    })
+}
+
+/// Render records as the CLI table plus the paper's aggregate line —
+/// the one formatting path shared by `main`, the suites, and the
+/// `--jobs` determinism tests.
+pub fn render_table(records: &[RunRecord]) -> String {
+    let mut t = Table::new(&[
+        "name", "kernel", "V", "delta", "count", "page", "thr", "time (s)",
+        "GB/s", "TLB hit%", "bound by",
+    ]);
+    for r in records {
+        t.row(&[
+            r.name.clone(),
+            r.kernel.name().to_string(),
+            r.vector_len.to_string(),
+            r.delta.to_string(),
+            r.count.to_string(),
+            r.page_size.clone().unwrap_or_else(|| "-".to_string()),
+            r.threads.map(|n| n.to_string()).unwrap_or_else(|| "-".to_string()),
+            format!("{:.6}", r.seconds),
+            format!("{:.2}", r.bandwidth_gbs),
+            match r.tlb_hit_rate {
+                Some(rate) => format!("{:.1}", rate * 100.0),
+                None => "-".to_string(),
+            },
+            r.bottleneck.clone(),
+        ]);
+    }
+    let mut out = t.render();
+    if records.len() > 1 {
+        if let Some(agg) = Aggregate::from_records(records) {
+            out.push_str(&format!(
+                "aggregate over {} configs: min {:.2} GB/s, max {:.2} GB/s, \
+                 harmonic mean {:.2} GB/s\n",
+                agg.runs, agg.min_gbs, agg.max_gbs, agg.harmonic_mean_gbs
+            ));
+        }
+    }
+    out
+}
+
+/// Render records as the machine-readable JSON document (`--json-out`).
+pub fn render_json(records: &[RunRecord]) -> String {
+    let arr: Vec<Value> = records.iter().map(|r| r.to_json()).collect();
+    let mut doc = vec![("runs".to_string(), Value::Array(arr))];
+    if let Some(agg) = Aggregate::from_records(records) {
+        doc.push(("aggregate".to_string(), agg.to_json()));
+    }
+    let obj = Value::Object(doc.into_iter().collect());
+    let mut out = json::to_string_pretty(&obj);
+    out.push('\n');
+    out
 }
 
 /// The paper's multi-run aggregate: min/max bandwidth and the harmonic
@@ -227,5 +320,75 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("kernel").unwrap().as_str().unwrap(), "Scatter");
         assert!(j.get("bandwidth_gbs").unwrap().as_f64().unwrap() > 0.0);
+        // The thread-count column rides along (SKX default: 16).
+        assert_eq!(j.get("threads").unwrap().as_usize().unwrap(), 16);
+    }
+
+    fn skx_factory() -> crate::error::Result<Box<dyn crate::backends::Backend>>
+    {
+        Ok(Box::new(backend()))
+    }
+
+    #[test]
+    fn parallel_jobs_match_serial_records() {
+        let cfgs = parse_config_text(
+            r#"[
+              {"name": "a", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+               "delta": 8, "count": 16384},
+              {"name": "b", "kernel": "Gather", "pattern": "UNIFORM:8:8",
+               "delta": 64, "count": 16384},
+              {"name": "c", "kernel": "Scatter", "pattern": "UNIFORM:8:2",
+               "delta": 16, "count": 16384, "threads": 4},
+              {"name": "d", "kernel": "Gather", "pattern": "UNIFORM:16:512",
+               "delta": 16384, "count": 8192, "page-size": "2MB"}
+            ]"#,
+        )
+        .unwrap();
+        let serial = run_configs_jobs(&skx_factory, &cfgs, 1).unwrap();
+        let par = run_configs_jobs(&skx_factory, &cfgs, 8).unwrap();
+        assert_eq!(render_table(&serial), render_table(&par));
+        assert_eq!(render_json(&serial), render_json(&par));
+        // And both match the legacy single-backend path.
+        let mut b = backend();
+        let legacy = run_configs(&mut b, &cfgs).unwrap();
+        assert_eq!(render_table(&legacy), render_table(&serial));
+    }
+
+    #[test]
+    fn per_run_threads_applies_and_resets() {
+        let cfgs = parse_config_text(
+            r#"[
+              {"name": "t-default", "kernel": "Gather",
+               "pattern": "UNIFORM:8:1", "delta": 8, "count": 16384},
+              {"name": "t-1", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+               "delta": 8, "count": 16384, "threads": 1},
+              {"name": "t-default-again", "kernel": "Gather",
+               "pattern": "UNIFORM:8:1", "delta": 8, "count": 16384}
+            ]"#,
+        )
+        .unwrap();
+        let mut b = backend();
+        let recs = run_configs(&mut b, &cfgs).unwrap();
+        assert_eq!(recs[0].threads, Some(16));
+        assert_eq!(recs[1].threads, Some(1));
+        assert_eq!(recs[2].threads, Some(16), "default must be restored");
+        // One thread cannot saturate DRAM: stream gather is slower.
+        assert!(recs[1].bandwidth_gbs < recs[0].bandwidth_gbs);
+        assert_eq!(recs[0].bandwidth_gbs, recs[2].bandwidth_gbs);
+    }
+
+    #[test]
+    fn render_table_has_thread_and_page_columns() {
+        let mut b = backend();
+        let p = Pattern::parse("UNIFORM:8:1")
+            .unwrap()
+            .with_delta(8)
+            .with_count(4096);
+        let r = run_one(&mut b, "row", &p, Kernel::Gather).unwrap();
+        let table = render_table(&[r]);
+        assert!(table.contains("| thr "), "{table}");
+        assert!(table.contains("| page "), "{table}");
+        assert!(table.contains("| 16 "), "{table}");
+        assert!(!table.contains("aggregate over"), "single run: no aggregate");
     }
 }

@@ -1,0 +1,270 @@
+//! Order-preserving parallel work scheduler (the `--jobs` machinery).
+//!
+//! Large sweeps (ustride × pagesize × threads × apps) are
+//! embarrassingly parallel: every simulated run resets its engine
+//! state, so runs are independent and can execute on any worker in any
+//! order. What must NOT change with the worker count is the *output*:
+//! results are collected into the slot of their input index, so table /
+//! CSV / JSON output is byte-identical to serial execution.
+//!
+//! The pool is a dynamic self-scheduling ("work-stealing") queue: idle
+//! workers claim the next unclaimed item off a shared atomic cursor,
+//! so a slow item (huge count, cold platform) never stalls the rest of
+//! the sweep behind a static partition.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+/// Default worker count for `--jobs`: the machine's available
+/// parallelism (1 if it cannot be determined).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `work` over `items` on up to `jobs` worker threads, preserving
+/// input order in the output.
+///
+/// Each worker lazily builds its own context with `init` (engines are
+/// stateful and neither `Send` nor `Sync`; the context never crosses a
+/// thread boundary) and then claims items off a shared queue. The
+/// result vector is ordered by input index regardless of which worker
+/// ran what, and the returned error (if any) is the lowest-index
+/// failure — exactly what serial execution would have reported.
+pub fn parallel_map_with<C, T, R, I, W>(
+    items: &[T],
+    jobs: usize,
+    init: I,
+    work: W,
+) -> Result<Vec<R>>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> Result<C> + Sync,
+    W: Fn(&mut C, &T, usize) -> Result<R> + Sync,
+{
+    let jobs = jobs.clamp(1, items.len().max(1));
+    if jobs == 1 {
+        let mut ctx = init()?;
+        return items
+            .iter()
+            .enumerate()
+            .map(|(i, t)| work(&mut ctx, t, i))
+            .collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    // First failure flips the flag; workers finish their in-flight
+    // item but stop claiming, so a fast-fail stays fast instead of
+    // draining the whole queue. Claims are monotone, so every index
+    // below the failed one has already been claimed and will complete
+    // — the lowest-index-error contract survives cancellation.
+    let cancelled = AtomicBool::new(false);
+    let slots: Mutex<Vec<Option<Result<R>>>> =
+        Mutex::new((0..items.len()).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| {
+                let mut ctx: Option<C> = None;
+                loop {
+                    if cancelled.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let out = match &mut ctx {
+                        Some(c) => work(c, &items[i], i),
+                        None => match init() {
+                            Ok(mut c) => {
+                                let r = work(&mut c, &items[i], i);
+                                ctx = Some(c);
+                                r
+                            }
+                            Err(e) => {
+                                // A worker that cannot build its
+                                // context marks its claimed item and
+                                // retires.
+                                cancelled.store(true, Ordering::Relaxed);
+                                slots.lock().unwrap()[i] = Some(Err(e));
+                                break;
+                            }
+                        },
+                    };
+                    if out.is_err() {
+                        cancelled.store(true, Ordering::Relaxed);
+                    }
+                    slots.lock().unwrap()[i] = Some(out);
+                }
+            });
+        }
+    });
+
+    let slots = slots.into_inner().unwrap();
+    let mut out = Vec::with_capacity(slots.len());
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(Ok(r)) => out.push(r),
+            Some(Err(e)) => return Err(e),
+            // Unreachable unless every worker died on `init`, and then
+            // an earlier slot already carried that error.
+            None => {
+                return Err(Error::Runtime(format!(
+                    "scheduler: item {i} was never executed"
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn preserves_input_order_at_any_width() {
+        let items: Vec<usize> = (0..100).collect();
+        let serial =
+            parallel_map_with(&items, 1, || Ok(()), |_, &x, i| Ok(x * 10 + i))
+                .unwrap();
+        for jobs in [2, 3, 8, 64] {
+            let par = parallel_map_with(
+                &items,
+                jobs,
+                || Ok(()),
+                |_, &x, i| Ok(x * 10 + i),
+            )
+            .unwrap();
+            assert_eq!(par, serial, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn builds_at_most_one_context_per_worker() {
+        let inits = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..40).collect();
+        let out = parallel_map_with(
+            &items,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+                Ok(0usize)
+            },
+            |c, &x, _| {
+                *c += 1;
+                Ok(x)
+            },
+        )
+        .unwrap();
+        assert_eq!(out, items);
+        let n = inits.load(Ordering::SeqCst);
+        assert!((1..=4).contains(&n), "{n} inits for 4 workers");
+    }
+
+    #[test]
+    fn work_actually_spreads_across_threads() {
+        let ids: Mutex<HashSet<std::thread::ThreadId>> =
+            Mutex::new(HashSet::new());
+        let items: Vec<usize> = (0..16).collect();
+        parallel_map_with(
+            &items,
+            4,
+            || Ok(()),
+            |_, &x, _| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                Ok(x)
+            },
+        )
+        .unwrap();
+        assert!(
+            ids.lock().unwrap().len() >= 2,
+            "expected concurrent workers, got {:?}",
+            ids.lock().unwrap().len()
+        );
+    }
+
+    #[test]
+    fn lowest_index_error_wins() {
+        let items: Vec<usize> = (0..20).collect();
+        let err = parallel_map_with(
+            &items,
+            4,
+            || Ok(()),
+            |_, &x, _| {
+                if x >= 7 {
+                    Err(Error::Runtime(format!("boom {x}")))
+                } else {
+                    Ok(x)
+                }
+            },
+        )
+        .unwrap_err();
+        assert_eq!(err.to_string(), "runtime error: boom 7");
+    }
+
+    #[test]
+    fn failure_cancels_remaining_queue() {
+        // After the first error, workers stop claiming: a fast-fail
+        // must not drain the whole queue. Item 0 errors immediately;
+        // the other items sleep, so by the time any worker finishes
+        // one of them the cancel flag is long set.
+        let executed = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..64).collect();
+        let err = parallel_map_with(
+            &items,
+            4,
+            || Ok(()),
+            |_, &x, _| {
+                executed.fetch_add(1, Ordering::SeqCst);
+                if x == 0 {
+                    return Err(Error::Runtime("fail fast".into()));
+                }
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                Ok(x)
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("fail fast"));
+        let n = executed.load(Ordering::SeqCst);
+        assert!(n < items.len(), "queue should not drain fully: {n}");
+    }
+
+    #[test]
+    fn init_failure_surfaces() {
+        let items: Vec<usize> = (0..5).collect();
+        let err = parallel_map_with(
+            &items,
+            3,
+            || -> Result<()> { Err(Error::Runtime("no backend".into())) },
+            |_, &x, _| Ok(x),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no backend"));
+    }
+
+    #[test]
+    fn empty_input_and_oversubscription() {
+        let none: Vec<usize> = Vec::new();
+        let out =
+            parallel_map_with(&none, 8, || Ok(()), |_, &x, _| Ok(x)).unwrap();
+        assert!(out.is_empty());
+        // More workers than items must not panic or duplicate.
+        let two: Vec<usize> = vec![1, 2];
+        let out =
+            parallel_map_with(&two, 16, || Ok(()), |_, &x, _| Ok(x * 2)).unwrap();
+        assert_eq!(out, vec![2, 4]);
+    }
+
+    #[test]
+    fn default_jobs_is_positive() {
+        assert!(default_jobs() >= 1);
+    }
+}

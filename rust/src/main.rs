@@ -8,12 +8,12 @@
 
 use std::path::Path;
 use std::process::ExitCode;
+use std::time::Instant;
 
 use spatter::backends::{Backend, CudaSim, OpenMpSim, PjrtBackend, ScalarSim};
 use spatter::cli::{self, BackendKind, Command, CommonArgs};
-use spatter::coordinator::{self, Aggregate, RunRecord};
+use spatter::coordinator::{self, RunRecord};
 use spatter::error::{Error, Result};
-use spatter::json::{self, Value};
 use spatter::pattern::table5;
 use spatter::platforms;
 use spatter::report::Table;
@@ -63,52 +63,89 @@ fn run(args: &[String]) -> Result<()> {
             println!("{}", t.render());
             Ok(())
         }
-        Command::Suite { name, out_dir } => {
-            let ctx = suite::SuiteContext::new(Path::new(&out_dir));
+        Command::Suite {
+            name,
+            out_dir,
+            jobs,
+            fast,
+        } => {
+            let base = if fast {
+                suite::SuiteContext::fast(Path::new(&out_dir))
+            } else {
+                suite::SuiteContext::new(Path::new(&out_dir))
+            };
+            let ctx = base.with_jobs(jobs);
+            let t0 = Instant::now();
             let report = suite::run(&name, &ctx)?;
             println!("{report}");
             println!("CSV series written to {out_dir}/");
+            eprintln!(
+                "spatter: suite '{name}' ran on {} jobs in {:.3}s wall-clock",
+                ctx.jobs,
+                t0.elapsed().as_secs_f64()
+            );
             Ok(())
         }
         Command::Run(r) => {
-            let record = with_backend(&r.common, |backend| {
-                coordinator::run_one(backend, &r.pattern.spec, &r.pattern, r.kernel)
-            })?;
+            let mut backend = build_backend(&r.common)?;
+            let record = coordinator::run_one(
+                backend.as_mut(),
+                &r.pattern.spec,
+                &r.pattern,
+                r.kernel,
+            )?;
             emit(&[record], &r.common);
             Ok(())
         }
         Command::Json { path, common } => {
             let configs = coordinator::parse_config_file(Path::new(&path))?;
-            let records = with_backend(&common, |backend| {
-                coordinator::run_configs(backend, &configs)
-            })?;
+            // Real execution measures wall-clock time: concurrent
+            // workers would contend for the host's cores and depress
+            // every reported bandwidth. Simulated backends are
+            // contention-free, so only they fan out.
+            let jobs = if common.backend == BackendKind::Pjrt {
+                1
+            } else {
+                common.jobs
+            };
+            let t0 = Instant::now();
+            let records = coordinator::run_configs_jobs(
+                &|| build_backend(&common),
+                &configs,
+                jobs,
+            )?;
+            eprintln!(
+                "spatter: {} configs ran on {} jobs in {:.3}s wall-clock",
+                configs.len(),
+                jobs.min(configs.len().max(1)),
+                t0.elapsed().as_secs_f64()
+            );
             emit(&records, &common);
             Ok(())
         }
     }
 }
 
-/// Build the selected backend and run `f` against it.
-fn with_backend<T>(
-    common: &CommonArgs,
-    f: impl FnOnce(&mut dyn Backend) -> Result<T>,
-) -> Result<T> {
+/// Build the selected backend from the common CLI knobs. Called once
+/// per worker by the parallel scheduler (engines are stateful, so
+/// every worker owns its own).
+fn build_backend(common: &CommonArgs) -> Result<Box<dyn Backend>> {
     match common.backend {
         BackendKind::OpenMp => {
             let p = platforms::by_name(&common.platform)?;
-            let mut b = match common.page_size {
-                Some(page) => OpenMpSim::with_page_size(&p, page),
-                None => OpenMpSim::new(&p),
-            };
-            f(&mut b)
+            Ok(Box::new(OpenMpSim::configured(
+                &p,
+                common.page_size,
+                common.threads,
+            )))
         }
         BackendKind::Scalar => {
             let p = platforms::by_name(&common.platform)?;
-            let mut b = match common.page_size {
-                Some(page) => ScalarSim::with_page_size(&p, page),
-                None => ScalarSim::new(&p),
-            };
-            f(&mut b)
+            Ok(Box::new(ScalarSim::configured(
+                &p,
+                common.page_size,
+                common.threads,
+            )))
         }
         BackendKind::Cuda => {
             let p = platforms::gpu_by_name(&common.platform).map_err(|_| {
@@ -118,66 +155,44 @@ fn with_backend<T>(
                     common.platform
                 ))
             })?;
-            let mut b = match common.page_size {
+            if common.threads.is_some() {
+                return Err(Error::Cli(
+                    "--threads applies to CPU backends (openmp|scalar); the \
+                     cuda backend has no thread knob"
+                        .into(),
+                ));
+            }
+            let b = match common.page_size {
                 Some(page) => CudaSim::with_page_size(&p, page),
                 None => CudaSim::new(&p),
             };
-            f(&mut b)
+            Ok(Box::new(b))
         }
         BackendKind::Pjrt => {
+            if common.threads.is_some() {
+                return Err(Error::Cli(
+                    "--threads applies to CPU backends (openmp|scalar); pjrt \
+                     executes with the host's real threads"
+                        .into(),
+                ));
+            }
             let mut b = PjrtBackend::open_default()?;
             if common.validate {
                 b.validate()?;
             }
             b.runs = common.runs;
-            f(&mut b)
+            Ok(Box::new(b))
         }
     }
 }
 
-/// Print records as a table (default) or JSON (--json-out), plus the
-/// paper's aggregate stats for multi-run sets.
+/// Print records as a table (default) or JSON (--json-out), through
+/// the same renderers the suites and determinism tests use.
 fn emit(records: &[RunRecord], common: &CommonArgs) {
     if common.json_out {
-        let arr: Vec<Value> = records.iter().map(|r| r.to_json()).collect();
-        let mut doc = vec![("runs".to_string(), Value::Array(arr))];
-        if let Some(agg) = Aggregate::from_records(records) {
-            doc.push(("aggregate".to_string(), agg.to_json()));
-        }
-        let obj = Value::Object(doc.into_iter().collect());
-        println!("{}", json::to_string_pretty(&obj));
-        return;
-    }
-    let mut t = Table::new(&[
-        "name", "kernel", "V", "delta", "count", "page", "time (s)", "GB/s",
-        "TLB hit%", "bound by",
-    ]);
-    for r in records {
-        t.row(&[
-            r.name.clone(),
-            r.kernel.name().to_string(),
-            r.vector_len.to_string(),
-            r.delta.to_string(),
-            r.count.to_string(),
-            r.page_size.clone().unwrap_or_else(|| "-".to_string()),
-            format!("{:.6}", r.seconds),
-            format!("{:.2}", r.bandwidth_gbs),
-            match r.tlb_hit_rate {
-                Some(rate) => format!("{:.1}", rate * 100.0),
-                None => "-".to_string(),
-            },
-            r.bottleneck.clone(),
-        ]);
-    }
-    println!("{}", t.render());
-    if records.len() > 1 {
-        if let Some(agg) = Aggregate::from_records(records) {
-            println!(
-                "aggregate over {} configs: min {:.2} GB/s, max {:.2} GB/s, \
-                 harmonic mean {:.2} GB/s",
-                agg.runs, agg.min_gbs, agg.max_gbs, agg.harmonic_mean_gbs
-            );
-        }
+        print!("{}", coordinator::render_json(records));
+    } else {
+        print!("{}", coordinator::render_table(records));
     }
 }
 

@@ -61,6 +61,23 @@ pub struct CpuPlatform {
     pub absorbs_repeated_writes: bool,
 }
 
+impl CpuPlatform {
+    /// The paper's §3.1 thread-scaling axis for this platform: powers
+    /// of two from 1 up to, and always including, the single-socket
+    /// thread count (e.g. TX2: 1, 2, 4, 8, 16, 28).
+    pub fn thread_sweep(&self) -> Vec<usize> {
+        let max = self.threads.max(1);
+        let mut sweep = Vec::new();
+        let mut t = 1;
+        while t < max {
+            sweep.push(t);
+            t *= 2;
+        }
+        sweep.push(max);
+        sweep
+    }
+}
+
 /// A simulated GPU platform (the paper's CUDA targets).
 #[derive(Debug, Clone)]
 pub struct GpuPlatform {
@@ -569,6 +586,29 @@ mod tests {
         assert_eq!(gpu_by_name("v100").unwrap().tlb.sixty_four_kb.entries, 4096);
         // BDW keeps only small dedicated huge-page DTLBs.
         assert_eq!(by_name("bdw").unwrap().tlb.two_mb.entries, 32);
+    }
+
+    #[test]
+    fn thread_sweep_shapes() {
+        assert_eq!(
+            by_name("skx").unwrap().thread_sweep(),
+            vec![1, 2, 4, 8, 16]
+        );
+        assert_eq!(
+            by_name("tx2").unwrap().thread_sweep(),
+            vec![1, 2, 4, 8, 16, 28]
+        );
+        assert_eq!(
+            by_name("knl").unwrap().thread_sweep(),
+            vec![1, 2, 4, 8, 16, 32, 64]
+        );
+        // Every sweep is strictly increasing and ends at the max.
+        for p in cpus() {
+            let s = p.thread_sweep();
+            assert_eq!(*s.first().unwrap(), 1, "{}", p.name);
+            assert_eq!(*s.last().unwrap(), p.threads, "{}", p.name);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "{}", p.name);
+        }
     }
 
     #[test]

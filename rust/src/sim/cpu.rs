@@ -56,6 +56,12 @@ pub struct CpuSimOptions {
     ///
     /// [`TlbTable`]: super::memory::TlbTable
     pub page_size: PageSize,
+    /// OpenMP thread count (the `--threads` knob, the paper's §3.1
+    /// thread-scaling axis). `None` = the platform's single-socket
+    /// default. Per-thread issue rate and L2 bandwidth scale with it;
+    /// L3 and DRAM stay shared; the chunked-schedule coherence model
+    /// is keyed off it.
+    pub threads: Option<usize>,
 }
 
 impl Default for CpuSimOptions {
@@ -66,6 +72,7 @@ impl Default for CpuSimOptions {
             max_sim_accesses: 1 << 21,
             warmup_iterations: 1 << 15,
             page_size: PageSize::FourKB,
+            threads: None,
         }
     }
 }
@@ -92,6 +99,10 @@ pub struct CpuEngine {
     pf_buf: Vec<u64>,
     /// Open-row tracker for the DRAM row-locality model.
     last_row: u64,
+    /// Effective OpenMP thread count for the next run (resolved from
+    /// `opts.threads` / the platform default; overridable per run via
+    /// [`CpuEngine::set_threads`]).
+    threads: usize,
 }
 
 /// DRAM row size for the row-locality model (2 KiB = 32 lines).
@@ -118,6 +129,7 @@ impl CpuEngine {
             } else {
                 PrefetchKind::None
             }),
+            threads: opts.threads.unwrap_or(p.threads).max(1),
             platform: p,
             opts,
             pf_buf: Vec::with_capacity(8),
@@ -149,6 +161,22 @@ impl CpuEngine {
         self.tlb = Tlb::new(self.platform.tlb.geometry(page), page);
         self.walker =
             PageTableWalker::new(self.platform.tlb_walk_ns, page, WALK_OVERLAP);
+    }
+
+    /// The OpenMP thread count the next run will model.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Reconfigure the simulated thread count: `Some` overrides, `None`
+    /// restores the engine's configured default (the `--threads` CLI
+    /// value or the platform's single-socket count).
+    pub fn set_threads(&mut self, threads: Option<usize>) {
+        self.threads = threads
+            .unwrap_or_else(|| {
+                self.opts.threads.unwrap_or(self.platform.threads)
+            })
+            .max(1);
     }
 
     fn reset(&mut self) {
@@ -387,13 +415,13 @@ impl CpuEngine {
         measured: usize,
     ) -> u64 {
         if kernel != Kernel::Scatter
-            || self.platform.threads <= 1
+            || self.threads <= 1
             || self.platform.absorbs_repeated_writes
         {
             return 0;
         }
         let idx_span = (pattern.max_index() + 1) as f64;
-        let chunk = (pattern.count as f64 / self.platform.threads as f64).max(1.0);
+        let chunk = (pattern.count as f64 / self.threads as f64).max(1.0);
         let thread_stride = pattern.mean_delta() * chunk;
         let overlap = if thread_stride <= 0.0 {
             1.0
@@ -406,7 +434,7 @@ impl CpuEngine {
     /// Bottleneck timing over the measured counters.
     fn timing(&self, c: &SimCounters, kernel: Kernel, sparse_walks: bool) -> TimeBreakdown {
         let p = &self.platform;
-        let t = p.threads as f64;
+        let t = self.threads as f64;
         let hz = p.freq_ghz * 1e9;
 
         // Issue cost per element: hardware G/S when vectorized and the
@@ -457,7 +485,15 @@ impl CpuEngine {
         // Depth-dependent walk latency from the shared walker model
         // (walks overlap WALK_OVERLAP deep per thread).
         let tlb_s = c.tlb.misses() as f64 * self.walker.ns_per_miss() * 1e-9 / t;
-        let coherence_s = c.coherence_events as f64 * p.coherence_ns * 1e-9 / t;
+        // Contended writes do not parallelize: each one invalidates the
+        // line's copies in up to t-1 peer caches and the invalidations
+        // serialize at the line's home, so the per-event cost grows
+        // with the sharer count while the t threads' storms overlap at
+        // most t-deep. Net (t-1)/t scaling — zero on one thread,
+        // approaching a full coherence_ns per event as threads grow:
+        // the thread-scaling collapse of delta-0 scatter (LULESH-S3).
+        let coherence_s =
+            c.coherence_events as f64 * p.coherence_ns * 1e-9 * (t - 1.0) / t;
 
         TimeBreakdown {
             issue_s,
@@ -849,6 +885,144 @@ mod tests {
         // 4 KiB, DRAM-bound at 2 MiB.
         assert_eq!(r4k.breakdown.bottleneck(), "tlb");
         assert_eq!(r2m.breakdown.bottleneck(), "dram-bw");
+    }
+
+    #[test]
+    fn set_threads_overrides_and_restores() {
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        assert_eq!(e.threads(), 16);
+        e.set_threads(Some(4));
+        assert_eq!(e.threads(), 4);
+        e.set_threads(None);
+        assert_eq!(e.threads(), 16);
+        // A configured default survives the restore path.
+        let mut e = CpuEngine::with_options(
+            &p,
+            CpuSimOptions {
+                threads: Some(2),
+                ..Default::default()
+            },
+        );
+        assert_eq!(e.threads(), 2);
+        e.set_threads(Some(8));
+        e.set_threads(None);
+        assert_eq!(e.threads(), 2);
+        // Zero clamps to one.
+        e.set_threads(Some(0));
+        assert_eq!(e.threads(), 1);
+    }
+
+    #[test]
+    fn default_threads_match_platform_numerics() {
+        // threads: None must be numerically identical to the seed
+        // behaviour (platform.threads).
+        let p = platforms::by_name("bdw").unwrap();
+        let pat = uniform(4, 1 << 16);
+        let a = CpuEngine::new(&p).run(&pat, Kernel::Gather).unwrap();
+        let mut e = CpuEngine::with_options(
+            &p,
+            CpuSimOptions {
+                threads: Some(p.threads),
+                ..Default::default()
+            },
+        );
+        let b = e.run(&pat, Kernel::Gather).unwrap();
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.seconds, b.seconds);
+    }
+
+    #[test]
+    fn stream_gather_scales_to_a_knee() {
+        // The §3.1 thread-scaling axis: stride-1 gather rises with
+        // threads until DRAM saturates, then stays flat at STREAM.
+        let p = platforms::by_name("skx").unwrap();
+        let pat = uniform(1, N);
+        let bw = |t: usize| {
+            let mut e = CpuEngine::with_options(
+                &p,
+                CpuSimOptions {
+                    threads: Some(t),
+                    ..Default::default()
+                },
+            );
+            e.run(&pat, Kernel::Gather).unwrap().bandwidth_gbs()
+        };
+        let curve: Vec<f64> = [1, 2, 4, 8, 16].iter().map(|&t| bw(t)).collect();
+        for w in curve.windows(2) {
+            assert!(w[1] >= w[0] * 0.99, "monotone to the knee: {curve:?}");
+        }
+        assert!(
+            curve[4] > 1.5 * curve[0],
+            "one thread must not saturate DRAM: {curve:?}"
+        );
+        assert!(
+            (curve[4] / p.stream_gbs - 1.0).abs() < 0.25,
+            "saturated bandwidth ~STREAM: {:.1}",
+            curve[4]
+        );
+    }
+
+    #[test]
+    fn delta0_scatter_contention_grows_with_threads() {
+        // LULESH-S3 thread scaling: coherence cost grows with the
+        // sharer count, so bandwidth *drops* as threads are added —
+        // except on TX2, which absorbs repeated writes.
+        let s3 = crate::pattern::table5::by_name("LULESH-S3")
+            .unwrap()
+            .to_pattern(1 << 16);
+        let bw = |name: &str, t: usize| {
+            let p = platforms::by_name(name).unwrap();
+            let mut e = CpuEngine::with_options(
+                &p,
+                CpuSimOptions {
+                    threads: Some(t),
+                    ..Default::default()
+                },
+            );
+            e.run(&s3, Kernel::Scatter).unwrap().bandwidth_gbs()
+        };
+        let skx1 = bw("skx", 1);
+        let skx2 = bw("skx", 2);
+        let skx16 = bw("skx", 16);
+        assert!(skx2 < 0.5 * skx1, "contention kicks in: {skx1:.2} -> {skx2:.2}");
+        assert!(skx16 < skx2, "and keeps growing: {skx2:.3} -> {skx16:.3}");
+        // TX2 absorbs repeated writes: more threads only help.
+        let tx1 = bw("tx2", 1);
+        let tx28 = bw("tx2", 28);
+        assert!(tx28 > tx1, "TX2 scales: {tx1:.1} -> {tx28:.1}");
+    }
+
+    #[test]
+    fn coherence_cost_orders_by_thread_overlap() {
+        // The (t-1)/t sharer scaling applies to every multi-thread
+        // scatter with overlapping thread footprints, not only
+        // delta-0: at a count small enough that the chunked schedule
+        // overlaps (chunk < index span), bandwidth must order by
+        // overlap — none (S1, delta 8) > partial (S2, delta 1) >
+        // total (S3, delta 0).
+        let p = platforms::by_name("skx").unwrap();
+        let bw = |name: &str| {
+            let pat = crate::pattern::table5::by_name(name)
+                .unwrap()
+                .to_pattern(1 << 12);
+            CpuEngine::new(&p)
+                .run(&pat, Kernel::Scatter)
+                .unwrap()
+                .bandwidth_gbs()
+        };
+        let s1 = bw("LULESH-S1");
+        let s2 = bw("LULESH-S2");
+        let s3 = bw("LULESH-S3");
+        assert!(
+            s1 > 2.0 * s2,
+            "no-overlap should beat partial overlap: {s1:.2} vs {s2:.2}"
+        );
+        assert!(
+            s2 > 1.5 * s3,
+            "partial overlap should beat total overlap: {s2:.3} vs {s3:.3}"
+        );
+        assert!(s3 > 0.0 && s3.is_finite());
     }
 
     #[test]

@@ -15,15 +15,19 @@
 //! | `fig8` | radar, app-derived scatter patterns |
 //! | `fig9` | bandwidth-bandwidth plots |
 //! | `pagesize` | huge-delta gather vs `--page-size` (TLB mechanism) |
+//! | `ustride` | CPU uniform-stride sweep through the `--jobs` queue |
+//! | `threadscale` | §3.1 thread-scaling: saturation knee + contention |
 //! | `all` | everything above |
 
 mod apps;
+mod threadscale;
 mod ustride;
 
 pub use apps::{fig7_radar, fig8_radar, fig9_bwbw, table1_characterization, table4_miniapps};
+pub use threadscale::threadscale_suite;
 pub use ustride::{
     fig3_cpu_ustride, fig4_prefetch, fig5_gpu_ustride, fig6_simd_scalar,
-    pagesize_sweep,
+    pagesize_sweep, ustride_suite,
 };
 
 use std::path::{Path, PathBuf};
@@ -38,6 +42,9 @@ pub struct SuiteContext {
     /// Reduce simulated counts (CI-speed runs). Shapes are preserved;
     /// absolute numbers get noisier.
     pub fast: bool,
+    /// Worker threads for the run queue (`--jobs`). Reports are
+    /// byte-identical for any value (order-preserving scheduler).
+    pub jobs: usize,
 }
 
 impl SuiteContext {
@@ -45,6 +52,7 @@ impl SuiteContext {
         SuiteContext {
             out_dir: out_dir.to_path_buf(),
             fast: false,
+            jobs: crate::coordinator::default_jobs(),
         }
     }
 
@@ -52,7 +60,14 @@ impl SuiteContext {
         SuiteContext {
             out_dir: out_dir.to_path_buf(),
             fast: true,
+            jobs: crate::coordinator::default_jobs(),
         }
+    }
+
+    /// Override the worker count (the `--jobs` CLI flag).
+    pub fn with_jobs(mut self, jobs: usize) -> SuiteContext {
+        self.jobs = jobs.max(1);
+        self
     }
 
     /// Uniform-stride iteration count (paper: >= 8-16 GB of traffic;
@@ -96,11 +111,13 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
         "fig8" => fig8_radar(ctx),
         "fig9" => fig9_bwbw(ctx),
         "pagesize" => pagesize_sweep(ctx),
+        "ustride" => ustride_suite(ctx),
+        "threadscale" => threadscale_suite(ctx),
         "all" => {
             let mut out = String::new();
             for n in [
                 "table1", "fig3", "fig4", "fig5", "fig6", "table4", "fig7",
-                "fig8", "fig9", "pagesize",
+                "fig8", "fig9", "pagesize", "ustride", "threadscale",
             ] {
                 out.push_str(&run(n, ctx)?);
                 out.push('\n');
@@ -109,7 +126,8 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
         }
         other => Err(Error::Cli(format!(
             "unknown suite '{other}' \
-             (fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|pagesize|all)"
+             (fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|pagesize|\
+             ustride|threadscale|all)"
         ))),
     }
 }
@@ -117,7 +135,7 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
 /// Names of all experiments (for listings).
 pub const EXPERIMENTS: &[&str] = &[
     "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1",
-    "table4", "pagesize",
+    "table4", "pagesize", "ustride", "threadscale",
 ];
 
 #[cfg(test)]

@@ -1,0 +1,257 @@
+//! `--suite threadscale` — the paper's §3.1/§5 thread-scaling axis,
+//! end-to-end through the `--threads` knob and the parallel run queue.
+//!
+//! For every swept CPU platform, three workloads run at 1 → max
+//! threads (powers of two plus the socket count):
+//!
+//! * `g-s1` — stride-1 gather: bandwidth rises with threads until DRAM
+//!   saturates; the smallest thread count within 95% of peak is the
+//!   platform's **saturation knee**.
+//! * `g-s8` — stride-8 gather: the same knee shape at the line-
+//!   granularity floor (1/8 of peak).
+//! * `s-d0` — LULESH-S3, the delta-0 scatter: every thread writes the
+//!   same lines, so the coherence cost grows with the sharer count and
+//!   bandwidth **drops** as threads are added — except on TX2, which
+//!   absorbs repeated writes (§5.4.2 item 1).
+
+use super::ustride::cpu_ustride;
+use super::SuiteContext;
+use crate::backends::{Backend, OpenMpSim};
+use crate::coordinator::{run_configs_jobs, RunConfig};
+use crate::error::Result;
+use crate::pattern::{table5, Kernel, Pattern};
+use crate::platforms;
+use crate::report::{Csv, Table};
+
+/// Platforms the sweep reports (the paper's Fig 3 CPUs plus KNL, whose
+/// 64 threads stretch the axis furthest).
+const PLATFORMS: &[&str] = &["skx", "bdw", "tx2", "knl"];
+
+/// One swept workload: short id + pattern + kernel.
+struct Workload {
+    id: &'static str,
+    pattern: Pattern,
+    kernel: Kernel,
+}
+
+fn workloads(ctx: &SuiteContext) -> Vec<Workload> {
+    let ucount = ctx.ustride_count();
+    let s3 = table5::by_name("LULESH-S3")
+        .expect("LULESH-S3 in Table 5")
+        .to_pattern(ctx.app_count());
+    vec![
+        Workload {
+            id: "g-s1",
+            pattern: cpu_ustride(1, ucount),
+            kernel: Kernel::Gather,
+        },
+        Workload {
+            id: "g-s8",
+            pattern: cpu_ustride(8, ucount),
+            kernel: Kernel::Gather,
+        },
+        Workload {
+            id: "s-d0",
+            pattern: s3,
+            kernel: Kernel::Scatter,
+        },
+    ]
+}
+
+/// Smallest swept thread count whose bandwidth reaches 95% of the
+/// sweep's peak — the saturation knee.
+fn knee(sweep: &[usize], bws: &[f64]) -> usize {
+    let peak = bws.iter().fold(0.0f64, |a, &b| a.max(b));
+    sweep
+        .iter()
+        .zip(bws)
+        .find(|(_, &bw)| bw >= 0.95 * peak)
+        .map(|(&t, _)| t)
+        .unwrap_or_else(|| *sweep.last().unwrap())
+}
+
+pub fn threadscale_suite(ctx: &SuiteContext) -> Result<String> {
+    let loads = workloads(ctx);
+    // Summary columns located by workload id, not by position, so
+    // reordering or extending `workloads` cannot silently mislabel the
+    // knee/contention stats.
+    let knee_wi = loads
+        .iter()
+        .position(|w| w.id == "g-s1")
+        .expect("g-s1 workload for the saturation knee");
+    let d0_wi = loads
+        .iter()
+        .position(|w| w.id == "s-d0")
+        .expect("s-d0 workload for the contention check");
+    let mut csv = Csv::new(&[
+        "platform", "workload", "threads", "gbs", "bottleneck",
+    ]);
+    let mut report = String::from(
+        "== threadscale: bandwidth vs OpenMP thread count ==\n",
+    );
+    for &name in PLATFORMS {
+        let platform = platforms::by_name(name)?;
+        let sweep = platform.thread_sweep();
+        // One RunConfig per (thread count, workload), executed on the
+        // --jobs worker pool; order-preserving collection keeps the
+        // report deterministic.
+        let mut configs = Vec::new();
+        for &t in &sweep {
+            for w in &loads {
+                configs.push(RunConfig {
+                    name: format!("{name}/{}/t{t}", w.id),
+                    kernel: w.kernel,
+                    pattern: w.pattern.clone(),
+                    page_size: None,
+                    threads: Some(t),
+                });
+            }
+        }
+        let factory = || -> Result<Box<dyn Backend>> {
+            Ok(Box::new(OpenMpSim::new(&platform)))
+        };
+        let records = run_configs_jobs(&factory, &configs, ctx.jobs)?;
+
+        // Columns per workload, rows per thread count; the header is
+        // derived from the workload list.
+        let header: Vec<String> = std::iter::once("threads".to_string())
+            .chain(loads.iter().map(|w| format!("{} GB/s", w.id)))
+            .chain(std::iter::once(format!("{} bound by", loads[d0_wi].id)))
+            .collect();
+        let header_refs: Vec<&str> =
+            header.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new(&header_refs);
+        let mut cols: Vec<Vec<f64>> = vec![Vec::new(); loads.len()];
+        for (ti, &t) in sweep.iter().enumerate() {
+            let mut row = vec![t.to_string()];
+            let mut d0_bound = String::new();
+            for (wi, w) in loads.iter().enumerate() {
+                let r = &records[ti * loads.len() + wi];
+                cols[wi].push(r.bandwidth_gbs);
+                csv.row_display(&[
+                    &name,
+                    &w.id,
+                    &t,
+                    &format!("{:.3}", r.bandwidth_gbs),
+                    &r.bottleneck,
+                ]);
+                row.push(format!("{:.2}", r.bandwidth_gbs));
+                if wi == d0_wi {
+                    d0_bound = r.bottleneck.clone();
+                }
+            }
+            row.push(d0_bound);
+            table.row(&row);
+        }
+        let knee_t = knee(&sweep, &cols[knee_wi]);
+        let d0 = &cols[d0_wi];
+        let d0_peak = d0.iter().fold(0.0f64, |a, &b| a.max(b));
+        let d0_last = *d0.last().unwrap();
+        let contention = if d0_last < 0.5 * d0_peak {
+            format!(
+                "delta-0 scatter collapses {:.0}x from its best by t={} \
+                 (coherence)",
+                d0_peak / d0_last.max(1e-12),
+                sweep.last().unwrap()
+            )
+        } else {
+            "delta-0 scatter does not collapse (absorbs repeated writes)"
+                .to_string()
+        };
+        report.push_str(&format!(
+            "-- {name} --\n{}stride-1 saturation knee: t={knee_t}; \
+             {contention}\n",
+            table.render()
+        ));
+    }
+    csv.write(&ctx.out_dir, "threadscale.csv")?;
+    report.push_str(
+        "Takeaway check: uniform-stride gather rises monotonically to a \
+         platform-dependent knee where DRAM saturates; delta-0 scatter \
+         drops as threads are added on every CPU except TX2.\n",
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn ctx(tag: &str) -> SuiteContext {
+        SuiteContext::fast(
+            &Path::new("/tmp").join(format!("spatter-threadscale-{tag}")),
+        )
+    }
+
+    #[test]
+    fn report_and_csv_written() {
+        let c = ctx("run");
+        let report = threadscale_suite(&c).unwrap();
+        assert!(report.contains("threadscale"));
+        assert!(report.contains("saturation knee"));
+        assert!(c.out_dir.join("threadscale.csv").exists());
+        std::fs::remove_dir_all(&c.out_dir).ok();
+    }
+
+    #[test]
+    fn knee_picks_smallest_saturating_count() {
+        let sweep = [1, 2, 4, 8, 16];
+        assert_eq!(knee(&sweep, &[10.0, 20.0, 40.0, 95.0, 97.0]), 8);
+        assert_eq!(knee(&sweep, &[97.0, 97.0, 97.0, 97.0, 97.0]), 1);
+        assert_eq!(knee(&sweep, &[1.0, 2.0, 3.0, 4.0, 5.0]), 16);
+    }
+
+    #[test]
+    fn skx_knee_and_contention_mechanisms() {
+        // The acceptance shapes, straight off the engine: monotone
+        // stride-1 scaling to a knee below the socket count, and a
+        // delta-0 scatter collapse at high thread counts.
+        let c = ctx("mech");
+        let loads = workloads(&c);
+        let skx = platforms::by_name("skx").unwrap();
+        let sweep = skx.thread_sweep();
+        let bw = |w: &Workload, t: usize| {
+            let mut b = OpenMpSim::new(&skx);
+            b.set_threads(Some(t));
+            b.run(&w.pattern, w.kernel).unwrap().bandwidth_gbs()
+        };
+        let s1: Vec<f64> = sweep.iter().map(|&t| bw(&loads[0], t)).collect();
+        for w in s1.windows(2) {
+            assert!(w[1] >= w[0] * 0.99, "monotone to the knee: {s1:?}");
+        }
+        assert!(s1.last().unwrap() > &(1.5 * s1[0]), "{s1:?}");
+        let d0: Vec<f64> = sweep.iter().map(|&t| bw(&loads[2], t)).collect();
+        let peak = d0.iter().fold(0.0f64, |a, &b| a.max(b));
+        assert!(
+            *d0.last().unwrap() < 0.5 * peak,
+            "delta-0 scatter must collapse on SKX: {d0:?}"
+        );
+        // TX2 absorbs repeated writes: no collapse.
+        let tx2 = platforms::by_name("tx2").unwrap();
+        let tx_bw = |t: usize| {
+            let mut b = OpenMpSim::new(&tx2);
+            b.set_threads(Some(t));
+            b.run(&loads[2].pattern, loads[2].kernel)
+                .unwrap()
+                .bandwidth_gbs()
+        };
+        let tx: Vec<f64> = tx2.thread_sweep().iter().map(|&t| tx_bw(t)).collect();
+        let tx_peak = tx.iter().fold(0.0f64, |a, &b| a.max(b));
+        assert!(
+            *tx.last().unwrap() >= 0.9 * tx_peak,
+            "TX2 must not collapse: {tx:?}"
+        );
+    }
+
+    #[test]
+    fn jobs_invariant_report() {
+        let c1 = ctx("j1").with_jobs(1);
+        let c4 = ctx("j4").with_jobs(4);
+        let r1 = threadscale_suite(&c1).unwrap();
+        let r4 = threadscale_suite(&c4).unwrap();
+        assert_eq!(r1, r4);
+        std::fs::remove_dir_all(&c1.out_dir).ok();
+        std::fs::remove_dir_all(&c4.out_dir).ok();
+    }
+}

@@ -1,9 +1,13 @@
 //! Uniform-stride experiments: Figs 3, 4, 5, 6 — plus the page-size
-//! sweep (a Fig 4-style ablation over the `--page-size` knob).
+//! sweep (a Fig 4-style ablation over the `--page-size` knob) and the
+//! `ustride` suite, the same CPU sweep expressed as a `RunConfig`
+//! queue and executed through the parallel scheduler.
 
 use super::{SuiteContext, STRIDES};
 use crate::backends::{Backend, CudaSim, OpenMpSim, ScalarSim};
+use crate::coordinator::{render_table, run_configs_jobs, RunConfig};
 use crate::error::Result;
+use crate::json::{self, Value};
 use crate::pattern::{Kernel, Pattern};
 use crate::platforms;
 use crate::report::{Csv, Table};
@@ -253,6 +257,71 @@ pub fn pagesize_sweep(ctx: &SuiteContext) -> Result<String> {
     Ok(report)
 }
 
+/// `--suite ustride`: the CPU uniform-stride sweep (SKX + BDW, gather
+/// and scatter) expressed as a `RunConfig` queue and executed through
+/// the `--jobs` worker pool. The report table and the `ustride.json`
+/// document go through the same renderers as the CLI, so the suite
+/// doubles as the golden-snapshot anchor pinning the seed numerics —
+/// and its output is byte-identical for any `--jobs` value.
+pub fn ustride_suite(ctx: &SuiteContext) -> Result<String> {
+    let count = ctx.ustride_count();
+    let mut csv =
+        Csv::new(&["platform", "kernel", "stride", "gbs", "bottleneck"]);
+    let mut report = String::from(
+        "== ustride: CPU uniform-stride sweep (parallel run queue) ==\n",
+    );
+    let mut json_platforms: Vec<(String, Value)> = Vec::new();
+    for &name in &["skx", "bdw"] {
+        let platform = platforms::by_name(name)?;
+        // `strides` rides alongside `configs` so the CSV rows below
+        // can zip with `records` instead of re-deriving the ordering.
+        let mut configs = Vec::new();
+        let mut strides = Vec::new();
+        for kernel in [Kernel::Gather, Kernel::Scatter] {
+            for &s in STRIDES {
+                configs.push(RunConfig {
+                    name: format!("{name}/{}/s{s}", kernel.name()),
+                    kernel,
+                    pattern: cpu_ustride(s, count),
+                    page_size: None,
+                    threads: None,
+                });
+                strides.push(s);
+            }
+        }
+        let factory = || -> Result<Box<dyn Backend>> {
+            Ok(Box::new(OpenMpSim::new(&platform)))
+        };
+        let records = run_configs_jobs(&factory, &configs, ctx.jobs)?;
+        for ((c, &s), r) in configs.iter().zip(&strides).zip(&records) {
+            csv.row_display(&[
+                &name,
+                &c.kernel.name(),
+                &s,
+                &format!("{:.3}", r.bandwidth_gbs),
+                &r.bottleneck,
+            ]);
+        }
+        report.push_str(&format!("-- {name} --\n{}", render_table(&records)));
+        json_platforms.push((
+            name.to_string(),
+            Value::Array(records.iter().map(|r| r.to_json()).collect()),
+        ));
+    }
+    // Csv::write has already created ctx.out_dir.
+    csv.write(&ctx.out_dir, "ustride.csv")?;
+    let doc = Value::Object(json_platforms.into_iter().collect());
+    let mut text = json::to_string_pretty(&doc);
+    text.push('\n');
+    std::fs::write(ctx.out_dir.join("ustride.json"), text)?;
+    report.push_str(
+        "Takeaway check: same numerics as fig3 (stride-1 == STREAM, halving \
+         per stride doubling) through the RunConfig queue; table and JSON \
+         are byte-identical for any --jobs value.\n",
+    );
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,6 +381,24 @@ mod tests {
         assert!(r2m.bandwidth_gbs() > r4k.bandwidth_gbs());
         assert_eq!(r4k.breakdown.bottleneck(), "tlb");
         assert_eq!(r2m.breakdown.bottleneck(), "dram-bw");
+    }
+
+    #[test]
+    fn ustride_suite_is_jobs_invariant() {
+        let c1 = ctx("us-j1").with_jobs(1);
+        let c8 = ctx("us-j8").with_jobs(8);
+        let r1 = ustride_suite(&c1).unwrap();
+        let r8 = ustride_suite(&c8).unwrap();
+        assert_eq!(r1, r8, "report must not depend on --jobs");
+        let j1 = std::fs::read_to_string(c1.out_dir.join("ustride.json")).unwrap();
+        let j8 = std::fs::read_to_string(c8.out_dir.join("ustride.json")).unwrap();
+        assert_eq!(j1, j8, "JSON must not depend on --jobs");
+        let csv1 = std::fs::read_to_string(c1.out_dir.join("ustride.csv")).unwrap();
+        let csv8 = std::fs::read_to_string(c8.out_dir.join("ustride.csv")).unwrap();
+        assert_eq!(csv1, csv8, "CSV must not depend on --jobs");
+        assert!(r1.contains("skx/Gather/s1"));
+        std::fs::remove_dir_all(&c1.out_dir).ok();
+        std::fs::remove_dir_all(&c8.out_dir).ok();
     }
 
     #[test]

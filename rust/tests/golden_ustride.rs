@@ -1,0 +1,60 @@
+//! Golden snapshots for the `ustride` suite's fast-mode table and JSON
+//! output, pinning the seed numerics: a refactor that silently shifts
+//! the simulator's numbers fails here, not in a downstream figure.
+//!
+//! Protocol (see `tests/golden/README.md`): missing golden files are
+//! blessed on first run (so a fresh checkout bootstraps itself);
+//! existing files are compared byte-for-byte. Regenerate intentionally
+//! with `SPATTER_UPDATE_GOLDEN=1 cargo test golden`.
+
+use std::fs;
+use std::path::PathBuf;
+
+use spatter::suite::{self, SuiteContext};
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// Compare `actual` against the committed snapshot, blessing it when
+/// the snapshot is absent or `SPATTER_UPDATE_GOLDEN` is set.
+fn check_golden(name: &str, actual: &str) {
+    let path = golden_dir().join(name);
+    let bless = std::env::var_os("SPATTER_UPDATE_GOLDEN").is_some();
+    if bless || !path.exists() {
+        fs::create_dir_all(golden_dir()).unwrap();
+        fs::write(&path, actual).unwrap();
+        eprintln!("golden: blessed {}", path.display());
+        return;
+    }
+    let expected = fs::read_to_string(&path).unwrap();
+    assert!(
+        expected == actual,
+        "golden mismatch for {name}: the suite's numerics shifted.\n\
+         If intentional, regenerate with SPATTER_UPDATE_GOLDEN=1 and commit \
+         the new snapshot.\n--- expected ---\n{expected}\n--- actual ---\n{actual}"
+    );
+}
+
+#[test]
+fn ustride_fast_table_and_json_snapshots() {
+    let out = std::env::temp_dir().join("spatter-golden-ustride");
+    // jobs = 1 here is arbitrary: output is jobs-invariant by the
+    // scheduler contract (pinned separately by the determinism tests).
+    let ctx = SuiteContext::fast(&out).with_jobs(1);
+    let report = suite::run("ustride", &ctx).unwrap();
+    let json = fs::read_to_string(out.join("ustride.json")).unwrap();
+    let csv = fs::read_to_string(out.join("ustride.csv")).unwrap();
+
+    check_golden("ustride_fast_table.txt", &report);
+    check_golden("ustride_fast.json", &json);
+    check_golden("ustride_fast.csv", &csv);
+
+    // Re-running the suite must reproduce the bytes exactly — the
+    // snapshot is meaningful only because the output is deterministic.
+    let report2 = suite::run("ustride", &ctx).unwrap();
+    assert_eq!(report, report2);
+    let json2 = fs::read_to_string(out.join("ustride.json")).unwrap();
+    assert_eq!(json, json2);
+    fs::remove_dir_all(&out).ok();
+}

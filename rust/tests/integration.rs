@@ -174,9 +174,13 @@ fn suite_experiments_all_run_fast() {
         "table1_apps.csv",
         "table4_miniapps.csv",
         "pagesize_sweep.csv",
+        "ustride.csv",
+        "threadscale.csv",
     ] {
         assert!(dir.join(csv).exists(), "{csv}");
     }
+    // The ustride suite also emits its JSON document.
+    assert!(dir.join("ustride.json").exists());
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -276,6 +280,87 @@ fn page_size_knob_cli_and_json_end_to_end() {
     // schema is snake_case; the config-file input key is "page-size").
     let j = recs[1].to_json();
     assert_eq!(j.get("page_size").unwrap().as_str().unwrap(), "2MB");
+}
+
+#[test]
+fn threads_knob_cli_and_json_end_to_end() {
+    use spatter::cli::{parse_args, Command};
+
+    // CLI: `--threads 1` parses into the common args and builds an
+    // engine that cannot saturate DRAM on a stride-1 stream.
+    let argv: Vec<String> =
+        "-k Gather -p UNIFORM:8:1 -d 8 -l 65536 -a skx --threads 1"
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+    let (kernel, pattern, threads) = match parse_args(&argv).unwrap() {
+        Command::Run(r) => (r.kernel, r.pattern, r.common.threads),
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(threads, Some(1));
+    let skx = platforms::by_name("skx").unwrap();
+    let bw_1 = OpenMpSim::configured(&skx, None, threads)
+        .run(&pattern, kernel)
+        .unwrap()
+        .bandwidth_gbs();
+    let bw_full = OpenMpSim::new(&skx)
+        .run(&pattern, kernel)
+        .unwrap()
+        .bandwidth_gbs();
+    assert!(
+        bw_1 < bw_full,
+        "--threads 1 must not saturate: {bw_1:.1} vs {bw_full:.1}"
+    );
+
+    // JSON: the `"threads"` key drives the same mechanism per run, and
+    // the record JSON reports the modelled count.
+    let cfg = r#"[
+      {"name": "full", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+       "delta": 8, "count": 65536},
+      {"name": "one", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+       "delta": 8, "count": 65536, "threads": 1}
+    ]"#;
+    let configs = coordinator::parse_config_text(cfg).unwrap();
+    let mut backend = OpenMpSim::new(&skx);
+    let recs = coordinator::run_configs(&mut backend, &configs).unwrap();
+    assert_eq!(recs[0].threads, Some(16));
+    assert_eq!(recs[1].threads, Some(1));
+    assert!(recs[1].bandwidth_gbs < recs[0].bandwidth_gbs);
+    let j = recs[1].to_json();
+    assert_eq!(j.get("threads").unwrap().as_usize().unwrap(), 1);
+}
+
+#[test]
+fn jobs_scheduler_end_to_end_byte_identical() {
+    // The --jobs contract at the outermost library layer: the same
+    // config set rendered through the CLI's own table/JSON renderers
+    // is byte-identical for serial and parallel execution.
+    let cfg = r#"[
+      {"name": "stream", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+       "delta": 8, "count": 65536},
+      {"name": "strided", "kernel": "Gather", "pattern": "UNIFORM:8:16",
+       "delta": 128, "count": 65536},
+      {"name": "lulesh", "kernel": "Scatter", "pattern": "LULESH-S1",
+       "count": 65536},
+      {"name": "huge-2m", "kernel": "Gather", "pattern": "UNIFORM:16:512",
+       "delta": 16384, "count": 16384, "page-size": "2MB"},
+      {"name": "narrow", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+       "delta": 8, "count": 65536, "threads": 2}
+    ]"#;
+    let configs = coordinator::parse_config_text(cfg).unwrap();
+    let factory = || -> spatter::Result<Box<dyn Backend>> {
+        Ok(Box::new(OpenMpSim::new(&platforms::by_name("clx").unwrap())))
+    };
+    let serial = coordinator::run_configs_jobs(&factory, &configs, 1).unwrap();
+    let parallel = coordinator::run_configs_jobs(&factory, &configs, 8).unwrap();
+    assert_eq!(
+        coordinator::render_table(&serial),
+        coordinator::render_table(&parallel)
+    );
+    assert_eq!(
+        coordinator::render_json(&serial),
+        coordinator::render_json(&parallel)
+    );
 }
 
 #[test]

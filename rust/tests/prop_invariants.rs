@@ -120,6 +120,101 @@ fn prop_classifier_is_total_and_stable() {
 }
 
 // ---------------------------------------------------------------------------
+// Built-in pattern builders (uniform / ms1 / laplacian / random)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_uniform_builder_length_and_bounds() {
+    check("uniform: length, zero-base, max_index", 100, |g| {
+        let n = g.usize_in(1, 128);
+        let stride = g.usize_in(1, 64);
+        let idx = pattern::uniform(n, stride).unwrap();
+        assert_eq!(idx.len(), n);
+        assert!(idx.iter().all(|&i| i >= 0));
+        let p = Pattern::from_indices("u", idx);
+        assert_eq!(p.max_index(), ((n - 1) * stride) as i64);
+    });
+}
+
+#[test]
+fn prop_ms1_builder_length_and_bounds() {
+    check("ms1: length, monotonicity, max_index", 100, |g| {
+        let n = g.usize_in(2, 96);
+        // Strictly increasing breaks in 1..n, random spacing.
+        let mut breaks = Vec::new();
+        let mut b = g.usize_in(1, n - 1);
+        while b < n && breaks.len() < 6 {
+            breaks.push(b);
+            b += g.usize_in(1, 8);
+        }
+        let gap = g.i64_in(1, 100);
+        let idx = pattern::ms1(n, &breaks, &[gap]).unwrap();
+        assert_eq!(idx.len(), n, "requested length respected");
+        assert_eq!(idx[0], 0);
+        assert!(idx.windows(2).all(|w| w[1] > w[0]), "monotone: {idx:?}");
+        assert!(idx.iter().all(|&i| i >= 0));
+        // n-1 steps: breaks.len() jumps of `gap`, the rest +1.
+        let expected_max = (n - 1) as i64 + breaks.len() as i64 * (gap - 1);
+        let p = Pattern::from_indices("m", idx);
+        assert_eq!(p.max_index(), expected_max);
+    });
+}
+
+#[test]
+fn prop_ms1_rejects_mismatched_breaks_and_gaps() {
+    check("ms1: |gaps| must be 1 or |breaks|", 50, |g| {
+        let n = g.usize_in(8, 64);
+        let breaks = [1usize, 3, 5];
+        // Any gap-list length other than 1 or |breaks| is rejected.
+        let bad_len = *g.choose(&[0usize, 2, 4, 5]);
+        let gaps: Vec<i64> = (0..bad_len).map(|_| g.i64_in(1, 9)).collect();
+        assert!(
+            pattern::ms1(n, &breaks, &gaps).is_err(),
+            "3 breaks, {bad_len} gaps must be rejected"
+        );
+        // The two accepted shapes still work.
+        assert!(pattern::ms1(n, &breaks, &[2]).is_ok());
+        assert!(pattern::ms1(n, &breaks, &[2, 3, 4]).is_ok());
+    });
+}
+
+#[test]
+fn prop_laplacian_builder_length_and_bounds() {
+    check("laplacian: point count, zero-base, max_index", 100, |g| {
+        let dims = g.usize_in(1, 3);
+        let branch = g.usize_in(1, 4);
+        // size > branch keeps all 2*D*L+1 offsets distinct.
+        let size = g.usize_in(branch + 1, 64);
+        let idx = pattern::laplacian(dims, branch, size).unwrap();
+        assert_eq!(idx.len(), 2 * dims * branch + 1, "stencil point count");
+        assert_eq!(idx[0], 0, "zero-based");
+        assert!(idx.windows(2).all(|w| w[1] > w[0]), "sorted unique");
+        // Symmetric stencil: max = 2 * branch * size^(dims-1).
+        let scale = (size as i64).pow(dims as u32 - 1);
+        let p = Pattern::from_indices("l", idx);
+        assert_eq!(p.max_index(), 2 * branch as i64 * scale);
+    });
+}
+
+#[test]
+fn prop_random_builder_length_and_bounds() {
+    check("random: length, range bound, determinism", 100, |g| {
+        let n = g.usize_in(1, 128);
+        let range = g.usize_in(1, 10_000);
+        let seed = g.usize_in(0, 1 << 20);
+        let spec = format!("RANDOM:{n}:{range}:{seed}");
+        let idx = pattern::parse_spec(&spec).unwrap();
+        assert_eq!(idx.len(), n, "requested length respected");
+        assert!(
+            idx.iter().all(|&i| (0..range as i64).contains(&i)),
+            "indices within [0, {range}): {idx:?}"
+        );
+        // Deterministic per seed.
+        assert_eq!(pattern::parse_spec(&spec).unwrap(), idx);
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Cache model
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,74 @@
+//! Trace-pipeline invariants: the extractor's clustering is fully
+//! deterministic across runs, and it recovers known Table-5
+//! (indices, delta) pairs from every mini-app emulator — the §2
+//! methodology validated against the paper's own ground truth.
+
+use spatter::pattern::table5;
+use spatter::trace::extract::extract_from_trace;
+use spatter::trace::miniapps;
+
+#[test]
+fn extraction_is_deterministic_across_runs() {
+    let a = miniapps::run_all(1);
+    let b = miniapps::run_all(1);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.app, y.app);
+        assert_eq!(x.kernels.len(), y.kernels.len(), "{}", x.app);
+        for (kx, ky) in x.kernels.iter().zip(&y.kernels) {
+            let px = extract_from_trace(kx, 0);
+            let py = extract_from_trace(ky, 0);
+            assert_eq!(px.len(), py.len(), "{}::{}", x.app, kx.kernel);
+            for (p, q) in px.iter().zip(&py) {
+                assert_eq!(p.kernel, q.kernel, "{}::{}", x.app, kx.kernel);
+                assert_eq!(p.indices, q.indices, "{}::{}", x.app, kx.kernel);
+                assert_eq!(p.delta, q.delta, "{}::{}", x.app, kx.kernel);
+                assert_eq!(p.occurrences, q.occurrences);
+                assert_eq!(p.bytes, q.bytes);
+                assert_eq!(p.class, q.class);
+            }
+        }
+    }
+}
+
+#[test]
+fn extraction_ranking_is_by_bytes_descending() {
+    for app in miniapps::run_all(1) {
+        for k in &app.kernels {
+            let pats = extract_from_trace(k, 0);
+            assert!(
+                pats.windows(2).all(|w| w[0].bytes >= w[1].bytes),
+                "{}::{} not ranked by bytes",
+                app.app,
+                k.kernel
+            );
+        }
+    }
+}
+
+#[test]
+fn extraction_recovers_table5_pairs_from_every_app() {
+    // For every mini-app, at least one extracted cluster must match a
+    // Table-5 row exactly: same kernel, same index buffer, same delta.
+    for app in miniapps::run_all(1) {
+        let known = table5::by_app(app.app);
+        assert!(!known.is_empty(), "no Table 5 rows for {}", app.app);
+        let mut exact = 0usize;
+        for k in &app.kernels {
+            for p in extract_from_trace(k, 0) {
+                if known.iter().any(|t| {
+                    t.kernel == p.kernel
+                        && t.indices == p.indices.as_slice()
+                        && t.delta == p.delta
+                }) {
+                    exact += 1;
+                }
+            }
+        }
+        assert!(
+            exact >= 1,
+            "{}: no extracted (kernel, indices, delta) matches Table 5",
+            app.app
+        );
+    }
+}
