@@ -1,0 +1,96 @@
+//! Perf-trajectory bench (plain `std::time::Instant` harness, no
+//! external deps): times the fast `ustride` CPU sweep and a
+//! 256-iteration LULESH-S3 scatter, each with steady-state loop
+//! closure enabled and force-disabled, and emits `BENCH_sim.json`
+//! (`{"suite": ..., "wall_ms": ...}` records) so the repo's perf
+//! numbers accumulate run over run.
+//!
+//! Run via `scripts/bench.sh` (or `cargo bench --bench sweep`); the
+//! output path can be overridden with the `BENCH_SIM_JSON` env var.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use spatter::json::{self, obj, Value};
+use spatter::pattern::{table5, Kernel};
+use spatter::platforms;
+use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
+use spatter::suite::{cpu_ustride, STRIDES};
+
+/// Engine options with closure pinned explicitly (independent of the
+/// `SPATTER_NO_CLOSURE` env var, so both arms run in one process).
+fn opts(closure_enabled: bool) -> CpuSimOptions {
+    CpuSimOptions {
+        closure_enabled,
+        ..Default::default()
+    }
+}
+
+/// The `--suite ustride --fast` workload: SKX + BDW, gather + scatter,
+/// strides 1..128 at the fast-mode count.
+fn ustride_fast_sweep(closure: bool) {
+    let count = 1 << 16;
+    for name in ["skx", "bdw"] {
+        let p = platforms::by_name(name).unwrap();
+        let mut e = CpuEngine::with_options(&p, opts(closure));
+        for kernel in [Kernel::Gather, Kernel::Scatter] {
+            for &s in STRIDES {
+                let r = e.run(&cpu_ustride(s, count), kernel).unwrap();
+                black_box(r.bandwidth_gbs());
+            }
+        }
+    }
+}
+
+/// 512 repetitions of a 256-iteration LULESH-S3 scatter — the paper's
+/// delta-0 coherence-storm proxy, where closure collapses nearly the
+/// whole run.
+fn lulesh_s3_256(closure: bool) {
+    let s3 = table5::by_name("LULESH-S3").unwrap().to_pattern(256);
+    let p = platforms::by_name("skx").unwrap();
+    let mut e = CpuEngine::with_options(&p, opts(closure));
+    for _ in 0..512 {
+        let r = e.run(&s3, Kernel::Scatter).unwrap();
+        black_box(r.seconds);
+    }
+}
+
+fn time_ms(f: impl FnOnce()) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+fn main() {
+    let mut records: Vec<Value> = Vec::new();
+    let mut bench = |suite: &str, f: fn(bool)| {
+        let on_ms = time_ms(|| f(true));
+        let off_ms = time_ms(|| f(false));
+        println!(
+            "{suite}: closure on {on_ms:.1} ms, off {off_ms:.1} ms \
+             ({:.2}x)",
+            off_ms / on_ms
+        );
+        for (closure, wall_ms) in [(true, on_ms), (false, off_ms)] {
+            records.push(obj(&[
+                ("suite", Value::from(suite)),
+                ("closure", Value::Bool(closure)),
+                ("wall_ms", Value::from(wall_ms)),
+            ]));
+        }
+        records.push(obj(&[
+            ("suite", Value::from(suite)),
+            ("closure_speedup", Value::from(off_ms / on_ms)),
+        ]));
+    };
+
+    bench("ustride-fast", ustride_fast_sweep);
+    bench("lulesh-s3-256", lulesh_s3_256);
+
+    let out = std::env::var("BENCH_SIM_JSON")
+        .unwrap_or_else(|_| "BENCH_sim.json".to_string());
+    let mut text = json::to_string_pretty(&Value::Array(records));
+    text.push('\n');
+    std::fs::write(&out, text).expect("write BENCH_sim.json");
+    println!("wrote {out}");
+}

@@ -11,6 +11,13 @@
 //! | Scalar (`#pragma novec`) | [`ScalarSim`] — CPU engine, scalar issue |
 //! | CUDA | [`CudaSim`] — GPU engine |
 //! | (n/a) | [`PjrtBackend`] — real execution + wall-clock timing |
+//!
+//! The simulated backends run with steady-state loop closure
+//! (`sim::closure`) enabled: results are bit-identical to full
+//! simulation, long runs cost O(warm-up) instead of O(iterations),
+//! and each record carries a `closed_at` diagnostic (`"sim-closure"`
+//! in JSON output). Set `SPATTER_NO_CLOSURE=1` to force full
+//! simulation for A/B benchmarking (`scripts/bench.sh`).
 
 mod pjrt;
 

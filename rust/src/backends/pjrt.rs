@@ -181,6 +181,7 @@ impl Backend for PjrtBackend {
             },
             breakdown: TimeBreakdown::default(),
             simulated_iterations: variant.count,
+            closed_at_iteration: None,
         })
     }
 }

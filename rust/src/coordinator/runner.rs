@@ -36,6 +36,11 @@ pub struct RunRecord {
     /// Simulated OpenMP thread count the run modelled; `None` for
     /// backends without a thread model (GPU, real execution).
     pub threads: Option<usize>,
+    /// Measured-pass iteration at which the engine's steady-state
+    /// loop closure fired (`None`: full simulation — closure disabled,
+    /// no cycle found, or a real-execution backend). Diagnostic only:
+    /// counters and bandwidths are identical either way.
+    pub closed_at: Option<usize>,
 }
 
 impl RunRecord {
@@ -72,6 +77,13 @@ impl RunRecord {
                     None => Value::Null,
                 },
             ),
+            (
+                "sim-closure",
+                match self.closed_at {
+                    Some(i) => Value::from(i),
+                    None => Value::Null,
+                },
+            ),
         ])
     }
 }
@@ -97,6 +109,7 @@ pub fn run_one(
         page_size: backend.page_size().map(|p| p.name().to_string()),
         tlb_hit_rate: r.counters.tlb.hit_rate(),
         threads: backend.threads(),
+        closed_at: r.closed_at_iteration,
     })
 }
 
@@ -322,6 +335,9 @@ mod tests {
         assert!(j.get("bandwidth_gbs").unwrap().as_f64().unwrap() > 0.0);
         // The thread-count column rides along (SKX default: 16).
         assert_eq!(j.get("threads").unwrap().as_usize().unwrap(), 16);
+        // The closure diagnostic rides along too (Null when the pass
+        // ran in full — either way the key is present).
+        assert!(j.get("sim-closure").is_some());
     }
 
     fn skx_factory() -> crate::error::Result<Box<dyn crate::backends::Backend>>

@@ -94,6 +94,12 @@ fn run(args: &[String]) -> Result<()> {
                 &r.pattern,
                 r.kernel,
             )?;
+            if let Some(i) = record.closed_at {
+                eprintln!(
+                    "spatter: sim-closure: steady state reached at iteration \
+                     {i}; remaining iterations closed analytically"
+                );
+            }
             emit(&[record], &r.common);
             Ok(())
         }

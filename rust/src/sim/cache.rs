@@ -5,6 +5,23 @@
 //! hierarchy layer does the conversion. Each line tracks a dirty bit
 //! and whether it arrived via prefetch (for prefetch-accuracy
 //! accounting in the Fig 4 study).
+//!
+//! Layout is struct-of-arrays (§Perf): the hit scan — the single
+//! hottest loop in the simulator — touches only the packed tag plane,
+//! as a branch-free compare pass over one or two host cache lines.
+//! Invalid ways hold [`INVALID_TAG`], which no reachable line/page
+//! number can equal (pattern validation caps the address space at
+//! 2^49 bytes), so the tag compare needs no validity check.
+//!
+//! The cache also maintains an incremental [`StateSig`] over its
+//! resident ways so the loop-closure layer (`sim::closure`) can
+//! fingerprint the complete tag/LRU/dirty state in O(1) per outer
+//! iteration instead of rehashing the arrays, and supports an exact
+//! [`relocate`](Cache::relocate) that shifts the whole state by a
+//! constant line delta (tags translated, sets rotated, stamps kept)
+//! when a closed loop fast-forwards the simulation.
+
+use super::closure::StateSig;
 
 /// Result of a cache probe.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -15,41 +32,20 @@ pub enum Probe {
     Miss,
 }
 
-/// One way, packed to 16 bytes so a whole 16-way set spans 4 cache
-/// lines of host memory (§Perf: set scans dominate the hot path).
-#[derive(Debug, Clone, Copy)]
-struct Way {
-    tag: u64,
-    /// LRU timestamp (wraps far beyond any simulated run length).
-    stamp: u32,
-    /// Bit 0 = valid, bit 1 = dirty, bit 2 = prefetched-untouched.
-    flags: u8,
-}
-
 const F_VALID: u8 = 1;
 const F_DIRTY: u8 = 2;
 const F_PREFETCHED: u8 = 4;
 
-impl Way {
-    #[inline]
-    fn valid(&self) -> bool {
-        self.flags & F_VALID != 0
-    }
-    #[inline]
-    fn dirty(&self) -> bool {
-        self.flags & F_DIRTY != 0
-    }
-    #[inline]
-    fn prefetched(&self) -> bool {
-        self.flags & F_PREFETCHED != 0
-    }
-}
+/// Tag sentinel for invalid ways (see module docs).
+const INVALID_TAG: u64 = u64::MAX;
 
-const EMPTY: Way = Way {
-    tag: 0,
-    stamp: 0,
-    flags: 0,
-};
+/// Pack a way's tag and flag bits into the signature coordinate. The
+/// shift keeps the packing linear in the tag, which is what lets the
+/// signature's power sums commute with address shifts.
+#[inline]
+fn sig_x(tag: u64, flags: u8) -> u64 {
+    (tag << 3) | (flags & 0x7) as u64
+}
 
 /// Largest power of two <= n (n >= 1).
 fn prev_power_of_two(n: usize) -> usize {
@@ -61,9 +57,17 @@ fn prev_power_of_two(n: usize) -> usize {
 pub struct Cache {
     sets: usize,
     assoc: usize,
-    ways: Vec<Way>,
-    /// LRU clock (u32: capped sim lengths never approach wrap; reset per run).
+    /// Tag plane; `INVALID_TAG` marks empty ways.
+    tags: Vec<u64>,
+    /// LRU timestamps (u32: capped sim lengths never approach wrap;
+    /// reset per run).
+    stamps: Vec<u32>,
+    /// Bit 0 = valid, bit 1 = dirty, bit 2 = prefetched-untouched.
+    flags: Vec<u8>,
+    /// LRU clock.
     clock: u32,
+    /// Incremental state signature over the resident ways.
+    sig: StateSig,
     /// Statistics.
     pub hits: u64,
     pub misses: u64,
@@ -83,11 +87,15 @@ impl Cache {
         // parts with non-power-of-two capacity, e.g. 33 MB 11-way SKX
         // L3, are modelled slightly small rather than slightly large).
         let sets = prev_power_of_two((lines / assoc).max(1));
+        let ways = sets * assoc;
         Cache {
             sets,
             assoc,
-            ways: vec![EMPTY; sets * assoc],
+            tags: vec![INVALID_TAG; ways],
+            stamps: vec![0; ways],
+            flags: vec![0; ways],
             clock: 0,
+            sig: StateSig::default(),
             hits: 0,
             misses: 0,
             writebacks: 0,
@@ -108,8 +116,25 @@ impl Cache {
         (line as usize) & (self.sets - 1)
     }
 
-    fn slot_range(&self, set: usize) -> std::ops::Range<usize> {
-        set * self.assoc..(set + 1) * self.assoc
+    /// Branch-free tag-match pass over one set (§Perf): scans the
+    /// packed tag plane without early exit or validity checks — the
+    /// sentinel makes invalid ways unmatchable — so the loop compiles
+    /// to straight-line compares.
+    #[inline]
+    fn find(&self, set: usize, line: u64) -> Option<usize> {
+        let b = set * self.assoc;
+        let tags = &self.tags[b..b + self.assoc];
+        let mut found = usize::MAX;
+        for (k, &t) in tags.iter().enumerate() {
+            if t == line {
+                found = k;
+            }
+        }
+        if found == usize::MAX {
+            None
+        } else {
+            Some(b + found)
+        }
     }
 
     /// Issue a host software-prefetch for the set `line` maps to
@@ -121,12 +146,13 @@ impl Cache {
         unsafe {
             use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
             let idx = self.set_of(line) * self.assoc;
-            let ptr = self.ways.as_ptr().add(idx) as *const i8;
-            _mm_prefetch(ptr, _MM_HINT_T0);
-            // Sets larger than one host line: touch the tail too.
-            if self.assoc > 4 {
-                _mm_prefetch(ptr.add(64), _MM_HINT_T0);
+            let tp = self.tags.as_ptr().add(idx) as *const i8;
+            _mm_prefetch(tp, _MM_HINT_T0);
+            // Tag sets larger than one host line: touch the tail too.
+            if self.assoc > 8 {
+                _mm_prefetch(tp.add(64), _MM_HINT_T0);
             }
+            _mm_prefetch(self.stamps.as_ptr().add(idx) as *const i8, _MM_HINT_T0);
         }
         #[cfg(not(target_arch = "x86_64"))]
         let _ = line;
@@ -138,21 +164,19 @@ impl Cache {
     pub fn access(&mut self, line: u64, is_write: bool) -> Probe {
         self.clock += 1;
         let set = self.set_of(line);
-        for i in self.slot_range(set) {
-            let w = &mut self.ways[i];
-            if w.valid() && w.tag == line {
-                let was_prefetched = w.prefetched();
-                if was_prefetched {
-                    self.prefetch_hits += 1;
-                }
-                w.flags &= !F_PREFETCHED;
-                w.stamp = self.clock;
-                if is_write {
-                    w.flags |= F_DIRTY;
-                }
-                self.hits += 1;
-                return Probe::Hit { was_prefetched };
+        if let Some(i) = self.find(set, line) {
+            let of = self.flags[i];
+            let was_prefetched = of & F_PREFETCHED != 0;
+            if was_prefetched {
+                self.prefetch_hits += 1;
             }
+            let nf = (of & !F_PREFETCHED) | if is_write { F_DIRTY } else { 0 };
+            self.sig.remove(sig_x(line, of), self.stamps[i] as u64);
+            self.flags[i] = nf;
+            self.stamps[i] = self.clock;
+            self.sig.insert(sig_x(line, nf), self.clock as u64);
+            self.hits += 1;
+            return Probe::Hit { was_prefetched };
         }
         self.misses += 1;
         Probe::Miss
@@ -161,28 +185,22 @@ impl Cache {
     /// Probe without statistics or LRU update (used by prefetchers to
     /// avoid redundant fills).
     pub fn contains(&self, line: u64) -> bool {
-        let set = self.set_of(line);
-        self.ways[self.slot_range(set)]
-            .iter()
-            .any(|w| w.valid() && w.tag == line)
+        self.find(self.set_of(line), line).is_some()
     }
 
     /// Insert a line, evicting LRU if needed. Returns the evicted dirty
     /// line (for writeback accounting), if any.
     pub fn fill(&mut self, line: u64, is_write: bool, prefetched: bool) -> Option<u64> {
-        let set = self.set_of(line);
         // Already present (e.g. prefetch raced with demand): refresh.
-        for i in self.slot_range(set) {
-            if self.ways[i].valid() && self.ways[i].tag == line {
-                self.clock += 1;
-                let clock = self.clock;
-                let w = &mut self.ways[i];
-                w.stamp = clock;
-                if is_write {
-                    w.flags |= F_DIRTY;
-                }
-                return None;
-            }
+        if let Some(i) = self.find(self.set_of(line), line) {
+            self.clock += 1;
+            let of = self.flags[i];
+            let nf = of | if is_write { F_DIRTY } else { 0 };
+            self.sig.remove(sig_x(line, of), self.stamps[i] as u64);
+            self.flags[i] = nf;
+            self.stamps[i] = self.clock;
+            self.sig.insert(sig_x(line, nf), self.clock as u64);
+            return None;
         }
         self.fill_after_miss(line, is_write, prefetched)
     }
@@ -198,101 +216,45 @@ impl Cache {
     ) -> Option<u64> {
         self.clock += 1;
         let set = self.set_of(line);
-        let range = self.slot_range(set);
-        debug_assert!(!self.contains(line));
+        debug_assert!(self.find(set, line).is_none());
         if prefetched {
             self.prefetch_fills += 1;
         }
         // Find invalid or LRU victim.
-        let mut victim = range.start;
+        let b = set * self.assoc;
+        let mut victim = b;
         let mut best = u32::MAX;
-        for i in range {
-            let w = &self.ways[i];
-            if !w.valid() {
+        for i in b..b + self.assoc {
+            if self.tags[i] == INVALID_TAG {
                 victim = i;
                 break;
             }
-            if w.stamp < best {
-                best = w.stamp;
+            if self.stamps[i] < best {
+                best = self.stamps[i];
                 victim = i;
             }
         }
-        let evicted = {
-            let w = &self.ways[victim];
-            if w.valid() && w.dirty() {
+        let evicted = if self.tags[victim] != INVALID_TAG {
+            let vt = self.tags[victim];
+            let vf = self.flags[victim];
+            self.sig.remove(sig_x(vt, vf), self.stamps[victim] as u64);
+            if vf & F_DIRTY != 0 {
                 self.writebacks += 1;
-                Some(w.tag)
+                Some(vt)
             } else {
                 None
             }
+        } else {
+            None
         };
-        self.ways[victim] = Way {
-            tag: line,
-            stamp: self.clock,
-            flags: F_VALID
-                | if is_write { F_DIRTY } else { 0 }
-                | if prefetched { F_PREFETCHED } else { 0 },
-        };
+        let nf = F_VALID
+            | if is_write { F_DIRTY } else { 0 }
+            | if prefetched { F_PREFETCHED } else { 0 };
+        self.tags[victim] = line;
+        self.stamps[victim] = self.clock;
+        self.flags[victim] = nf;
+        self.sig.insert(sig_x(line, nf), self.clock as u64);
         evicted
-    }
-
-    /// Fused demand access + fill-on-miss in a single set scan (§Perf:
-    /// the miss path previously paid one scan to probe and another to
-    /// pick the victim). On hit behaves exactly like [`access`]; on
-    /// miss inserts the line and returns the evicted dirty line.
-    pub fn access_fill(
-        &mut self,
-        line: u64,
-        is_write: bool,
-    ) -> (Probe, Option<u64>) {
-        self.clock += 1;
-        let set = self.set_of(line);
-        let range = self.slot_range(set);
-        let mut victim = range.start;
-        let mut best = u32::MAX;
-        for i in range {
-            let w = &mut self.ways[i];
-            if w.valid() {
-                if w.tag == line {
-                    let was_prefetched = w.prefetched();
-                    if was_prefetched {
-                        self.prefetch_hits += 1;
-                    }
-                    w.flags &= !F_PREFETCHED;
-                    w.stamp = self.clock;
-                    if is_write {
-                        w.flags |= F_DIRTY;
-                    }
-                    self.hits += 1;
-                    return (Probe::Hit { was_prefetched }, None);
-                }
-                if w.stamp < best {
-                    best = w.stamp;
-                    victim = i;
-                }
-            } else if best != 0 {
-                // Remember the first invalid way (beats any LRU pick)
-                // but keep scanning for a hit.
-                best = 0;
-                victim = i;
-            }
-        }
-        self.misses += 1;
-        let evicted = {
-            let w = &self.ways[victim];
-            if w.valid() && w.dirty() {
-                self.writebacks += 1;
-                Some(w.tag)
-            } else {
-                None
-            }
-        };
-        self.ways[victim] = Way {
-            tag: line,
-            stamp: self.clock,
-            flags: F_VALID | if is_write { F_DIRTY } else { 0 },
-        };
-        (Probe::Miss, evicted)
     }
 
     /// Fill only when absent, reporting whether an insert happened
@@ -304,31 +266,78 @@ impl Cache {
         is_write: bool,
         prefetched: bool,
     ) -> (bool, Option<u64>) {
-        let set = self.set_of(line);
-        for i in self.slot_range(set) {
-            if self.ways[i].valid() && self.ways[i].tag == line {
-                return (false, None);
-            }
+        if self.find(self.set_of(line), line).is_some() {
+            return (false, None);
         }
         (true, self.fill_after_miss(line, is_write, prefetched))
     }
 
     /// Invalidate a line (coherence). Returns true if it was present.
     pub fn invalidate(&mut self, line: u64) -> bool {
-        let set = self.set_of(line);
-        for i in self.slot_range(set) {
-            if self.ways[i].valid() && self.ways[i].tag == line {
-                self.ways[i] = EMPTY;
-                return true;
-            }
+        if let Some(i) = self.find(self.set_of(line), line) {
+            self.sig
+                .remove(sig_x(self.tags[i], self.flags[i]), self.stamps[i] as u64);
+            self.tags[i] = INVALID_TAG;
+            self.stamps[i] = 0;
+            self.flags[i] = 0;
+            return true;
         }
         false
     }
 
+    /// Digest of the cache's complete state *relative* to
+    /// `shift_units` (a line/page number): the multiset of
+    /// `(tag - shift, flags, clock - stamp)` per resident way. O(1) —
+    /// derived from the incremental signature, not a state walk.
+    pub fn state_digest(&self, shift_units: u64, seed: u64) -> u64 {
+        self.sig.digest(shift_units << 3, self.clock as u64, seed)
+    }
+
+    /// Shift the whole state forward by `delta_units` lines/pages:
+    /// every tag is translated and every set moves wholesale to its
+    /// rotated index, preserving within-set way order and stamps. Used
+    /// by loop closure to fast-forward over skipped cycles; the result
+    /// is exactly the state full simulation would have reached (up to
+    /// the absolute value of the LRU clock, which is unobservable).
+    pub fn relocate(&mut self, delta_units: u64) {
+        if delta_units == 0 {
+            return;
+        }
+        let mask = self.sets - 1;
+        let rot = (delta_units as usize) & mask;
+        let ways = self.sets * self.assoc;
+        let mut tags = vec![INVALID_TAG; ways];
+        let mut stamps = vec![0u32; ways];
+        let mut flags = vec![0u8; ways];
+        let mut sig = StateSig::default();
+        for s in 0..self.sets {
+            let ns = (s + rot) & mask;
+            for k in 0..self.assoc {
+                let i = s * self.assoc + k;
+                if self.tags[i] == INVALID_TAG {
+                    continue;
+                }
+                let j = ns * self.assoc + k;
+                let nt = self.tags[i].wrapping_add(delta_units);
+                tags[j] = nt;
+                stamps[j] = self.stamps[i];
+                flags[j] = self.flags[i];
+                sig.insert(sig_x(nt, self.flags[i]), self.stamps[i] as u64);
+            }
+        }
+        self.tags = tags;
+        self.stamps = stamps;
+        self.flags = flags;
+        self.sig = sig;
+    }
+
     /// Clear contents and statistics.
     pub fn reset(&mut self) {
-        self.ways.fill(EMPTY);
+        self.tags.fill(INVALID_TAG);
+        self.stamps.fill(0);
+        self.flags.fill(0);
         self.clock = 0;
+        self.sig.reset();
         self.hits = 0;
         self.misses = 0;
         self.writebacks = 0;
@@ -340,6 +349,7 @@ impl Cache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::closure::SEED_A;
 
     fn small() -> Cache {
         // 4 sets x 2 ways x 64B lines = 512 B
@@ -473,5 +483,65 @@ mod tests {
         c.fill(8, false, false);
         let present = [0u64, 4, 8].iter().filter(|&&l| c.contains(l)).count();
         assert_eq!(present, 2);
+    }
+
+    /// Drive two caches with the same stream shifted by a constant:
+    /// their state digests must agree relative to their shifts, and a
+    /// later divergence in the streams must split the digests.
+    #[test]
+    fn state_digest_is_shift_invariant() {
+        let mut a = Cache::new(4096, 64, 4);
+        let mut b = Cache::new(4096, 64, 4);
+        // Multiple of the set count (16) so both streams see the same
+        // set conflicts — the precondition loop closure guarantees.
+        let d = 4096u64;
+        let stream = [0u64, 1, 5, 1, 64, 9, 5, 130, 0];
+        for &l in &stream {
+            if a.access(l, l % 3 == 0) == Probe::Miss {
+                a.fill_after_miss(l, l % 3 == 0, false);
+            }
+            let m = l + d;
+            if b.access(m, l % 3 == 0) == Probe::Miss {
+                b.fill_after_miss(m, l % 3 == 0, false);
+            }
+        }
+        assert_eq!(a.state_digest(0, SEED_A), b.state_digest(d, SEED_A));
+        assert_eq!(a.state_digest(7, SEED_A), b.state_digest(7 + d, SEED_A));
+        // Diverge: only b sees one more access.
+        b.access(d, false);
+        assert_ne!(a.state_digest(0, SEED_A), b.state_digest(d, SEED_A));
+    }
+
+    /// Relocation must be exactly equivalent to having simulated the
+    /// shifted stream from the start: same probes, same evictions
+    /// (shifted), same digest.
+    #[test]
+    fn relocate_matches_shifted_history() {
+        let d = 1 << 20; // multiple of every power-of-two set count
+        let mut a = Cache::new(2048, 64, 2);
+        let mut shifted = Cache::new(2048, 64, 2);
+        let warm = [3u64, 19, 3, 35, 7, 99, 3, 51];
+        for &l in &warm {
+            a.fill(l, l % 2 == 1, false);
+            shifted.fill(l + d, l % 2 == 1, false);
+        }
+        a.relocate(d);
+        assert_eq!(
+            a.state_digest(d, SEED_A),
+            shifted.state_digest(d, SEED_A),
+            "relocated state must digest identically"
+        );
+        // And behave identically from here on.
+        let tail = [3u64, 67, 19, 131, 7, 7, 99];
+        for &l in &tail {
+            let m = l + d;
+            assert_eq!(a.access(m, false), shifted.access(m, false), "line {l}");
+            if !a.contains(m) {
+                assert_eq!(
+                    a.fill_after_miss(m, true, false),
+                    shifted.fill_after_miss(m, true, false)
+                );
+            }
+        }
     }
 }

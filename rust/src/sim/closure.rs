@@ -1,0 +1,386 @@
+//! Steady-state detection and loop closure, shared by the CPU and GPU
+//! engines.
+//!
+//! # Why it is exact
+//!
+//! Both engines advance a periodic index pattern through a
+//! deterministic state machine (caches, TLB, prefetcher, DRAM open-row
+//! tracker). The machine's evolution is *equivariant under address
+//! shifts*: adding a constant to every resident tag, the base address,
+//! and the access stream produces the same hit/miss/eviction sequence
+//! with every address shifted by that constant — set indices rotate
+//! uniformly, LRU decisions depend only on stamp order, and the
+//! alignment-sensitive mechanisms (page crossings, DRAM rows, buddy
+//! lines, the 4 KiB prefetch fence) are preserved as long as the shift
+//! is a multiple of the page size (which divides all of them).
+//!
+//! So the engines fingerprint their state *relative to the current
+//! base address* after every outer iteration, together with the base's
+//! page-alignment residue and the delta-cycle phase. When a
+//! fingerprint repeats, the machine is in a cycle: every subsequent
+//! cycle produces the identical per-cycle counter delta. The engine
+//! then multiplies that delta across the remaining whole cycles,
+//! relocates its state forward by the skipped address advance (an
+//! exact shift: tags translated, sets rotated, stamps untouched), and
+//! simulates only the sub-cycle tail — producing counters and final
+//! state identical to full simulation.
+//!
+//! # The incremental signature
+//!
+//! Rehashing a 33 MB simulated L3 every iteration would dwarf the
+//! iteration itself, so [`StateSig`] maintains *power sums* of each
+//! structure's `(tag, stamp)` pairs under wrapping arithmetic,
+//! updated O(1) per mutation. Power sums commute with shifts via the
+//! binomial theorem, so the shift-*relative* digest is computable in
+//! O(1) at fingerprint time from the absolute sums — no rehash, no
+//! walk.
+//!
+//! A false cycle requires two different states to agree on *every*
+//! maintained moment of *every* structure simultaneously: per cache
+//! nine wrapping moments — tag power sums to degree 4 (degree-3
+//! Prouhet–Tarry–Escott tag sets exist, degree-4 agreement needs
+//! far larger coordinated sets), stamp sums, and two joint
+//! (tag, stamp) moments that pin the pairing — folded across L1, L2,
+//! L3, TLB, prefetcher, row/stream trackers, residues, and phase.
+//! The two seeds re-mix the same moment vector (they widen the key,
+//! not the underlying information), so the honest bound is "all
+//! moments of all structures collide at matching residue and phase"
+//! — engineered collisions are conceivable, accidental ones
+//! negligible against the ~2^16 fingerprints a pass can record, and
+//! the equivalence property suite cross-checks closure against full
+//! simulation on every CI run.
+
+use std::collections::HashMap;
+
+use super::SimCounters;
+
+/// Fingerprint seeds for the two independent digest halves (xxh
+/// primes; any odd constants work).
+pub const SEED_A: u64 = 0x9E37_79B1_85EB_CA87;
+pub const SEED_B: u64 = 0xC2B2_AE3D_27D4_EB4F;
+
+/// SplitMix64 finalizer — the mixing primitive for digests.
+#[inline]
+pub fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Fold one value into a running digest.
+#[inline]
+pub fn fold(h: u64, v: u64) -> u64 {
+    splitmix(h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Incremental, shift-invariant signature of a set of `(x, stamp)`
+/// pairs (one per resident cache way / TLB entry), where `x` packs the
+/// tag and its flag bits.
+///
+/// Maintained as wrapping power sums so that:
+/// * insert/remove/update are O(1) (a handful of multiplies), and
+/// * the digest of the multiset `{(x - shift, clock - stamp)}` is
+///   computable in O(1) from the absolute sums (binomial expansion) —
+///   the shift- and clock-relative view the loop-closure layer needs.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StateSig {
+    n: u64,
+    sx1: u64,
+    sx2: u64,
+    sx3: u64,
+    sx4: u64,
+    ss1: u64,
+    ss2: u64,
+    sxs: u64,
+    sx2s: u64,
+}
+
+impl StateSig {
+    /// Account a new `(x, stamp)` pair.
+    #[inline]
+    pub fn insert(&mut self, x: u64, stamp: u64) {
+        let x2 = x.wrapping_mul(x);
+        let x3 = x2.wrapping_mul(x);
+        self.n = self.n.wrapping_add(1);
+        self.sx1 = self.sx1.wrapping_add(x);
+        self.sx2 = self.sx2.wrapping_add(x2);
+        self.sx3 = self.sx3.wrapping_add(x3);
+        self.sx4 = self.sx4.wrapping_add(x3.wrapping_mul(x));
+        self.ss1 = self.ss1.wrapping_add(stamp);
+        self.ss2 = self.ss2.wrapping_add(stamp.wrapping_mul(stamp));
+        self.sxs = self.sxs.wrapping_add(x.wrapping_mul(stamp));
+        self.sx2s = self.sx2s.wrapping_add(x2.wrapping_mul(stamp));
+    }
+
+    /// Remove a previously-inserted `(x, stamp)` pair.
+    #[inline]
+    pub fn remove(&mut self, x: u64, stamp: u64) {
+        let x2 = x.wrapping_mul(x);
+        let x3 = x2.wrapping_mul(x);
+        self.n = self.n.wrapping_sub(1);
+        self.sx1 = self.sx1.wrapping_sub(x);
+        self.sx2 = self.sx2.wrapping_sub(x2);
+        self.sx3 = self.sx3.wrapping_sub(x3);
+        self.sx4 = self.sx4.wrapping_sub(x3.wrapping_mul(x));
+        self.ss1 = self.ss1.wrapping_sub(stamp);
+        self.ss2 = self.ss2.wrapping_sub(stamp.wrapping_mul(stamp));
+        self.sxs = self.sxs.wrapping_sub(x.wrapping_mul(stamp));
+        self.sx2s = self.sx2s.wrapping_sub(x2.wrapping_mul(stamp));
+    }
+
+    /// Forget everything.
+    pub fn reset(&mut self) {
+        *self = StateSig::default();
+    }
+
+    /// Digest of the *relative* multiset `{(x - shift, clock - stamp)}`
+    /// under `seed`. Derived from the absolute sums via the binomial
+    /// theorem — no per-entry work.
+    pub fn digest(&self, shift: u64, clock: u64, seed: u64) -> u64 {
+        let n = self.n;
+        let b = shift;
+        let b2 = b.wrapping_mul(b);
+        let b3 = b2.wrapping_mul(b);
+        // I_k = sum (x - b)^k, to degree 4 (degree-3 tag-multiset
+        // collisions — Prouhet–Tarry–Escott sets — are cheap to hit
+        // by accident; degree-4 agreement is not).
+        let i1 = self.sx1.wrapping_sub(n.wrapping_mul(b));
+        let i2 = self
+            .sx2
+            .wrapping_sub(self.sx1.wrapping_mul(b).wrapping_mul(2))
+            .wrapping_add(n.wrapping_mul(b2));
+        let i3 = self
+            .sx3
+            .wrapping_sub(self.sx2.wrapping_mul(b).wrapping_mul(3))
+            .wrapping_add(self.sx1.wrapping_mul(b2).wrapping_mul(3))
+            .wrapping_sub(n.wrapping_mul(b3));
+        let i4 = self
+            .sx4
+            .wrapping_sub(self.sx3.wrapping_mul(b).wrapping_mul(4))
+            .wrapping_add(self.sx2.wrapping_mul(b2).wrapping_mul(6))
+            .wrapping_sub(self.sx1.wrapping_mul(b3).wrapping_mul(4))
+            .wrapping_add(n.wrapping_mul(b3.wrapping_mul(b)));
+        // J_k = sum (clock - stamp)^k.
+        let j1 = n.wrapping_mul(clock).wrapping_sub(self.ss1);
+        let j2 = n
+            .wrapping_mul(clock.wrapping_mul(clock))
+            .wrapping_sub(self.ss1.wrapping_mul(clock).wrapping_mul(2))
+            .wrapping_add(self.ss2);
+        // K_1 = sum (x - b)(clock - stamp) and
+        // K_2 = sum (x - b)^2 (clock - stamp) — the joint moments
+        // that distinguish re-paired (tag, stamp) assignments.
+        let k1 = self
+            .sx1
+            .wrapping_mul(clock)
+            .wrapping_sub(self.sxs)
+            .wrapping_sub(b.wrapping_mul(n).wrapping_mul(clock))
+            .wrapping_add(b.wrapping_mul(self.ss1));
+        let k2 = self
+            .sx2
+            .wrapping_mul(clock)
+            .wrapping_sub(self.sx2s)
+            .wrapping_sub(
+                b.wrapping_mul(
+                    self.sx1.wrapping_mul(clock).wrapping_sub(self.sxs),
+                )
+                .wrapping_mul(2),
+            )
+            .wrapping_add(
+                b2.wrapping_mul(n.wrapping_mul(clock).wrapping_sub(self.ss1)),
+            );
+        let mut h = seed;
+        for v in [n, i1, i2, i3, i4, j1, j2, k1, k2] {
+            h = fold(h, v);
+        }
+        h
+    }
+}
+
+/// What a fingerprint observation concluded.
+#[derive(Debug, Clone)]
+pub enum Observation {
+    /// New fingerprint: recorded, keep simulating.
+    Recorded,
+    /// Tracking budget exhausted without a repeat: the transient is
+    /// too long, stop fingerprinting for this pass.
+    Saturated,
+    /// The fingerprint repeats: the engine is in a steady-state cycle
+    /// that started at the recorded iteration.
+    Cycle(CycleInfo),
+}
+
+/// The matched earlier observation of a detected cycle.
+#[derive(Debug, Clone)]
+pub struct CycleInfo {
+    /// Iteration index of the earlier, identical state.
+    pub iter: usize,
+    /// Base element address at that iteration.
+    pub base: i64,
+    /// Counter snapshot at that iteration (the per-cycle delta is the
+    /// current counters minus these).
+    pub counters: SimCounters,
+}
+
+/// Longest transient the closer tracks before giving up. Steady-state
+/// cycles of the modelled mechanisms are short (at most
+/// page-size / per-iteration-advance iterations); the cap bounds the
+/// fingerprint map and stops the digest overhead on passes that never
+/// converge.
+const MAX_TRACKED: usize = 1 << 16;
+
+#[derive(Debug, Clone)]
+struct Snapshot {
+    iter: usize,
+    base: i64,
+    counters: SimCounters,
+}
+
+/// Per-pass fingerprint log: maps state digests to the iteration where
+/// they were first seen. One instance per simulated pass.
+#[derive(Debug, Clone, Default)]
+pub struct LoopCloser {
+    map: HashMap<u128, Snapshot>,
+}
+
+impl LoopCloser {
+    pub fn new() -> LoopCloser {
+        LoopCloser::default()
+    }
+
+    /// Record the post-iteration fingerprint `key` for iteration
+    /// `iter`; report a cycle if the key was seen before.
+    pub fn observe(
+        &mut self,
+        key: u128,
+        iter: usize,
+        base: i64,
+        counters: &SimCounters,
+    ) -> Observation {
+        if let Some(s) = self.map.get(&key) {
+            return Observation::Cycle(CycleInfo {
+                iter: s.iter,
+                base: s.base,
+                counters: s.counters.clone(),
+            });
+        }
+        if self.map.len() >= MAX_TRACKED {
+            return Observation::Saturated;
+        }
+        self.map.insert(
+            key,
+            Snapshot {
+                iter,
+                base,
+                counters: counters.clone(),
+            },
+        );
+        Observation::Recorded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sig_order_independent() {
+        let mut a = StateSig::default();
+        let mut b = StateSig::default();
+        a.insert(10, 1);
+        a.insert(20, 2);
+        a.insert(30, 3);
+        b.insert(30, 3);
+        b.insert(10, 1);
+        b.insert(20, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.digest(0, 10, SEED_A), b.digest(0, 10, SEED_A));
+    }
+
+    #[test]
+    fn sig_remove_inverts_insert() {
+        let mut a = StateSig::default();
+        a.insert(7, 3);
+        a.insert(1000, 40);
+        a.remove(7, 3);
+        let mut b = StateSig::default();
+        b.insert(1000, 40);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sig_digest_is_shift_invariant() {
+        // {(x + d, s + e)} digested relative to (shift + d, clock + e)
+        // must equal {(x, s)} relative to (shift, clock).
+        let pairs = [(8u64, 1u64), (640, 7), (72, 2), (8192, 31)];
+        let (d, e) = (4096u64, 100u64);
+        let mut a = StateSig::default();
+        let mut b = StateSig::default();
+        for &(x, s) in &pairs {
+            a.insert(x, s);
+            b.insert(x + d, s + e);
+        }
+        for seed in [SEED_A, SEED_B] {
+            assert_eq!(a.digest(0, 50, seed), b.digest(d, 50 + e, seed));
+            assert_eq!(a.digest(8, 64, seed), b.digest(8 + d, 64 + e, seed));
+        }
+        // And a genuinely different multiset must (overwhelmingly)
+        // differ.
+        let mut c = StateSig::default();
+        for &(x, s) in &pairs {
+            c.insert(x + 1, s);
+        }
+        assert_ne!(a.digest(0, 50, SEED_A), c.digest(0, 50, SEED_A));
+    }
+
+    #[test]
+    fn sig_separates_degree3_moment_collisions() {
+        // {0,4,7,11} and {1,2,9,10} agree on power sums up to degree
+        // 3 (a Prouhet–Tarry–Escott pair); the degree-4 moment must
+        // separate them — this is what makes accidental fingerprint
+        // collisions implausible rather than merely unlikely.
+        let mut a = StateSig::default();
+        let mut b = StateSig::default();
+        for x in [0u64, 4, 7, 11] {
+            a.insert(x, 5);
+        }
+        for x in [1u64, 2, 9, 10] {
+            b.insert(x, 5);
+        }
+        assert_ne!(a.digest(0, 9, SEED_A), b.digest(0, 9, SEED_A));
+        assert_ne!(a.digest(0, 9, SEED_B), b.digest(0, 9, SEED_B));
+    }
+
+    #[test]
+    fn sig_distinguishes_swapped_pairings() {
+        // Same marginal tag and stamp multisets, different pairing:
+        // the joint moment must separate them.
+        let mut a = StateSig::default();
+        a.insert(100, 1);
+        a.insert(200, 2);
+        let mut b = StateSig::default();
+        b.insert(100, 2);
+        b.insert(200, 1);
+        assert_ne!(a.digest(0, 5, SEED_A), b.digest(0, 5, SEED_A));
+    }
+
+    #[test]
+    fn closer_detects_repeat() {
+        let mut cl = LoopCloser::new();
+        let c0 = SimCounters::default();
+        let c1 = SimCounters {
+            accesses: 8,
+            ..Default::default()
+        };
+        assert!(matches!(cl.observe(42, 1, 0, &c0), Observation::Recorded));
+        assert!(matches!(cl.observe(43, 2, 8, &c1), Observation::Recorded));
+        match cl.observe(42, 3, 16, &c1) {
+            Observation::Cycle(info) => {
+                assert_eq!(info.iter, 1);
+                assert_eq!(info.base, 0);
+                assert_eq!(info.counters.accesses, 0);
+            }
+            other => panic!("expected cycle, got {other:?}"),
+        }
+    }
+}

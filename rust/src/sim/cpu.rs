@@ -27,6 +27,7 @@
 use std::collections::HashSet;
 
 use super::cache::{Cache, Probe};
+use super::closure::{self, LoopCloser, Observation};
 use super::memory::{
     PageSize, PageTableWalker, PhysicalAddress, Tlb, VirtualAddress,
 };
@@ -62,6 +63,13 @@ pub struct CpuSimOptions {
     /// L3 and DRAM stay shared; the chunked-schedule coherence model
     /// is keyed off it.
     pub threads: Option<usize>,
+    /// Steady-state loop closure (`sim::closure`): detect when the
+    /// microarchitectural state cycles and close the remaining
+    /// iterations analytically. Counters and timing are bit-identical
+    /// either way (pinned by the equivalence property test); disabling
+    /// is for A/B benchmarking. Default: on, unless the
+    /// `SPATTER_NO_CLOSURE` environment variable is set.
+    pub closure_enabled: bool,
 }
 
 impl Default for CpuSimOptions {
@@ -73,6 +81,7 @@ impl Default for CpuSimOptions {
             warmup_iterations: 1 << 15,
             page_size: PageSize::FourKB,
             threads: None,
+            closure_enabled: std::env::var_os("SPATTER_NO_CLOSURE").is_none(),
         }
     }
 }
@@ -96,7 +105,14 @@ pub struct CpuEngine {
     tlb: Tlb,
     walker: PageTableWalker,
     prefetcher: Prefetcher,
+    /// Scratch: prefetch target lines, reused across `access` calls
+    /// and runs (never reallocated — see the module-level
+    /// scratch-buffer invariants in `sim`).
     pf_buf: Vec<u64>,
+    /// Scratch: the pattern's index buffer pre-scaled to byte offsets,
+    /// rebuilt once per pass and consumed by the demand path (no
+    /// per-access multiply, no per-run allocation once warm).
+    idx_bytes: Vec<u64>,
     /// Open-row tracker for the DRAM row-locality model.
     last_row: u64,
     /// Effective OpenMP thread count for the next run (resolved from
@@ -133,6 +149,7 @@ impl CpuEngine {
             platform: p,
             opts,
             pf_buf: Vec::with_capacity(8),
+            idx_bytes: Vec::new(),
             last_row: u64::MAX,
         }
     }
@@ -218,6 +235,8 @@ impl CpuEngine {
         // Warmup pass: the paper reports the min of 10 runs, so the
         // measured run starts with caches/TLB warm from the *end* of
         // the previous run — simulate the tail iterations uncounted.
+        // (Loop closure applies here too: once the warm-up state
+        // cycles, it fast-forwards to the exact end-of-run state.)
         let warmup = pattern.count.min(self.opts.warmup_iterations);
         let wstart = pattern.count - warmup;
         let mut scratch = SimCounters::default();
@@ -225,7 +244,8 @@ impl CpuEngine {
 
         // Measured pass: iterations [0, measured) of the next run.
         let mut counters = SimCounters::default();
-        self.pass(pattern, 0, measured, is_write, streaming, &mut counters);
+        let closed_at =
+            self.pass(pattern, 0, measured, is_write, streaming, &mut counters);
         counters.coherence_events = self.coherence_events(pattern, kernel, measured);
 
         // Page walks miss the cache hierarchy when touched pages are
@@ -244,10 +264,14 @@ impl CpuEngine {
             counters,
             breakdown,
             simulated_iterations: measured,
+            closed_at_iteration: closed_at,
         })
     }
 
-    /// Simulate iterations [begin, end) of the pattern.
+    /// Simulate iterations [begin, end) of the pattern, closing the
+    /// loop analytically once the microarchitectural state cycles
+    /// (`sim::closure`). Returns the iteration at which closure fired,
+    /// if it did; counters in `c` are identical either way.
     fn pass(
         &mut self,
         pattern: &Pattern,
@@ -256,15 +280,123 @@ impl CpuEngine {
         is_write: bool,
         streaming: bool,
         c: &mut SimCounters,
-    ) {
+    ) -> Option<usize> {
         let mut last_stream_line = u64::MAX;
         let mut base = pattern.base(begin);
-        for i in begin..end {
-            for &idx in &pattern.indices {
-                let va = VirtualAddress(((base + idx) as u64) * 8);
+        // Pre-scale the index buffer to byte offsets once per pass
+        // (engine scratch; moved out for the loop's disjoint borrows).
+        let mut idx = std::mem::take(&mut self.idx_bytes);
+        idx.clear();
+        idx.extend(pattern.indices.iter().map(|&i| i as u64 * 8));
+        let period = pattern.deltas.len().max(1);
+        let mut closer = if self.opts.closure_enabled && end > begin + 1 {
+            Some(LoopCloser::new())
+        } else {
+            None
+        };
+        let mut closed_at = None;
+        let mut i = begin;
+        while i < end {
+            let base_bytes = (base as u64) * 8;
+            for &off in &idx {
+                let va = VirtualAddress(base_bytes + off);
                 self.access(va, is_write, streaming, &mut last_stream_line, c);
             }
             base += pattern.delta_at(i);
+            i += 1;
+            if closer.is_some() && i < end {
+                let key = self.pass_digest(base, i % period, last_stream_line);
+                let obs = closer.as_mut().unwrap().observe(key, i, base, c);
+                match obs {
+                    Observation::Recorded => {}
+                    Observation::Saturated => closer = None,
+                    Observation::Cycle(info) => {
+                        let cycle = i - info.iter;
+                        let reps = (end - i) / cycle;
+                        // Report closure only when iterations were
+                        // actually skipped (a cycle longer than the
+                        // remaining tail closes nothing).
+                        if reps > 0 {
+                            closed_at = Some(i);
+                            // Per-cycle counter delta, multiplied over
+                            // every whole remaining cycle; then shift
+                            // the state to where full simulation would
+                            // be and run only the sub-cycle tail.
+                            let d = c.delta_since(&info.counters);
+                            c.add_scaled(&d, reps as u64);
+                            let advance = (base - info.base) as u64;
+                            let shift_elems = advance * reps as u64;
+                            self.fast_forward(shift_elems);
+                            let shift_lines = shift_elems * 8 / LINE;
+                            if last_stream_line != u64::MAX {
+                                last_stream_line += shift_lines;
+                            }
+                            base += shift_elems as i64;
+                            i += cycle * reps;
+                        }
+                        closer = None;
+                    }
+                }
+            }
+        }
+        self.idx_bytes = idx;
+        closed_at
+    }
+
+    /// 128-bit fingerprint of the complete engine state *relative* to
+    /// the current base address, plus the base's page-alignment
+    /// residue and the delta-cycle phase — equal fingerprints mean the
+    /// remaining simulation is an exact shifted replay (see
+    /// `sim::closure`). O(1): every structure keeps an incremental
+    /// signature.
+    fn pass_digest(&self, base: i64, phase: usize, last_stream_line: u64) -> u128 {
+        let base_bytes = (base as u64) * 8;
+        let base_line = base_bytes / LINE;
+        let page = self.tlb.page_size();
+        let base_vpn = base_bytes >> page.shift();
+        let base_row = base_line / ROW_LINES;
+        let rel = |v: u64, b: u64| {
+            if v == u64::MAX {
+                u64::MAX
+            } else {
+                v.wrapping_sub(b)
+            }
+        };
+        let mut out = [0u64; 2];
+        for (slot, seed) in [closure::SEED_A, closure::SEED_B].into_iter().enumerate()
+        {
+            let mut h = seed;
+            h = closure::fold(h, self.l1.state_digest(base_line, seed));
+            h = closure::fold(h, self.l2.state_digest(base_line, seed));
+            h = closure::fold(h, self.l3.state_digest(base_line, seed));
+            h = closure::fold(h, self.tlb.state_digest(base_vpn, seed));
+            h = closure::fold(h, self.prefetcher.state_digest(base_bytes, seed));
+            h = closure::fold(h, rel(self.last_row, base_row));
+            h = closure::fold(h, rel(last_stream_line, base_line));
+            h = closure::fold(h, base_bytes % page.bytes());
+            h = closure::fold(h, phase as u64);
+            out[slot] = h;
+        }
+        ((out[0] as u128) << 64) | out[1] as u128
+    }
+
+    /// Shift the whole engine state forward by `shift_elems` elements
+    /// — the loop-closure fast-forward. Exact because the shift is a
+    /// multiple of the page size (fingerprints embed the page residue),
+    /// which every alignment-sensitive mechanism divides.
+    fn fast_forward(&mut self, shift_elems: u64) {
+        let bytes = shift_elems * 8;
+        if bytes == 0 {
+            return;
+        }
+        let lines = bytes / LINE;
+        self.l1.relocate(lines);
+        self.l2.relocate(lines);
+        self.l3.relocate(lines);
+        self.tlb.relocate(bytes >> self.tlb.page_size().shift());
+        self.prefetcher.relocate(bytes);
+        if self.last_row != u64::MAX {
+            self.last_row += lines / ROW_LINES;
         }
     }
 
@@ -353,10 +485,14 @@ impl CpuEngine {
 
         // Prefetch on the DRAM demand miss. Presence is resolved by
         // the fused fill (L2 first — the streamer's target; L1 copies
-        // are covered by inclusion through L2/L3).
-        let mut buf = std::mem::take(&mut self.pf_buf);
-        self.prefetcher.on_miss(pa.byte(), line, &mut buf);
-        for &pl in &buf {
+        // are covered by inclusion through L2/L3). `pf_buf` is engine
+        // scratch filled in place — disjoint field borrows, no move
+        // dance, no allocation once warm (§Perf).
+        self.prefetcher.on_miss(pa.byte(), line, &mut self.pf_buf);
+        let mut k = 0;
+        while k < self.pf_buf.len() {
+            let pl = self.pf_buf[k];
+            k += 1;
             let (inserted_l2, ev) = self.l2.fill_if_absent(pl, false, true);
             if inserted_l2 {
                 if let Some(ev) = ev {
@@ -371,7 +507,6 @@ impl CpuEngine {
                 }
             }
         }
-        self.pf_buf = buf;
     }
 
     /// Fill L1 after an L1 miss, propagating a dirty eviction into L2
@@ -1044,5 +1179,97 @@ mod tests {
         let b = CpuEngine::new(&p).run(&pat, Kernel::Gather).unwrap();
         assert_eq!(a.counters, b.counters);
         assert_eq!(a.seconds, b.seconds);
+    }
+
+    fn run_with_closure(
+        p: &crate::platforms::CpuPlatform,
+        pat: &Pattern,
+        kernel: Kernel,
+        closure: bool,
+    ) -> SimResult {
+        let mut e = CpuEngine::with_options(
+            p,
+            CpuSimOptions {
+                closure_enabled: closure,
+                ..Default::default()
+            },
+        );
+        e.run(pat, kernel).unwrap()
+    }
+
+    #[test]
+    fn closure_is_bit_identical_and_fires_on_delta0() {
+        // LULESH-S3-style delta-0 scatter: the state cycles almost
+        // immediately, so closure must fire early — and the counters,
+        // timing, and bandwidth must be exactly those of the full run.
+        let p = platforms::by_name("skx").unwrap();
+        let s3 = crate::pattern::table5::by_name("LULESH-S3")
+            .unwrap()
+            .to_pattern(1 << 14);
+        let on = run_with_closure(&p, &s3, Kernel::Scatter, true);
+        let off = run_with_closure(&p, &s3, Kernel::Scatter, false);
+        assert_eq!(on.counters, off.counters);
+        assert_eq!(on.breakdown, off.breakdown);
+        assert_eq!(on.seconds, off.seconds);
+        assert_eq!(off.closed_at_iteration, None);
+        let at = on.closed_at_iteration.expect("delta-0 must close");
+        assert!(at < 64, "delta-0 should close within a few iterations: {at}");
+    }
+
+    #[test]
+    fn closure_is_bit_identical_on_huge_delta() {
+        // The PENNANT mechanism: 128 KiB advance per iteration drives
+        // the TLB/caches into a short per-page cycle.
+        let p = platforms::by_name("knl").unwrap();
+        let idx: Vec<i64> = (0..16).map(|j| j * 512).collect();
+        let pat = crate::pattern::Pattern::from_indices("huge-delta", idx)
+            .with_delta(16384)
+            .with_count(1 << 14);
+        let on = run_with_closure(&p, &pat, Kernel::Gather, true);
+        let off = run_with_closure(&p, &pat, Kernel::Gather, false);
+        assert_eq!(on.counters, off.counters);
+        assert_eq!(on.seconds, off.seconds);
+        assert!(on.closed_at_iteration.is_some(), "huge delta must close");
+    }
+
+    #[test]
+    fn closure_is_bit_identical_on_moving_strides() {
+        // Uniform strides with and without streaming stores, cycling
+        // delta lists, both kernels: closure may or may not fire, but
+        // results must be exactly equal either way.
+        let p = platforms::by_name("bdw").unwrap();
+        for kernel in [Kernel::Gather, Kernel::Scatter] {
+            for stride in [1usize, 8, 64] {
+                let pat = uniform(stride, 1 << 14);
+                let on = run_with_closure(&p, &pat, kernel, true);
+                let off = run_with_closure(&p, &pat, kernel, false);
+                assert_eq!(on.counters, off.counters, "stride {stride}");
+                assert_eq!(on.seconds, off.seconds, "stride {stride}");
+            }
+        }
+        let cycling = Pattern::from_indices("revisit", (0..8).collect())
+            .with_deltas(&[0, 0, 0, 512])
+            .with_count(1 << 13);
+        let on = run_with_closure(&p, &cycling, Kernel::Gather, true);
+        let off = run_with_closure(&p, &cycling, Kernel::Gather, false);
+        assert_eq!(on.counters, off.counters);
+        assert_eq!(on.seconds, off.seconds);
+    }
+
+    #[test]
+    fn engine_reuse_matches_fresh_engine() {
+        // The scratch buffers (pf_buf, idx_bytes) persist across runs;
+        // a reused engine must produce exactly what a fresh one does.
+        let p = platforms::by_name("skx").unwrap();
+        let mut reused = CpuEngine::new(&p);
+        reused
+            .run(&uniform(4, 1 << 12), Kernel::Scatter)
+            .unwrap();
+        let warm = reused.run(&uniform(16, 1 << 13), Kernel::Gather).unwrap();
+        let fresh = CpuEngine::new(&p)
+            .run(&uniform(16, 1 << 13), Kernel::Gather)
+            .unwrap();
+        assert_eq!(warm.counters, fresh.counters);
+        assert_eq!(warm.seconds, fresh.seconds);
     }
 }

@@ -20,6 +20,7 @@
 //! delta-0 scatters serialize on sector ownership (LULESH-S3).
 
 use super::cache::{Cache, Probe};
+use super::closure::{self, LoopCloser, Observation};
 use super::memory::{
     PageSize, PageTableWalker, PhysicalAddress, Tlb, VirtualAddress,
 };
@@ -42,6 +43,10 @@ pub struct GpuSimOptions {
     /// large page by default (the granularity the platforms' walk
     /// costs are calibrated at); `--page-size` overrides.
     pub page_size: PageSize,
+    /// Steady-state loop closure (`sim::closure`) — same contract as
+    /// the CPU engine: bit-identical counters, disable only for A/B
+    /// benchmarking (`SPATTER_NO_CLOSURE`).
+    pub closure_enabled: bool,
 }
 
 impl Default for GpuSimOptions {
@@ -50,6 +55,7 @@ impl Default for GpuSimOptions {
             max_sim_accesses: 1 << 21,
             warmup_iterations: 1 << 13,
             page_size: PageSize::SixtyFourKB,
+            closure_enabled: std::env::var_os("SPATTER_NO_CLOSURE").is_none(),
         }
     }
 }
@@ -65,8 +71,12 @@ pub struct GpuEngine {
     tlb: Tlb,
     walker: PageTableWalker,
     last_row: u64,
-    /// Scratch: sector ids of the current warp.
+    /// Scratch: sector ids of the current warp (cleared in place,
+    /// never reallocated — see the scratch invariants in `sim`).
     warp_sectors: Vec<(u64, u32)>,
+    /// Scratch: the index buffer pre-scaled to byte offsets, rebuilt
+    /// once per pass.
+    idx_bytes: Vec<u64>,
 }
 
 impl GpuEngine {
@@ -83,6 +93,7 @@ impl GpuEngine {
             walker: PageTableWalker::new(p.tlb_walk_ns, page, p.tlb_mlp),
             last_row: u64::MAX,
             warp_sectors: Vec::with_capacity(WARP),
+            idx_bytes: Vec::new(),
             platform: p,
             opts,
         }
@@ -133,7 +144,8 @@ impl GpuEngine {
         let measured = pattern.count.min(cap_iters);
         let is_write = kernel == Kernel::Scatter;
 
-        // Warmup (tail iterations of the "previous" run).
+        // Warmup (tail iterations of the "previous" run). Closure
+        // applies here too, fast-forwarding to the exact warm state.
         let warmup = pattern.count.min(self.opts.warmup_iterations);
         let mut scratch = SimCounters::default();
         self.pass(
@@ -145,7 +157,7 @@ impl GpuEngine {
         );
 
         let mut counters = SimCounters::default();
-        self.pass(pattern, 0, measured, is_write, &mut counters);
+        let closed_at = self.pass(pattern, 0, measured, is_write, &mut counters);
 
         let breakdown = self.timing(&counters, pattern, kernel, measured);
         let scale = pattern.count as f64 / measured as f64;
@@ -155,9 +167,14 @@ impl GpuEngine {
             counters,
             breakdown,
             simulated_iterations: measured,
+            closed_at_iteration: closed_at,
         })
     }
 
+    /// Simulate iterations [begin, end), with steady-state loop
+    /// closure (see `sim::closure` and the CPU engine's `pass` — same
+    /// exactness argument, minus the prefetcher and plus the sector
+    /// granularity).
     fn pass(
         &mut self,
         pattern: &Pattern,
@@ -165,37 +182,125 @@ impl GpuEngine {
         end: usize,
         is_write: bool,
         c: &mut SimCounters,
-    ) {
+    ) -> Option<usize> {
         let v = pattern.vector_len();
         let mut base = pattern.base(begin);
-        for i in begin..end {
+        let mut idx = std::mem::take(&mut self.idx_bytes);
+        idx.clear();
+        idx.extend(pattern.indices.iter().map(|&i| i as u64 * 8));
+        let period = pattern.deltas.len().max(1);
+        let mut closer = if self.opts.closure_enabled && end > begin + 1 {
+            Some(LoopCloser::new())
+        } else {
+            None
+        };
+        let mut closed_at = None;
+        let mut i = begin;
+        while i < end {
+            let base_bytes = (base as u64) * 8;
             // Each warp covers 32 consecutive index-buffer slots.
             let mut j = 0;
             while j < v {
                 let hi = (j + WARP).min(v);
-                self.warp(pattern, base, j, hi, is_write, c);
+                self.warp(&idx[j..hi], base_bytes, is_write, c);
                 j = hi;
             }
             base += pattern.delta_at(i);
+            i += 1;
+            if closer.is_some() && i < end {
+                let key = self.pass_digest(base, i % period);
+                let obs = closer.as_mut().unwrap().observe(key, i, base, c);
+                match obs {
+                    Observation::Recorded => {}
+                    Observation::Saturated => closer = None,
+                    Observation::Cycle(info) => {
+                        let cycle = i - info.iter;
+                        let reps = (end - i) / cycle;
+                        // Report closure only when iterations were
+                        // actually skipped (a cycle longer than the
+                        // remaining tail closes nothing).
+                        if reps > 0 {
+                            closed_at = Some(i);
+                            let d = c.delta_since(&info.counters);
+                            c.add_scaled(&d, reps as u64);
+                            let advance = (base - info.base) as u64;
+                            let shift_elems = advance * reps as u64;
+                            self.fast_forward(shift_elems);
+                            base += shift_elems as i64;
+                            i += cycle * reps;
+                        }
+                        closer = None;
+                    }
+                }
+            }
+        }
+        self.idx_bytes = idx;
+        closed_at
+    }
+
+    /// 128-bit fingerprint of the engine state relative to the current
+    /// base (L2 at sector granularity, TLB, open row) plus the base's
+    /// page/row/sector alignment residues and the delta-cycle phase.
+    fn pass_digest(&self, base: i64, phase: usize) -> u128 {
+        let base_bytes = (base as u64) * 8;
+        let sector_b = self.platform.sector_bytes;
+        let page = self.tlb.page_size();
+        let base_sector = base_bytes / sector_b;
+        let base_vpn = base_bytes >> page.shift();
+        let base_row = base_bytes / self.platform.row_bytes;
+        let rel = |v: u64, b: u64| {
+            if v == u64::MAX {
+                u64::MAX
+            } else {
+                v.wrapping_sub(b)
+            }
+        };
+        let mut out = [0u64; 2];
+        for (slot, seed) in [closure::SEED_A, closure::SEED_B].into_iter().enumerate()
+        {
+            let mut h = seed;
+            h = closure::fold(h, self.l2.state_digest(base_sector, seed));
+            h = closure::fold(h, self.tlb.state_digest(base_vpn, seed));
+            h = closure::fold(h, rel(self.last_row, base_row));
+            h = closure::fold(h, base_bytes % page.bytes());
+            h = closure::fold(h, base_bytes % self.platform.row_bytes);
+            h = closure::fold(h, base_bytes % sector_b);
+            h = closure::fold(h, phase as u64);
+            out[slot] = h;
+        }
+        ((out[0] as u128) << 64) | out[1] as u128
+    }
+
+    /// Loop-closure fast-forward: shift the engine state by
+    /// `shift_elems` elements. Exact — the shift is a multiple of the
+    /// page, row, and sector sizes (all embedded in the fingerprint
+    /// residues).
+    fn fast_forward(&mut self, shift_elems: u64) {
+        let bytes = shift_elems * 8;
+        if bytes == 0 {
+            return;
+        }
+        self.l2.relocate(bytes / self.platform.sector_bytes);
+        self.tlb.relocate(bytes >> self.tlb.page_size().shift());
+        if self.last_row != u64::MAX {
+            self.last_row += bytes / self.platform.row_bytes;
         }
     }
 
-    /// Coalesce one warp's addresses into unique sectors and charge
-    /// the memory system.
+    /// Coalesce one warp's addresses (pre-scaled byte offsets against
+    /// `base_bytes`) into unique sectors and charge the memory system.
     fn warp(
         &mut self,
-        pattern: &Pattern,
-        base: i64,
-        j0: usize,
-        j1: usize,
+        offsets: &[u64],
+        base_bytes: u64,
         is_write: bool,
         c: &mut SimCounters,
     ) {
         let sector_b = self.platform.sector_bytes;
         self.warp_sectors.clear();
-        for &idx in &pattern.indices[j0..j1] {
+        for &off in offsets {
             c.accesses += 1;
-            let byte = ((base + idx) as u64) * 8;
+            let byte = base_bytes + off;
             let sector = byte / sector_b;
             // Count elements per unique sector (coverage for the
             // scatter RMW rule).
@@ -211,8 +316,12 @@ impl GpuEngine {
         // Keep row-locality realistic within a warp.
         self.warp_sectors.sort_unstable_by_key(|(s, _)| *s);
 
-        let sectors = std::mem::take(&mut self.warp_sectors);
-        for &(sector, elems) in &sectors {
+        // Engine scratch, indexed in place (disjoint borrows — no move
+        // dance, no allocation once warm, §Perf).
+        let mut k = 0;
+        while k < self.warp_sectors.len() {
+            let (sector, elems) = self.warp_sectors[k];
+            k += 1;
             c.transactions += 1;
 
             // Translate the sector's base address through the shared
@@ -246,7 +355,6 @@ impl GpuEngine {
                 }
             }
         }
-        self.warp_sectors = sectors;
     }
 
     /// DRAM row tracker — DRAM-facing, so it accepts only translated
@@ -488,5 +596,64 @@ mod tests {
         assert_eq!(c.accesses as usize, 256 * a.simulated_iterations);
         assert!(c.transactions <= c.accesses);
         assert_eq!(c.l2_hits + c.dram_demand_lines, c.transactions);
+    }
+
+    fn run_with_closure(
+        p: &platforms::GpuPlatform,
+        pat: &Pattern,
+        kernel: Kernel,
+        closure: bool,
+    ) -> crate::sim::SimResult {
+        let mut e = GpuEngine::with_options(
+            p,
+            GpuSimOptions {
+                closure_enabled: closure,
+                ..Default::default()
+            },
+        );
+        e.run(pat, kernel).unwrap()
+    }
+
+    #[test]
+    fn closure_is_bit_identical_and_fires_on_delta0() {
+        let p = platforms::gpu_by_name("titanxp").unwrap();
+        let s3 = crate::pattern::table5::by_name("LULESH-S3")
+            .unwrap()
+            .to_pattern(1 << 13);
+        let on = run_with_closure(&p, &s3, Kernel::Scatter, true);
+        let off = run_with_closure(&p, &s3, Kernel::Scatter, false);
+        assert_eq!(on.counters, off.counters);
+        assert_eq!(on.breakdown, off.breakdown);
+        assert_eq!(on.seconds, off.seconds);
+        assert_eq!(off.closed_at_iteration, None);
+        let at = on.closed_at_iteration.expect("delta-0 must close");
+        assert!(at < 64, "delta-0 should close early: {at}");
+    }
+
+    #[test]
+    fn closure_is_bit_identical_on_strides() {
+        let p = platforms::gpu_by_name("p100").unwrap();
+        for kernel in [Kernel::Gather, Kernel::Scatter] {
+            for stride in [1usize, 8, 128] {
+                let pat = guniform(stride, 1 << 12);
+                let on = run_with_closure(&p, &pat, kernel, true);
+                let off = run_with_closure(&p, &pat, kernel, false);
+                assert_eq!(on.counters, off.counters, "stride {stride}");
+                assert_eq!(on.seconds, off.seconds, "stride {stride}");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_reuse_matches_fresh_engine() {
+        let p = platforms::gpu_by_name("v100").unwrap();
+        let mut reused = GpuEngine::new(&p);
+        reused.run(&guniform(8, 1 << 11), Kernel::Scatter).unwrap();
+        let warm = reused.run(&guniform(2, 1 << 12), Kernel::Gather).unwrap();
+        let fresh = GpuEngine::new(&p)
+            .run(&guniform(2, 1 << 12), Kernel::Gather)
+            .unwrap();
+        assert_eq!(warm.counters, fresh.counters);
+        assert_eq!(warm.seconds, fresh.seconds);
     }
 }

@@ -36,6 +36,7 @@
 //!   mixing** within one run: a run models exactly one [`PageSize`].
 
 use super::cache::{Cache, Probe};
+use super::closure;
 use crate::error::{Error, Result};
 
 /// Bytes per cache line / PTE line (the model is 64-byte everywhere).
@@ -343,6 +344,31 @@ impl Tlb {
         Translation { physical, hit }
     }
 
+    /// Digest of the TLB's complete state relative to `base_vpn`
+    /// (residency, LRU ages, and the same-page short-circuit), for the
+    /// loop-closure fingerprint. O(1) via the incremental signature.
+    pub fn state_digest(&self, base_vpn: u64, seed: u64) -> u64 {
+        let rel = if self.last_vpn == u64::MAX {
+            u64::MAX
+        } else {
+            self.last_vpn.wrapping_sub(base_vpn)
+        };
+        closure::fold(self.cache.state_digest(base_vpn, seed), rel)
+    }
+
+    /// Shift the whole TLB state forward by `delta_pages` virtual
+    /// pages (loop-closure fast-forward; exact, see
+    /// [`Cache::relocate`]).
+    pub fn relocate(&mut self, delta_pages: u64) {
+        if delta_pages == 0 {
+            return;
+        }
+        self.cache.relocate(delta_pages);
+        if self.last_vpn != u64::MAX {
+            self.last_vpn = self.last_vpn.wrapping_add(delta_pages);
+        }
+    }
+
     /// Clear contents and the short-circuit state.
     pub fn reset(&mut self) {
         self.cache.reset();
@@ -608,6 +634,35 @@ mod tests {
         check_stats(&rg.counters.tlb, rg.counters.accesses);
         // GPU translates once per coalesced transaction.
         assert_eq!(rg.counters.tlb.accesses(), rg.counters.transactions);
+    }
+
+    #[test]
+    fn tlb_digest_and_relocate_are_shift_exact() {
+        use crate::sim::closure::SEED_A;
+        // Two TLBs fed the same page stream shifted by a whole number
+        // of pages digest identically relative to their bases, and
+        // relocation reproduces the shifted history exactly.
+        let d_pages = 1 << 12; // multiple of the set count
+        let mut a = small_tlb(PageSize::FourKB);
+        let mut b = small_tlb(PageSize::FourKB);
+        let mut sa = TlbStats::default();
+        let mut sb = TlbStats::default();
+        for vpn in [0u64, 3, 3, 9, 1, 17, 3] {
+            a.translate(VirtualAddress(vpn * 4096), false, &mut sa);
+            b.translate(VirtualAddress((vpn + d_pages) * 4096), false, &mut sb);
+        }
+        assert_eq!(a.state_digest(0, SEED_A), b.state_digest(d_pages, SEED_A));
+        a.relocate(d_pages);
+        assert_eq!(a.state_digest(d_pages, SEED_A), b.state_digest(d_pages, SEED_A));
+        // Identical behaviour from here on.
+        for vpn in [3u64, 21, 9, 64, 17] {
+            let va = VirtualAddress((vpn + d_pages) * 4096);
+            assert_eq!(
+                a.translate(va, false, &mut sa).hit,
+                b.translate(va, false, &mut sb).hit,
+                "vpn {vpn}"
+            );
+        }
     }
 
     #[test]

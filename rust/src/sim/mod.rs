@@ -15,6 +15,12 @@
 //!   set-associative [`Tlb`] and one [`PageTableWalker`] used by both
 //!   engines (TLB pressure at large deltas, §5.4).
 //! * [`prefetch`] — per-platform prefetcher models (Figs 3/4).
+//! * [`closure`] — steady-state detection and loop closure: once a
+//!   run's microarchitectural state provably cycles, the remaining
+//!   iterations are closed analytically with bit-identical counters
+//!   (§Perf; the `closed_at_iteration` diagnostic and the
+//!   `SPATTER_NO_CLOSURE` switch are documented there and in the
+//!   README's Performance section).
 //! * [`cpu`] — the CPU engine: L1/L2/L3 + TLB + prefetcher + a
 //!   bottleneck ("roofline-max") timing model over issue rate, cache
 //!   bandwidths, DRAM traffic, miss latency, and coherence.
@@ -24,8 +30,19 @@
 //! Absolute GB/s are calibrated to the Table 3 STREAM column; curve
 //! *shapes* (who wins, crossover strides, plateau fractions) are the
 //! reproduction target.
+//!
+//! # Scratch-buffer invariants (§Perf)
+//!
+//! Both engines keep their per-access temporaries — the prefetch
+//! target list, the warp coalescing list, and the pre-scaled index
+//! byte-offset table — as engine-owned scratch vectors that are
+//! cleared and refilled in place, never reallocated, across `access`
+//! calls and across runs. Code touching the hot paths must preserve
+//! this: no allocation, no `clone`, and no `mem::take` churn inside
+//! the per-access path.
 
 pub mod cache;
+pub mod closure;
 pub mod cpu;
 pub mod gpu;
 pub mod memory;
@@ -79,6 +96,56 @@ impl SimCounters {
     /// Total DRAM write traffic in bytes.
     pub fn dram_write_bytes(&self) -> u64 {
         (self.writeback_lines + self.streaming_store_lines) * 64
+    }
+
+    /// Field-wise difference against an earlier snapshot of the same
+    /// run (all counters are monotone). Loop closure uses this as the
+    /// per-cycle delta.
+    pub fn delta_since(&self, earlier: &SimCounters) -> SimCounters {
+        SimCounters {
+            accesses: self.accesses - earlier.accesses,
+            l1_hits: self.l1_hits - earlier.l1_hits,
+            l2_hits: self.l2_hits - earlier.l2_hits,
+            l3_hits: self.l3_hits - earlier.l3_hits,
+            dram_demand_lines: self.dram_demand_lines - earlier.dram_demand_lines,
+            dram_prefetch_lines: self.dram_prefetch_lines
+                - earlier.dram_prefetch_lines,
+            prefetch_useful: self.prefetch_useful - earlier.prefetch_useful,
+            writeback_lines: self.writeback_lines - earlier.writeback_lines,
+            streaming_store_lines: self.streaming_store_lines
+                - earlier.streaming_store_lines,
+            tlb: TlbStats {
+                read_hits: self.tlb.read_hits - earlier.tlb.read_hits,
+                read_misses: self.tlb.read_misses - earlier.tlb.read_misses,
+                write_hits: self.tlb.write_hits - earlier.tlb.write_hits,
+                write_misses: self.tlb.write_misses - earlier.tlb.write_misses,
+            },
+            coherence_events: self.coherence_events - earlier.coherence_events,
+            transactions: self.transactions - earlier.transactions,
+            row_activations: self.row_activations - earlier.row_activations,
+        }
+    }
+
+    /// Accumulate `reps` repetitions of a per-cycle delta — the loop
+    /// closure fast-forward (exact: every skipped cycle produces the
+    /// identical delta).
+    pub fn add_scaled(&mut self, d: &SimCounters, reps: u64) {
+        self.accesses += d.accesses * reps;
+        self.l1_hits += d.l1_hits * reps;
+        self.l2_hits += d.l2_hits * reps;
+        self.l3_hits += d.l3_hits * reps;
+        self.dram_demand_lines += d.dram_demand_lines * reps;
+        self.dram_prefetch_lines += d.dram_prefetch_lines * reps;
+        self.prefetch_useful += d.prefetch_useful * reps;
+        self.writeback_lines += d.writeback_lines * reps;
+        self.streaming_store_lines += d.streaming_store_lines * reps;
+        self.tlb.read_hits += d.tlb.read_hits * reps;
+        self.tlb.read_misses += d.tlb.read_misses * reps;
+        self.tlb.write_hits += d.tlb.write_hits * reps;
+        self.tlb.write_misses += d.tlb.write_misses * reps;
+        self.coherence_events += d.coherence_events * reps;
+        self.transactions += d.transactions * reps;
+        self.row_activations += d.row_activations * reps;
     }
 }
 
@@ -147,6 +214,12 @@ pub struct SimResult {
     pub breakdown: TimeBreakdown,
     /// Iterations actually simulated (<= pattern count).
     pub simulated_iterations: usize,
+    /// Iteration of the measured pass at which steady-state loop
+    /// closure kicked in (`None`: the pass ran in full — closure
+    /// disabled, or no cycle within the tracking budget). Counters are
+    /// identical either way; this is the observability hook for the
+    /// speedup (`"sim-closure"` in record JSON, stderr in the CLI).
+    pub closed_at_iteration: Option<usize>,
 }
 
 impl SimResult {
@@ -174,6 +247,30 @@ mod tests {
     }
 
     #[test]
+    fn counter_delta_and_scale() {
+        let base = SimCounters {
+            accesses: 10,
+            l1_hits: 4,
+            writeback_lines: 1,
+            tlb: TlbStats {
+                read_hits: 3,
+                read_misses: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut later = base.clone();
+        later.add_scaled(&base, 1); // later = 2 * base
+        let d = later.delta_since(&base);
+        assert_eq!(d, base, "one-cycle delta recovers the increment");
+        let mut ff = base.clone();
+        ff.add_scaled(&d, 3);
+        assert_eq!(ff.accesses, 40);
+        assert_eq!(ff.tlb.read_hits, 12);
+        assert_eq!(ff.writeback_lines, 4);
+    }
+
+    #[test]
     fn counters_traffic_math() {
         let c = SimCounters {
             dram_demand_lines: 10,
@@ -194,6 +291,7 @@ mod tests {
             counters: SimCounters::default(),
             breakdown: TimeBreakdown::default(),
             simulated_iterations: 1,
+            closed_at_iteration: None,
         };
         assert!((r.bandwidth_gbs() - 43.885).abs() < 1e-9);
     }

@@ -127,6 +127,28 @@ impl Prefetcher {
         }
         self.issued += out.len() as u64;
     }
+
+    /// Digest of the stride-detection state relative to `base_byte`
+    /// (the loop-closure fingerprint). The observed stride and
+    /// confidence are shift-invariant already; the last miss address
+    /// is taken relative to the base.
+    pub fn state_digest(&self, base_byte: u64, seed: u64) -> u64 {
+        let rel = match self.last_addr {
+            Some(a) => a.wrapping_sub(base_byte),
+            None => u64::MAX,
+        };
+        let h = super::closure::fold(seed, rel);
+        let h = super::closure::fold(h, self.last_stride as u64);
+        super::closure::fold(h, self.confidence as u64)
+    }
+
+    /// Shift the tracked miss address forward by `delta_bytes`
+    /// (loop-closure fast-forward).
+    pub fn relocate(&mut self, delta_bytes: u64) {
+        if let Some(a) = self.last_addr {
+            self.last_addr = Some(a.wrapping_add(delta_bytes));
+        }
+    }
 }
 
 #[cfg(test)]

@@ -26,8 +26,9 @@ mod ustride;
 pub use apps::{fig7_radar, fig8_radar, fig9_bwbw, table1_characterization, table4_miniapps};
 pub use threadscale::threadscale_suite;
 pub use ustride::{
-    fig3_cpu_ustride, fig4_prefetch, fig5_gpu_ustride, fig6_simd_scalar,
-    pagesize_sweep, ustride_suite,
+    cpu_ustride, fig3_cpu_ustride, fig4_prefetch, fig5_gpu_ustride,
+    fig6_simd_scalar, gpu_ustride, hugedelta_pattern, pagesize_sweep,
+    ustride_suite,
 };
 
 use std::path::{Path, PathBuf};

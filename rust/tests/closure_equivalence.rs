@@ -1,0 +1,175 @@
+//! Equivalence property test for steady-state loop closure (ISSUE 3
+//! satellite): for randomized (platform, pattern, kernel, threads,
+//! page-size) configurations, the engines must produce *exactly* the
+//! same `SimResult` — counters, breakdown, seconds, bandwidth — with
+//! loop closure force-disabled and force-enabled. Closure is an
+//! optimization, never an approximation.
+
+use spatter::pattern::{table5, Kernel, Pattern};
+use spatter::platforms;
+use spatter::prop::{check, Gen};
+use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
+use spatter::sim::gpu::{GpuEngine, GpuSimOptions};
+use spatter::sim::{PageSize, SimResult};
+
+fn assert_identical(on: &SimResult, off: &SimResult, ctx: &str) {
+    assert_eq!(on.counters, off.counters, "{ctx}: counters");
+    assert_eq!(on.breakdown, off.breakdown, "{ctx}: breakdown");
+    assert_eq!(on.seconds, off.seconds, "{ctx}: seconds");
+    assert_eq!(
+        on.bandwidth_gbs(),
+        off.bandwidth_gbs(),
+        "{ctx}: bandwidth"
+    );
+    assert_eq!(
+        on.simulated_iterations, off.simulated_iterations,
+        "{ctx}: simulated iterations"
+    );
+    assert_eq!(off.closed_at_iteration, None, "{ctx}: off must not close");
+}
+
+/// A randomized pattern drawn from the families the paper sweeps:
+/// delta-0 revisits, uniform strides, huge-delta page walkers, random
+/// buffers with cycling delta lists, and Table-5 proxies.
+fn arbitrary_pattern(g: &mut Gen, v_cap: usize) -> Pattern {
+    match g.usize_in(0, 4) {
+        0 => {
+            // Delta-0: total revisit (the LULESH-S3 shape).
+            let v = g.usize_in(1, v_cap);
+            Pattern::from_indices(
+                "d0",
+                (0..v as i64).map(|i| i * g.i64_in(1, 8)).collect(),
+            )
+            .with_delta(0)
+        }
+        1 => {
+            let s = 1usize << g.usize_in(0, 6);
+            let v = g.usize_in(1, v_cap);
+            Pattern::from_indices(
+                "ustride",
+                (0..v as i64).map(|i| i * s as i64).collect(),
+            )
+            .with_delta((v * s) as i64)
+        }
+        2 => {
+            // Huge delta: fresh pages every iteration (PENNANT shape).
+            Pattern::from_indices(
+                "huge",
+                (0..16i64).map(|j| j * 512).collect(),
+            )
+            .with_delta(g.i64_in(1, 4) * 16384)
+        }
+        3 => {
+            let v = g.usize_in(2, v_cap);
+            let idx: Vec<i64> = (0..v).map(|_| g.i64_in(0, 2048)).collect();
+            let jump = g.i64_in(0, 512);
+            Pattern::from_indices("rand", idx).with_deltas(&[0, 0, 0, jump])
+        }
+        _ => {
+            let name = *g.choose(&["AMG-G0", "LULESH-S1", "LULESH-S3"]);
+            let app = table5::by_name(name).unwrap();
+            Pattern::from_indices(app.name, app.indices.to_vec())
+                .with_delta(app.delta)
+        }
+    }
+}
+
+#[test]
+fn prop_cpu_closure_equivalence() {
+    check("CPU: closure on == closure off, exactly", 20, |g| {
+        let plat = platforms::by_name(
+            *g.choose(&["skx", "bdw", "naples", "tx2", "knl", "clx"]),
+        )
+        .unwrap();
+        let kernel = if g.bool() { Kernel::Gather } else { Kernel::Scatter };
+        let page = *g.choose(&[PageSize::FourKB, PageSize::TwoMB]);
+        let threads = if g.bool() {
+            None
+        } else {
+            Some(g.usize_in(1, 8))
+        };
+        let pat = arbitrary_pattern(g, 16).with_count(1 << g.usize_in(8, 13));
+        let run = |closure_enabled: bool| {
+            let mut e = CpuEngine::with_options(
+                &plat,
+                CpuSimOptions {
+                    closure_enabled,
+                    page_size: page,
+                    threads,
+                    ..Default::default()
+                },
+            );
+            e.run(&pat, kernel).unwrap()
+        };
+        let on = run(true);
+        let off = run(false);
+        assert_identical(
+            &on,
+            &off,
+            &format!("{} {:?} {}", plat.name, kernel, pat.spec),
+        );
+    });
+}
+
+#[test]
+fn prop_gpu_closure_equivalence() {
+    check("GPU: closure on == closure off, exactly", 14, |g| {
+        let plat = platforms::gpu_by_name(
+            *g.choose(&["k40c", "titanxp", "p100", "v100"]),
+        )
+        .unwrap();
+        let kernel = if g.bool() { Kernel::Gather } else { Kernel::Scatter };
+        let page = *g.choose(&[PageSize::SixtyFourKB, PageSize::TwoMB]);
+        let pat = arbitrary_pattern(g, 64).with_count(1 << g.usize_in(6, 11));
+        let run = |closure_enabled: bool| {
+            let mut e = GpuEngine::with_options(
+                &plat,
+                GpuSimOptions {
+                    closure_enabled,
+                    page_size: page,
+                    ..Default::default()
+                },
+            );
+            e.run(&pat, kernel).unwrap()
+        };
+        let on = run(true);
+        let off = run(false);
+        assert_identical(
+            &on,
+            &off,
+            &format!("{} {:?} {}", plat.name, kernel, pat.spec),
+        );
+    });
+}
+
+/// The test above would be vacuous if closure never fired; pin that it
+/// does fire — and early — on the workloads it is built for.
+#[test]
+fn closure_fires_where_it_should() {
+    let opts = CpuSimOptions {
+        closure_enabled: true, // pin explicitly, independent of env
+        ..Default::default()
+    };
+    let skx = platforms::by_name("skx").unwrap();
+    let s3 = table5::by_name("LULESH-S3").unwrap().to_pattern(1 << 14);
+    let r = CpuEngine::with_options(&skx, opts.clone())
+        .run(&s3, Kernel::Scatter)
+        .unwrap();
+    let at = r.closed_at_iteration.expect("delta-0 scatter must close");
+    assert!(at < 64, "delta-0 should close within a few iterations: {at}");
+
+    let knl = platforms::by_name("knl").unwrap();
+    let huge = Pattern::from_indices(
+        "huge-delta",
+        (0..16i64).map(|j| j * 512).collect(),
+    )
+    .with_delta(16384)
+    .with_count(1 << 14);
+    let r = CpuEngine::with_options(&knl, opts)
+        .run(&huge, Kernel::Gather)
+        .unwrap();
+    assert!(
+        r.closed_at_iteration.is_some(),
+        "huge-delta gather must close"
+    );
+}

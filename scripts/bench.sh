@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Perf-trajectory runner: times the ustride fast sweep and the
+# LULESH-S3 delta-0 proxy with loop closure on vs off, and records the
+# wall-clock numbers in BENCH_sim.json (repo root by default, or $1).
+#
+# Usage: scripts/bench.sh [output.json]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+out="${1:-$PWD/BENCH_sim.json}"
+case "$out" in
+  /*) ;;
+  *) out="$PWD/$out" ;;
+esac
+BENCH_SIM_JSON="$out" cargo bench --bench sweep
+echo "bench record: $out"
