@@ -123,6 +123,8 @@ pub struct RunArgs {
 pub fn parse_args(args: &[String]) -> Result<Command> {
     let mut kernel: Option<Kernel> = None;
     let mut pattern_spec: Option<String> = None;
+    let mut gather_spec: Option<String> = None;
+    let mut scatter_spec: Option<String> = None;
     let mut deltas: Option<Vec<i64>> = None;
     let mut count: Option<usize> = None;
     let mut json_path: Option<String> = None;
@@ -142,6 +144,8 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
         match arg.as_str() {
             "-k" | "--kernel" => kernel = Some(Kernel::parse(&take("-k")?)?),
             "-p" | "--pattern" => pattern_spec = Some(take("-p")?),
+            "-g" | "--pattern-gather" => gather_spec = Some(take("-g")?),
+            "-u" | "--pattern-scatter" => scatter_spec = Some(take("-u")?),
             "-d" | "--delta" => {
                 // Single delta or a comma-separated cycling list (the
                 // temporal-locality extension, paper §7 item 1).
@@ -242,27 +246,71 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
         return Ok(Command::Help);
     }
 
-    let kernel =
-        kernel.ok_or_else(|| Error::Cli("missing -k Gather|Scatter".into()))?;
-    let spec = pattern_spec
-        .ok_or_else(|| Error::Cli("missing -p PATTERN".into()))?;
-    // Table-5 pattern ids are accepted anywhere a spec is; they carry
-    // their own default delta.
-    let mut pattern = match crate::pattern::table5::by_name(&spec) {
-        Some(app) => Pattern::from_indices(app.name, app.indices.to_vec())
-            .with_delta(app.delta),
-        None => Pattern::parse(&spec)?,
+    let kernel = kernel
+        .ok_or_else(|| Error::Cli("missing -k Gather|Scatter|GS".into()))?;
+    let mut pattern = if kernel == Kernel::GS {
+        // GS takes two spec strings: -g (gather/read side) and -u
+        // (scatter/write side), mirroring the original tool's
+        // --pattern-gather / --pattern-scatter flags.
+        if pattern_spec.is_some() {
+            return Err(Error::Cli(
+                "-k GS takes -g GATHER_PATTERN and -u SCATTER_PATTERN, \
+                 not -p"
+                    .into(),
+            ));
+        }
+        let g = gather_spec.ok_or_else(|| {
+            Error::Cli("missing -g GATHER_PATTERN (required by -k GS)".into())
+        })?;
+        let u = scatter_spec.ok_or_else(|| {
+            Error::Cli("missing -u SCATTER_PATTERN (required by -k GS)".into())
+        })?;
+        let (gidx, gdelta) = side_indices(&g)?;
+        let (uidx, _) = side_indices(&u)?;
+        let mut p = Pattern::from_indices(&format!("{g}>{u}"), gidx)
+            .with_gs_scatter(uidx);
+        // A Table-5 gather side carries the app's default delta, same
+        // as the single-kernel path (-d still overrides below).
+        if let Some(d) = gdelta {
+            p = p.with_delta(d);
+        }
+        p
+    } else {
+        if gather_spec.is_some() || scatter_spec.is_some() {
+            return Err(Error::Cli(format!(
+                "-g/-u apply to -k GS; kernel {} takes a single -p PATTERN",
+                kernel.name()
+            )));
+        }
+        let spec = pattern_spec
+            .ok_or_else(|| Error::Cli("missing -p PATTERN".into()))?;
+        // Table-5 pattern ids are accepted anywhere a spec is; they
+        // carry their own default delta.
+        match crate::pattern::table5::by_name(&spec) {
+            Some(app) => Pattern::from_indices(app.name, app.indices.to_vec())
+                .with_delta(app.delta),
+            None => Pattern::parse(&spec)?,
+        }
     };
     if let Some(d) = deltas {
         pattern = pattern.with_deltas(&d);
     }
     pattern = pattern.with_count(count.unwrap_or(1 << 20));
-    pattern.validate()?;
+    pattern.validate_for(kernel)?;
     Ok(Command::Run(RunArgs {
         kernel,
         pattern,
         common,
     }))
+}
+
+/// Resolve one side of a GS pattern: a Table-5 id (which also carries
+/// the app's default delta) or any `parse_spec` string.
+fn side_indices(spec: &str) -> Result<(Vec<i64>, Option<i64>)> {
+    match crate::pattern::table5::by_name(spec) {
+        Some(app) => Ok((app.indices.to_vec(), Some(app.delta))),
+        None => Ok((crate::pattern::parse_spec(spec)?, None)),
+    }
 }
 
 /// Counts accept plain integers or `2^N`.
@@ -286,6 +334,7 @@ spatter — gather/scatter memory benchmark (paper reproduction)
 
 USAGE:
   spatter -k Gather|Scatter -p PATTERN -d DELTA -l COUNT [options]
+  spatter -k GS -g GATHER_PATTERN -u SCATTER_PATTERN -d DELTA -l COUNT
   spatter -j CONFIG.json [options]
   spatter --suite NAME [--out DIR]     regenerate a paper experiment
   spatter --list-platforms | --list-patterns
@@ -301,6 +350,10 @@ PATTERN:
 OPTIONS:
   -a, --arch NAME      simulated platform (default skx; --list-platforms)
   -b, --backend B      openmp | cuda | scalar | pjrt (default openmp)
+  -g, --pattern-gather P   read-side pattern of the GS indexed copy
+                       (dst[u[i]] = src[g[i]]); requires -k GS and -u
+  -u, --pattern-scatter P  write-side pattern of the GS indexed copy;
+                       must have the same index length as -g
   -d, --delta D        base advance; a comma list cycles (temporal
                        locality extension), e.g. -d 0,0,0,16
   -l, --count N        gathers/scatters to perform (accepts 2^N)
@@ -321,7 +374,7 @@ OPTIONS:
       --validate       cross-check numerics through the PJRT path
       --json-out       machine-readable output
       --suite NAME     fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|
-                       pagesize|ustride|threadscale|all
+                       pagesize|ustride|threadscale|prefetch|all
 ";
 
 #[cfg(test)]
@@ -345,6 +398,69 @@ mod tests {
             }
             other => panic!("expected Run, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn gs_invocation() {
+        // ./spatter -k GS -g UNIFORM:8:4 -u UNIFORM:8:1 -d 32 -l 1024
+        let cmd =
+            parse_args(&argv("-k GS -g UNIFORM:8:4 -u UNIFORM:8:1 -d 32 -l 1024"))
+                .unwrap();
+        match cmd {
+            Command::Run(r) => {
+                assert_eq!(r.kernel, Kernel::GS);
+                assert_eq!(
+                    r.pattern.indices,
+                    (0..8).map(|i| i * 4).collect::<Vec<i64>>()
+                );
+                assert_eq!(
+                    r.pattern.scatter_indices,
+                    (0..8).collect::<Vec<i64>>()
+                );
+                assert_eq!(r.pattern.delta, 32);
+                assert_eq!(r.pattern.count, 1024);
+                assert_eq!(r.pattern.spec, "UNIFORM:8:4>UNIFORM:8:1");
+            }
+            other => panic!("{other:?}"),
+        }
+        // Table-5 ids work as GS sides, and the gather side carries
+        // the app's default delta (LULESH-G3: 8) when -d is omitted.
+        match parse_args(&argv("-k GS -g LULESH-G3 -u UNIFORM:16:1 -l 64"))
+            .unwrap()
+        {
+            Command::Run(r) => {
+                assert_eq!(r.pattern.vector_len(), 16);
+                assert_eq!(r.pattern.scatter_indices.len(), 16);
+                assert_eq!(r.pattern.delta, 8, "app default delta applies");
+            }
+            other => panic!("{other:?}"),
+        }
+        // ... and -d still overrides it.
+        match parse_args(&argv("-k GS -g LULESH-G3 -u UNIFORM:16:1 -d 16 -l 64"))
+            .unwrap()
+        {
+            Command::Run(r) => assert_eq!(r.pattern.delta, 16),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn gs_flag_errors() {
+        // GS without either side.
+        assert!(parse_args(&argv("-k GS -g UNIFORM:8:1 -l 64")).is_err());
+        assert!(parse_args(&argv("-k GS -u UNIFORM:8:1 -l 64")).is_err());
+        // GS with -p instead of -g/-u.
+        assert!(parse_args(&argv("-k GS -p UNIFORM:8:1 -l 64")).is_err());
+        // -g/-u on single-buffer kernels.
+        assert!(parse_args(&argv("-k Gather -g UNIFORM:8:1 -l 64")).is_err());
+        assert!(
+            parse_args(&argv("-k Scatter -p 0,1 -u UNIFORM:8:1 -l 64")).is_err()
+        );
+        // Mismatched side lengths fail validation.
+        assert!(
+            parse_args(&argv("-k GS -g UNIFORM:8:1 -u UNIFORM:4:1 -l 64"))
+                .is_err()
+        );
     }
 
     #[test]

@@ -43,22 +43,27 @@ pub struct RunConfig {
 impl RunConfig {
     /// Serialize back to the config-file schema. `parse_config_text`
     /// of the serialized form reproduces this config (round-trip).
+    /// GS configs serialize their two index buffers under the
+    /// `"pattern-gather"` / `"pattern-scatter"` keys; single-buffer
+    /// kernels keep `"pattern"`.
     pub fn to_json(&self) -> Value {
+        let index_array = |idx: &[i64]| {
+            Value::Array(idx.iter().map(|&i| Value::from(i)).collect())
+        };
         let mut pairs: Vec<(&str, Value)> = vec![
             ("name", Value::from(self.name.clone())),
             ("kernel", Value::from(self.kernel.name())),
-            (
-                "pattern",
-                Value::Array(
-                    self.pattern
-                        .indices
-                        .iter()
-                        .map(|&i| Value::from(i))
-                        .collect(),
-                ),
-            ),
             ("count", Value::from(self.pattern.count)),
         ];
+        if self.kernel == Kernel::GS {
+            pairs.push(("pattern-gather", index_array(&self.pattern.indices)));
+            pairs.push((
+                "pattern-scatter",
+                index_array(&self.pattern.scatter_indices),
+            ));
+        } else {
+            pairs.push(("pattern", index_array(&self.pattern.indices)));
+        }
         if self.pattern.deltas.len() > 1 {
             pairs.push((
                 "delta",
@@ -99,27 +104,92 @@ pub fn parse_config_text(text: &str) -> Result<Vec<RunConfig>> {
     arr.iter().enumerate().map(|(i, v)| parse_one(i, v)).collect()
 }
 
-fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
-    let kernel = Kernel::parse(v.get("kernel")?.as_str()?)?;
-    let mut pattern = match v.get("pattern")? {
+/// One side of a pattern key: a spec string (builtin or Table-5 name)
+/// or an explicit index array. Returns `(display name, indices,
+/// app default delta)` — the delta is `Some` only for Table-5 ids,
+/// which carry their own base advance.
+fn parse_index_value(
+    i: usize,
+    key: &str,
+    v: &Value,
+) -> Result<(String, Vec<i64>, Option<i64>)> {
+    match v {
         Value::String(spec) => {
-            // Table-5 names are accepted anywhere a spec is.
             if let Some(app) = table5::by_name(spec) {
-                Pattern::from_indices(&app.name.to_string(), app.indices.to_vec())
-                    .with_delta(app.delta)
+                Ok((app.name.to_string(), app.indices.to_vec(), Some(app.delta)))
             } else {
-                Pattern::parse(spec)?
+                Ok((spec.clone(), crate::pattern::parse_spec(spec)?, None))
             }
         }
         Value::Array(items) => {
-            let idx: Result<Vec<i64>> = items.iter().map(|x| x.as_i64()).collect();
-            Pattern::from_indices(&format!("custom[{i}]"), idx?)
+            let idx: Result<Vec<i64>> =
+                items.iter().map(|x| x.as_i64()).collect();
+            Ok((format!("custom[{i}]"), idx?, None))
         }
-        other => {
+        other => Err(Error::Config(format!(
+            "run {i}: {key} must be a string or array, got {}",
+            other.kind()
+        ))),
+    }
+}
+
+fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
+    let kernel = Kernel::parse(v.get("kernel")?.as_str()?)?;
+    let mut pattern = if kernel == Kernel::GS {
+        // GS: dual index buffers under "pattern-gather" /
+        // "pattern-scatter" (dst[scatter[j]] = src[gather[j]]).
+        if v.get_opt("pattern").is_some() {
             return Err(Error::Config(format!(
-                "run {i}: pattern must be a string or array, got {}",
-                other.kind()
-            )))
+                "run {i}: GS configs use \"pattern-gather\" and \
+                 \"pattern-scatter\", not \"pattern\""
+            )));
+        }
+        let gv = v.get("pattern-gather").map_err(|_| {
+            Error::Config(format!(
+                "run {i}: kernel GS needs a \"pattern-gather\" key"
+            ))
+        })?;
+        let sv = v.get("pattern-scatter").map_err(|_| {
+            Error::Config(format!(
+                "run {i}: kernel GS needs a \"pattern-scatter\" key"
+            ))
+        })?;
+        let (gname, gidx, gdelta) = parse_index_value(i, "pattern-gather", gv)?;
+        let (sname, sidx, _) = parse_index_value(i, "pattern-scatter", sv)?;
+        let mut p = Pattern::from_indices(&format!("{gname}>{sname}"), gidx)
+            .with_gs_scatter(sidx);
+        // A Table-5 gather side carries the app's default delta, same
+        // as the single-kernel path (a "delta" key still overrides).
+        if let Some(d) = gdelta {
+            p = p.with_delta(d);
+        }
+        p
+    } else {
+        for key in ["pattern-gather", "pattern-scatter"] {
+            if v.get_opt(key).is_some() {
+                return Err(Error::Config(format!(
+                    "run {i}: \"{key}\" applies to the GS kernel; kernel {} \
+                     takes a single \"pattern\"",
+                    kernel.name()
+                )));
+            }
+        }
+        match v.get("pattern")? {
+            Value::String(spec) => {
+                // Table-5 names are accepted anywhere a spec is, and
+                // carry their own default delta.
+                if let Some(app) = table5::by_name(spec) {
+                    Pattern::from_indices(
+                        &app.name.to_string(),
+                        app.indices.to_vec(),
+                    )
+                    .with_delta(app.delta)
+                } else {
+                    Pattern::parse(spec)?
+                }
+            }
+            other => parse_index_value(i, "pattern", other)
+                .map(|(name, idx, _)| Pattern::from_indices(&name, idx))?,
         }
     };
     // "delta" accepts a number or a cycling list (temporal-locality
@@ -140,7 +210,7 @@ fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
     };
     pattern = pattern.with_count(count);
     pattern
-        .validate()
+        .validate_for(kernel)
         .map_err(|e| Error::Config(format!("run {i}: {e}")))?;
     let page_size = match v.get_opt("page-size") {
         Some(ps) => Some(
@@ -333,6 +403,97 @@ mod tests {
             r#"[{"kernel": "Gather", "pattern": [-1, 2]}]"#,
         ] {
             assert!(parse_config_text(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn gs_config_parses_specs_arrays_and_table5() {
+        let cfgs = parse_config_text(
+            r#"[
+              {"name": "gs-spec", "kernel": "GS",
+               "pattern-gather": "UNIFORM:8:4",
+               "pattern-scatter": "UNIFORM:8:1", "delta": 32, "count": 256},
+              {"name": "gs-arr", "kernel": "GS",
+               "pattern-gather": [0, 24, 48],
+               "pattern-scatter": [0, 1, 2], "delta": 1, "count": 64},
+              {"name": "gs-app", "kernel": "GS",
+               "pattern-gather": "LULESH-G3",
+               "pattern-scatter": "UNIFORM:16:1", "count": 64},
+              {"name": "gs-app-override", "kernel": "GS",
+               "pattern-gather": "LULESH-G3",
+               "pattern-scatter": "UNIFORM:16:1", "delta": 16, "count": 64}
+            ]"#,
+        )
+        .unwrap();
+        assert_eq!(cfgs[0].kernel, Kernel::GS);
+        assert_eq!(
+            cfgs[0].pattern.indices,
+            vec![0, 4, 8, 12, 16, 20, 24, 28]
+        );
+        assert_eq!(
+            cfgs[0].pattern.scatter_indices,
+            (0..8).collect::<Vec<i64>>()
+        );
+        assert_eq!(cfgs[0].pattern.delta, 32);
+        assert_eq!(cfgs[1].pattern.indices, vec![0, 24, 48]);
+        assert_eq!(cfgs[1].pattern.scatter_indices, vec![0, 1, 2]);
+        assert_eq!(cfgs[2].pattern.vector_len(), 16);
+        assert_eq!(cfgs[2].pattern.scatter_indices.len(), 16);
+        assert_eq!(cfgs[2].pattern.spec, "LULESH-G3>UNIFORM:16:1");
+        // A Table-5 gather side carries the app's default delta
+        // (LULESH-G3: 8); an explicit "delta" key overrides it.
+        assert_eq!(cfgs[2].pattern.delta, 8);
+        assert_eq!(cfgs[3].pattern.delta, 16);
+    }
+
+    #[test]
+    fn gs_config_roundtrips_through_to_json() {
+        let cfgs = parse_config_text(
+            r#"[
+              {"name": "gs", "kernel": "GS",
+               "pattern-gather": "UNIFORM:8:4",
+               "pattern-scatter": "UNIFORM:8:1",
+               "delta": [0, 0, 32], "count": 256, "page-size": "2MB",
+               "threads": 4}
+            ]"#,
+        )
+        .unwrap();
+        let text = json::to_string(&Value::Array(
+            cfgs.iter().map(|c| c.to_json()).collect(),
+        ));
+        let back = parse_config_text(&text).unwrap();
+        assert_eq!(back[0].kernel, Kernel::GS);
+        assert_eq!(back[0].name, cfgs[0].name);
+        assert_eq!(back[0].pattern.indices, cfgs[0].pattern.indices);
+        assert_eq!(
+            back[0].pattern.scatter_indices,
+            cfgs[0].pattern.scatter_indices
+        );
+        assert_eq!(back[0].pattern.deltas, vec![0, 0, 32]);
+        assert_eq!(back[0].pattern.count, 256);
+        assert_eq!(back[0].page_size, Some(PageSize::TwoMB));
+        assert_eq!(back[0].threads, Some(4));
+    }
+
+    #[test]
+    fn gs_config_shape_errors_carry_run_index() {
+        for bad in [
+            // GS with a single "pattern".
+            r#"[{"kernel": "GS", "pattern": "UNIFORM:8:1"}]"#,
+            // Missing either side.
+            r#"[{"kernel": "GS", "pattern-gather": "UNIFORM:8:1"}]"#,
+            r#"[{"kernel": "GS", "pattern-scatter": "UNIFORM:8:1"}]"#,
+            // Mismatched side lengths.
+            r#"[{"kernel": "GS", "pattern-gather": "UNIFORM:8:1",
+                 "pattern-scatter": "UNIFORM:4:1"}]"#,
+            // Dual keys on a single-buffer kernel.
+            r#"[{"kernel": "Gather", "pattern": "UNIFORM:8:1",
+                 "pattern-scatter": "UNIFORM:8:1"}]"#,
+            r#"[{"kernel": "Scatter", "pattern": "UNIFORM:8:1",
+                 "pattern-gather": "UNIFORM:8:1"}]"#,
+        ] {
+            let err = parse_config_text(bad).unwrap_err();
+            assert!(err.to_string().contains("run 0"), "{bad}: {err}");
         }
     }
 }

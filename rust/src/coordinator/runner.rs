@@ -24,6 +24,15 @@ pub struct RunRecord {
     pub vector_len: usize,
     pub seconds: f64,
     pub bandwidth_gbs: f64,
+    /// Useful payload bytes moved by the read (gather) stream: the
+    /// full payload for Gather and GS, 0 for Scatter.
+    pub read_bytes: u64,
+    /// Useful payload bytes moved by the write (scatter) stream: the
+    /// full payload for Scatter and GS, 0 for Gather. GS moves its
+    /// payload on *both* streams; the headline `bandwidth_gbs` counts
+    /// the indexed-copy payload once, so GS stays comparable to its
+    /// component kernels.
+    pub write_bytes: u64,
     /// Which simulated resource bound the run ("dram-bw", "tlb", ...);
     /// empty for real-execution backends.
     pub bottleneck: String,
@@ -55,6 +64,8 @@ impl RunRecord {
             ("vector_len", Value::from(self.vector_len)),
             ("seconds", Value::from(self.seconds)),
             ("bandwidth_gbs", Value::from(self.bandwidth_gbs)),
+            ("read_bytes", Value::from(self.read_bytes as usize)),
+            ("write_bytes", Value::from(self.write_bytes as usize)),
             ("bottleneck", Value::from(self.bottleneck.clone())),
             (
                 "page_size",
@@ -96,6 +107,7 @@ pub fn run_one(
     kernel: Kernel,
 ) -> Result<RunRecord> {
     let r = backend.run(pattern, kernel)?;
+    let payload = pattern.moved_bytes() as u64;
     Ok(RunRecord {
         name: name.to_string(),
         kernel,
@@ -105,6 +117,8 @@ pub fn run_one(
         vector_len: pattern.vector_len(),
         seconds: r.seconds,
         bandwidth_gbs: r.bandwidth_gbs(),
+        read_bytes: if kernel.reads() { payload } else { 0 },
+        write_bytes: if kernel.writes() { payload } else { 0 },
         bottleneck: r.breakdown.bottleneck().to_string(),
         page_size: backend.page_size().map(|p| p.name().to_string()),
         tlb_hit_rate: r.counters.tlb.hit_rate(),
@@ -160,8 +174,9 @@ pub fn run_configs_jobs(
 pub fn render_table(records: &[RunRecord]) -> String {
     let mut t = Table::new(&[
         "name", "kernel", "V", "delta", "count", "page", "thr", "time (s)",
-        "GB/s", "TLB hit%", "bound by",
+        "GB/s", "MiB r/w", "TLB hit%", "bound by",
     ]);
+    let mib = |b: u64| b as f64 / (1u64 << 20) as f64;
     for r in records {
         t.row(&[
             r.name.clone(),
@@ -173,6 +188,7 @@ pub fn render_table(records: &[RunRecord]) -> String {
             r.threads.map(|n| n.to_string()).unwrap_or_else(|| "-".to_string()),
             format!("{:.6}", r.seconds),
             format!("{:.2}", r.bandwidth_gbs),
+            format!("{:.0}/{:.0}", mib(r.read_bytes), mib(r.write_bytes)),
             match r.tlb_hit_rate {
                 Some(rate) => format!("{:.1}", rate * 100.0),
                 None => "-".to_string(),
@@ -404,7 +420,65 @@ mod tests {
         let table = render_table(&[r]);
         assert!(table.contains("| thr "), "{table}");
         assert!(table.contains("| page "), "{table}");
+        assert!(table.contains("| MiB r/w "), "{table}");
         assert!(table.contains("| 16 "), "{table}");
         assert!(!table.contains("aggregate over"), "single run: no aggregate");
+    }
+
+    #[test]
+    fn per_side_bytes_follow_the_kernel() {
+        let mut b = backend();
+        let p = Pattern::parse("UNIFORM:8:1")
+            .unwrap()
+            .with_delta(8)
+            .with_count(4096);
+        let payload = p.moved_bytes() as u64;
+        let g = run_one(&mut b, "g", &p, Kernel::Gather).unwrap();
+        assert_eq!((g.read_bytes, g.write_bytes), (payload, 0));
+        let s = run_one(&mut b, "s", &p, Kernel::Scatter).unwrap();
+        assert_eq!((s.read_bytes, s.write_bytes), (0, payload));
+        let gs_pat = Pattern::parse("UNIFORM:8:1")
+            .unwrap()
+            .with_gs_scatter((0..8).collect())
+            .with_delta(8)
+            .with_count(4096);
+        let gs = run_one(&mut b, "gs", &gs_pat, Kernel::GS).unwrap();
+        assert_eq!((gs.read_bytes, gs.write_bytes), (payload, payload));
+        // And the JSON record carries both sides.
+        let j = gs.to_json();
+        assert_eq!(j.get("kernel").unwrap().as_str().unwrap(), "GS");
+        assert_eq!(
+            j.get("read_bytes").unwrap().as_usize().unwrap() as u64,
+            payload
+        );
+        assert_eq!(
+            j.get("write_bytes").unwrap().as_usize().unwrap() as u64,
+            payload
+        );
+    }
+
+    #[test]
+    fn gs_configs_run_through_the_jobs_pool_byte_identically() {
+        let cfgs = parse_config_text(
+            r#"[
+              {"name": "gs-u", "kernel": "GS",
+               "pattern-gather": "UNIFORM:8:4",
+               "pattern-scatter": "UNIFORM:8:1", "delta": 32,
+               "count": 8192},
+              {"name": "g", "kernel": "Gather", "pattern": "UNIFORM:8:4",
+               "delta": 32, "count": 8192},
+              {"name": "gs-d0", "kernel": "GS",
+               "pattern-gather": [0, 1, 2, 3],
+               "pattern-scatter": [0, 24, 48, 72], "delta": 0,
+               "count": 4096, "threads": 4}
+            ]"#,
+        )
+        .unwrap();
+        let serial = run_configs_jobs(&skx_factory, &cfgs, 1).unwrap();
+        let par = run_configs_jobs(&skx_factory, &cfgs, 8).unwrap();
+        assert_eq!(render_table(&serial), render_table(&par));
+        assert_eq!(render_json(&serial), render_json(&par));
+        // The GS run is slower than its gather half alone.
+        assert!(serial[0].bandwidth_gbs <= serial[1].bandwidth_gbs * 1.02);
     }
 }

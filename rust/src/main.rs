@@ -227,6 +227,23 @@ mod tests {
     }
 
     #[test]
+    fn gs_invocation_end_to_end() {
+        let args: Vec<String> =
+            "-k GS -g UNIFORM:8:4 -u UNIFORM:8:1 -d 32 -l 4096 -a skx"
+                .split_whitespace()
+                .map(|s| s.to_string())
+                .collect();
+        run(&args).unwrap();
+        // And on the GPU backend.
+        let args: Vec<String> =
+            "-k GS -g UNIFORM:256:4 -u UNIFORM:256:1 -d 1024 -l 2048 -b cuda -a p100"
+                .split_whitespace()
+                .map(|s| s.to_string())
+                .collect();
+        run(&args).unwrap();
+    }
+
+    #[test]
     fn bad_platform_is_error() {
         let args: Vec<String> = "-k Gather -p UNIFORM:8:2 -d 16 -a nope"
             .split_whitespace()

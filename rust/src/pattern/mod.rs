@@ -22,11 +22,15 @@ pub use spec::parse_spec;
 
 use crate::error::{Error, Result};
 
-/// Gather (indexed read) or Scatter (indexed write) — paper Algorithm 1.
+/// Gather (indexed read), Scatter (indexed write), or GS (gather-
+/// scatter, the indexed copy `dst[scatter[i]] = src[gather[i]]`) —
+/// paper Algorithm 1 plus the paired-pattern case its experiments 2/3
+/// exercise.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Kernel {
     Gather,
     Scatter,
+    GS,
 }
 
 impl Kernel {
@@ -34,8 +38,9 @@ impl Kernel {
         match s.to_ascii_lowercase().as_str() {
             "gather" | "g" => Ok(Kernel::Gather),
             "scatter" | "s" => Ok(Kernel::Scatter),
+            "gs" | "sg" | "gatherscatter" | "gather-scatter" => Ok(Kernel::GS),
             _ => Err(Error::PatternParse(format!(
-                "unknown kernel '{s}' (expected Gather or Scatter)"
+                "unknown kernel '{s}' (expected Gather, Scatter, or GS)"
             ))),
         }
     }
@@ -44,6 +49,27 @@ impl Kernel {
         match self {
             Kernel::Gather => "Gather",
             Kernel::Scatter => "Scatter",
+            Kernel::GS => "GS",
+        }
+    }
+
+    /// Whether the kernel issues an indexed *read* stream.
+    pub fn reads(&self) -> bool {
+        matches!(self, Kernel::Gather | Kernel::GS)
+    }
+
+    /// Whether the kernel issues an indexed *write* stream.
+    pub fn writes(&self) -> bool {
+        matches!(self, Kernel::Scatter | Kernel::GS)
+    }
+
+    /// Indexed access streams per element (GS touches memory on both
+    /// the read and the write side).
+    pub fn streams(&self) -> usize {
+        if *self == Kernel::GS {
+            2
+        } else {
+            1
         }
     }
 }
@@ -90,7 +116,20 @@ pub struct Pattern {
     pub deltas: Vec<i64>,
     /// Number of gathers or scatters to perform (`-l` in the CLI).
     pub count: usize,
+    /// Secondary index buffer for the GS (gather-scatter) kernel: the
+    /// scatter (write) side of the indexed copy, addressed against a
+    /// separate target region (see [`Pattern::gs_scatter_base`]).
+    /// Empty for Gather/Scatter runs, where `indices` is the single
+    /// buffer; for GS, `indices` is the gather (read) side and both
+    /// buffers must have equal length.
+    pub scatter_indices: Vec<i64>,
 }
+
+/// Element alignment of the GS write region: the scatter side is
+/// modelled as a separate allocation placed after the gather side at
+/// the next 1 GiB boundary, so the two streams never alias at any
+/// translation page size (1 GiB = 2^27 doubles).
+const GS_REGION_ALIGN_ELEMS: usize = 1 << 27;
 
 impl Pattern {
     /// Parse a pattern spec string (builtin or custom index list).
@@ -104,6 +143,7 @@ impl Pattern {
             delta: 1,
             deltas: Vec::new(),
             count: 1,
+            scatter_indices: Vec::new(),
         })
     }
 
@@ -115,7 +155,16 @@ impl Pattern {
             delta: 1,
             deltas: Vec::new(),
             count: 1,
+            scatter_indices: Vec::new(),
         }
+    }
+
+    /// Attach the scatter (write) side of a GS pattern. `indices`
+    /// becomes the gather (read) side; both buffers must have equal
+    /// length for the pattern to validate under [`Kernel::GS`].
+    pub fn with_gs_scatter(mut self, scatter_indices: Vec<i64>) -> Pattern {
+        self.scatter_indices = scatter_indices;
+        self
     }
 
     pub fn with_delta(mut self, delta: i64) -> Pattern {
@@ -184,17 +233,51 @@ impl Pattern {
         self.indices.len()
     }
 
-    /// Largest index in the buffer.
+    /// Largest index in the (primary / gather-side) buffer.
     pub fn max_index(&self) -> i64 {
         self.indices.iter().copied().max().unwrap_or(0)
     }
 
-    /// Number of data elements the target array must hold:
-    /// `base(count-1) + max(idx) + 1` (paper: "Spatter will determine
-    /// the amount of memory required from these inputs").
-    pub fn required_elements(&self) -> usize {
+    /// Largest index in the scatter-side buffer (GS patterns; 0 when
+    /// there is no scatter side).
+    pub fn max_scatter_index(&self) -> i64 {
+        self.scatter_indices.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Element offset of the scatter (write) region for GS patterns:
+    /// the gather-side span rounded up to the next 1 GiB boundary, so
+    /// the read and write target arrays behave as separate allocations
+    /// that never share a line, row, or page at any page size. Zero
+    /// when the pattern has no scatter side.
+    pub fn gs_scatter_base(&self) -> i64 {
+        if self.scatter_indices.is_empty() {
+            return 0;
+        }
+        let src_span = self.gather_span_elements();
+        let a = GS_REGION_ALIGN_ELEMS;
+        (src_span.div_ceil(a) * a) as i64
+    }
+
+    /// Elements spanned by the gather-side stream alone.
+    fn gather_span_elements(&self) -> usize {
         let last_base = self.base(self.count.saturating_sub(1)).max(0) as usize;
         last_base + self.max_index().max(0) as usize + 1
+    }
+
+    /// Number of data elements the target address space must hold:
+    /// `base(count-1) + max(idx) + 1` (paper: "Spatter will determine
+    /// the amount of memory required from these inputs"); GS patterns
+    /// additionally hold the write region beyond `gs_scatter_base`.
+    pub fn required_elements(&self) -> usize {
+        let src = self.gather_span_elements();
+        if self.scatter_indices.is_empty() {
+            return src;
+        }
+        let last_base = self.base(self.count.saturating_sub(1)).max(0) as usize;
+        self.gs_scatter_base() as usize
+            + last_base
+            + self.max_scatter_index().max(0) as usize
+            + 1
     }
 
     /// Useful bytes moved by the whole run (the paper's bandwidth
@@ -216,6 +299,12 @@ impl Pattern {
                 "negative index {neg} (index buffers are zero-based)"
             )));
         }
+        if let Some(&neg) = self.scatter_indices.iter().find(|&&i| i < 0) {
+            return Err(Error::Config(format!(
+                "negative scatter-side index {neg} (index buffers are \
+                 zero-based)"
+            )));
+        }
         if self.delta < 0 {
             return Err(Error::Config(format!("negative delta {}", self.delta)));
         }
@@ -230,6 +319,40 @@ impl Pattern {
             )));
         }
         Ok(())
+    }
+
+    /// Validate the pattern *for a specific kernel*: everything
+    /// [`Pattern::validate`] checks, plus the buffer-shape contract —
+    /// GS needs two equal-length index buffers, Gather/Scatter exactly
+    /// one.
+    pub fn validate_for(&self, kernel: Kernel) -> Result<()> {
+        self.validate()?;
+        match kernel {
+            Kernel::GS => {
+                if self.scatter_indices.is_empty() {
+                    return Err(Error::Config(
+                        "the GS kernel needs a scatter-side index buffer \
+                         (pattern-scatter / -u)"
+                            .into(),
+                    ));
+                }
+                if self.scatter_indices.len() != self.indices.len() {
+                    return Err(Error::Config(format!(
+                        "GS gather/scatter index buffers must have equal \
+                         length (gather {} vs scatter {})",
+                        self.indices.len(),
+                        self.scatter_indices.len()
+                    )));
+                }
+                Ok(())
+            }
+            _ if !self.scatter_indices.is_empty() => Err(Error::Config(format!(
+                "kernel {} takes a single index buffer (a scatter-side \
+                 buffer applies only to GS)",
+                kernel.name()
+            ))),
+            _ => Ok(()),
+        }
     }
 
     /// Classify the index buffer per the paper's taxonomy (§2).
@@ -279,7 +402,68 @@ mod tests {
         assert_eq!(Kernel::parse("Gather").unwrap(), Kernel::Gather);
         assert_eq!(Kernel::parse("scatter").unwrap(), Kernel::Scatter);
         assert_eq!(Kernel::parse("G").unwrap(), Kernel::Gather);
+        assert_eq!(Kernel::parse("GS").unwrap(), Kernel::GS);
+        assert_eq!(Kernel::parse("gs").unwrap(), Kernel::GS);
         assert!(Kernel::parse("both").is_err());
+    }
+
+    #[test]
+    fn kernel_stream_sides() {
+        assert!(Kernel::Gather.reads() && !Kernel::Gather.writes());
+        assert!(!Kernel::Scatter.reads() && Kernel::Scatter.writes());
+        assert!(Kernel::GS.reads() && Kernel::GS.writes());
+        assert_eq!(Kernel::Gather.streams(), 1);
+        assert_eq!(Kernel::GS.streams(), 2);
+        assert_eq!(Kernel::GS.name(), "GS");
+    }
+
+    #[test]
+    fn gs_pattern_shape_validation() {
+        let gs = Pattern::from_indices("g", vec![0, 8, 16])
+            .with_gs_scatter(vec![0, 1, 2])
+            .with_delta(8)
+            .with_count(64);
+        gs.validate_for(Kernel::GS).unwrap();
+        // Mismatched lengths rejected.
+        let bad = Pattern::from_indices("g", vec![0, 8])
+            .with_gs_scatter(vec![0, 1, 2]);
+        assert!(bad.validate_for(Kernel::GS).is_err());
+        // GS without a scatter side rejected.
+        let single = Pattern::from_indices("g", vec![0, 8]);
+        assert!(single.validate_for(Kernel::GS).is_err());
+        single.validate_for(Kernel::Gather).unwrap();
+        // A scatter side on a single-buffer kernel rejected.
+        assert!(gs.validate_for(Kernel::Scatter).is_err());
+        assert!(gs.validate_for(Kernel::Gather).is_err());
+        // Negative scatter-side indices rejected outright.
+        let neg = Pattern::from_indices("g", vec![0])
+            .with_gs_scatter(vec![-1]);
+        assert!(neg.validate().is_err());
+    }
+
+    #[test]
+    fn gs_regions_never_alias() {
+        let gs = Pattern::from_indices("g", (0..8).collect())
+            .with_gs_scatter((0..8).map(|i| i * 24).collect())
+            .with_delta(8)
+            .with_count(1 << 10);
+        let base = gs.gs_scatter_base();
+        // The write region starts at a 1 GiB element boundary past the
+        // read span.
+        assert_eq!(base % (1 << 27), 0);
+        assert!(base as usize >= 8 * ((1 << 10) - 1) + 7 + 1);
+        // required_elements covers the write region too.
+        let last_base = 8 * ((1 << 10) - 1) as usize;
+        assert_eq!(
+            gs.required_elements(),
+            base as usize + last_base + 7 * 24 + 1
+        );
+        // No scatter side: offset is zero and sizing is unchanged.
+        let g = Pattern::from_indices("g", (0..8).collect())
+            .with_delta(8)
+            .with_count(1 << 10);
+        assert_eq!(g.gs_scatter_base(), 0);
+        assert_eq!(g.required_elements(), last_base + 7 + 1);
     }
 
     #[test]

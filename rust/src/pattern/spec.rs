@@ -34,6 +34,11 @@ pub fn parse_spec(spec: &str) -> Result<Vec<i64>> {
         // RANDOM:N:RANGE or RANDOM:N:RANGE:SEED
         let tail = &s[s.find(':').unwrap() + 1..];
         let parts: Vec<&str> = tail.split(':').map(|p| p.trim()).collect();
+        if parts.iter().any(|p| p.is_empty()) {
+            return Err(Error::PatternParse(format!(
+                "empty ':' segment in '{s}' (expected RANDOM:N:RANGE[:SEED])"
+            )));
+        }
         if parts.len() == 2 {
             return random(parse_num(parts[0])?, parse_num(parts[1])?, 0);
         }
@@ -48,7 +53,15 @@ pub fn parse_spec(spec: &str) -> Result<Vec<i64>> {
             "expected RANDOM:N:RANGE[:SEED], got '{s}'"
         )));
     }
-    // Custom: comma-separated index list.
+    // Custom: comma-separated index list. Reject empty segments first
+    // so a trailing or doubled ',' gets a structural error rather than
+    // a number-parse complaint about ''.
+    if s.split(',').any(|t| t.trim().is_empty()) {
+        return Err(Error::PatternParse(format!(
+            "empty ',' segment in custom pattern '{s}' (trailing or \
+             doubled comma?)"
+        )));
+    }
     let idx: Result<Vec<i64>> = s
         .split(',')
         .map(|t| {
@@ -65,10 +78,18 @@ pub fn parse_spec(spec: &str) -> Result<Vec<i64>> {
 }
 
 /// Split `KIND:a:b:...` after the first ':' into exactly `n` fields.
+/// Empty segments (a trailing or doubled ':') get their own error so
+/// `UNIFORM:8:` fails structurally instead of with a confusing
+/// number-parse message downstream.
 fn tail_parts(s: &str, n: usize, usage: &str) -> Result<Vec<String>> {
     let tail = &s[s.find(':').unwrap() + 1..];
     let parts: Vec<String> = tail.split(':').map(|p| p.trim().to_string()).collect();
-    if parts.len() != n || parts.iter().any(|p| p.is_empty()) {
+    if parts.iter().any(|p| p.is_empty()) {
+        return Err(Error::PatternParse(format!(
+            "empty ':' segment in '{s}' (expected {usage})"
+        )));
+    }
+    if parts.len() != n {
         return Err(Error::PatternParse(format!(
             "expected {usage}, got '{s}'"
         )));
@@ -136,5 +157,38 @@ mod tests {
         ] {
             assert!(parse_spec(bad).is_err(), "should reject: {bad:?}");
         }
+    }
+
+    #[test]
+    fn trailing_empty_segments_get_structural_errors() {
+        // A trailing/empty ':' segment must be named as such, not
+        // surface as a "bad number ''" parse complaint.
+        for bad in [
+            "UNIFORM:8:", "UNIFORM::1", "MS1:8::20", "MS1:8:4:",
+            "LAPLACIAN:2:2:", "RANDOM:8:", "RANDOM:8:100:", "RANDOM::100",
+        ] {
+            let msg = parse_spec(bad).unwrap_err().to_string();
+            assert!(
+                msg.contains("empty ':' segment"),
+                "{bad:?}: want a structural error, got: {msg}"
+            );
+            assert!(
+                !msg.contains("bad number ''"),
+                "{bad:?}: confusing number-parse error: {msg}"
+            );
+        }
+        // Same for trailing commas in custom lists.
+        for bad in ["0,24,", ",0,24", "0,,24"] {
+            let msg = parse_spec(bad).unwrap_err().to_string();
+            assert!(
+                msg.contains("empty ',' segment"),
+                "{bad:?}: want a structural error, got: {msg}"
+            );
+        }
+        // The well-formed neighbours still parse.
+        assert!(parse_spec("UNIFORM:8:1").is_ok());
+        assert!(parse_spec("RANDOM:8:100").is_ok());
+        assert!(parse_spec("RANDOM:8:100:7").is_ok());
+        assert!(parse_spec("0,24,48").is_ok());
     }
 }

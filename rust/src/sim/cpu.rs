@@ -113,6 +113,10 @@ pub struct CpuEngine {
     /// rebuilt once per pass and consumed by the demand path (no
     /// per-access multiply, no per-run allocation once warm).
     idx_bytes: Vec<u64>,
+    /// Scratch: the GS scatter-side buffer pre-scaled to byte offsets
+    /// *including* the write-region base, rebuilt once per pass (empty
+    /// for single-buffer kernels).
+    idx2_bytes: Vec<u64>,
     /// Open-row tracker for the DRAM row-locality model.
     last_row: u64,
     /// Effective OpenMP thread count for the next run (resolved from
@@ -150,6 +154,7 @@ impl CpuEngine {
             opts,
             pf_buf: Vec::with_capacity(8),
             idx_bytes: Vec::new(),
+            idx2_bytes: Vec::new(),
             last_row: u64::MAX,
         }
     }
@@ -218,7 +223,7 @@ impl CpuEngine {
 
     /// Simulate one Spatter run and return modelled time + counters.
     pub fn run(&mut self, pattern: &Pattern, kernel: Kernel) -> Result<SimResult> {
-        pattern.validate()?;
+        pattern.validate_for(kernel)?;
         self.reset();
         debug_assert_eq!(
             self.tlb.page_size(),
@@ -227,10 +232,19 @@ impl CpuEngine {
         );
 
         let v = pattern.vector_len();
-        let cap_iters = (self.opts.max_sim_accesses / v).max(1);
+        let cap_iters =
+            (self.opts.max_sim_accesses / (v * kernel.streams())).max(1);
         let measured = pattern.count.min(cap_iters);
-        let is_write = kernel == Kernel::Scatter;
-        let streaming = is_write && write_density(pattern) >= 0.99;
+        // Streaming (non-temporal) store eligibility is a property of
+        // the write-side stream: `indices` for Scatter, the scatter
+        // side for GS.
+        let streaming = match kernel {
+            Kernel::Gather => false,
+            Kernel::Scatter => write_density(pattern, &pattern.indices) >= 0.99,
+            Kernel::GS => {
+                write_density(pattern, &pattern.scatter_indices) >= 0.99
+            }
+        };
 
         // Warmup pass: the paper reports the min of 10 runs, so the
         // measured run starts with caches/TLB warm from the *end* of
@@ -240,12 +254,12 @@ impl CpuEngine {
         let warmup = pattern.count.min(self.opts.warmup_iterations);
         let wstart = pattern.count - warmup;
         let mut scratch = SimCounters::default();
-        self.pass(pattern, wstart, pattern.count, is_write, streaming, &mut scratch);
+        self.pass(pattern, wstart, pattern.count, kernel, streaming, &mut scratch);
 
         // Measured pass: iterations [0, measured) of the next run.
         let mut counters = SimCounters::default();
         let closed_at =
-            self.pass(pattern, 0, measured, is_write, streaming, &mut counters);
+            self.pass(pattern, 0, measured, kernel, streaming, &mut counters);
         counters.coherence_events = self.coherence_events(pattern, kernel, measured);
 
         // Page walks miss the cache hierarchy when touched pages are
@@ -258,6 +272,12 @@ impl CpuEngine {
         let breakdown = self.timing(&counters, kernel, sparse_walks);
         let scale = pattern.count as f64 / measured as f64;
         let seconds = breakdown.total() * scale;
+        // Useful bytes follow Spatter's convention for every kernel:
+        // the indexed-copy payload (8 * V * count), counted once. GS
+        // moves that payload through *two* indexed streams — the
+        // engine charges both against the memory system above, the
+        // record reports per-side traffic — so its headline bandwidth
+        // stays comparable to (and bounded by) its component kernels.
         Ok(SimResult {
             seconds,
             useful_bytes: pattern.moved_bytes() as u64,
@@ -277,17 +297,30 @@ impl CpuEngine {
         pattern: &Pattern,
         begin: usize,
         end: usize,
-        is_write: bool,
+        kernel: Kernel,
         streaming: bool,
         c: &mut SimCounters,
     ) -> Option<usize> {
         let mut last_stream_line = u64::MAX;
         let mut base = pattern.base(begin);
-        // Pre-scale the index buffer to byte offsets once per pass
+        // The primary stream: reads for Gather/GS, writes for Scatter.
+        let primary_write = kernel == Kernel::Scatter;
+        let primary_streaming = primary_write && streaming;
+        // Pre-scale the index buffers to byte offsets once per pass
         // (engine scratch; moved out for the loop's disjoint borrows).
+        // The GS scatter side bakes in its write-region base, so both
+        // streams advance with the same per-iteration base below.
         let mut idx = std::mem::take(&mut self.idx_bytes);
         idx.clear();
         idx.extend(pattern.indices.iter().map(|&i| i as u64 * 8));
+        let mut idx2 = std::mem::take(&mut self.idx2_bytes);
+        idx2.clear();
+        if kernel == Kernel::GS {
+            let dst = pattern.gs_scatter_base() as u64 * 8;
+            idx2.extend(
+                pattern.scatter_indices.iter().map(|&i| dst + i as u64 * 8),
+            );
+        }
         let period = pattern.deltas.len().max(1);
         let mut closer = if self.opts.closure_enabled && end > begin + 1 {
             Some(LoopCloser::new())
@@ -300,7 +333,19 @@ impl CpuEngine {
             let base_bytes = (base as u64) * 8;
             for &off in &idx {
                 let va = VirtualAddress(base_bytes + off);
-                self.access(va, is_write, streaming, &mut last_stream_line, c);
+                self.access(
+                    va,
+                    primary_write,
+                    primary_streaming,
+                    &mut last_stream_line,
+                    c,
+                );
+            }
+            // GS write stream: the vectorized indexed copy gathers the
+            // whole index vector, then scatters it.
+            for &off in &idx2 {
+                let va = VirtualAddress(base_bytes + off);
+                self.access(va, true, streaming, &mut last_stream_line, c);
             }
             base += pattern.delta_at(i);
             i += 1;
@@ -340,6 +385,7 @@ impl CpuEngine {
             }
         }
         self.idx_bytes = idx;
+        self.idx2_bytes = idx2;
         closed_at
     }
 
@@ -542,20 +588,27 @@ impl CpuEngine {
     /// `delta * count/T` elements apart. When the index-buffer span
     /// exceeds that thread stride, thread footprints overlap and every
     /// write into the overlap is a coherence transaction. delta = 0
-    /// (LULESH-S3) is total overlap: every write contends.
+    /// (LULESH-S3) is total overlap: every write contends. GS contends
+    /// through its scatter-side buffer exactly like Scatter does —
+    /// only the write stream participates in ownership traffic.
     fn coherence_events(
         &self,
         pattern: &Pattern,
         kernel: Kernel,
         measured: usize,
     ) -> u64 {
-        if kernel != Kernel::Scatter
+        if !kernel.writes()
             || self.threads <= 1
             || self.platform.absorbs_repeated_writes
         {
             return 0;
         }
-        let idx_span = (pattern.max_index() + 1) as f64;
+        let write_max = if kernel == Kernel::GS {
+            pattern.max_scatter_index()
+        } else {
+            pattern.max_index()
+        };
+        let idx_span = (write_max + 1) as f64;
         let chunk = (pattern.count as f64 / self.threads as f64).max(1.0);
         let thread_stride = pattern.mean_delta() * chunk;
         let overlap = if thread_stride <= 0.0 {
@@ -573,10 +626,21 @@ impl CpuEngine {
         let hz = p.freq_ghz * 1e9;
 
         // Issue cost per element: hardware G/S when vectorized and the
-        // instruction exists; scalar loads/stores otherwise.
+        // instruction exists; scalar loads/stores otherwise. GS issues
+        // one gather element + one scatter element per access pair and
+        // the `accesses` counter counts both sides, so its per-access
+        // cost is the mean of the two — and it falls back to scalar
+        // issue if *either* instruction is missing (the compiler can't
+        // vectorize half an indexed copy, §5.3).
         let vector_cpe = match kernel {
             Kernel::Gather => p.gather_cycles_per_elem,
             Kernel::Scatter => p.scatter_cycles_per_elem,
+            Kernel::GS => {
+                match (p.gather_cycles_per_elem, p.scatter_cycles_per_elem) {
+                    (Some(g), Some(s)) => Some(0.5 * (g + s)),
+                    _ => None,
+                }
+            }
         };
         let (cpe, mlp, scalar_issue) = if self.opts.vectorized {
             match vector_cpe {
@@ -647,14 +711,16 @@ impl CpuEngine {
 /// STREAM-copy shape). Two conditions, estimated over up to 4096
 /// iterations: (a) writes cover ~every byte of each touched line, and
 /// (b) elements are not rewritten (temporal reuse wants the cache).
-fn write_density(pattern: &Pattern) -> f64 {
+/// `write_indices` is the kernel's write-side buffer (`indices` for
+/// Scatter, the scatter side for GS).
+fn write_density(pattern: &Pattern, write_indices: &[i64]) -> f64 {
     let iters = pattern.count.min(4096);
     let mut elems: HashSet<i64> = HashSet::new();
     let mut lines: HashSet<i64> = HashSet::new();
     let mut writes = 0u64;
     for i in 0..iters {
         let base = pattern.base(i);
-        for &idx in &pattern.indices {
+        for &idx in write_indices {
             let e = base + idx;
             elems.insert(e);
             lines.insert(e / 8);
@@ -1271,5 +1337,125 @@ mod tests {
             .unwrap();
         assert_eq!(warm.counters, fresh.counters);
         assert_eq!(warm.seconds, fresh.seconds);
+    }
+
+    /// Uniform-stride GS: gather side `UNIFORM:8:gstride`, scatter
+    /// side `UNIFORM:8:sstride`, classic delta.
+    fn gs_uniform(gstride: usize, sstride: usize, count: usize) -> Pattern {
+        Pattern::parse(&format!("UNIFORM:8:{gstride}"))
+            .unwrap()
+            .with_gs_scatter((0..8).map(|j| j * sstride as i64).collect())
+            .with_delta(8 * gstride.max(sstride) as i64)
+            .with_count(count)
+    }
+
+    #[test]
+    fn gs_runs_and_touches_both_streams() {
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let pat = gs_uniform(8, 8, 1 << 14);
+        let r = e.run(&pat, Kernel::GS).unwrap();
+        let c = &r.counters;
+        // Both streams translate and access: 2 accesses per element.
+        assert_eq!(c.accesses as usize, 2 * 8 * r.simulated_iterations);
+        assert_eq!(c.tlb.accesses(), c.accesses);
+        // The write stream really writes (RFO/writeback or NT stores).
+        assert!(c.writeback_lines + c.streaming_store_lines > 0);
+        // And reads really read.
+        assert!(c.dram_demand_lines > 0);
+        assert!(r.bandwidth_gbs() > 0.0 && r.bandwidth_gbs().is_finite());
+    }
+
+    #[test]
+    fn gs_bounded_by_component_kernels() {
+        // The differential invariant at the engine level: an indexed
+        // copy can't beat either of its halves run alone.
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        for (gs, ss) in [(1usize, 1usize), (8, 1), (1, 8), (8, 8)] {
+            let pat = gs_uniform(gs, ss, 1 << 14);
+            let g_only = Pattern::from_indices("g", pat.indices.clone())
+                .with_delta(pat.delta)
+                .with_count(pat.count);
+            let s_only =
+                Pattern::from_indices("s", pat.scatter_indices.clone())
+                    .with_delta(pat.delta)
+                    .with_count(pat.count);
+            let bw_gs = e.run(&pat, Kernel::GS).unwrap().bandwidth_gbs();
+            let bw_g = e.run(&g_only, Kernel::Gather).unwrap().bandwidth_gbs();
+            let bw_s = e.run(&s_only, Kernel::Scatter).unwrap().bandwidth_gbs();
+            assert!(
+                bw_gs <= bw_g.min(bw_s) * 1.02,
+                "GS {gs}/{ss}: {bw_gs:.2} vs gather {bw_g:.2} / scatter \
+                 {bw_s:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn gs_delta0_contends_like_scatter() {
+        // Delta-0 GS hammers the same write lines from every thread:
+        // the scatter-side coherence storm applies, so bandwidth must
+        // degrade as threads are added (except TX2).
+        let pat = Pattern::from_indices("gs-d0", (0..16).map(|j| j * 24).collect())
+            .with_gs_scatter((0..16).map(|j| j * 24).collect())
+            .with_delta(0)
+            .with_count(1 << 14);
+        let bw = |name: &str, t: usize| {
+            let p = platforms::by_name(name).unwrap();
+            let mut e = CpuEngine::with_options(
+                &p,
+                CpuSimOptions {
+                    threads: Some(t),
+                    ..Default::default()
+                },
+            );
+            e.run(&pat, Kernel::GS).unwrap().bandwidth_gbs()
+        };
+        let t1 = bw("skx", 1);
+        let t2 = bw("skx", 2);
+        let t16 = bw("skx", 16);
+        assert!(t2 < t1, "contention must kick in: {t1:.2} -> {t2:.2}");
+        assert!(t16 < t2, "and keep growing: {t2:.3} -> {t16:.3}");
+        let x1 = bw("tx2", 1);
+        let x28 = bw("tx2", 28);
+        assert!(x28 > x1, "TX2 absorbs repeated writes: {x1:.2} -> {x28:.2}");
+    }
+
+    #[test]
+    fn gs_closure_is_bit_identical() {
+        let p = platforms::by_name("skx").unwrap();
+        for pat in [
+            gs_uniform(1, 1, 1 << 13),
+            gs_uniform(8, 1, 1 << 13),
+            Pattern::from_indices("gs-d0", (0..8).collect())
+                .with_gs_scatter((0..8).map(|j| j * 24).collect())
+                .with_delta(0)
+                .with_count(1 << 13),
+        ] {
+            let on = run_with_closure(&p, &pat, Kernel::GS, true);
+            let off = run_with_closure(&p, &pat, Kernel::GS, false);
+            assert_eq!(on.counters, off.counters, "{}", pat.spec);
+            assert_eq!(on.seconds, off.seconds, "{}", pat.spec);
+        }
+    }
+
+    #[test]
+    fn gs_rejects_malformed_buffers() {
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        // Missing scatter side.
+        let bare = uniform(1, 64);
+        assert!(e.run(&bare, Kernel::GS).is_err());
+        // Length mismatch.
+        let bad = Pattern::from_indices("g", (0..8).collect())
+            .with_gs_scatter((0..4).collect())
+            .with_count(64);
+        assert!(e.run(&bad, Kernel::GS).is_err());
+        // Scatter side on a single-buffer kernel.
+        let extra = Pattern::from_indices("g", (0..8).collect())
+            .with_gs_scatter((0..8).collect())
+            .with_count(64);
+        assert!(e.run(&extra, Kernel::Gather).is_err());
     }
 }

@@ -77,6 +77,10 @@ pub struct GpuEngine {
     /// Scratch: the index buffer pre-scaled to byte offsets, rebuilt
     /// once per pass.
     idx_bytes: Vec<u64>,
+    /// Scratch: the GS scatter-side buffer pre-scaled to byte offsets
+    /// including the write-region base (empty for single-buffer
+    /// kernels).
+    idx2_bytes: Vec<u64>,
 }
 
 impl GpuEngine {
@@ -94,6 +98,7 @@ impl GpuEngine {
             last_row: u64::MAX,
             warp_sectors: Vec::with_capacity(WARP),
             idx_bytes: Vec::new(),
+            idx2_bytes: Vec::new(),
             platform: p,
             opts,
         }
@@ -131,7 +136,7 @@ impl GpuEngine {
 
     /// Simulate one Spatter run on the GPU model.
     pub fn run(&mut self, pattern: &Pattern, kernel: Kernel) -> Result<SimResult> {
-        pattern.validate()?;
+        pattern.validate_for(kernel)?;
         self.reset();
         debug_assert_eq!(
             self.tlb.page_size(),
@@ -140,9 +145,9 @@ impl GpuEngine {
         );
 
         let v = pattern.vector_len();
-        let cap_iters = (self.opts.max_sim_accesses / v).max(1);
+        let cap_iters =
+            (self.opts.max_sim_accesses / (v * kernel.streams())).max(1);
         let measured = pattern.count.min(cap_iters);
-        let is_write = kernel == Kernel::Scatter;
 
         // Warmup (tail iterations of the "previous" run). Closure
         // applies here too, fast-forwarding to the exact warm state.
@@ -152,15 +157,18 @@ impl GpuEngine {
             pattern,
             pattern.count - warmup,
             pattern.count,
-            is_write,
+            kernel,
             &mut scratch,
         );
 
         let mut counters = SimCounters::default();
-        let closed_at = self.pass(pattern, 0, measured, is_write, &mut counters);
+        let closed_at = self.pass(pattern, 0, measured, kernel, &mut counters);
 
         let breakdown = self.timing(&counters, pattern, kernel, measured);
         let scale = pattern.count as f64 / measured as f64;
+        // Useful bytes = the indexed-copy payload, counted once for
+        // every kernel (GS charges both of its streams to the memory
+        // system above; see the CPU engine's note).
         Ok(SimResult {
             seconds: breakdown.total() * scale,
             useful_bytes: pattern.moved_bytes() as u64,
@@ -180,14 +188,25 @@ impl GpuEngine {
         pattern: &Pattern,
         begin: usize,
         end: usize,
-        is_write: bool,
+        kernel: Kernel,
         c: &mut SimCounters,
     ) -> Option<usize> {
         let v = pattern.vector_len();
         let mut base = pattern.base(begin);
+        let primary_write = kernel == Kernel::Scatter;
         let mut idx = std::mem::take(&mut self.idx_bytes);
         idx.clear();
         idx.extend(pattern.indices.iter().map(|&i| i as u64 * 8));
+        // GS scatter side: separate write region, same per-iteration
+        // base advance (see the CPU engine).
+        let mut idx2 = std::mem::take(&mut self.idx2_bytes);
+        idx2.clear();
+        if kernel == Kernel::GS {
+            let dst = pattern.gs_scatter_base() as u64 * 8;
+            idx2.extend(
+                pattern.scatter_indices.iter().map(|&i| dst + i as u64 * 8),
+            );
+        }
         let period = pattern.deltas.len().max(1);
         let mut closer = if self.opts.closure_enabled && end > begin + 1 {
             Some(LoopCloser::new())
@@ -202,7 +221,15 @@ impl GpuEngine {
             let mut j = 0;
             while j < v {
                 let hi = (j + WARP).min(v);
-                self.warp(&idx[j..hi], base_bytes, is_write, c);
+                self.warp(&idx[j..hi], base_bytes, primary_write, c);
+                j = hi;
+            }
+            // GS write stream: the block gathers the vector, then
+            // scatters it — warps re-coalesce over the scatter side.
+            let mut j = 0;
+            while j < idx2.len() {
+                let hi = (j + WARP).min(idx2.len());
+                self.warp(&idx2[j..hi], base_bytes, true, c);
                 j = hi;
             }
             base += pattern.delta_at(i);
@@ -235,6 +262,7 @@ impl GpuEngine {
             }
         }
         self.idx_bytes = idx;
+        self.idx2_bytes = idx2;
         closed_at
     }
 
@@ -396,9 +424,10 @@ impl GpuEngine {
         // divided by the walkers' parallelism.
         let tlb_s = c.tlb.misses() as f64 * self.walker.ns_per_miss() * 1e-9;
 
-        // Same-sector write contention: delta-0 scatter makes every
-        // block hammer the same sectors; ownership serializes.
-        let coherence_s = if kernel == Kernel::Scatter && pattern.delta == 0 {
+        // Same-sector write contention: delta-0 write streams (Scatter
+        // and the scatter side of GS) make every block hammer the same
+        // sectors; ownership serializes.
+        let coherence_s = if kernel.writes() && pattern.delta == 0 {
             (measured * pattern.vector_len()) as f64 * p.write_contend_ns * 1e-9
         } else {
             0.0
@@ -655,5 +684,69 @@ mod tests {
             .unwrap();
         assert_eq!(warm.counters, fresh.counters);
         assert_eq!(warm.seconds, fresh.seconds);
+    }
+
+    /// GPU GS: 256-wide gather side at `gstride`, scatter side at
+    /// `sstride`.
+    fn gs_guniform(gstride: usize, sstride: usize, count: usize) -> Pattern {
+        Pattern::parse(&format!("UNIFORM:256:{gstride}"))
+            .unwrap()
+            .with_gs_scatter((0..256).map(|j| j * sstride as i64).collect())
+            .with_delta(256 * gstride.max(sstride) as i64)
+            .with_count(count)
+    }
+
+    #[test]
+    fn gs_runs_and_is_bounded_by_components() {
+        let p = platforms::gpu_by_name("p100").unwrap();
+        let mut e = GpuEngine::new(&p);
+        for (gs, ss) in [(1usize, 1usize), (8, 1), (1, 8)] {
+            let pat = gs_guniform(gs, ss, 1 << 12);
+            let g_only = Pattern::from_indices("g", pat.indices.clone())
+                .with_delta(pat.delta)
+                .with_count(pat.count);
+            let s_only =
+                Pattern::from_indices("s", pat.scatter_indices.clone())
+                    .with_delta(pat.delta)
+                    .with_count(pat.count);
+            let r = e.run(&pat, Kernel::GS).unwrap();
+            // Both streams issue transactions: more than either side
+            // alone would.
+            assert_eq!(
+                r.counters.accesses as usize,
+                2 * 256 * r.simulated_iterations
+            );
+            let bw_gs = r.bandwidth_gbs();
+            let bw_g = e.run(&g_only, Kernel::Gather).unwrap().bandwidth_gbs();
+            let bw_s = e.run(&s_only, Kernel::Scatter).unwrap().bandwidth_gbs();
+            assert!(
+                bw_gs <= bw_g.min(bw_s) * 1.02,
+                "GS {gs}/{ss}: {bw_gs:.0} vs gather {bw_g:.0} / scatter \
+                 {bw_s:.0}"
+            );
+        }
+    }
+
+    #[test]
+    fn gs_delta0_contends() {
+        let p = platforms::gpu_by_name("titanxp").unwrap();
+        let mut e = GpuEngine::new(&p);
+        let pat = Pattern::from_indices("gs-d0", (0..256).collect())
+            .with_gs_scatter((0..256).map(|j| j * 24).collect())
+            .with_delta(0)
+            .with_count(1 << 12);
+        let r = e.run(&pat, Kernel::GS).unwrap();
+        assert_eq!(r.breakdown.bottleneck(), "coherence");
+    }
+
+    #[test]
+    fn gs_closure_is_bit_identical_on_gpu() {
+        let p = platforms::gpu_by_name("p100").unwrap();
+        for pat in [gs_guniform(1, 1, 1 << 11), gs_guniform(8, 1, 1 << 11)] {
+            let on = run_with_closure(&p, &pat, Kernel::GS, true);
+            let off = run_with_closure(&p, &pat, Kernel::GS, false);
+            assert_eq!(on.counters, off.counters, "{}", pat.spec);
+            assert_eq!(on.seconds, off.seconds, "{}", pat.spec);
+        }
     }
 }

@@ -17,13 +17,16 @@
 //! | `pagesize` | huge-delta gather vs `--page-size` (TLB mechanism) |
 //! | `ustride` | CPU uniform-stride sweep through the `--jobs` queue |
 //! | `threadscale` | §3.1 thread-scaling: saturation knee + contention |
+//! | `prefetch` | prefetcher depth/regime sweep, gather + GS coverage knee |
 //! | `all` | everything above |
 
 mod apps;
+mod prefetch;
 mod threadscale;
 mod ustride;
 
 pub use apps::{fig7_radar, fig8_radar, fig9_bwbw, table1_characterization, table4_miniapps};
+pub use prefetch::prefetch_suite;
 pub use threadscale::threadscale_suite;
 pub use ustride::{
     cpu_ustride, fig3_cpu_ustride, fig4_prefetch, fig5_gpu_ustride,
@@ -114,11 +117,13 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
         "pagesize" => pagesize_sweep(ctx),
         "ustride" => ustride_suite(ctx),
         "threadscale" => threadscale_suite(ctx),
+        "prefetch" => prefetch_suite(ctx),
         "all" => {
             let mut out = String::new();
             for n in [
                 "table1", "fig3", "fig4", "fig5", "fig6", "table4", "fig7",
                 "fig8", "fig9", "pagesize", "ustride", "threadscale",
+                "prefetch",
             ] {
                 out.push_str(&run(n, ctx)?);
                 out.push('\n');
@@ -128,7 +133,7 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
         other => Err(Error::Cli(format!(
             "unknown suite '{other}' \
              (fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|pagesize|\
-             ustride|threadscale|all)"
+             ustride|threadscale|prefetch|all)"
         ))),
     }
 }
@@ -136,7 +141,7 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
 /// Names of all experiments (for listings).
 pub const EXPERIMENTS: &[&str] = &[
     "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1",
-    "table4", "pagesize", "ustride", "threadscale",
+    "table4", "pagesize", "ustride", "threadscale", "prefetch",
 ];
 
 #[cfg(test)]

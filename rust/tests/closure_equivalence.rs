@@ -28,6 +28,31 @@ fn assert_identical(on: &SimResult, off: &SimResult, ctx: &str) {
     assert_eq!(off.closed_at_iteration, None, "{ctx}: off must not close");
 }
 
+/// A random kernel, all three included — GS is the dual-pattern case
+/// the equivalence must also cover.
+fn arbitrary_kernel(g: &mut Gen) -> Kernel {
+    *g.choose(&[Kernel::Gather, Kernel::Scatter, Kernel::GS])
+}
+
+/// Attach a random scatter side (same length as the gather side) when
+/// the kernel is GS: uniform strides, repeated-write targets, and
+/// irregular buffers all appear.
+fn with_kernel_shape(g: &mut Gen, pat: Pattern, kernel: Kernel) -> Pattern {
+    if kernel != Kernel::GS {
+        return pat;
+    }
+    let v = pat.vector_len();
+    let side = match g.usize_in(0, 2) {
+        0 => {
+            let s = g.i64_in(1, 24);
+            (0..v as i64).map(|j| j * s).collect()
+        }
+        1 => vec![0; v],
+        _ => (0..v).map(|_| g.i64_in(0, 2048)).collect(),
+    };
+    pat.with_gs_scatter(side)
+}
+
 /// A randomized pattern drawn from the families the paper sweeps:
 /// delta-0 revisits, uniform strides, huge-delta page walkers, random
 /// buffers with cycling delta lists, and Table-5 proxies.
@@ -81,14 +106,18 @@ fn prop_cpu_closure_equivalence() {
             *g.choose(&["skx", "bdw", "naples", "tx2", "knl", "clx"]),
         )
         .unwrap();
-        let kernel = if g.bool() { Kernel::Gather } else { Kernel::Scatter };
+        let kernel = arbitrary_kernel(g);
         let page = *g.choose(&[PageSize::FourKB, PageSize::TwoMB]);
         let threads = if g.bool() {
             None
         } else {
             Some(g.usize_in(1, 8))
         };
-        let pat = arbitrary_pattern(g, 16).with_count(1 << g.usize_in(8, 13));
+        let pat = with_kernel_shape(
+            g,
+            arbitrary_pattern(g, 16).with_count(1 << g.usize_in(8, 13)),
+            kernel,
+        );
         let run = |closure_enabled: bool| {
             let mut e = CpuEngine::with_options(
                 &plat,
@@ -118,9 +147,13 @@ fn prop_gpu_closure_equivalence() {
             *g.choose(&["k40c", "titanxp", "p100", "v100"]),
         )
         .unwrap();
-        let kernel = if g.bool() { Kernel::Gather } else { Kernel::Scatter };
+        let kernel = arbitrary_kernel(g);
         let page = *g.choose(&[PageSize::SixtyFourKB, PageSize::TwoMB]);
-        let pat = arbitrary_pattern(g, 64).with_count(1 << g.usize_in(6, 11));
+        let pat = with_kernel_shape(
+            g,
+            arbitrary_pattern(g, 64).with_count(1 << g.usize_in(6, 11)),
+            kernel,
+        );
         let run = |closure_enabled: bool| {
             let mut e = GpuEngine::with_options(
                 &plat,
@@ -165,11 +198,23 @@ fn closure_fires_where_it_should() {
     )
     .with_delta(16384)
     .with_count(1 << 14);
-    let r = CpuEngine::with_options(&knl, opts)
+    let r = CpuEngine::with_options(&knl, opts.clone())
         .run(&huge, Kernel::Gather)
         .unwrap();
     assert!(
         r.closed_at_iteration.is_some(),
         "huge-delta gather must close"
     );
+
+    // Delta-0 GS (the paired LULESH shape): both streams revisit the
+    // same lines every iteration, so closure must fire early too.
+    let gs = Pattern::from_indices("gs-d0", (0..16i64).collect())
+        .with_gs_scatter((0..16i64).map(|j| j * 24).collect())
+        .with_delta(0)
+        .with_count(1 << 14);
+    let r = CpuEngine::with_options(&skx, opts)
+        .run(&gs, Kernel::GS)
+        .unwrap();
+    let at = r.closed_at_iteration.expect("delta-0 GS must close");
+    assert!(at < 64, "delta-0 GS should close within a few iterations: {at}");
 }

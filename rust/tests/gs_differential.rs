@@ -1,0 +1,186 @@
+//! Differential tests pinning the GS (gather-scatter) kernel against
+//! its component kernels — the direction-of-inequality layer that
+//! keeps the dual-stream engine plumbing honest on every platform.
+//!
+//! Invariants:
+//!
+//! * **Bounded by components** — an indexed copy reads through its
+//!   gather pattern *and* writes through its scatter pattern, so its
+//!   payload bandwidth can never beat either half run alone:
+//!   `bw(GS) <= min(bw(Gather side), bw(Scatter side))`.
+//! * **Delta-0 contention** — a delta-0 GS hammers its write lines
+//!   from every thread exactly like delta-0 scatter, so bandwidth
+//!   *degrades* as `--threads` grows (except TX2, which absorbs
+//!   repeated writes).
+
+use spatter::backends::{Backend, CudaSim, OpenMpSim};
+use spatter::pattern::{table5, Kernel, Pattern};
+use spatter::platforms;
+use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
+
+/// A GS pattern plus its two component patterns (same delta/count).
+fn components(
+    gather: Vec<i64>,
+    scatter: Vec<i64>,
+    delta: i64,
+    count: usize,
+) -> (Pattern, Pattern, Pattern) {
+    let gs = Pattern::from_indices("gs", gather.clone())
+        .with_gs_scatter(scatter.clone())
+        .with_delta(delta)
+        .with_count(count);
+    let g = Pattern::from_indices("g", gather)
+        .with_delta(delta)
+        .with_count(count);
+    let s = Pattern::from_indices("s", scatter)
+        .with_delta(delta)
+        .with_count(count);
+    (gs, g, s)
+}
+
+/// The swept GS shapes: uniform/uniform at several stride pairs, a
+/// broadcast read side, and the LULESH element→node copy.
+fn cases(v: usize, count: usize) -> Vec<(String, Pattern, Pattern, Pattern)> {
+    let uni = |s: usize| (0..v as i64).map(|j| j * s as i64).collect::<Vec<_>>();
+    let mut out = Vec::new();
+    for (gs, ss) in [(1usize, 1usize), (8, 1), (1, 8), (8, 8), (24, 1)] {
+        let delta = (v * gs.max(ss)) as i64;
+        let (p, g, s) = components(uni(gs), uni(ss), delta, count);
+        out.push((format!("u{gs}/u{ss}"), p, g, s));
+    }
+    // Broadcast gather side feeding a stride-1 scatter (PENNANT-G4's
+    // read shape).
+    let bcast: Vec<i64> = (0..v as i64).map(|j| j / 4).collect();
+    let (p, g, s) = components(bcast, uni(1), v as i64, count);
+    out.push(("bcast/u1".to_string(), p, g, s));
+    out
+}
+
+#[test]
+fn gs_bandwidth_bounded_by_components_on_every_cpu() {
+    let count = 1 << 13;
+    for name in ["skx", "bdw", "clx", "naples", "tx2", "knl"] {
+        let plat = platforms::by_name(name).unwrap();
+        let mut e = OpenMpSim::new(&plat);
+        for (tag, gs, g, s) in cases(8, count) {
+            let bw_gs = e.run(&gs, Kernel::GS).unwrap().bandwidth_gbs();
+            let bw_g = e.run(&g, Kernel::Gather).unwrap().bandwidth_gbs();
+            let bw_s = e.run(&s, Kernel::Scatter).unwrap().bandwidth_gbs();
+            assert!(
+                bw_gs <= bw_g.min(bw_s) * 1.02,
+                "{name}/{tag}: GS {bw_gs:.2} must not beat min(gather \
+                 {bw_g:.2}, scatter {bw_s:.2})"
+            );
+            assert!(bw_gs > 0.0 && bw_gs.is_finite(), "{name}/{tag}");
+        }
+    }
+}
+
+#[test]
+fn gs_bandwidth_bounded_by_components_on_every_gpu() {
+    let count = 1 << 11;
+    for name in ["k40c", "titanxp", "p100", "v100"] {
+        let plat = platforms::gpu_by_name(name).unwrap();
+        let mut e = CudaSim::new(&plat);
+        for (tag, gs, g, s) in cases(256, count) {
+            let bw_gs = e.run(&gs, Kernel::GS).unwrap().bandwidth_gbs();
+            let bw_g = e.run(&g, Kernel::Gather).unwrap().bandwidth_gbs();
+            let bw_s = e.run(&s, Kernel::Scatter).unwrap().bandwidth_gbs();
+            assert!(
+                bw_gs <= bw_g.min(bw_s) * 1.02,
+                "{name}/{tag}: GS {bw_gs:.0} must not beat min(gather \
+                 {bw_g:.0}, scatter {bw_s:.0})"
+            );
+        }
+    }
+}
+
+#[test]
+fn lulesh_class_gs_bounded_by_components() {
+    // The app-derived pairing: LULESH-G3's stride-24 gather side
+    // feeding a stride-1 write side (element→node copy).
+    let app = table5::by_name("LULESH-G3").unwrap();
+    let count = 1 << 13;
+    let (gs, g, s) = components(
+        app.indices.to_vec(),
+        (0..app.indices.len() as i64).collect(),
+        app.delta,
+        count,
+    );
+    for name in ["skx", "tx2"] {
+        let plat = platforms::by_name(name).unwrap();
+        let mut e = OpenMpSim::new(&plat);
+        let bw_gs = e.run(&gs, Kernel::GS).unwrap().bandwidth_gbs();
+        let bw_g = e.run(&g, Kernel::Gather).unwrap().bandwidth_gbs();
+        let bw_s = e.run(&s, Kernel::Scatter).unwrap().bandwidth_gbs();
+        assert!(
+            bw_gs <= bw_g.min(bw_s) * 1.02,
+            "{name}: GS {bw_gs:.2} vs gather {bw_g:.2} / scatter {bw_s:.2}"
+        );
+    }
+}
+
+#[test]
+fn delta0_gs_degrades_with_threads_like_scatter() {
+    // LULESH-S3's write shape on the scatter side of an indexed copy:
+    // the coherence storm scales with the sharer count, so adding
+    // threads *hurts* — same direction as pure delta-0 scatter.
+    let gs = Pattern::from_indices("gs-d0", (0..16i64).collect())
+        .with_gs_scatter((0..16i64).map(|j| j * 24).collect())
+        .with_delta(0)
+        .with_count(1 << 14);
+    let bw = |name: &str, t: usize| {
+        let plat = platforms::by_name(name).unwrap();
+        let mut e = CpuEngine::with_options(
+            &plat,
+            CpuSimOptions {
+                threads: Some(t),
+                ..Default::default()
+            },
+        );
+        e.run(&gs, Kernel::GS).unwrap().bandwidth_gbs()
+    };
+    for name in ["skx", "bdw", "knl"] {
+        let t1 = bw(name, 1);
+        let t2 = bw(name, 2);
+        let tmax = bw(name, platforms::by_name(name).unwrap().threads);
+        assert!(
+            t2 < t1,
+            "{name}: contention must kick in at t=2: {t1:.2} -> {t2:.2}"
+        );
+        assert!(
+            tmax < t2,
+            "{name}: and keep degrading to the socket count: \
+             {t2:.3} -> {tmax:.3}"
+        );
+    }
+    // TX2 absorbs repeated writes: threads only help.
+    let x1 = bw("tx2", 1);
+    let x28 = bw("tx2", 28);
+    assert!(x28 > x1, "tx2 must not collapse: {x1:.2} -> {x28:.2}");
+}
+
+#[test]
+fn delta0_gs_and_scatter_share_the_coherence_bottleneck() {
+    // At the socket count, both the pure scatter and the GS copy with
+    // the same write side must be coherence-bound on SKX.
+    let write_side: Vec<i64> = (0..16i64).map(|j| j * 24).collect();
+    let scatter = Pattern::from_indices("s3", write_side.clone())
+        .with_delta(0)
+        .with_count(1 << 14);
+    let gs = Pattern::from_indices("gs", (0..16i64).collect())
+        .with_gs_scatter(write_side)
+        .with_delta(0)
+        .with_count(1 << 14);
+    let plat = platforms::by_name("skx").unwrap();
+    let mut e = OpenMpSim::new(&plat);
+    let rs = e.run(&scatter, Kernel::Scatter).unwrap();
+    let rgs = e.run(&gs, Kernel::GS).unwrap();
+    assert_eq!(rs.breakdown.bottleneck(), "coherence");
+    assert_eq!(rgs.breakdown.bottleneck(), "coherence");
+    // Identical write-side contention: the coherence event counts match.
+    assert_eq!(
+        rs.counters.coherence_events, rgs.counters.coherence_events,
+        "GS write side must contend exactly like the pure scatter"
+    );
+}

@@ -176,11 +176,13 @@ fn suite_experiments_all_run_fast() {
         "pagesize_sweep.csv",
         "ustride.csv",
         "threadscale.csv",
+        "prefetch.csv",
     ] {
         assert!(dir.join(csv).exists(), "{csv}");
     }
-    // The ustride suite also emits its JSON document.
+    // The ustride and prefetch suites also emit JSON documents.
     assert!(dir.join("ustride.json").exists());
+    assert!(dir.join("prefetch.json").exists());
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -212,6 +214,12 @@ fn config_failure_injection() {
         r#"[{"kernel": "Smear", "pattern": "UNIFORM:8:1"}]"#,
         r#"[{"kernel": "Gather", "pattern": [0, -5]}]"#,
         r#"[{"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": -2}]"#,
+        r#"[{"kernel": "GS", "pattern": "UNIFORM:8:1"}]"#,
+        r#"[{"kernel": "GS", "pattern-gather": "UNIFORM:8:1"}]"#,
+        r#"[{"kernel": "GS", "pattern-gather": "UNIFORM:8:1",
+             "pattern-scatter": "UNIFORM:4:1"}]"#,
+        r#"[{"kernel": "Scatter", "pattern": "UNIFORM:8:1",
+             "pattern-gather": "UNIFORM:8:1"}]"#,
     ] {
         assert!(
             coordinator::parse_config_text(bad).is_err(),
@@ -360,6 +368,77 @@ fn jobs_scheduler_end_to_end_byte_identical() {
     assert_eq!(
         coordinator::render_json(&serial),
         coordinator::render_json(&parallel)
+    );
+}
+
+#[test]
+fn gs_kernel_cli_and_json_end_to_end() {
+    use spatter::cli::{parse_args, Command};
+
+    // CLI: -k GS -g/-u parses into a dual-buffer pattern that runs on
+    // both simulated engine families.
+    let argv: Vec<String> =
+        "-k GS -g UNIFORM:8:4 -u UNIFORM:8:1 -d 32 -l 16384 -a skx"
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+    let (kernel, pattern) = match parse_args(&argv).unwrap() {
+        Command::Run(r) => (r.kernel, r.pattern),
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(kernel, Kernel::GS);
+    let skx = platforms::by_name("skx").unwrap();
+    let r = OpenMpSim::new(&skx).run(&pattern, kernel).unwrap();
+    assert!(r.bandwidth_gbs() > 0.0 && r.bandwidth_gbs().is_finite());
+    let v100 = platforms::gpu_by_name("v100").unwrap();
+    let gpu_pat = Pattern::parse("UNIFORM:256:4")
+        .unwrap()
+        .with_gs_scatter((0..256).collect())
+        .with_delta(1024)
+        .with_count(1 << 11);
+    let rg = CudaSim::new(&v100).run(&gpu_pat, Kernel::GS).unwrap();
+    assert!(rg.bandwidth_gbs() > 0.0 && rg.bandwidth_gbs().is_finite());
+
+    // JSON: dual-pattern configs run through the coordinator (and the
+    // --jobs pool) with full record plumbing.
+    let cfg = r#"[
+      {"name": "copy", "kernel": "GS", "pattern-gather": "UNIFORM:8:4",
+       "pattern-scatter": "UNIFORM:8:1", "delta": 32, "count": 16384},
+      {"name": "g-half", "kernel": "Gather", "pattern": "UNIFORM:8:4",
+       "delta": 32, "count": 16384},
+      {"name": "s-half", "kernel": "Scatter", "pattern": "UNIFORM:8:1",
+       "delta": 32, "count": 16384}
+    ]"#;
+    let configs = coordinator::parse_config_text(cfg).unwrap();
+    let factory = || -> spatter::Result<Box<dyn Backend>> {
+        Ok(Box::new(OpenMpSim::new(&platforms::by_name("skx").unwrap())))
+    };
+    let serial = coordinator::run_configs_jobs(&factory, &configs, 1).unwrap();
+    let par = coordinator::run_configs_jobs(&factory, &configs, 4).unwrap();
+    assert_eq!(
+        coordinator::render_table(&serial),
+        coordinator::render_table(&par)
+    );
+    assert_eq!(
+        coordinator::render_json(&serial),
+        coordinator::render_json(&par)
+    );
+    // The copy is bounded by its halves, and the record reports both
+    // stream payloads.
+    assert!(
+        serial[0].bandwidth_gbs
+            <= serial[1].bandwidth_gbs.min(serial[2].bandwidth_gbs) * 1.02
+    );
+    let j = serial[0].to_json();
+    assert_eq!(j.get("kernel").unwrap().as_str().unwrap(), "GS");
+    let payload = (8 * 8 * 16384) as u64;
+    assert_eq!(
+        j.get("read_bytes").unwrap().as_usize().unwrap() as u64,
+        payload
+    );
+    assert_eq!(
+        j.get("write_bytes").unwrap().as_usize().unwrap() as u64,
+        payload
     );
 }
 

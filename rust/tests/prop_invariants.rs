@@ -2,6 +2,7 @@
 //! the in-crate `prop` mini-framework (no proptest in the offline
 //! vendor set).
 
+use spatter::coordinator::{parse_config_text, RunConfig};
 use spatter::json;
 use spatter::pattern::{self, Kernel, Pattern};
 use spatter::platforms;
@@ -117,6 +118,109 @@ fn prop_classifier_is_total_and_stable() {
         let b = pattern::classify_indices(&idx);
         assert_eq!(a, b);
     });
+}
+
+// ---------------------------------------------------------------------------
+// RunConfig: parse(to_json(cfg)) == cfg for every pattern spec form
+// ---------------------------------------------------------------------------
+
+/// A random pattern spec string from each supported family.
+fn arbitrary_spec(g: &mut Gen) -> String {
+    match g.usize_in(0, 4) {
+        0 => format!("UNIFORM:{}:{}", g.usize_in(1, 32), g.usize_in(1, 64)),
+        1 => {
+            let n = g.usize_in(4, 32);
+            format!("MS1:{}:{}:{}", n, g.usize_in(1, n - 1), g.i64_in(2, 50))
+        }
+        2 => format!(
+            "LAPLACIAN:{}:{}:{}",
+            g.usize_in(1, 3),
+            g.usize_in(1, 3),
+            g.usize_in(8, 40)
+        ),
+        3 => format!(
+            "RANDOM:{}:{}:{}",
+            g.usize_in(1, 32),
+            g.usize_in(1, 4096),
+            g.usize_in(0, 1 << 16)
+        ),
+        _ => {
+            let v = g.usize_in(1, 16);
+            (0..v)
+                .map(|_| g.i64_in(0, 512).to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        }
+    }
+}
+
+fn arbitrary_runconfig(g: &mut Gen) -> RunConfig {
+    let kernel = *g.choose(&[Kernel::Gather, Kernel::Scatter, Kernel::GS]);
+    let mut pattern = Pattern::parse(&arbitrary_spec(g)).unwrap();
+    if kernel == Kernel::GS {
+        // The scatter side must match the gather side's length; draw
+        // its indices from another spec-built buffer, resized.
+        let v = pattern.vector_len();
+        let mut side = Pattern::parse(&arbitrary_spec(g)).unwrap().indices;
+        side.resize(v, 0);
+        pattern = pattern.with_gs_scatter(side);
+    }
+    if g.bool() {
+        let cycle: Vec<i64> =
+            (0..g.usize_in(2, 4)).map(|_| g.i64_in(0, 64)).collect();
+        pattern = pattern.with_deltas(&cycle);
+    } else {
+        pattern = pattern.with_delta(g.i64_in(0, 256));
+    }
+    pattern = pattern.with_count(g.usize_in(1, 1 << 12));
+    RunConfig {
+        name: format!("cfg-{}", g.usize_in(0, 999)),
+        kernel,
+        pattern,
+        page_size: if g.bool() {
+            Some(*g.choose(spatter::sim::PageSize::ALL))
+        } else {
+            None
+        },
+        threads: if g.bool() { Some(g.usize_in(1, 64)) } else { None },
+    }
+}
+
+#[test]
+fn prop_runconfig_to_json_roundtrip() {
+    check(
+        "RunConfig: parse_config_text(to_json) reproduces every field",
+        80,
+        |g| {
+            let cfg = arbitrary_runconfig(g);
+            if cfg.pattern.validate_for(cfg.kernel).is_err() {
+                // Address-space guard can trip on extreme draws; the
+                // round-trip contract only covers valid configs.
+                return;
+            }
+            let text = json::to_string(&json::Value::Array(vec![cfg.to_json()]));
+            let back = parse_config_text(&text).unwrap();
+            assert_eq!(back.len(), 1);
+            let b = &back[0];
+            assert_eq!(b.name, cfg.name);
+            assert_eq!(b.kernel, cfg.kernel);
+            assert_eq!(b.pattern.indices, cfg.pattern.indices);
+            assert_eq!(
+                b.pattern.scatter_indices,
+                cfg.pattern.scatter_indices
+            );
+            assert_eq!(b.pattern.delta, cfg.pattern.delta);
+            assert_eq!(b.pattern.deltas, cfg.pattern.deltas);
+            assert_eq!(b.pattern.count, cfg.pattern.count);
+            assert_eq!(b.page_size, cfg.page_size);
+            assert_eq!(b.threads, cfg.threads);
+            // And serializing the parsed config is a fixed point.
+            assert_eq!(
+                json::to_string(&b.to_json()),
+                json::to_string(&cfg.to_json())
+            );
+        },
+    );
 }
 
 // ---------------------------------------------------------------------------
