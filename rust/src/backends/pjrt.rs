@@ -109,20 +109,20 @@ impl Backend for PjrtBackend {
 
     fn run(&mut self, pattern: &Pattern, kernel: Kernel) -> Result<SimResult> {
         pattern.validate_for(kernel)?;
-        // No AOT'd indexed-copy artifact exists yet: the GS kernel is
-        // simulation-only for now.
-        if kernel == Kernel::GS {
-            return Err(Error::Runtime(
-                "the GS (gather-scatter) kernel is not implemented on the \
-                 pjrt backend; use a simulated backend (openmp|scalar|cuda)"
-                    .into(),
-            ));
+        // No AOT'd artifacts exist for the indexed copy or the dense
+        // baseline family: those kernels are simulation-only for now.
+        if kernel == Kernel::GS || kernel.is_baseline() {
+            return Err(Error::Runtime(format!(
+                "the {} kernel is not implemented on the pjrt backend; \
+                 use a simulated backend (openmp|scalar|cuda)",
+                kernel.name()
+            )));
         }
         let v = pattern.vector_len();
         let (ck_kernel, family) = match kernel {
             Kernel::Gather => ("gather_checksum", "ref"),
             Kernel::Scatter => ("scatter_checksum", "ref"),
-            Kernel::GS => unreachable!("rejected above"),
+            _ => unreachable!("rejected above"),
         };
         let variant = self
             .runtime
@@ -159,7 +159,9 @@ impl Backend for PjrtBackend {
         let dstb;
         let args: Vec<&PjRtBuffer> = match kernel {
             Kernel::Gather => vec![&sb, &ib, &db],
-            Kernel::GS => unreachable!("rejected above"),
+            Kernel::GS | Kernel::Stream(_) | Kernel::Gups => {
+                unreachable!("rejected above")
+            }
             Kernel::Scatter => {
                 let v2: Vec<f64> =
                     (0..variant.count * v).map(|i| (i % 613) as f64).collect();

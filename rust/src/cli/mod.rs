@@ -246,9 +246,57 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
         return Ok(Command::Help);
     }
 
-    let kernel = kernel
-        .ok_or_else(|| Error::Cli("missing -k Gather|Scatter|GS".into()))?;
-    let mut pattern = if kernel == Kernel::GS {
+    let kernel = kernel.ok_or_else(|| {
+        Error::Cli(
+            "missing -k Gather|Scatter|GS|Copy|Scale|Add|Triad|GUPS".into(),
+        )
+    })?;
+    let mut pattern = if kernel.is_baseline() {
+        // Dense baselines (STREAM tetrad + GUPS) take no pattern:
+        // -d and -l size the streams.
+        if pattern_spec.is_some() || gather_spec.is_some() || scatter_spec.is_some()
+        {
+            return Err(Error::Cli(format!(
+                "-k {} is a dense baseline kernel: it takes no pattern \
+                 (-p/-g/-u); -d and -l size the streams",
+                kernel.name()
+            )));
+        }
+        let d = match deltas.take() {
+            None => None,
+            Some(list) if list.len() == 1 => Some(list[0]),
+            Some(_) => {
+                return Err(Error::Cli(format!(
+                    "-k {}: -d takes a single value (cycling delta lists \
+                     apply to indexed kernels)",
+                    kernel.name()
+                )))
+            }
+        };
+        if kernel == Kernel::Gups {
+            // -d = table size in elements (default 2^26 = 512 MiB of
+            // doubles), rounded up to a power of two.
+            let table = d.unwrap_or(crate::pattern::GUPS_DEFAULT_TABLE_ELEMS as i64);
+            if table <= 0 {
+                return Err(Error::Cli(format!(
+                    "-k GUPS: table size (-d) must be > 0, got {table}"
+                )));
+            }
+            Pattern::gups(table as usize, 1)
+        } else {
+            // -d = elements per iteration per operand stream
+            // (default 8); the streams are -d * -l elements long.
+            let width = d.unwrap_or(8);
+            if !(1..=1 << 20).contains(&width) {
+                return Err(Error::Cli(format!(
+                    "-k {}: stream width (-d) must be in [1, 2^20], got \
+                     {width}",
+                    kernel.name()
+                )));
+            }
+            Pattern::dense(width as usize, 1)
+        }
+    } else if kernel == Kernel::GS {
         // GS takes two spec strings: -g (gather/read side) and -u
         // (scatter/write side), mirroring the original tool's
         // --pattern-gather / --pattern-scatter flags.
@@ -335,6 +383,8 @@ spatter — gather/scatter memory benchmark (paper reproduction)
 USAGE:
   spatter -k Gather|Scatter -p PATTERN -d DELTA -l COUNT [options]
   spatter -k GS -g GATHER_PATTERN -u SCATTER_PATTERN -d DELTA -l COUNT
+  spatter -k Copy|Scale|Add|Triad [-d WIDTH] -l COUNT   dense STREAM baseline
+  spatter -k GUPS [-d TABLE] -l COUNT      random read-modify-write baseline
   spatter -j CONFIG.json [options]
   spatter --suite NAME [--out DIR]     regenerate a paper experiment
   spatter --list-platforms | --list-patterns
@@ -355,7 +405,11 @@ OPTIONS:
   -u, --pattern-scatter P  write-side pattern of the GS indexed copy;
                        must have the same index length as -g
   -d, --delta D        base advance; a comma list cycles (temporal
-                       locality extension), e.g. -d 0,0,0,16
+                       locality extension), e.g. -d 0,0,0,16. Dense
+                       baselines read it differently: elements per
+                       iteration for Copy/Scale/Add/Triad (default 8),
+                       table elements for GUPS (default 2^26, rounded
+                       up to a power of two)
   -l, --count N        gathers/scatters to perform (accepts 2^N)
       --runs N         runs per pattern (default 10, paper protocol)
       --page-size P    translation page size: 4KB | 64KB | 2MB | 1GB
@@ -374,7 +428,7 @@ OPTIONS:
       --validate       cross-check numerics through the PJRT path
       --json-out       machine-readable output
       --suite NAME     fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|
-                       pagesize|ustride|threadscale|prefetch|all
+                       pagesize|ustride|threadscale|prefetch|baselines|all
 ";
 
 #[cfg(test)]
@@ -461,6 +515,59 @@ mod tests {
             parse_args(&argv("-k GS -g UNIFORM:8:1 -u UNIFORM:4:1 -l 64"))
                 .is_err()
         );
+    }
+
+    #[test]
+    fn baseline_kernel_invocations() {
+        use crate::pattern::{StreamOp, GUPS_DEFAULT_TABLE_ELEMS};
+        // Dense STREAM kernels: no pattern; -d is the stream width.
+        match parse_args(&argv("-k Triad -l 2^20")).unwrap() {
+            Command::Run(r) => {
+                assert_eq!(r.kernel, Kernel::Stream(StreamOp::Triad));
+                assert_eq!(r.pattern.indices, (0..8).collect::<Vec<i64>>());
+                assert_eq!(r.pattern.delta, 8);
+                assert_eq!(r.pattern.count, 1 << 20);
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_args(&argv("-k Copy -d 16 -l 1024")).unwrap() {
+            Command::Run(r) => {
+                assert_eq!(r.pattern.indices.len(), 16);
+                assert_eq!(r.pattern.delta, 16);
+            }
+            other => panic!("{other:?}"),
+        }
+        // GUPS: -d is the table size, rounded up to a power of two.
+        match parse_args(&argv("-k GUPS -l 4096")).unwrap() {
+            Command::Run(r) => {
+                assert_eq!(r.kernel, Kernel::Gups);
+                assert_eq!(
+                    r.pattern.gups_table_elems() as usize,
+                    GUPS_DEFAULT_TABLE_ELEMS
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_args(&argv("-k gups -d 1000000 -l 64")).unwrap() {
+            Command::Run(r) => {
+                assert_eq!(r.pattern.gups_table_elems(), 1 << 20)
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn baseline_kernel_flag_errors() {
+        // Patterns don't apply to the dense baselines.
+        assert!(parse_args(&argv("-k Copy -p UNIFORM:8:1 -l 64")).is_err());
+        assert!(parse_args(&argv("-k GUPS -p 0,1,2 -l 64")).is_err());
+        assert!(parse_args(&argv("-k Triad -g UNIFORM:8:1 -l 64")).is_err());
+        // Cycling delta lists don't either.
+        assert!(parse_args(&argv("-k Add -d 0,0,16 -l 64")).is_err());
+        assert!(parse_args(&argv("-k GUPS -d 1,2 -l 64")).is_err());
+        // Zero/negative sizes rejected.
+        assert!(parse_args(&argv("-k Scale -d 0 -l 64")).is_err());
+        assert!(parse_args(&argv("-k GUPS -d 0 -l 64")).is_err());
     }
 
     #[test]

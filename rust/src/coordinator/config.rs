@@ -45,7 +45,9 @@ impl RunConfig {
     /// of the serialized form reproduces this config (round-trip).
     /// GS configs serialize their two index buffers under the
     /// `"pattern-gather"` / `"pattern-scatter"` keys; single-buffer
-    /// kernels keep `"pattern"`.
+    /// kernels keep `"pattern"`; the dense baselines (STREAM tetrad +
+    /// GUPS) have no index buffer at all — `"delta"`/`"count"` size
+    /// the streams.
     pub fn to_json(&self) -> Value {
         let index_array = |idx: &[i64]| {
             Value::Array(idx.iter().map(|&i| Value::from(i)).collect())
@@ -61,7 +63,7 @@ impl RunConfig {
                 "pattern-scatter",
                 index_array(&self.pattern.scatter_indices),
             ));
-        } else {
+        } else if !self.kernel.is_baseline() {
             pairs.push(("pattern", index_array(&self.pattern.indices)));
         }
         if self.pattern.deltas.len() > 1 {
@@ -135,7 +137,57 @@ fn parse_index_value(
 
 fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
     let kernel = Kernel::parse(v.get("kernel")?.as_str()?)?;
-    let mut pattern = if kernel == Kernel::GS {
+    let mut pattern = if kernel.is_baseline() {
+        // Dense baselines (STREAM tetrad + GUPS): no index buffer —
+        // "delta" (stream width / GUPS table size) and "count" size
+        // the streams.
+        for key in ["pattern", "pattern-gather", "pattern-scatter"] {
+            if v.get_opt(key).is_some() {
+                return Err(Error::Config(format!(
+                    "run {i}: kernel {} is a dense baseline and takes no \
+                     \"{key}\" (\"delta\"/\"count\" size the streams)",
+                    kernel.name()
+                )));
+            }
+        }
+        let d = match v.get_opt("delta") {
+            None => None,
+            Some(Value::Array(_)) => {
+                return Err(Error::Config(format!(
+                    "run {i}: kernel {} takes a single \"delta\" (cycling \
+                     lists apply to indexed kernels)",
+                    kernel.name()
+                )))
+            }
+            Some(x) => Some(x.as_i64().map_err(|e| {
+                Error::Config(format!("run {i}: delta: {e}"))
+            })?),
+        };
+        if let Some(d) = d {
+            if d <= 0 {
+                return Err(Error::Config(format!(
+                    "run {i}: delta must be > 0 for {}, got {d}",
+                    kernel.name()
+                )));
+            }
+        }
+        if kernel == Kernel::Gups {
+            Pattern::gups(
+                d.unwrap_or(crate::pattern::GUPS_DEFAULT_TABLE_ELEMS as i64)
+                    as usize,
+                1,
+            )
+        } else {
+            let width = d.unwrap_or(8);
+            if width > 1 << 20 {
+                return Err(Error::Config(format!(
+                    "run {i}: stream width (delta) must be <= 2^20, got \
+                     {width}"
+                )));
+            }
+            Pattern::dense(width as usize, 1)
+        }
+    } else if kernel == Kernel::GS {
         // GS: dual index buffers under "pattern-gather" /
         // "pattern-scatter" (dst[scatter[j]] = src[gather[j]]).
         if v.get_opt("pattern").is_some() {
@@ -193,15 +245,19 @@ fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
         }
     };
     // "delta" accepts a number or a cycling list (temporal-locality
-    // extension): {"delta": [0, 0, 0, 16]}.
-    if let Some(d) = v.get_opt("delta") {
-        match d {
-            Value::Array(items) => {
-                let list: Result<Vec<i64>> =
-                    items.iter().map(|x| x.as_i64()).collect();
-                pattern = pattern.with_deltas(&list?);
+    // extension): {"delta": [0, 0, 0, 16]}. Baseline kernels consumed
+    // it above (stream width / table size) — don't reapply it as a
+    // base advance.
+    if !kernel.is_baseline() {
+        if let Some(d) = v.get_opt("delta") {
+            match d {
+                Value::Array(items) => {
+                    let list: Result<Vec<i64>> =
+                        items.iter().map(|x| x.as_i64()).collect();
+                    pattern = pattern.with_deltas(&list?);
+                }
+                other => pattern = pattern.with_delta(other.as_i64()?),
             }
-            other => pattern = pattern.with_delta(other.as_i64()?),
         }
     }
     let count = match v.get_opt("count") {
@@ -403,6 +459,67 @@ mod tests {
             r#"[{"kernel": "Gather", "pattern": [-1, 2]}]"#,
         ] {
             assert!(parse_config_text(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn baseline_configs_parse_and_roundtrip() {
+        use crate::pattern::{StreamOp, GUPS_DEFAULT_TABLE_ELEMS};
+        let cfgs = parse_config_text(
+            r#"[
+              {"name": "copy", "kernel": "Copy", "count": 4096},
+              {"name": "triad16", "kernel": "Triad", "delta": 16,
+               "count": 1024, "threads": 4},
+              {"name": "gups", "kernel": "GUPS", "count": 2048},
+              {"name": "gups-small", "kernel": "GUPS", "delta": 1000000,
+               "count": 512, "page-size": "2MB"}
+            ]"#,
+        )
+        .unwrap();
+        assert_eq!(cfgs[0].kernel, Kernel::Stream(StreamOp::Copy));
+        assert_eq!(cfgs[0].pattern.indices, (0..8).collect::<Vec<i64>>());
+        assert_eq!(cfgs[1].kernel, Kernel::Stream(StreamOp::Triad));
+        assert_eq!(cfgs[1].pattern.vector_len(), 16);
+        assert_eq!(cfgs[1].pattern.delta, 16);
+        assert_eq!(cfgs[1].threads, Some(4));
+        assert_eq!(cfgs[2].kernel, Kernel::Gups);
+        assert_eq!(
+            cfgs[2].pattern.gups_table_elems() as usize,
+            GUPS_DEFAULT_TABLE_ELEMS
+        );
+        // Non-pow2 table sizes round up at parse time, so the
+        // round-trip below is a fixed point.
+        assert_eq!(cfgs[3].pattern.gups_table_elems(), 1 << 20);
+        assert_eq!(cfgs[3].page_size, Some(PageSize::TwoMB));
+
+        let text = json::to_string(&Value::Array(
+            cfgs.iter().map(|c| c.to_json()).collect(),
+        ));
+        assert!(!text.contains("\"pattern\""), "{text}");
+        let back = parse_config_text(&text).unwrap();
+        for (a, b) in cfgs.iter().zip(&back) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.pattern, b.pattern);
+            assert_eq!(a.page_size, b.page_size);
+            assert_eq!(a.threads, b.threads);
+        }
+    }
+
+    #[test]
+    fn baseline_config_shape_errors_carry_run_index() {
+        for bad in [
+            // Patterns don't apply to the dense baselines.
+            r#"[{"kernel": "Copy", "pattern": "UNIFORM:8:1"}]"#,
+            r#"[{"kernel": "GUPS", "pattern": [0, 1]}]"#,
+            r#"[{"kernel": "Triad", "pattern-gather": "UNIFORM:8:1"}]"#,
+            // Neither do cycling delta lists or non-positive sizes.
+            r#"[{"kernel": "Add", "delta": [0, 0, 16]}]"#,
+            r#"[{"kernel": "GUPS", "delta": 0}]"#,
+            r#"[{"kernel": "Scale", "delta": -8}]"#,
+        ] {
+            let err = parse_config_text(bad).unwrap_err();
+            assert!(err.to_string().contains("run 0"), "{bad}: {err}");
         }
     }
 

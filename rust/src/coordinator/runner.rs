@@ -24,14 +24,16 @@ pub struct RunRecord {
     pub vector_len: usize,
     pub seconds: f64,
     pub bandwidth_gbs: f64,
-    /// Useful payload bytes moved by the read (gather) stream: the
-    /// full payload for Gather and GS, 0 for Scatter.
+    /// Useful payload bytes moved by the read stream(s): the per-
+    /// stream payload times the kernel's read-stream count (Gather/GS/
+    /// GUPS/Copy/Scale 1x, Add/Triad 2x, Scatter 0).
     pub read_bytes: u64,
-    /// Useful payload bytes moved by the write (scatter) stream: the
-    /// full payload for Scatter and GS, 0 for Gather. GS moves its
-    /// payload on *both* streams; the headline `bandwidth_gbs` counts
-    /// the indexed-copy payload once, so GS stays comparable to its
-    /// component kernels.
+    /// Useful payload bytes moved by the write stream: the per-stream
+    /// payload for every kernel except Gather (0). GS and GUPS move
+    /// their payload on *both* streams while the headline
+    /// `bandwidth_gbs` counts it once (bounded by the component
+    /// kernels); the STREAM tetrad's headline counts every operand
+    /// stream, per STREAM's own convention.
     pub write_bytes: u64,
     /// Which simulated resource bound the run ("dram-bw", "tlb", ...);
     /// empty for real-execution backends.
@@ -117,8 +119,8 @@ pub fn run_one(
         vector_len: pattern.vector_len(),
         seconds: r.seconds,
         bandwidth_gbs: r.bandwidth_gbs(),
-        read_bytes: if kernel.reads() { payload } else { 0 },
-        write_bytes: if kernel.writes() { payload } else { 0 },
+        read_bytes: payload * kernel.read_streams() as u64,
+        write_bytes: payload * kernel.write_streams() as u64,
         bottleneck: r.breakdown.bottleneck().to_string(),
         page_size: backend.page_size().map(|p| p.name().to_string()),
         tlb_hit_rate: r.counters.tlb.hit_rate(),
@@ -444,6 +446,22 @@ mod tests {
             .with_count(4096);
         let gs = run_one(&mut b, "gs", &gs_pat, Kernel::GS).unwrap();
         assert_eq!((gs.read_bytes, gs.write_bytes), (payload, payload));
+        // Baseline kernels: per-operand payloads ride along too.
+        use crate::pattern::StreamOp;
+        let dense = Pattern::dense(8, 4096);
+        let dp = dense.moved_bytes() as u64;
+        let copy =
+            run_one(&mut b, "c", &dense, Kernel::Stream(StreamOp::Copy))
+                .unwrap();
+        assert_eq!((copy.read_bytes, copy.write_bytes), (dp, dp));
+        let triad =
+            run_one(&mut b, "t", &dense, Kernel::Stream(StreamOp::Triad))
+                .unwrap();
+        assert_eq!((triad.read_bytes, triad.write_bytes), (2 * dp, dp));
+        let gups_pat = Pattern::gups(1 << 16, 1024);
+        let gup = run_one(&mut b, "u", &gups_pat, Kernel::Gups).unwrap();
+        let up = gups_pat.moved_bytes() as u64;
+        assert_eq!((gup.read_bytes, gup.write_bytes), (up, up));
         // And the JSON record carries both sides.
         let j = gs.to_json();
         assert_eq!(j.get("kernel").unwrap().as_str().unwrap(), "GS");

@@ -22,15 +22,57 @@ pub use spec::parse_spec;
 
 use crate::error::{Error, Result};
 
-/// Gather (indexed read), Scatter (indexed write), or GS (gather-
-/// scatter, the indexed copy `dst[scatter[i]] = src[gather[i]]`) —
-/// paper Algorithm 1 plus the paired-pattern case its experiments 2/3
-/// exercise.
+/// One operation of the classical STREAM tetrad (the dense baseline
+/// family): contiguous multi-operand kernels with no index buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StreamOp {
+    /// `c[i] = a[i]` — one read stream, one write stream.
+    Copy,
+    /// `b[i] = q * c[i]` — one read stream, one write stream.
+    Scale,
+    /// `c[i] = a[i] + b[i]` — two read streams, one write stream.
+    Add,
+    /// `a[i] = b[i] + q * c[i]` — two read streams, one write stream.
+    Triad,
+}
+
+impl StreamOp {
+    /// The tetrad in STREAM's canonical order.
+    pub const ALL: &'static [StreamOp] =
+        &[StreamOp::Copy, StreamOp::Scale, StreamOp::Add, StreamOp::Triad];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamOp::Copy => "Copy",
+            StreamOp::Scale => "Scale",
+            StreamOp::Add => "Add",
+            StreamOp::Triad => "Triad",
+        }
+    }
+
+    /// Operand arrays read per element (Copy/Scale 1, Add/Triad 2).
+    pub fn read_streams(&self) -> usize {
+        match self {
+            StreamOp::Copy | StreamOp::Scale => 1,
+            StreamOp::Add | StreamOp::Triad => 2,
+        }
+    }
+}
+
+/// The kernels Spatter can issue: the paper's indexed family (Gather,
+/// Scatter, and GS — the indexed copy `dst[scatter[i]] = src[gather[i]]`
+/// of Algorithm 1 and experiments 2/3) plus the dense/random baseline
+/// family the paper compares *against* (§5.4 / Fig 9): the STREAM
+/// tetrad (contiguous multi-operand streams, no index buffer) and GUPS
+/// (seeded-xorshift 64-bit random read-modify-write into a large
+/// table — the TLB + DRAM-row worst case).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Kernel {
     Gather,
     Scatter,
     GS,
+    Stream(StreamOp),
+    Gups,
 }
 
 impl Kernel {
@@ -39,8 +81,14 @@ impl Kernel {
             "gather" | "g" => Ok(Kernel::Gather),
             "scatter" | "s" => Ok(Kernel::Scatter),
             "gs" | "sg" | "gatherscatter" | "gather-scatter" => Ok(Kernel::GS),
+            "copy" => Ok(Kernel::Stream(StreamOp::Copy)),
+            "scale" => Ok(Kernel::Stream(StreamOp::Scale)),
+            "add" => Ok(Kernel::Stream(StreamOp::Add)),
+            "triad" => Ok(Kernel::Stream(StreamOp::Triad)),
+            "gups" => Ok(Kernel::Gups),
             _ => Err(Error::PatternParse(format!(
-                "unknown kernel '{s}' (expected Gather, Scatter, or GS)"
+                "unknown kernel '{s}' (expected Gather, Scatter, GS, \
+                 Copy, Scale, Add, Triad, or GUPS)"
             ))),
         }
     }
@@ -50,27 +98,62 @@ impl Kernel {
             Kernel::Gather => "Gather",
             Kernel::Scatter => "Scatter",
             Kernel::GS => "GS",
+            Kernel::Stream(op) => op.name(),
+            Kernel::Gups => "GUPS",
         }
     }
 
-    /// Whether the kernel issues an indexed *read* stream.
+    /// Distinct operand streams *read* per element.
+    pub fn read_streams(&self) -> usize {
+        match self {
+            Kernel::Gather | Kernel::GS | Kernel::Gups => 1,
+            Kernel::Scatter => 0,
+            Kernel::Stream(op) => op.read_streams(),
+        }
+    }
+
+    /// Distinct operand streams *written* per element (every kernel
+    /// except Gather writes exactly one).
+    pub fn write_streams(&self) -> usize {
+        match self {
+            Kernel::Gather => 0,
+            _ => 1,
+        }
+    }
+
+    /// Whether the kernel issues a *read* stream.
     pub fn reads(&self) -> bool {
-        matches!(self, Kernel::Gather | Kernel::GS)
+        self.read_streams() > 0
     }
 
-    /// Whether the kernel issues an indexed *write* stream.
+    /// Whether the kernel issues a *write* stream.
     pub fn writes(&self) -> bool {
-        matches!(self, Kernel::Scatter | Kernel::GS)
+        self.write_streams() > 0
     }
 
-    /// Indexed access streams per element (GS touches memory on both
-    /// the read and the write side).
+    /// Memory access streams per element (GS and the baselines touch
+    /// memory on several operand streams per element).
     pub fn streams(&self) -> usize {
-        if *self == Kernel::GS {
-            2
-        } else {
-            1
+        self.read_streams() + self.write_streams()
+    }
+
+    /// Streams counted in the headline payload. The indexed kernels
+    /// and GUPS count their copied/updated payload *once* (so GS stays
+    /// bounded by its component kernels and GUPS by a random gather);
+    /// the STREAM tetrad uses STREAM's byte-counting convention, which
+    /// counts every operand stream (Copy/Scale 16 B, Add/Triad 24 B
+    /// per element).
+    pub fn payload_streams(&self) -> usize {
+        match self {
+            Kernel::Stream(_) => self.streams(),
+            _ => 1,
         }
+    }
+
+    /// The dense/random baseline kernels (STREAM tetrad + GUPS): they
+    /// take no pattern — `delta`/`count` size the streams.
+    pub fn is_baseline(&self) -> bool {
+        matches!(self, Kernel::Stream(_) | Kernel::Gups)
     }
 }
 
@@ -131,6 +214,32 @@ pub struct Pattern {
 /// translation page size (1 GiB = 2^27 doubles).
 const GS_REGION_ALIGN_ELEMS: usize = 1 << 27;
 
+/// Alignment quantum of the operand arrays of a dense STREAM-family
+/// kernel: each operand is its own allocation starting on a 1 GiB
+/// boundary past the previous one's span (see
+/// [`Pattern::dense_region_bytes`]), so the streams never share a
+/// line, DRAM row, or page at any page size — the same convention as
+/// the GS write region.
+pub const DENSE_REGION_ALIGN_BYTES: u64 = 1 << 30;
+
+/// Default GUPS table size in elements (2^26 doubles = 512 MiB):
+/// dwarfs every modelled cache and 4 KiB TLB reach, so each update is
+/// the TLB + DRAM-row worst case.
+pub const GUPS_DEFAULT_TABLE_ELEMS: usize = 1 << 26;
+
+/// Smallest accepted GUPS table (tests use small cache-resident
+/// tables; the power-of-two mask needs a sane floor).
+pub const GUPS_MIN_TABLE_ELEMS: usize = 1 << 10;
+
+/// Largest accepted GUPS table (2^40 doubles = 8 TiB of address
+/// space); also the clamp [`Pattern::gups`] applies before rounding,
+/// so absurd requests can't overflow `next_power_of_two`.
+pub const GUPS_MAX_TABLE_ELEMS: usize = 1 << 40;
+
+/// Random updates one GUPS "iteration" performs (the analogue of the
+/// index-buffer length for the indexed kernels).
+pub const GUPS_UPDATES_PER_ITER: usize = 8;
+
 impl Pattern {
     /// Parse a pattern spec string (builtin or custom index list).
     /// Delta defaults to 0 gathers... callers set delta/count via the
@@ -157,6 +266,58 @@ impl Pattern {
             count: 1,
             scatter_indices: Vec::new(),
         }
+    }
+
+    /// A dense STREAM-family pattern: `width` contiguous elements per
+    /// iteration per operand stream (delta == width, so consecutive
+    /// iterations are contiguous). Total stream length per operand is
+    /// `width * count` elements.
+    pub fn dense(width: usize, count: usize) -> Pattern {
+        Pattern {
+            spec: format!("DENSE:{width}"),
+            indices: (0..width as i64).collect(),
+            delta: width as i64,
+            deltas: Vec::new(),
+            count,
+            scatter_indices: Vec::new(),
+        }
+    }
+
+    /// A GUPS pattern: `count` iterations of
+    /// [`GUPS_UPDATES_PER_ITER`] seeded-xorshift random 64-bit
+    /// read-modify-writes into a table of `table_elems` doubles
+    /// (clamped to [`GUPS_MIN_TABLE_ELEMS`]..[`GUPS_MAX_TABLE_ELEMS`]
+    /// and rounded up to a power of two — the update mask needs one).
+    /// The table size rides in `delta`, which the CLI/JSON already
+    /// plumb end to end.
+    pub fn gups(table_elems: usize, count: usize) -> Pattern {
+        let table = table_elems
+            .clamp(GUPS_MIN_TABLE_ELEMS, GUPS_MAX_TABLE_ELEMS)
+            .next_power_of_two();
+        Pattern {
+            spec: format!("GUPS:{table}"),
+            indices: (0..GUPS_UPDATES_PER_ITER as i64).collect(),
+            delta: table as i64,
+            deltas: Vec::new(),
+            count,
+            scatter_indices: Vec::new(),
+        }
+    }
+
+    /// GUPS table size in elements (the `delta` field under its GUPS
+    /// reading; validated as a power of two by `validate_for`).
+    pub fn gups_table_elems(&self) -> u64 {
+        self.delta as u64
+    }
+
+    /// Byte stride between the operand arrays of a dense STREAM-family
+    /// kernel: the per-operand span rounded up to the next 1 GiB
+    /// boundary (the same derivation as [`Pattern::gs_scatter_base`]),
+    /// so operands behave as separate allocations that never alias —
+    /// at any stream length, page size, or simulation window.
+    pub fn dense_region_bytes(&self) -> u64 {
+        let span = self.required_elements() as u64 * 8;
+        span.div_ceil(DENSE_REGION_ALIGN_BYTES) * DENSE_REGION_ALIGN_BYTES
     }
 
     /// Attach the scatter (write) side of a GS pattern. `indices`
@@ -324,9 +485,59 @@ impl Pattern {
     /// Validate the pattern *for a specific kernel*: everything
     /// [`Pattern::validate`] checks, plus the buffer-shape contract —
     /// GS needs two equal-length index buffers, Gather/Scatter exactly
-    /// one.
+    /// one, the STREAM tetrad a contiguous dense shape, and GUPS a
+    /// power-of-two table size (its `delta` reading, which skips the
+    /// base-advance span math entirely — GUPS has no base advance).
     pub fn validate_for(&self, kernel: Kernel) -> Result<()> {
+        if kernel == Kernel::Gups {
+            if self.indices.is_empty() {
+                return Err(Error::Config("empty index buffer".into()));
+            }
+            if self.count == 0 {
+                return Err(Error::Config("count must be > 0".into()));
+            }
+            if !self.scatter_indices.is_empty() || !self.deltas.is_empty() {
+                return Err(Error::Config(
+                    "GUPS takes no scatter side and a single delta (the \
+                     table size in elements)"
+                        .into(),
+                ));
+            }
+            let t = self.delta;
+            if t < GUPS_MIN_TABLE_ELEMS as i64
+                || !(t as u64).is_power_of_two()
+                || t as u64 > GUPS_MAX_TABLE_ELEMS as u64
+            {
+                return Err(Error::Config(format!(
+                    "GUPS table size (delta) must be a power of two in \
+                     [{}, 2^40] elements, got {t} (use Pattern::gups / \
+                     -d TABLE)",
+                    GUPS_MIN_TABLE_ELEMS
+                )));
+            }
+            return Ok(());
+        }
         self.validate()?;
+        if let Kernel::Stream(_) = kernel {
+            let dense = self
+                .indices
+                .iter()
+                .enumerate()
+                .all(|(j, &i)| i == j as i64);
+            if !dense
+                || self.delta != self.indices.len() as i64
+                || !self.deltas.is_empty()
+                || !self.scatter_indices.is_empty()
+            {
+                return Err(Error::Config(format!(
+                    "kernel {} is a dense STREAM baseline: it takes \
+                     contiguous operand streams, no pattern (use \
+                     Pattern::dense — delta/count size the streams)",
+                    kernel.name()
+                )));
+            }
+            return Ok(());
+        }
         match kernel {
             Kernel::GS => {
                 if self.scatter_indices.is_empty() {
@@ -413,8 +624,108 @@ mod tests {
         assert!(!Kernel::Scatter.reads() && Kernel::Scatter.writes());
         assert!(Kernel::GS.reads() && Kernel::GS.writes());
         assert_eq!(Kernel::Gather.streams(), 1);
+        assert_eq!(Kernel::Scatter.streams(), 1);
         assert_eq!(Kernel::GS.streams(), 2);
         assert_eq!(Kernel::GS.name(), "GS");
+    }
+
+    #[test]
+    fn baseline_kernel_parse_and_shapes() {
+        assert_eq!(
+            Kernel::parse("Copy").unwrap(),
+            Kernel::Stream(StreamOp::Copy)
+        );
+        assert_eq!(
+            Kernel::parse("triad").unwrap(),
+            Kernel::Stream(StreamOp::Triad)
+        );
+        assert_eq!(Kernel::parse("GUPS").unwrap(), Kernel::Gups);
+        assert_eq!(Kernel::parse("SCALE").unwrap().name(), "Scale");
+        // Stream counts follow the STREAM convention.
+        let copy = Kernel::Stream(StreamOp::Copy);
+        let add = Kernel::Stream(StreamOp::Add);
+        let triad = Kernel::Stream(StreamOp::Triad);
+        assert_eq!((copy.read_streams(), copy.write_streams()), (1, 1));
+        assert_eq!((add.read_streams(), add.write_streams()), (2, 1));
+        assert_eq!(copy.streams(), 2);
+        assert_eq!(triad.streams(), 3);
+        // Headline payload: STREAM counts every operand stream; the
+        // indexed kernels and GUPS count the payload once.
+        assert_eq!(copy.payload_streams(), 2);
+        assert_eq!(triad.payload_streams(), 3);
+        assert_eq!(Kernel::GS.payload_streams(), 1);
+        assert_eq!(Kernel::Gups.payload_streams(), 1);
+        assert_eq!((Kernel::Gups.read_streams(), Kernel::Gups.write_streams()), (1, 1));
+        assert!(copy.is_baseline() && Kernel::Gups.is_baseline());
+        assert!(!Kernel::GS.is_baseline());
+    }
+
+    #[test]
+    fn dense_pattern_shape_and_validation() {
+        let p = Pattern::dense(8, 1 << 12);
+        assert_eq!(p.indices, (0..8).collect::<Vec<i64>>());
+        assert_eq!(p.delta, 8);
+        assert_eq!(p.spec, "DENSE:8");
+        for op in StreamOp::ALL {
+            p.validate_for(Kernel::Stream(*op)).unwrap();
+        }
+        // Dense kernels reject indexed shapes…
+        let strided = Pattern::parse("UNIFORM:8:2").unwrap().with_count(64);
+        assert!(strided
+            .validate_for(Kernel::Stream(StreamOp::Copy))
+            .is_err());
+        // …non-contiguous deltas…
+        let gapped = Pattern::dense(8, 64).with_delta(16);
+        assert!(gapped
+            .validate_for(Kernel::Stream(StreamOp::Triad))
+            .is_err());
+        // …and scatter sides.
+        let sided = Pattern::dense(8, 64).with_gs_scatter((0..8).collect());
+        assert!(sided.validate_for(Kernel::Stream(StreamOp::Add)).is_err());
+        // A dense pattern is still a valid stride-1 gather shape.
+        p.validate_for(Kernel::Gather).unwrap();
+    }
+
+    #[test]
+    fn dense_regions_never_alias() {
+        // Short streams keep the minimal 1 GiB stride…
+        let p = Pattern::dense(8, 1 << 12);
+        assert_eq!(p.dense_region_bytes(), DENSE_REGION_ALIGN_BYTES);
+        // …and streams longer than 1 GiB get a span-sized stride (the
+        // gs_scatter_base convention), so operands still never alias.
+        let long = Pattern::dense(8, 1 << 28); // 2 GiB per operand
+        let region = long.dense_region_bytes();
+        assert_eq!(region % DENSE_REGION_ALIGN_BYTES, 0);
+        assert!(region >= long.required_elements() as u64 * 8);
+    }
+
+    #[test]
+    fn gups_pattern_table_semantics() {
+        let p = Pattern::gups(1 << 20, 1 << 14);
+        assert_eq!(p.gups_table_elems(), 1 << 20);
+        assert_eq!(p.vector_len(), GUPS_UPDATES_PER_ITER);
+        p.validate_for(Kernel::Gups).unwrap();
+        // Non-power-of-two tables round up; tiny ones clamp to the floor.
+        assert_eq!(Pattern::gups(1_000_000, 1).gups_table_elems(), 1 << 20);
+        assert_eq!(
+            Pattern::gups(3, 1).gups_table_elems() as usize,
+            GUPS_MIN_TABLE_ELEMS
+        );
+        // Huge table + huge count: no span overflow (GUPS skips the
+        // base-advance span math — it has none).
+        Pattern::gups(GUPS_DEFAULT_TABLE_ELEMS, 1 << 24)
+            .validate_for(Kernel::Gups)
+            .unwrap();
+        // Absurd table requests clamp to the cap instead of
+        // overflowing next_power_of_two; the result still validates.
+        let huge = Pattern::gups(usize::MAX, 1);
+        assert_eq!(huge.gups_table_elems() as usize, GUPS_MAX_TABLE_ELEMS);
+        huge.validate_for(Kernel::Gups).unwrap();
+        // A hand-built non-pow2 delta is rejected for GUPS.
+        let bad = Pattern::dense(8, 64).with_delta(1000000);
+        assert!(bad.validate_for(Kernel::Gups).is_err());
+        // An indexed pattern's small delta is rejected too.
+        assert!(Pattern::dense(8, 64).validate_for(Kernel::Gups).is_err());
     }
 
     #[test]

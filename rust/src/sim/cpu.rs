@@ -32,7 +32,7 @@ use super::memory::{
     PageSize, PageTableWalker, PhysicalAddress, Tlb, VirtualAddress,
 };
 use super::prefetch::Prefetcher;
-use super::{PrefetchKind, SimCounters, SimResult, TimeBreakdown};
+use super::{PrefetchKind, SimCounters, SimResult, TimeBreakdown, XorShift64};
 use crate::error::Result;
 use crate::pattern::{Kernel, Pattern};
 use crate::platforms::CpuPlatform;
@@ -92,6 +92,15 @@ const LINE: u64 = 64;
 /// timing model charges against).
 const WALK_OVERLAP: f64 = 2.0;
 
+/// Most operand streams any kernel issues (Add/Triad: two reads plus
+/// one write) — sizes the per-stream DRAM open-row table.
+const MAX_STREAMS: usize = 3;
+
+/// Elements a unit-stride SIMD load/store retires per issued op: the
+/// dense STREAM kernels need no indexed addressing, so their issue
+/// cost is the cheap side of every ISA.
+const DENSE_SIMD_LANES: f64 = 4.0;
+
 /// The engine. Reusable across runs (state resets per run).
 pub struct CpuEngine {
     platform: CpuPlatform,
@@ -104,7 +113,13 @@ pub struct CpuEngine {
     /// for the configured [`PageSize`].
     tlb: Tlb,
     walker: PageTableWalker,
-    prefetcher: Prefetcher,
+    /// Per-operand-stream prefetchers: real stride detectors track
+    /// each demand stream separately, so the interleaved multi-operand
+    /// misses of GS / Add / Triad don't destroy each other's stride
+    /// confidence (1 GiB-apart regions would otherwise alternate the
+    /// observed stride every miss). Single-stream kernels use slot 0
+    /// only — numerically identical to a lone prefetcher.
+    prefetchers: [Prefetcher; MAX_STREAMS],
     /// Scratch: prefetch target lines, reused across `access` calls
     /// and runs (never reallocated — see the module-level
     /// scratch-buffer invariants in `sim`).
@@ -113,12 +128,17 @@ pub struct CpuEngine {
     /// rebuilt once per pass and consumed by the demand path (no
     /// per-access multiply, no per-run allocation once warm).
     idx_bytes: Vec<u64>,
-    /// Scratch: the GS scatter-side buffer pre-scaled to byte offsets
-    /// *including* the write-region base, rebuilt once per pass (empty
-    /// for single-buffer kernels).
+    /// Scratch: the write-side buffer pre-scaled to byte offsets
+    /// *including* the write-region base (the GS scatter side or a
+    /// dense kernel's output stream), rebuilt once per pass (empty for
+    /// single-buffer kernels).
     idx2_bytes: Vec<u64>,
-    /// Open-row tracker for the DRAM row-locality model.
-    last_row: u64,
+    /// Open-row trackers for the DRAM row-locality model, one per
+    /// operand stream: each stream's allocation is served by its own
+    /// bank group, so multi-operand kernels (GS, the STREAM tetrad)
+    /// don't thrash a single open row. Single-stream kernels use slot
+    /// 0 only — numerically identical to a lone tracker.
+    open_rows: [u64; MAX_STREAMS],
     /// Effective OpenMP thread count for the next run (resolved from
     /// `opts.threads` / the platform default; overridable per run via
     /// [`CpuEngine::set_threads`]).
@@ -138,24 +158,25 @@ impl CpuEngine {
     pub fn with_options(platform: &CpuPlatform, opts: CpuSimOptions) -> CpuEngine {
         let p = platform.clone();
         let page = opts.page_size;
+        let pf_kind = if opts.prefetch_enabled {
+            p.prefetch
+        } else {
+            PrefetchKind::None
+        };
         CpuEngine {
             l1: Cache::new(p.l1_kb * 1024, LINE as usize, p.l1_assoc),
             l2: Cache::new(p.l2_kb * 1024, LINE as usize, p.l2_assoc),
             l3: Cache::new(p.l3_mb * 1024 * 1024, LINE as usize, p.l3_assoc),
             tlb: Tlb::new(p.tlb.geometry(page), page),
             walker: PageTableWalker::new(p.tlb_walk_ns, page, WALK_OVERLAP),
-            prefetcher: Prefetcher::new(if opts.prefetch_enabled {
-                p.prefetch
-            } else {
-                PrefetchKind::None
-            }),
+            prefetchers: std::array::from_fn(|_| Prefetcher::new(pf_kind)),
             threads: opts.threads.unwrap_or(p.threads).max(1),
             platform: p,
             opts,
             pf_buf: Vec::with_capacity(8),
             idx_bytes: Vec::new(),
             idx2_bytes: Vec::new(),
-            last_row: u64::MAX,
+            open_rows: [u64::MAX; MAX_STREAMS],
         }
     }
 
@@ -206,18 +227,21 @@ impl CpuEngine {
         self.l2.reset();
         self.l3.reset();
         self.tlb.reset();
-        self.prefetcher.reset();
-        self.last_row = u64::MAX;
+        for pf in &mut self.prefetchers {
+            pf.reset();
+        }
+        self.open_rows = [u64::MAX; MAX_STREAMS];
     }
 
-    /// Track DRAM row transitions for the fill stream. DRAM-facing:
-    /// only translated addresses may reach the row model.
+    /// Track DRAM row transitions for the fill stream of operand
+    /// stream `sid`. DRAM-facing: only translated addresses may reach
+    /// the row model.
     #[inline]
-    fn note_row(&mut self, pa: PhysicalAddress, c: &mut SimCounters) {
+    fn note_row(&mut self, pa: PhysicalAddress, sid: usize, c: &mut SimCounters) {
         let row = pa.line() / ROW_LINES;
-        if row != self.last_row {
+        if row != self.open_rows[sid] {
             c.row_activations += 1;
-            self.last_row = row;
+            self.open_rows[sid] = row;
         }
     }
 
@@ -237,13 +261,16 @@ impl CpuEngine {
         let measured = pattern.count.min(cap_iters);
         // Streaming (non-temporal) store eligibility is a property of
         // the write-side stream: `indices` for Scatter, the scatter
-        // side for GS.
+        // side for GS. The STREAM tetrad's output covers whole lines
+        // exactly once by construction (the classic NT-store path);
+        // GUPS is a read-modify-write and must keep the cache.
         let streaming = match kernel {
-            Kernel::Gather => false,
+            Kernel::Gather | Kernel::Gups => false,
             Kernel::Scatter => write_density(pattern, &pattern.indices) >= 0.99,
             Kernel::GS => {
                 write_density(pattern, &pattern.scatter_indices) >= 0.99
             }
+            Kernel::Stream(_) => true,
         };
 
         // Warmup pass: the paper reports the min of 10 runs, so the
@@ -254,12 +281,20 @@ impl CpuEngine {
         let warmup = pattern.count.min(self.opts.warmup_iterations);
         let wstart = pattern.count - warmup;
         let mut scratch = SimCounters::default();
-        self.pass(pattern, wstart, pattern.count, kernel, streaming, &mut scratch);
+        self.pass(
+            pattern,
+            wstart,
+            pattern.count,
+            kernel,
+            streaming,
+            true,
+            &mut scratch,
+        );
 
         // Measured pass: iterations [0, measured) of the next run.
         let mut counters = SimCounters::default();
-        let closed_at =
-            self.pass(pattern, 0, measured, kernel, streaming, &mut counters);
+        let closed_at = self
+            .pass(pattern, 0, measured, kernel, streaming, false, &mut counters);
         counters.coherence_events = self.coherence_events(pattern, kernel, measured);
 
         // Page walks miss the cache hierarchy when touched pages are
@@ -272,15 +307,16 @@ impl CpuEngine {
         let breakdown = self.timing(&counters, kernel, sparse_walks);
         let scale = pattern.count as f64 / measured as f64;
         let seconds = breakdown.total() * scale;
-        // Useful bytes follow Spatter's convention for every kernel:
-        // the indexed-copy payload (8 * V * count), counted once. GS
-        // moves that payload through *two* indexed streams — the
-        // engine charges both against the memory system above, the
-        // record reports per-side traffic — so its headline bandwidth
-        // stays comparable to (and bounded by) its component kernels.
+        // Useful bytes: the indexed kernels and GUPS count the copied/
+        // updated payload (8 * V * count) once — GS and GUPS charge
+        // every stream to the memory system above, the record reports
+        // per-side traffic, and the headline stays bounded by the
+        // component kernels. The STREAM tetrad uses STREAM's own
+        // convention and counts every operand stream (16 or 24 B/elem).
         Ok(SimResult {
             seconds,
-            useful_bytes: pattern.moved_bytes() as u64,
+            useful_bytes: pattern.moved_bytes() as u64
+                * kernel.payload_streams() as u64,
             counters,
             breakdown,
             simulated_iterations: measured,
@@ -299,27 +335,58 @@ impl CpuEngine {
         end: usize,
         kernel: Kernel,
         streaming: bool,
+        warm: bool,
         c: &mut SimCounters,
     ) -> Option<usize> {
+        if kernel == Kernel::Gups {
+            return self.pass_gups(pattern, begin, end, warm, c);
+        }
+        let v = pattern.vector_len();
         let mut last_stream_line = u64::MAX;
         let mut base = pattern.base(begin);
-        // The primary stream: reads for Gather/GS, writes for Scatter.
+        // The primary stream(s): reads for Gather/GS/STREAM, writes
+        // for Scatter.
         let primary_write = kernel == Kernel::Scatter;
         let primary_streaming = primary_write && streaming;
+        let read_streams = kernel.read_streams();
         // Pre-scale the index buffers to byte offsets once per pass
         // (engine scratch; moved out for the loop's disjoint borrows).
-        // The GS scatter side bakes in its write-region base, so both
-        // streams advance with the same per-iteration base below.
+        // Write sides bake in their region base, so every stream
+        // advances with the same per-iteration base below.
         let mut idx = std::mem::take(&mut self.idx_bytes);
         idx.clear();
-        idx.extend(pattern.indices.iter().map(|&i| i as u64 * 8));
+        match kernel {
+            // One contiguous operand array per read stream, each its
+            // own span-sized 1 GiB-aligned allocation.
+            Kernel::Stream(_) => {
+                let region = pattern.dense_region_bytes();
+                for r in 0..read_streams as u64 {
+                    idx.extend(
+                        pattern
+                            .indices
+                            .iter()
+                            .map(|&i| r * region + i as u64 * 8),
+                    );
+                }
+            }
+            _ => idx.extend(pattern.indices.iter().map(|&i| i as u64 * 8)),
+        }
         let mut idx2 = std::mem::take(&mut self.idx2_bytes);
         idx2.clear();
-        if kernel == Kernel::GS {
-            let dst = pattern.gs_scatter_base() as u64 * 8;
-            idx2.extend(
-                pattern.scatter_indices.iter().map(|&i| dst + i as u64 * 8),
-            );
+        match kernel {
+            Kernel::GS => {
+                let dst = pattern.gs_scatter_base() as u64 * 8;
+                idx2.extend(
+                    pattern.scatter_indices.iter().map(|&i| dst + i as u64 * 8),
+                );
+            }
+            Kernel::Stream(_) => {
+                let dst = read_streams as u64 * pattern.dense_region_bytes();
+                idx2.extend(
+                    pattern.indices.iter().map(|&i| dst + i as u64 * 8),
+                );
+            }
+            _ => {}
         }
         let period = pattern.deltas.len().max(1);
         let mut closer = if self.opts.closure_enabled && end > begin + 1 {
@@ -331,21 +398,35 @@ impl CpuEngine {
         let mut i = begin;
         while i < end {
             let base_bytes = (base as u64) * 8;
-            for &off in &idx {
+            // Each read stream is `v` slots of the pre-scaled buffer
+            // and owns its open-row slot (single-stream kernels: one
+            // chunk, slot 0 — identical to a lone tracker).
+            for (sid, stream) in idx.chunks(v).enumerate() {
+                for &off in stream {
+                    let va = VirtualAddress(base_bytes + off);
+                    self.access(
+                        va,
+                        primary_write,
+                        primary_streaming,
+                        sid,
+                        &mut last_stream_line,
+                        c,
+                    );
+                }
+            }
+            // Write stream (the GS scatter side or a dense kernel's
+            // output): the vectorized kernel reads the whole vector,
+            // then writes it.
+            for &off in &idx2 {
                 let va = VirtualAddress(base_bytes + off);
                 self.access(
                     va,
-                    primary_write,
-                    primary_streaming,
+                    true,
+                    streaming,
+                    read_streams,
                     &mut last_stream_line,
                     c,
                 );
-            }
-            // GS write stream: the vectorized indexed copy gathers the
-            // whole index vector, then scatters it.
-            for &off in &idx2 {
-                let va = VirtualAddress(base_bytes + off);
-                self.access(va, true, streaming, &mut last_stream_line, c);
             }
             base += pattern.delta_at(i);
             i += 1;
@@ -389,6 +470,37 @@ impl CpuEngine {
         closed_at
     }
 
+    /// GUPS pass: `V` seeded-xorshift random read-modify-writes per
+    /// iteration into the power-of-two table (`table[x & mask] ^= v`:
+    /// a load that misses deep plus a store that hits the just-filled
+    /// L1 line and dirties it — RFO traffic in, writeback traffic
+    /// out). The warm-up pass draws a disjoint seeded stream (`warm`),
+    /// so a short run's warm-up never replays — and pre-caches — the
+    /// measured addresses. The xorshift never cycles within a run, so
+    /// loop closure has nothing to close: the pass runs in full either
+    /// way, and closure on/off is trivially bit-identical.
+    fn pass_gups(
+        &mut self,
+        pattern: &Pattern,
+        begin: usize,
+        end: usize,
+        warm: bool,
+        c: &mut SimCounters,
+    ) -> Option<usize> {
+        let mask = pattern.gups_table_elems() - 1;
+        let v = pattern.vector_len();
+        let mut rng = XorShift64::seeded(begin, warm);
+        let mut last_stream_line = u64::MAX;
+        for _ in begin..end {
+            for _ in 0..v {
+                let va = VirtualAddress((rng.next_u64() & mask) * 8);
+                self.access(va, false, false, 0, &mut last_stream_line, c);
+                self.access(va, true, false, 0, &mut last_stream_line, c);
+            }
+        }
+        None
+    }
+
     /// 128-bit fingerprint of the complete engine state *relative* to
     /// the current base address, plus the base's page-alignment
     /// residue and the delta-cycle phase — equal fingerprints mean the
@@ -416,8 +528,12 @@ impl CpuEngine {
             h = closure::fold(h, self.l2.state_digest(base_line, seed));
             h = closure::fold(h, self.l3.state_digest(base_line, seed));
             h = closure::fold(h, self.tlb.state_digest(base_vpn, seed));
-            h = closure::fold(h, self.prefetcher.state_digest(base_bytes, seed));
-            h = closure::fold(h, rel(self.last_row, base_row));
+            for pf in &self.prefetchers {
+                h = closure::fold(h, pf.state_digest(base_bytes, seed));
+            }
+            for &row in &self.open_rows {
+                h = closure::fold(h, rel(row, base_row));
+            }
             h = closure::fold(h, rel(last_stream_line, base_line));
             h = closure::fold(h, base_bytes % page.bytes());
             h = closure::fold(h, phase as u64);
@@ -440,9 +556,13 @@ impl CpuEngine {
         self.l2.relocate(lines);
         self.l3.relocate(lines);
         self.tlb.relocate(bytes >> self.tlb.page_size().shift());
-        self.prefetcher.relocate(bytes);
-        if self.last_row != u64::MAX {
-            self.last_row += lines / ROW_LINES;
+        for pf in &mut self.prefetchers {
+            pf.relocate(bytes);
+        }
+        for row in &mut self.open_rows {
+            if *row != u64::MAX {
+                *row += lines / ROW_LINES;
+            }
         }
     }
 
@@ -452,6 +572,7 @@ impl CpuEngine {
         va: VirtualAddress,
         is_write: bool,
         streaming: bool,
+        sid: usize,
         last_stream_line: &mut u64,
         c: &mut SimCounters,
     ) {
@@ -480,7 +601,7 @@ impl CpuEngine {
             }
             if line != *last_stream_line {
                 c.streaming_store_lines += 1;
-                self.note_row(pa, c);
+                self.note_row(pa, sid, c);
                 *last_stream_line = line;
             }
             return;
@@ -522,19 +643,20 @@ impl CpuEngine {
 
         // DRAM demand fill (write-allocate for scatter).
         c.dram_demand_lines += 1;
-        self.note_row(pa, c);
+        self.note_row(pa, sid, c);
         if self.l3.fill_after_miss(line, false, false).is_some() {
             c.writeback_lines += 1;
         }
         self.fill_l2(line, is_write, c);
         self.fill_l1(line, is_write, c);
 
-        // Prefetch on the DRAM demand miss. Presence is resolved by
-        // the fused fill (L2 first — the streamer's target; L1 copies
-        // are covered by inclusion through L2/L3). `pf_buf` is engine
-        // scratch filled in place — disjoint field borrows, no move
-        // dance, no allocation once warm (§Perf).
-        self.prefetcher.on_miss(pa.byte(), line, &mut self.pf_buf);
+        // Prefetch on the DRAM demand miss — against the triggering
+        // stream's own tracker. Presence is resolved by the fused fill
+        // (L2 first — the streamer's target; L1 copies are covered by
+        // inclusion through L2/L3). `pf_buf` is engine scratch filled
+        // in place — disjoint field borrows, no move dance, no
+        // allocation once warm (§Perf).
+        self.prefetchers[sid].on_miss(pa.byte(), line, &mut self.pf_buf);
         let mut k = 0;
         while k < self.pf_buf.len() {
             let pl = self.pf_buf[k];
@@ -549,7 +671,7 @@ impl CpuEngine {
                 let (inserted_l3, _) = self.l3.fill_if_absent(pl, false, true);
                 if inserted_l3 {
                     c.dram_prefetch_lines += 1;
-                    self.note_row(PhysicalAddress::from_line(pl), c);
+                    self.note_row(PhysicalAddress::from_line(pl), sid, c);
                 }
             }
         }
@@ -641,8 +763,21 @@ impl CpuEngine {
                     _ => None,
                 }
             }
+            // Dense unit-stride streams need no G/S instruction at
+            // all; GUPS is a scalar indexed RMW on every ISA (random
+            // 64-bit addresses defeat vector index generation).
+            Kernel::Stream(_) | Kernel::Gups => None,
         };
-        let (cpe, mlp, scalar_issue) = if self.opts.vectorized {
+        let dense = matches!(kernel, Kernel::Stream(_));
+        let (cpe, mlp, scalar_issue) = if dense && self.opts.vectorized {
+            // Unit-stride SIMD loads/stores retire several elements
+            // per issued op — dense streams are never issue-starved.
+            (
+                p.scalar_cycles_per_elem / DENSE_SIMD_LANES,
+                p.mlp_vector,
+                false,
+            )
+        } else if self.opts.vectorized {
             match vector_cpe {
                 Some(cost) => (cost, p.mlp_vector, false),
                 None => (p.scalar_cycles_per_elem, p.mlp_scalar, true),
@@ -1435,6 +1570,142 @@ mod tests {
         ] {
             let on = run_with_closure(&p, &pat, Kernel::GS, true);
             let off = run_with_closure(&p, &pat, Kernel::GS, false);
+            assert_eq!(on.counters, off.counters, "{}", pat.spec);
+            assert_eq!(on.seconds, off.seconds, "{}", pat.spec);
+        }
+    }
+
+    #[test]
+    fn stream_tetrad_lands_on_the_table3_anchor() {
+        // The tentpole invariant: measured in-engine STREAM must land
+        // on the Table-3 calibration anchor on every CPU — dense
+        // streams are DRAM-bound, prefetch-covered, and NT-stored.
+        use crate::pattern::StreamOp;
+        for name in ["bdw", "skx", "clx", "naples", "tx2", "knl"] {
+            let p = platforms::by_name(name).unwrap();
+            let mut e = CpuEngine::new(&p);
+            for op in StreamOp::ALL {
+                let r = e
+                    .run(&Pattern::dense(8, N), Kernel::Stream(*op))
+                    .unwrap();
+                let bw = r.bandwidth_gbs();
+                assert!(
+                    (bw / p.stream_gbs - 1.0).abs() < 0.25,
+                    "{name}/{}: {bw:.1} GB/s vs STREAM {:.1}",
+                    op.name(),
+                    p.stream_gbs
+                );
+                assert_eq!(r.breakdown.bottleneck(), "dram-bw", "{name}/{}", op.name());
+                // The write stream goes non-temporal (no RFO).
+                assert!(r.counters.streaming_store_lines > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_counts_every_operand_stream() {
+        use crate::pattern::StreamOp;
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let pat = Pattern::dense(8, 1 << 14);
+        let copy = e.run(&pat, Kernel::Stream(StreamOp::Copy)).unwrap();
+        let triad = e.run(&pat, Kernel::Stream(StreamOp::Triad)).unwrap();
+        // STREAM convention: Copy 16 B/elem, Triad 24 B/elem.
+        assert_eq!(copy.useful_bytes, 2 * pat.moved_bytes() as u64);
+        assert_eq!(triad.useful_bytes, 3 * pat.moved_bytes() as u64);
+        // Triad really issues three streams' accesses.
+        assert_eq!(
+            triad.counters.accesses as usize,
+            3 * 8 * triad.simulated_iterations
+        );
+        assert_eq!(
+            copy.counters.accesses as usize,
+            2 * 8 * copy.simulated_iterations
+        );
+    }
+
+    #[test]
+    fn multi_stream_kernels_keep_per_stream_prefetch_coverage() {
+        // Stride-detecting prefetchers (Naples, KNL) track each operand
+        // stream separately: the interleaved 1 GiB-apart misses of a
+        // Triad must not destroy stride confidence, so the read
+        // streams stay prefetch-covered just like a lone dense stream.
+        use crate::pattern::StreamOp;
+        for name in ["naples", "knl"] {
+            let p = platforms::by_name(name).unwrap();
+            let mut e = CpuEngine::new(&p);
+            let r = e
+                .run(&Pattern::dense(8, 1 << 16), Kernel::Stream(StreamOp::Triad))
+                .unwrap();
+            assert!(
+                r.counters.dram_prefetch_lines > 0,
+                "{name}: Triad read streams must be prefetched"
+            );
+            assert!(
+                r.counters.prefetch_useful > 0,
+                "{name}: and the prefetches must be useful"
+            );
+        }
+    }
+
+    #[test]
+    fn gups_is_the_tlb_dram_worst_case() {
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        let pat = Pattern::gups(1 << 26, 1 << 16);
+        let r = e.run(&pat, Kernel::Gups).unwrap();
+        let bw = r.bandwidth_gbs();
+        assert!(
+            bw < 0.1 * p.stream_gbs,
+            "GUPS must collapse vs STREAM: {bw:.2} vs {:.1}",
+            p.stream_gbs
+        );
+        // Random 64-bit addressing defeats the TLB almost completely.
+        let hit = r.counters.tlb.hit_rate().unwrap();
+        assert!(hit < 0.6, "GUPS TLB hit rate should collapse: {hit:.3}");
+        // The RMW really writes: dirty lines drain as writebacks.
+        assert!(r.counters.writeback_lines > 0);
+        assert_eq!(r.counters.streaming_store_lines, 0);
+        // And closure has nothing to close on an acyclic stream.
+        assert_eq!(r.closed_at_iteration, None);
+        // Short runs collapse too: the warm-up pass draws a disjoint
+        // seeded stream, so even count <= warmup_iterations cannot
+        // pre-cache the measured addresses.
+        let short = e.run(&Pattern::gups(1 << 26, 1 << 12), Kernel::Gups).unwrap();
+        assert!(
+            short.bandwidth_gbs() < 0.1 * p.stream_gbs,
+            "small-count GUPS must not be flattered by its own warm-up: \
+             {:.2}",
+            short.bandwidth_gbs()
+        );
+    }
+
+    #[test]
+    fn gups_is_seed_deterministic() {
+        let p = platforms::by_name("bdw").unwrap();
+        let pat = Pattern::gups(1 << 20, 1 << 12);
+        let a = CpuEngine::new(&p).run(&pat, Kernel::Gups).unwrap();
+        let b = CpuEngine::new(&p).run(&pat, Kernel::Gups).unwrap();
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.seconds, b.seconds);
+        // A different table size draws a different address stream.
+        let c = CpuEngine::new(&p)
+            .run(&Pattern::gups(1 << 21, 1 << 12), Kernel::Gups)
+            .unwrap();
+        assert_ne!(a.counters, c.counters);
+    }
+
+    #[test]
+    fn baseline_closure_is_bit_identical() {
+        use crate::pattern::StreamOp;
+        let p = platforms::by_name("skx").unwrap();
+        for (pat, kernel) in [
+            (Pattern::dense(8, 1 << 13), Kernel::Stream(StreamOp::Copy)),
+            (Pattern::dense(8, 1 << 13), Kernel::Stream(StreamOp::Triad)),
+            (Pattern::gups(1 << 18, 1 << 11), Kernel::Gups),
+        ] {
+            let on = run_with_closure(&p, &pat, kernel, true);
+            let off = run_with_closure(&p, &pat, kernel, false);
             assert_eq!(on.counters, off.counters, "{}", pat.spec);
             assert_eq!(on.seconds, off.seconds, "{}", pat.spec);
         }

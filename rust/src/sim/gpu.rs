@@ -24,13 +24,17 @@ use super::closure::{self, LoopCloser, Observation};
 use super::memory::{
     PageSize, PageTableWalker, PhysicalAddress, Tlb, VirtualAddress,
 };
-use super::{SimCounters, SimResult, TimeBreakdown};
+use super::{SimCounters, SimResult, TimeBreakdown, XorShift64};
 use crate::error::Result;
 use crate::pattern::{Kernel, Pattern};
 use crate::platforms::GpuPlatform;
 
 /// Warp width (threads / elements per coalescing window).
 const WARP: usize = 32;
+
+/// Most operand streams any kernel issues (Add/Triad: two reads plus
+/// one write) — sizes the per-stream DRAM open-row table.
+const MAX_STREAMS: usize = 3;
 
 /// Options for a simulated GPU run.
 #[derive(Debug, Clone)]
@@ -70,7 +74,10 @@ pub struct GpuEngine {
     /// per-transaction translation + parallel-walker latency model.
     tlb: Tlb,
     walker: PageTableWalker,
-    last_row: u64,
+    /// Open-row trackers, one per operand stream (each stream's
+    /// allocation is served by its own bank group — see the CPU
+    /// engine). Single-stream kernels use slot 0 only.
+    open_rows: [u64; MAX_STREAMS],
     /// Scratch: sector ids of the current warp (cleared in place,
     /// never reallocated — see the scratch invariants in `sim`).
     warp_sectors: Vec<(u64, u32)>,
@@ -95,7 +102,7 @@ impl GpuEngine {
             l2: Cache::new(p.l2_kb * 1024, p.sector_bytes as usize, p.l2_assoc),
             tlb: Tlb::new(p.tlb.geometry(page), page),
             walker: PageTableWalker::new(p.tlb_walk_ns, page, p.tlb_mlp),
-            last_row: u64::MAX,
+            open_rows: [u64::MAX; MAX_STREAMS],
             warp_sectors: Vec::with_capacity(WARP),
             idx_bytes: Vec::new(),
             idx2_bytes: Vec::new(),
@@ -131,7 +138,7 @@ impl GpuEngine {
     fn reset(&mut self) {
         self.l2.reset();
         self.tlb.reset();
-        self.last_row = u64::MAX;
+        self.open_rows = [u64::MAX; MAX_STREAMS];
     }
 
     /// Simulate one Spatter run on the GPU model.
@@ -158,20 +165,23 @@ impl GpuEngine {
             pattern.count - warmup,
             pattern.count,
             kernel,
+            true,
             &mut scratch,
         );
 
         let mut counters = SimCounters::default();
-        let closed_at = self.pass(pattern, 0, measured, kernel, &mut counters);
+        let closed_at =
+            self.pass(pattern, 0, measured, kernel, false, &mut counters);
 
         let breakdown = self.timing(&counters, pattern, kernel, measured);
         let scale = pattern.count as f64 / measured as f64;
-        // Useful bytes = the indexed-copy payload, counted once for
-        // every kernel (GS charges both of its streams to the memory
-        // system above; see the CPU engine's note).
+        // Useful bytes: the indexed-copy/update payload counted once,
+        // except the STREAM tetrad, which counts every operand stream
+        // (STREAM's own convention — see the CPU engine's note).
         Ok(SimResult {
             seconds: breakdown.total() * scale,
-            useful_bytes: pattern.moved_bytes() as u64,
+            useful_bytes: pattern.moved_bytes() as u64
+                * kernel.payload_streams() as u64,
             counters,
             breakdown,
             simulated_iterations: measured,
@@ -189,23 +199,53 @@ impl GpuEngine {
         begin: usize,
         end: usize,
         kernel: Kernel,
+        warm: bool,
         c: &mut SimCounters,
     ) -> Option<usize> {
+        if kernel == Kernel::Gups {
+            return self.pass_gups(pattern, begin, end, warm, c);
+        }
         let v = pattern.vector_len();
         let mut base = pattern.base(begin);
         let primary_write = kernel == Kernel::Scatter;
+        let read_streams = kernel.read_streams();
         let mut idx = std::mem::take(&mut self.idx_bytes);
         idx.clear();
-        idx.extend(pattern.indices.iter().map(|&i| i as u64 * 8));
-        // GS scatter side: separate write region, same per-iteration
-        // base advance (see the CPU engine).
+        match kernel {
+            // Dense kernels: one contiguous operand array per read
+            // stream, each its own span-sized 1 GiB-aligned allocation.
+            Kernel::Stream(_) => {
+                let region = pattern.dense_region_bytes();
+                for r in 0..read_streams as u64 {
+                    idx.extend(
+                        pattern
+                            .indices
+                            .iter()
+                            .map(|&i| r * region + i as u64 * 8),
+                    );
+                }
+            }
+            _ => idx.extend(pattern.indices.iter().map(|&i| i as u64 * 8)),
+        }
+        // Write side (GS scatter side / dense output stream): separate
+        // write region, same per-iteration base advance (see the CPU
+        // engine).
         let mut idx2 = std::mem::take(&mut self.idx2_bytes);
         idx2.clear();
-        if kernel == Kernel::GS {
-            let dst = pattern.gs_scatter_base() as u64 * 8;
-            idx2.extend(
-                pattern.scatter_indices.iter().map(|&i| dst + i as u64 * 8),
-            );
+        match kernel {
+            Kernel::GS => {
+                let dst = pattern.gs_scatter_base() as u64 * 8;
+                idx2.extend(
+                    pattern.scatter_indices.iter().map(|&i| dst + i as u64 * 8),
+                );
+            }
+            Kernel::Stream(_) => {
+                let dst = read_streams as u64 * pattern.dense_region_bytes();
+                idx2.extend(
+                    pattern.indices.iter().map(|&i| dst + i as u64 * 8),
+                );
+            }
+            _ => {}
         }
         let period = pattern.deltas.len().max(1);
         let mut closer = if self.opts.closure_enabled && end > begin + 1 {
@@ -217,19 +257,23 @@ impl GpuEngine {
         let mut i = begin;
         while i < end {
             let base_bytes = (base as u64) * 8;
-            // Each warp covers 32 consecutive index-buffer slots.
-            let mut j = 0;
-            while j < v {
-                let hi = (j + WARP).min(v);
-                self.warp(&idx[j..hi], base_bytes, primary_write, c);
-                j = hi;
+            // Each warp covers 32 consecutive slots of one operand
+            // stream (each read stream is `v` slots of the pre-scaled
+            // buffer and owns its open-row slot).
+            for (sid, stream) in idx.chunks(v).enumerate() {
+                let mut j = 0;
+                while j < stream.len() {
+                    let hi = (j + WARP).min(stream.len());
+                    self.warp(&stream[j..hi], base_bytes, primary_write, sid, c);
+                    j = hi;
+                }
             }
-            // GS write stream: the block gathers the vector, then
-            // scatters it — warps re-coalesce over the scatter side.
+            // Write stream: the block reads the vector, then writes it
+            // — warps re-coalesce over the write side.
             let mut j = 0;
             while j < idx2.len() {
                 let hi = (j + WARP).min(idx2.len());
-                self.warp(&idx2[j..hi], base_bytes, true, c);
+                self.warp(&idx2[j..hi], base_bytes, true, read_streams, c);
                 j = hi;
             }
             base += pattern.delta_at(i);
@@ -266,6 +310,43 @@ impl GpuEngine {
         closed_at
     }
 
+    /// GUPS pass: warps of seeded-xorshift random updates into the
+    /// power-of-two table. Each warp's addresses coalesce (vacuously —
+    /// random 64-bit addresses land in distinct sectors) and every
+    /// partially-covered sector pays the read-modify-write, so GUPS
+    /// exercises the TLB + DRAM-row worst case per transaction. The
+    /// warm-up pass draws a disjoint seeded stream (`warm` — see the
+    /// CPU engine); the xorshift never cycles, so loop closure has
+    /// nothing to close and on/off is trivially bit-identical.
+    fn pass_gups(
+        &mut self,
+        pattern: &Pattern,
+        begin: usize,
+        end: usize,
+        warm: bool,
+        c: &mut SimCounters,
+    ) -> Option<usize> {
+        let mask = pattern.gups_table_elems() - 1;
+        let v = pattern.vector_len();
+        let mut rng = XorShift64::seeded(begin, warm);
+        // Reuse the index scratch as the per-warp address buffer.
+        let mut buf = std::mem::take(&mut self.idx_bytes);
+        for _ in begin..end {
+            let mut done = 0;
+            while done < v {
+                let n = WARP.min(v - done);
+                buf.clear();
+                for _ in 0..n {
+                    buf.push((rng.next_u64() & mask) * 8);
+                }
+                self.warp(&buf, 0, true, 0, c);
+                done += n;
+            }
+        }
+        self.idx_bytes = buf;
+        None
+    }
+
     /// 128-bit fingerprint of the engine state relative to the current
     /// base (L2 at sector granularity, TLB, open row) plus the base's
     /// page/row/sector alignment residues and the delta-cycle phase.
@@ -289,7 +370,9 @@ impl GpuEngine {
             let mut h = seed;
             h = closure::fold(h, self.l2.state_digest(base_sector, seed));
             h = closure::fold(h, self.tlb.state_digest(base_vpn, seed));
-            h = closure::fold(h, rel(self.last_row, base_row));
+            for &row in &self.open_rows {
+                h = closure::fold(h, rel(row, base_row));
+            }
             h = closure::fold(h, base_bytes % page.bytes());
             h = closure::fold(h, base_bytes % self.platform.row_bytes);
             h = closure::fold(h, base_bytes % sector_b);
@@ -310,18 +393,23 @@ impl GpuEngine {
         }
         self.l2.relocate(bytes / self.platform.sector_bytes);
         self.tlb.relocate(bytes >> self.tlb.page_size().shift());
-        if self.last_row != u64::MAX {
-            self.last_row += bytes / self.platform.row_bytes;
+        for row in &mut self.open_rows {
+            if *row != u64::MAX {
+                *row += bytes / self.platform.row_bytes;
+            }
         }
     }
 
     /// Coalesce one warp's addresses (pre-scaled byte offsets against
-    /// `base_bytes`) into unique sectors and charge the memory system.
+    /// `base_bytes`) into unique sectors and charge the memory system,
+    /// tracking DRAM row locality against operand stream `sid`'s open
+    /// row.
     fn warp(
         &mut self,
         offsets: &[u64],
         base_bytes: u64,
         is_write: bool,
+        sid: usize,
         c: &mut SimCounters,
     ) {
         let sector_b = self.platform.sector_bytes;
@@ -376,8 +464,28 @@ impl GpuEngine {
                     if !is_write || needs_rmw {
                         c.dram_demand_lines += 1; // unit = one sector
                     }
-                    self.note_row(pa, c);
-                    if self.l2.fill_after_miss(sector, is_write, false).is_some() {
+                    self.note_row(pa, sid, c);
+                    if is_write && !needs_rmw {
+                        // Fully-covered sectors drain to DRAM at the
+                        // write rate in steady state: charge the
+                        // writeback at fill time and insert clean, so
+                        // a short measured pass isn't flattered by
+                        // whatever tail still sits dirty in L2. (A
+                        // later re-write of the still-resident sector
+                        // dirties it and drains once more on eviction;
+                        // that second transfer stands in for the RFO
+                        // read this covered path elides, keeping the
+                        // DRAM byte total honest for repeated writes.)
+                        c.writeback_lines += 1;
+                        if self.l2.fill_after_miss(sector, false, false).is_some()
+                        {
+                            c.writeback_lines += 1;
+                        }
+                    } else if self
+                        .l2
+                        .fill_after_miss(sector, is_write, false)
+                        .is_some()
+                    {
                         c.writeback_lines += 1;
                     }
                 }
@@ -388,11 +496,11 @@ impl GpuEngine {
     /// DRAM row tracker — DRAM-facing, so it accepts only translated
     /// [`PhysicalAddress`]es.
     #[inline]
-    fn note_row(&mut self, pa: PhysicalAddress, c: &mut SimCounters) {
+    fn note_row(&mut self, pa: PhysicalAddress, sid: usize, c: &mut SimCounters) {
         let row = pa.byte() / self.platform.row_bytes;
-        if row != self.last_row {
+        if row != self.open_rows[sid] {
             c.row_activations += 1;
-            self.last_row = row;
+            self.open_rows[sid] = row;
         }
     }
 
@@ -737,6 +845,46 @@ mod tests {
             .with_count(1 << 12);
         let r = e.run(&pat, Kernel::GS).unwrap();
         assert_eq!(r.breakdown.bottleneck(), "coherence");
+    }
+
+    #[test]
+    fn stream_tetrad_lands_on_the_table3_anchor_gpu() {
+        use crate::pattern::StreamOp;
+        for name in ["k40c", "titanxp", "p100", "v100"] {
+            let p = platforms::gpu_by_name(name).unwrap();
+            let mut e = GpuEngine::new(&p);
+            for op in StreamOp::ALL {
+                let bw = e
+                    .run(&Pattern::dense(256, N), Kernel::Stream(*op))
+                    .unwrap()
+                    .bandwidth_gbs();
+                assert!(
+                    (bw / p.stream_gbs - 1.0).abs() < 0.25,
+                    "{name}/{}: {bw:.0} GB/s vs STREAM {:.0}",
+                    op.name(),
+                    p.stream_gbs
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gups_collapses_and_is_deterministic_on_gpu() {
+        let p = platforms::gpu_by_name("p100").unwrap();
+        let pat = Pattern::gups(1 << 26, 1 << 14);
+        let a = GpuEngine::new(&p).run(&pat, Kernel::Gups).unwrap();
+        let b = GpuEngine::new(&p).run(&pat, Kernel::Gups).unwrap();
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.seconds, b.seconds);
+        let bw = a.bandwidth_gbs();
+        assert!(
+            bw < 0.05 * p.stream_gbs,
+            "GPU GUPS must collapse: {bw:.1} vs {:.0}",
+            p.stream_gbs
+        );
+        // Random sectors are partially covered: every update RMWs.
+        assert!(a.counters.dram_demand_lines > 0);
+        assert_eq!(a.closed_at_iteration, None);
     }
 
     #[test]

@@ -18,14 +18,17 @@
 //! | `ustride` | CPU uniform-stride sweep through the `--jobs` queue |
 //! | `threadscale` | §3.1 thread-scaling: saturation knee + contention |
 //! | `prefetch` | prefetcher depth/regime sweep, gather + GS coverage knee |
+//! | `baselines` | STREAM tetrad + GUPS measured in-engine, all platforms |
 //! | `all` | everything above |
 
 mod apps;
+mod baselines;
 mod prefetch;
 mod threadscale;
 mod ustride;
 
 pub use apps::{fig7_radar, fig8_radar, fig9_bwbw, table1_characterization, table4_miniapps};
+pub use baselines::{baselines_suite, measured_stream_gbs, BASELINE_KERNELS};
 pub use prefetch::prefetch_suite;
 pub use threadscale::threadscale_suite;
 pub use ustride::{
@@ -118,12 +121,13 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
         "ustride" => ustride_suite(ctx),
         "threadscale" => threadscale_suite(ctx),
         "prefetch" => prefetch_suite(ctx),
+        "baselines" => baselines_suite(ctx),
         "all" => {
             let mut out = String::new();
             for n in [
-                "table1", "fig3", "fig4", "fig5", "fig6", "table4", "fig7",
-                "fig8", "fig9", "pagesize", "ustride", "threadscale",
-                "prefetch",
+                "table1", "fig3", "fig4", "fig5", "fig6", "baselines",
+                "table4", "fig7", "fig8", "fig9", "pagesize", "ustride",
+                "threadscale", "prefetch",
             ] {
                 out.push_str(&run(n, ctx)?);
                 out.push('\n');
@@ -133,15 +137,16 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
         other => Err(Error::Cli(format!(
             "unknown suite '{other}' \
              (fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|pagesize|\
-             ustride|threadscale|prefetch|all)"
+             ustride|threadscale|prefetch|baselines|all)"
         ))),
     }
 }
 
-/// Names of all experiments (for listings).
+/// Names of all experiments (for listings). Must stay in sync with the
+/// dispatch table in [`run`] and the doc-comment table above.
 pub const EXPERIMENTS: &[&str] = &[
     "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1",
-    "table4", "pagesize", "ustride", "threadscale", "prefetch",
+    "table4", "pagesize", "ustride", "threadscale", "prefetch", "baselines",
 ];
 
 #[cfg(test)]

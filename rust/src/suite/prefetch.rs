@@ -313,10 +313,10 @@ pub fn prefetch_suite(ctx: &SuiteContext) -> Result<String> {
          so the regimes tie); past the knee the fetches are unread \
          over-fetch and the on-regime loses bandwidth — SKX's \
          unconditional next-line pays hardest while Naples' useful-only \
-         detector never over-fetches (no knee). The GS write stream \
-         interleaves with the gather misses and disturbs the stride \
-         detectors, so GS knees arrive no later than the pure-gather \
-         ones.\n",
+         detector never over-fetches (no knee). The GS write stream has \
+         its own stride tracker and open row (per-operand-stream \
+         state), so the GS knees reflect each stream's own coverage \
+         rather than cross-stream interleaving noise.\n",
     );
     Ok(report)
 }

@@ -1,0 +1,231 @@
+//! Differential tests pinning the dense/random baseline family
+//! (STREAM tetrad + GUPS) against the indexed kernels on every
+//! platform — the direction-of-inequality layer for ISSUE 5:
+//!
+//! * **Copy >= stride-1 gather** — a dense copy moves the same bytes
+//!   per line as the stride-1 gather the engines are calibrated on,
+//!   minus the indexed-issue cost, so its headline bandwidth can never
+//!   fall below it.
+//! * **GUPS <= huge-delta random-class gather** — every GUPS update
+//!   does everything such a gather access does (fresh page, fresh
+//!   row, deep miss) *plus* the read-modify-write traffic, so it can
+//!   never beat the random gather.
+//! * Seed determinism and closure on/off equivalence for the family.
+
+use spatter::backends::{Backend, CudaSim, OpenMpSim};
+use spatter::coordinator::parse_config_text;
+use spatter::json;
+use spatter::pattern::{Kernel, Pattern, StreamOp};
+use spatter::platforms;
+
+const CPUS: &[&str] = &["skx", "bdw", "clx", "naples", "tx2", "knl"];
+const GPUS: &[&str] = &["k40c", "titanxp", "p100", "v100"];
+
+#[test]
+fn copy_at_least_stride1_gather_on_every_cpu() {
+    // Large enough that both measured windows (which differ in length
+    // — the copy simulates half as many iterations per access budget)
+    // stay disjoint from the warm-up tail: neither side may be
+    // flattered by cache residency.
+    let count = 1 << 19;
+    for name in CPUS {
+        let p = platforms::by_name(name).unwrap();
+        let mut e = OpenMpSim::new(&p);
+        let dense = Pattern::dense(8, count);
+        let bw_copy = e
+            .run(&dense, Kernel::Stream(StreamOp::Copy))
+            .unwrap()
+            .bandwidth_gbs();
+        let gather = Pattern::parse("UNIFORM:8:1")
+            .unwrap()
+            .with_delta(8)
+            .with_count(count);
+        let bw_g = e.run(&gather, Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!(
+            bw_copy >= 0.97 * bw_g,
+            "{name}: Copy {bw_copy:.1} must not fall below stride-1 \
+             gather {bw_g:.1}"
+        );
+    }
+}
+
+#[test]
+fn copy_at_least_stride1_gather_on_every_gpu() {
+    // Same sizing rule as the CPU variant: out-of-cache working sets.
+    let count = 1 << 15;
+    for name in GPUS {
+        let p = platforms::gpu_by_name(name).unwrap();
+        let mut e = CudaSim::new(&p);
+        let bw_copy = e
+            .run(&Pattern::dense(256, count), Kernel::Stream(StreamOp::Copy))
+            .unwrap()
+            .bandwidth_gbs();
+        let gather = Pattern::parse("UNIFORM:256:1")
+            .unwrap()
+            .with_delta(256)
+            .with_count(count);
+        let bw_g = e.run(&gather, Kernel::Gather).unwrap().bandwidth_gbs();
+        assert!(
+            bw_copy >= 0.97 * bw_g,
+            "{name}: Copy {bw_copy:.0} must not fall below stride-1 \
+             gather {bw_g:.0}"
+        );
+    }
+}
+
+/// The huge-delta random-class comparator: the same random index
+/// buffer a GUPS table produces, with the base jumping far enough that
+/// every access opens a fresh page and row (the PENNANT-G9 regime).
+fn random_class_gather(v: usize, table: usize, count: usize) -> Pattern {
+    let spec = format!("RANDOM:{v}:{table}:1");
+    Pattern::parse(&spec)
+        .unwrap()
+        .with_delta(1 << 16)
+        .with_count(count)
+}
+
+#[test]
+fn gups_below_random_class_gather_on_every_cpu() {
+    let count = 1 << 16;
+    let table = 1 << 26;
+    for name in CPUS {
+        let p = platforms::by_name(name).unwrap();
+        let mut e = OpenMpSim::new(&p);
+        let bw_gups = e
+            .run(&Pattern::gups(table, count), Kernel::Gups)
+            .unwrap()
+            .bandwidth_gbs();
+        let bw_rand = e
+            .run(&random_class_gather(8, table, count), Kernel::Gather)
+            .unwrap()
+            .bandwidth_gbs();
+        assert!(
+            bw_gups <= bw_rand * 1.02,
+            "{name}: GUPS {bw_gups:.2} must not beat the random-class \
+             gather {bw_rand:.2}"
+        );
+        assert!(bw_gups > 0.0 && bw_gups.is_finite(), "{name}");
+    }
+}
+
+#[test]
+fn gups_below_random_class_gather_on_every_gpu() {
+    let count = 1 << 14;
+    let table = 1 << 26;
+    for name in GPUS {
+        let p = platforms::gpu_by_name(name).unwrap();
+        let mut e = CudaSim::new(&p);
+        let bw_gups = e
+            .run(&Pattern::gups(table, count), Kernel::Gups)
+            .unwrap()
+            .bandwidth_gbs();
+        let bw_rand = e
+            .run(&random_class_gather(256, table, count), Kernel::Gather)
+            .unwrap()
+            .bandwidth_gbs();
+        assert!(
+            bw_gups <= bw_rand * 1.02,
+            "{name}: GUPS {bw_gups:.2} must not beat the random-class \
+             gather {bw_rand:.2}"
+        );
+    }
+}
+
+#[test]
+fn gups_seed_determinism_across_engines_and_reuse() {
+    // Fresh engine, reused engine, and the trait object path all see
+    // the same seeded update stream.
+    let p = platforms::by_name("skx").unwrap();
+    let pat = Pattern::gups(1 << 20, 1 << 12);
+    let a = OpenMpSim::new(&p).run(&pat, Kernel::Gups).unwrap();
+    let mut reused = OpenMpSim::new(&p);
+    reused
+        .run(&Pattern::dense(8, 1 << 12), Kernel::Stream(StreamOp::Triad))
+        .unwrap();
+    let b = reused.run(&pat, Kernel::Gups).unwrap();
+    assert_eq!(a.counters, b.counters);
+    assert_eq!(a.seconds, b.seconds);
+
+    let g = platforms::gpu_by_name("v100").unwrap();
+    let x = CudaSim::new(&g).run(&pat, Kernel::Gups).unwrap();
+    let y = CudaSim::new(&g).run(&pat, Kernel::Gups).unwrap();
+    assert_eq!(x.counters, y.counters);
+    assert_eq!(x.seconds, y.seconds);
+}
+
+#[test]
+fn tetrad_ordering_follows_stream_convention() {
+    // Add/Triad move 24 B per element to Copy/Scale's 16: with DRAM
+    // binding all four, the reported (per-convention) bandwidths stay
+    // within a whisker of each other — exactly STREAM's behaviour on
+    // bandwidth-bound machines.
+    let p = platforms::by_name("skx").unwrap();
+    let mut e = OpenMpSim::new(&p);
+    let pat = Pattern::dense(8, 1 << 19);
+    let bws: Vec<f64> = StreamOp::ALL
+        .iter()
+        .map(|op| {
+            e.run(&pat, Kernel::Stream(*op)).unwrap().bandwidth_gbs()
+        })
+        .collect();
+    let (min, max) = (
+        bws.iter().cloned().fold(f64::INFINITY, f64::min),
+        bws.iter().cloned().fold(0.0, f64::max),
+    );
+    assert!(
+        max / min < 1.15,
+        "tetrad should be tight on a DRAM-bound machine: {bws:?}"
+    );
+}
+
+#[test]
+fn baseline_runconfig_roundtrip_through_json() {
+    // The explicit (non-property) round-trip for the new kernels: a
+    // whole config set serializes and re-parses to the same patterns.
+    let cfgs = parse_config_text(
+        r#"[
+          {"name": "c", "kernel": "Copy", "delta": 8, "count": 4096},
+          {"name": "a", "kernel": "Add", "delta": 32, "count": 1024,
+           "threads": 4},
+          {"name": "t", "kernel": "Triad", "count": 2048,
+           "page-size": "2MB"},
+          {"name": "u", "kernel": "GUPS", "delta": 1048576, "count": 512}
+        ]"#,
+    )
+    .unwrap();
+    let text = json::to_string(&json::Value::Array(
+        cfgs.iter().map(|c| c.to_json()).collect(),
+    ));
+    let back = parse_config_text(&text).unwrap();
+    assert_eq!(back.len(), cfgs.len());
+    for (a, b) in cfgs.iter().zip(&back) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.kernel, b.kernel);
+        assert_eq!(a.pattern, b.pattern);
+        assert_eq!(a.page_size, b.page_size);
+        assert_eq!(a.threads, b.threads);
+        assert_eq!(
+            json::to_string(&a.to_json()),
+            json::to_string(&b.to_json()),
+            "serialization is a fixed point"
+        );
+    }
+}
+
+#[test]
+fn baselines_run_through_the_backend_trait() {
+    // The Backend trait path (what the CLI and the suites use) accepts
+    // the whole family on both engine kinds and rejects nothing.
+    let p = platforms::by_name("tx2").unwrap();
+    let mut b: Box<dyn Backend> = Box::new(OpenMpSim::new(&p));
+    for op in StreamOp::ALL {
+        let r = b
+            .run(&Pattern::dense(8, 1 << 12), Kernel::Stream(*op))
+            .unwrap();
+        assert!(r.bandwidth_gbs() > 0.0);
+    }
+    let r = b
+        .run(&Pattern::gups(1 << 20, 1 << 10), Kernel::Gups)
+        .unwrap();
+    assert!(r.bandwidth_gbs() > 0.0);
+}

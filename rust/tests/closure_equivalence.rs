@@ -5,7 +5,7 @@
 //! loop closure force-disabled and force-enabled. Closure is an
 //! optimization, never an approximation.
 
-use spatter::pattern::{table5, Kernel, Pattern};
+use spatter::pattern::{table5, Kernel, Pattern, StreamOp};
 use spatter::platforms;
 use spatter::prop::{check, Gen};
 use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
@@ -28,29 +28,47 @@ fn assert_identical(on: &SimResult, off: &SimResult, ctx: &str) {
     assert_eq!(off.closed_at_iteration, None, "{ctx}: off must not close");
 }
 
-/// A random kernel, all three included — GS is the dual-pattern case
-/// the equivalence must also cover.
+/// A random kernel, the whole family included — GS is the dual-pattern
+/// case, and the dense/random baselines (STREAM tetrad + GUPS) must
+/// hold the same equivalence contract.
 fn arbitrary_kernel(g: &mut Gen) -> Kernel {
-    *g.choose(&[Kernel::Gather, Kernel::Scatter, Kernel::GS])
+    *g.choose(&[
+        Kernel::Gather,
+        Kernel::Scatter,
+        Kernel::GS,
+        Kernel::Stream(StreamOp::Copy),
+        Kernel::Stream(StreamOp::Scale),
+        Kernel::Stream(StreamOp::Add),
+        Kernel::Stream(StreamOp::Triad),
+        Kernel::Gups,
+    ])
 }
 
-/// Attach a random scatter side (same length as the gather side) when
-/// the kernel is GS: uniform strides, repeated-write targets, and
-/// irregular buffers all appear.
+/// Shape the drawn pattern for the kernel: attach a random scatter
+/// side for GS (uniform strides, repeated-write targets, and irregular
+/// buffers all appear); replace it with a dense stream or a GUPS table
+/// for the baselines (their shape is fixed by construction — only the
+/// width/table size and count vary).
 fn with_kernel_shape(g: &mut Gen, pat: Pattern, kernel: Kernel) -> Pattern {
-    if kernel != Kernel::GS {
-        return pat;
-    }
-    let v = pat.vector_len();
-    let side = match g.usize_in(0, 2) {
-        0 => {
-            let s = g.i64_in(1, 24);
-            (0..v as i64).map(|j| j * s).collect()
+    match kernel {
+        Kernel::GS => {
+            let v = pat.vector_len();
+            let side = match g.usize_in(0, 2) {
+                0 => {
+                    let s = g.i64_in(1, 24);
+                    (0..v as i64).map(|j| j * s).collect()
+                }
+                1 => vec![0; v],
+                _ => (0..v).map(|_| g.i64_in(0, 2048)).collect(),
+            };
+            pat.with_gs_scatter(side)
         }
-        1 => vec![0; v],
-        _ => (0..v).map(|_| g.i64_in(0, 2048)).collect(),
-    };
-    pat.with_gs_scatter(side)
+        Kernel::Stream(_) => {
+            Pattern::dense(*g.choose(&[4usize, 8, 16, 32]), pat.count)
+        }
+        Kernel::Gups => Pattern::gups(1 << g.usize_in(10, 18), pat.count),
+        _ => pat,
+    }
 }
 
 /// A randomized pattern drawn from the families the paper sweeps:

@@ -177,12 +177,15 @@ fn suite_experiments_all_run_fast() {
         "ustride.csv",
         "threadscale.csv",
         "prefetch.csv",
+        "baselines.csv",
     ] {
         assert!(dir.join(csv).exists(), "{csv}");
     }
-    // The ustride and prefetch suites also emit JSON documents.
+    // The ustride, prefetch, and baselines suites also emit JSON
+    // documents.
     assert!(dir.join("ustride.json").exists());
     assert!(dir.join("prefetch.json").exists());
+    assert!(dir.join("baselines.json").exists());
     std::fs::remove_dir_all(&dir).ok();
 }
 

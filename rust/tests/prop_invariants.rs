@@ -155,23 +155,43 @@ fn arbitrary_spec(g: &mut Gen) -> String {
 }
 
 fn arbitrary_runconfig(g: &mut Gen) -> RunConfig {
-    let kernel = *g.choose(&[Kernel::Gather, Kernel::Scatter, Kernel::GS]);
-    let mut pattern = Pattern::parse(&arbitrary_spec(g)).unwrap();
-    if kernel == Kernel::GS {
-        // The scatter side must match the gather side's length; draw
-        // its indices from another spec-built buffer, resized.
-        let v = pattern.vector_len();
-        let mut side = Pattern::parse(&arbitrary_spec(g)).unwrap().indices;
-        side.resize(v, 0);
-        pattern = pattern.with_gs_scatter(side);
-    }
-    if g.bool() {
-        let cycle: Vec<i64> =
-            (0..g.usize_in(2, 4)).map(|_| g.i64_in(0, 64)).collect();
-        pattern = pattern.with_deltas(&cycle);
+    use spatter::pattern::StreamOp;
+    let kernel = *g.choose(&[
+        Kernel::Gather,
+        Kernel::Scatter,
+        Kernel::GS,
+        Kernel::Stream(StreamOp::Copy),
+        Kernel::Stream(StreamOp::Scale),
+        Kernel::Stream(StreamOp::Add),
+        Kernel::Stream(StreamOp::Triad),
+        Kernel::Gups,
+    ]);
+    let mut pattern = if kernel.is_baseline() {
+        // Dense baselines carry no index buffer: only the stream
+        // width / table size and the count vary.
+        match kernel {
+            Kernel::Gups => Pattern::gups(1 << g.usize_in(10, 20), 1),
+            _ => Pattern::dense(g.usize_in(1, 64), 1),
+        }
     } else {
-        pattern = pattern.with_delta(g.i64_in(0, 256));
-    }
+        let mut pattern = Pattern::parse(&arbitrary_spec(g)).unwrap();
+        if kernel == Kernel::GS {
+            // The scatter side must match the gather side's length;
+            // draw its indices from another spec-built buffer, resized.
+            let v = pattern.vector_len();
+            let mut side = Pattern::parse(&arbitrary_spec(g)).unwrap().indices;
+            side.resize(v, 0);
+            pattern = pattern.with_gs_scatter(side);
+        }
+        if g.bool() {
+            let cycle: Vec<i64> =
+                (0..g.usize_in(2, 4)).map(|_| g.i64_in(0, 64)).collect();
+            pattern = pattern.with_deltas(&cycle);
+        } else {
+            pattern = pattern.with_delta(g.i64_in(0, 256));
+        }
+        pattern
+    };
     pattern = pattern.with_count(g.usize_in(1, 1 << 12));
     RunConfig {
         name: format!("cfg-{}", g.usize_in(0, 999)),
