@@ -11,6 +11,11 @@
 use std::hint::black_box;
 use std::time::Instant;
 
+use spatter::backends::{Backend, OpenMpSim};
+use spatter::coordinator::{
+    parse_config_text, run_configs_jobs_memo, run_configs_stream,
+    stream_config_reader,
+};
 use spatter::json::{self, obj, Value};
 use spatter::pattern::{table5, Kernel};
 use spatter::platforms;
@@ -61,6 +66,55 @@ fn time_ms(f: impl FnOnce()) -> f64 {
     t0.elapsed().as_secs_f64() * 1e3
 }
 
+/// Worker-pool backend source for the scheduler/memo benchmarks.
+fn skx_factory() -> spatter::error::Result<Box<dyn Backend>> {
+    Ok(Box::new(OpenMpSim::new(&platforms::by_name("skx").unwrap())))
+}
+
+/// `copies` copies of 8 distinct gather configs — the memo cache's
+/// natural prey (cross-platform grids re-run identical cells).
+fn dup_campaign(copies: usize) -> String {
+    let mut runs = Vec::new();
+    for _ in 0..copies {
+        for s in [1, 2, 4, 8, 16, 32, 64, 128] {
+            runs.push(format!(
+                "{{\"kernel\": \"Gather\", \"pattern\": \"UNIFORM:8:{s}\", \
+                 \"delta\": {}, \"count\": 65536}}",
+                8 * s
+            ));
+        }
+    }
+    format!("[{}]", runs.join(","))
+}
+
+/// `n` configs with pairwise-distinct fingerprints (a stride sweep) —
+/// zero cache hits by construction, so any memo/scheduler overhead
+/// shows up undamped.
+fn unique_campaign(n: usize) -> String {
+    let runs: Vec<String> = (1..=n)
+        .map(|s| {
+            format!(
+                "{{\"kernel\": \"Gather\", \"pattern\": \"UNIFORM:8:{s}\", \
+                 \"delta\": {}, \"count\": 65536}}",
+                8 * s
+            )
+        })
+        .collect();
+    format!("[{}]", runs.join(","))
+}
+
+/// Peak resident set (KiB) from /proc/self/status; `None` off Linux.
+fn vm_hwm_kib() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("VmHWM:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
 fn main() {
     let mut records: Vec<Value> = Vec::new();
     let mut bench = |suite: &str, f: fn(bool)| {
@@ -86,6 +140,116 @@ fn main() {
 
     bench("ustride-fast", ustride_fast_sweep);
     bench("lulesh-s3-256", lulesh_s3_256);
+
+    // --- Campaign-scale scheduler benchmarks (work-stealing pool,
+    // memo cache, streaming run mode). The stream leg runs FIRST so
+    // its VmHWM reading isn't inflated by the batch legs' allocations.
+    let dup_text = dup_campaign(32); // 256 configs, 8 distinct
+    let hwm_kib = {
+        let before = vm_hwm_kib();
+        let wall_ms = time_ms(|| {
+            let src = stream_config_reader(std::io::Cursor::new(
+                dup_text.as_bytes(),
+            ));
+            let mut emitted = 0usize;
+            run_configs_stream(&skx_factory, src, 4, true, |chunk| {
+                emitted += chunk.len();
+                Ok(())
+            })
+            .unwrap();
+            black_box(emitted);
+        });
+        let after = vm_hwm_kib();
+        println!(
+            "stream-dup256: {wall_ms:.1} ms, peak RSS {} KiB",
+            after.map(|k| k.to_string()).unwrap_or_else(|| "?".into())
+        );
+        records.push(obj(&[
+            ("suite", Value::from("stream-dup256")),
+            ("wall_ms", Value::from(wall_ms)),
+            (
+                "vm_hwm_before_kib",
+                before.map(|k| Value::from(k as usize)).unwrap_or(Value::Null),
+            ),
+            (
+                "vm_hwm_after_kib",
+                after.map(|k| Value::from(k as usize)).unwrap_or(Value::Null),
+            ),
+        ]));
+        after
+    };
+    let _ = hwm_kib;
+
+    let dup_cfgs = parse_config_text(&dup_text).unwrap();
+    let dup_off = time_ms(|| {
+        black_box(
+            run_configs_jobs_memo(&skx_factory, &dup_cfgs, 4, false).unwrap(),
+        );
+    });
+    let t0 = Instant::now();
+    let (dup_recs, memo_stats) =
+        run_configs_jobs_memo(&skx_factory, &dup_cfgs, 4, true).unwrap();
+    let dup_on = t0.elapsed().as_secs_f64() * 1e3;
+    black_box(dup_recs);
+    println!(
+        "memo-dup256: memo off {dup_off:.1} ms, on {dup_on:.1} ms \
+         ({:.2}x, hit rate {:.0}%)",
+        dup_off / dup_on,
+        memo_stats.hit_rate() * 100.0
+    );
+    records.push(obj(&[
+        ("suite", Value::from("memo-dup256")),
+        ("memo", Value::Bool(false)),
+        ("wall_ms", Value::from(dup_off)),
+    ]));
+    records.push(obj(&[
+        ("suite", Value::from("memo-dup256")),
+        ("memo", Value::Bool(true)),
+        ("wall_ms", Value::from(dup_on)),
+        ("hit_rate", Value::from(memo_stats.hit_rate())),
+    ]));
+    records.push(obj(&[
+        ("suite", Value::from("memo-dup256")),
+        ("memo_speedup", Value::from(dup_off / dup_on)),
+    ]));
+
+    let uniq_cfgs = parse_config_text(&unique_campaign(64)).unwrap();
+    let uniq_j1 = time_ms(|| {
+        black_box(
+            run_configs_jobs_memo(&skx_factory, &uniq_cfgs, 1, false).unwrap(),
+        );
+    });
+    let uniq_j4 = time_ms(|| {
+        black_box(
+            run_configs_jobs_memo(&skx_factory, &uniq_cfgs, 4, false).unwrap(),
+        );
+    });
+    let uniq_j4_memo = time_ms(|| {
+        black_box(
+            run_configs_jobs_memo(&skx_factory, &uniq_cfgs, 4, true).unwrap(),
+        );
+    });
+    println!(
+        "sched-unique64: jobs=1 {uniq_j1:.1} ms, jobs=4 {uniq_j4:.1} ms \
+         ({:.2}x), jobs=4+memo {uniq_j4_memo:.1} ms",
+        uniq_j1 / uniq_j4
+    );
+    for (label, jobs, memo, ms) in [
+        ("sched-unique64", 1usize, false, uniq_j1),
+        ("sched-unique64", 4, false, uniq_j4),
+        ("sched-unique64", 4, true, uniq_j4_memo),
+    ] {
+        records.push(obj(&[
+            ("suite", Value::from(label)),
+            ("jobs", Value::from(jobs)),
+            ("memo", Value::Bool(memo)),
+            ("wall_ms", Value::from(ms)),
+        ]));
+    }
+    records.push(obj(&[
+        ("suite", Value::from("sched-unique64")),
+        ("sched_speedup", Value::from(uniq_j1 / uniq_j4)),
+    ]));
 
     let out = std::env::var("BENCH_SIM_JSON")
         .unwrap_or_else(|_| "BENCH_sim.json".to_string());

@@ -67,6 +67,15 @@ pub trait Backend {
     fn threads(&self) -> Option<usize> {
         None
     }
+
+    /// Whether identical configs produce identical results on this
+    /// backend. Simulators are pure functions of the config, so the
+    /// coordinator may serve repeated configs from its memo cache;
+    /// real-execution backends (PJRT) measure wall time and must
+    /// return `false` to force every run to execute.
+    fn deterministic(&self) -> bool {
+        true
+    }
 }
 
 /// The paper's OpenMP backend on a simulated CPU platform.

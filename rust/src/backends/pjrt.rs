@@ -107,6 +107,12 @@ impl Backend for PjrtBackend {
         "pjrt-cpu"
     }
 
+    /// Real execution: timings vary run to run, so repeated configs
+    /// must actually run — the coordinator's memo cache is bypassed.
+    fn deterministic(&self) -> bool {
+        false
+    }
+
     fn run(&mut self, pattern: &Pattern, kernel: Kernel) -> Result<SimResult> {
         pattern.validate_for(kernel)?;
         // No AOT'd artifacts exist for the indexed copy or the dense

@@ -94,6 +94,11 @@ pub struct CommonArgs {
     /// machine's available parallelism. Output is byte-identical for
     /// any value (order-preserving scheduler).
     pub jobs: usize,
+    /// Bounded-memory run mode (--stream): parse the -j config array
+    /// incrementally and emit the JSON document chunk-by-chunk as the
+    /// in-order result prefix completes. Requires --json-out (the
+    /// table renderer needs the full record set for column widths).
+    pub stream: bool,
 }
 
 impl Default for CommonArgs {
@@ -107,6 +112,7 @@ impl Default for CommonArgs {
             page_size: None,
             threads: None,
             jobs: crate::coordinator::default_jobs(),
+            stream: false,
         }
     }
 }
@@ -200,6 +206,7 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 jobs_set = true;
             }
             "--fast" => fast = true,
+            "--stream" => common.stream = true,
             "--validate" => common.validate = true,
             "--json-out" => common.json_out = true,
             "--suite" => suite = Some(take("--suite")?),
@@ -238,6 +245,22 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             "--jobs needs a run queue: use it with -j CONFIG.json or --suite"
                 .into(),
         ));
+    }
+    if common.stream {
+        if json_path.is_none() {
+            return Err(Error::Cli(
+                "--stream reads a config array incrementally: use it with \
+                 -j CONFIG.json"
+                    .into(),
+            ));
+        }
+        if !common.json_out {
+            return Err(Error::Cli(
+                "--stream requires --json-out (the table renderer needs the \
+                 whole record set for column widths)"
+                    .into(),
+            ));
+        }
     }
     if let Some(path) = json_path {
         return Ok(Command::Json { path, common });
@@ -425,6 +448,10 @@ OPTIONS:
                        is byte-identical for any N: results are
                        collected in config order
       --fast           reduced-count suite mode (CI smoke runs)
+      --stream         bounded-memory run mode for -j: parse the config
+                       array incrementally and emit JSON chunks as the
+                       in-order result prefix completes (requires
+                       --json-out; output is byte-identical to batch)
       --validate       cross-check numerics through the PJRT path
       --json-out       machine-readable output
       --suite NAME     fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|
@@ -657,6 +684,33 @@ mod tests {
         assert!(parse_args(&argv("-j c.json --fast")).is_err());
         assert!(parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8 --fast")).is_err());
         assert!(parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8 --jobs 8")).is_err());
+    }
+
+    #[test]
+    fn stream_flag() {
+        match parse_args(&argv("-j c.json --stream --json-out --jobs 2"))
+            .unwrap()
+        {
+            Command::Json { common, .. } => {
+                assert!(common.stream);
+                assert!(common.json_out);
+                assert_eq!(common.jobs, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Default: off.
+        match parse_args(&argv("-j c.json --json-out")).unwrap() {
+            Command::Json { common, .. } => assert!(!common.stream),
+            other => panic!("{other:?}"),
+        }
+        // --stream needs a config queue and machine-readable output.
+        assert!(parse_args(&argv("--stream")).is_err());
+        assert!(
+            parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8 --stream")).is_err()
+        );
+        let err =
+            parse_args(&argv("-j c.json --stream")).unwrap_err().to_string();
+        assert!(err.contains("--json-out"), "{err}");
     }
 
     #[test]

@@ -106,6 +106,76 @@ pub fn parse_config_text(text: &str) -> Result<Vec<RunConfig>> {
     arr.iter().enumerate().map(|(i, v)| parse_one(i, v)).collect()
 }
 
+/// Streaming config source (`--stream`): yields `RunConfig`s one at a
+/// time from an incrementally parsed JSON array. Memory stays bounded
+/// by one read chunk plus the largest single element — independent of
+/// campaign length — while the yielded configs are identical to what
+/// [`parse_config_text`] would produce for the whole document.
+///
+/// Iteration stops after the first error (the underlying byte stream
+/// is no longer trustworthy past a malformed element).
+pub struct ConfigStream<R: std::io::Read> {
+    inner: json::ArrayStream<R>,
+    index: usize,
+    failed: bool,
+}
+
+impl<R: std::io::Read> Iterator for ConfigStream<R> {
+    type Item = Result<RunConfig>;
+
+    fn next(&mut self) -> Option<Result<RunConfig>> {
+        if self.failed {
+            return None;
+        }
+        match self.inner.next() {
+            Some(Ok(v)) => {
+                let i = self.index;
+                self.index += 1;
+                let cfg = parse_one(i, &v);
+                if cfg.is_err() {
+                    self.failed = true;
+                }
+                Some(cfg)
+            }
+            Some(Err(e)) => {
+                self.failed = true;
+                Some(Err(e))
+            }
+            None => {
+                if self.index == 0 {
+                    // Same contract as the batch parser: an empty
+                    // campaign is a config error, not a silent no-op.
+                    self.failed = true;
+                    return Some(Err(Error::Config(
+                        "config contains no runs".into(),
+                    )));
+                }
+                None
+            }
+        }
+    }
+}
+
+/// Open `path` as a streaming config source.
+pub fn stream_config_file(
+    path: &Path,
+) -> Result<ConfigStream<std::fs::File>> {
+    let f = std::fs::File::open(path).map_err(|e| {
+        Error::Config(format!("cannot read {} ({e})", path.display()))
+    })?;
+    Ok(stream_config_reader(f))
+}
+
+/// Wrap any reader (file, pipe, in-memory cursor) as a streaming
+/// config source.
+pub fn stream_config_reader<R: std::io::Read>(r: R) -> ConfigStream<R> {
+    ConfigStream {
+        inner: json::ArrayStream::new(r),
+        index: 0,
+        failed: false,
+    }
+}
+
 /// One side of a pattern key: a spec string (builtin or Table-5 name)
 /// or an explicit index array. Returns `(display name, indices,
 /// app default delta)` — the delta is `Some` only for Table-5 ids,
@@ -590,6 +660,69 @@ mod tests {
         assert_eq!(back[0].pattern.count, 256);
         assert_eq!(back[0].page_size, Some(PageSize::TwoMB));
         assert_eq!(back[0].threads, Some(4));
+    }
+
+    #[test]
+    fn stream_matches_batch_parse() {
+        let text = r#"[
+          {"kernel": "Gather", "pattern": "UNIFORM:8:2", "delta": 16,
+           "count": 4096},
+          {"name": "mine", "kernel": "Scatter", "pattern": [0, 24, 48],
+           "delta": 1, "count": 128},
+          {"name": "gs", "kernel": "GS", "pattern-gather": "UNIFORM:8:4",
+           "pattern-scatter": "UNIFORM:8:1", "delta": 32, "count": 256},
+          {"kernel": "GUPS", "count": 64},
+          {"kernel": "Gather", "pattern": "PENNANT-G4", "count": 64,
+           "page-size": "2MB", "threads": 4}
+        ]"#;
+        let batch = parse_config_text(text).unwrap();
+        let streamed: Result<Vec<RunConfig>> =
+            stream_config_reader(std::io::Cursor::new(text)).collect();
+        let streamed = streamed.unwrap();
+        assert_eq!(streamed.len(), batch.len());
+        for (a, b) in batch.iter().zip(&streamed) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.pattern, b.pattern);
+            assert_eq!(a.page_size, b.page_size);
+            assert_eq!(a.threads, b.threads);
+        }
+    }
+
+    #[test]
+    fn stream_rejects_empty_array_like_batch() {
+        let mut s = stream_config_reader(std::io::Cursor::new("[]"));
+        let err = s.next().unwrap().unwrap_err();
+        assert!(err.to_string().contains("no runs"), "{err}");
+        assert!(s.next().is_none());
+    }
+
+    #[test]
+    fn stream_stops_after_first_bad_element() {
+        let text = r#"[
+          {"kernel": "Gather", "pattern": "UNIFORM:8:1", "count": 64},
+          {"kernel": "Gather"},
+          {"kernel": "Gather", "pattern": "UNIFORM:8:1", "count": 64}
+        ]"#;
+        let mut s = stream_config_reader(std::io::Cursor::new(text));
+        assert!(s.next().unwrap().is_ok());
+        let err = s.next().unwrap().unwrap_err();
+        assert!(err.to_string().contains("run 1"), "{err}");
+        assert!(s.next().is_none());
+    }
+
+    #[test]
+    fn stream_surfaces_malformed_json_with_element_index() {
+        let text = r#"[{"kernel": "Gather", "pattern": "UNIFORM:8:1"}, {oops}]"#;
+        let results: Vec<Result<RunConfig>> =
+            stream_config_reader(std::io::Cursor::new(text)).collect();
+        assert_eq!(results.len(), 2);
+        assert!(results[0].is_ok());
+        let err = results[1].as_ref().unwrap_err();
+        assert!(
+            err.to_string().contains("config stream element 1"),
+            "{err}"
+        );
     }
 
     #[test]

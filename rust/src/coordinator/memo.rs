@@ -1,0 +1,367 @@
+//! Closure-memo result cache: campaign-scale sweeps repeat
+//! byte-identical configs (the paper's Fig. 3 grid alone re-runs the
+//! same stride/delta cells across platforms and suites mine
+//! overlapping proxy patterns), and a simulated run is a pure function
+//! of its config, so a repeated config can cost a hash lookup instead
+//! of a simulation.
+//!
+//! The key is a 128-bit [`Fingerprinter`] digest over every field
+//! that reaches the engine: kernel, gather/scatter index buffers,
+//! delta(s), count, and the per-run page-size / thread overrides. The
+//! display name and pattern spec string are deliberately *excluded* —
+//! `"custom[3]"` vs `"custom[7]"` or differently-named twins share
+//! physics, so they share the cache line. Backend identity is uniform
+//! within a campaign (one factory), so it is not part of the key; a
+//! backend whose `Backend::deterministic` is false (real execution)
+//! bypasses the cache entirely.
+//!
+//! Errors are never cached: a failed leader poisons its cell and every
+//! duplicate recomputes, so the campaign reports the exact error the
+//! uncached run would have (and the lowest-index-error contract is
+//! untouched).
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::sim::closure::Fingerprinter;
+use crate::sim::SimResult;
+
+use super::RunConfig;
+
+/// Digest of everything that determines a config's simulation outcome.
+pub fn config_fingerprint(c: &RunConfig) -> u128 {
+    let mut f = Fingerprinter::new();
+    f.push_str(c.kernel.name());
+    f.push(c.pattern.indices.len() as u64);
+    for &i in &c.pattern.indices {
+        f.push_i64(i);
+    }
+    f.push(c.pattern.scatter_indices.len() as u64);
+    for &i in &c.pattern.scatter_indices {
+        f.push_i64(i);
+    }
+    f.push_i64(c.pattern.delta);
+    f.push(c.pattern.deltas.len() as u64);
+    for &d in &c.pattern.deltas {
+        f.push_i64(d);
+    }
+    f.push(c.pattern.count as u64);
+    match c.page_size {
+        Some(p) => {
+            f.push(1);
+            f.push_str(p.name());
+        }
+        None => f.push(0),
+    }
+    match c.threads {
+        Some(t) => {
+            f.push(1);
+            f.push(t as u64);
+        }
+        None => f.push(0),
+    }
+    f.finish()
+}
+
+/// Input-order duplicate labels: for each config, its fingerprint and
+/// the index of the earliest config with the same fingerprint (`None`
+/// for first occurrences). A pure function of the input — independent
+/// of schedule, worker count, and whether caching is on — which is
+/// what keeps the `"memo"` record key byte-identical across `--jobs`
+/// widths, memo on/off, and stream vs batch mode.
+pub fn dup_labels(configs: &[RunConfig]) -> Vec<(u128, Option<usize>)> {
+    let mut first: HashMap<u128, usize> = HashMap::new();
+    configs
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let fp = config_fingerprint(c);
+            match first.entry(fp) {
+                Entry::Occupied(e) => (fp, Some(*e.get())),
+                Entry::Vacant(e) => {
+                    e.insert(i);
+                    (fp, None)
+                }
+            }
+        })
+        .collect()
+}
+
+/// The `SPATTER_NO_MEMO=1` escape hatch (mirrors `SPATTER_NO_CLOSURE`
+/// for the engine-level optimization): any other value — or the
+/// variable being unset — leaves the cache on.
+pub fn memo_enabled_from_env() -> bool {
+    std::env::var("SPATTER_NO_MEMO").map(|v| v != "1").unwrap_or(true)
+}
+
+enum CellState {
+    Pending,
+    Done(SimResult),
+    Failed,
+}
+
+/// One cache line: the leader computes while duplicates block here.
+pub struct MemoCell {
+    slot: Mutex<CellState>,
+    cv: Condvar,
+}
+
+impl MemoCell {
+    fn new() -> MemoCell {
+        MemoCell {
+            slot: Mutex::new(CellState::Pending),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Publish the leader's outcome (`None`: the run failed — wake
+    /// waiters into recomputation, never cache the error). Every
+    /// [`Reservation::Owner`] MUST call this exactly once; a cell left
+    /// pending would block its duplicates forever.
+    pub fn fill(&self, r: Option<SimResult>) {
+        let mut s = self.slot.lock().unwrap();
+        *s = match r {
+            Some(v) => CellState::Done(v),
+            None => CellState::Failed,
+        };
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Option<SimResult> {
+        let mut s = self.slot.lock().unwrap();
+        loop {
+            match &*s {
+                CellState::Pending => s = self.cv.wait(s).unwrap(),
+                CellState::Done(v) => return Some(v.clone()),
+                CellState::Failed => return None,
+            }
+        }
+    }
+}
+
+/// What [`MemoCache::get_or_reserve`] hands back.
+pub enum Reservation {
+    /// First arrival for this key: compute, then [`MemoCell::fill`].
+    Owner(Arc<MemoCell>),
+    /// A twin already completed: the cached result.
+    Ready(SimResult),
+    /// The leader for this key failed. Recompute locally — the rerun
+    /// reproduces the leader's exact error (or an earlier one).
+    Poisoned,
+}
+
+/// A per-campaign concurrent result cache. Duplicate suppression is
+/// exact: at most one simulation runs per distinct fingerprint; late
+/// twins either wait on the in-flight leader or read the finished
+/// result.
+pub struct MemoCache {
+    map: Mutex<HashMap<u128, Arc<MemoCell>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoStats {
+    /// Lookups answered from the cache (including waits on a leader).
+    pub hits: u64,
+    /// Lookups that had to simulate (first arrivals + poisoned keys).
+    pub misses: u64,
+}
+
+impl MemoStats {
+    pub fn total(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hit fraction over all lookups (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.total() as f64
+        }
+    }
+}
+
+impl MemoCache {
+    pub fn new() -> MemoCache {
+        MemoCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look `key` up, reserving it when absent. Blocks (off the map
+    /// lock) while a leader is in flight.
+    pub fn get_or_reserve(&self, key: u128) -> Reservation {
+        let cell = {
+            let mut map = self.map.lock().unwrap();
+            match map.entry(key) {
+                Entry::Occupied(e) => Arc::clone(e.get()),
+                Entry::Vacant(e) => {
+                    let cell = Arc::new(MemoCell::new());
+                    e.insert(Arc::clone(&cell));
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    return Reservation::Owner(cell);
+                }
+            }
+        };
+        match cell.wait() {
+            Some(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Reservation::Ready(r)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Reservation::Poisoned
+            }
+        }
+    }
+
+    pub fn stats(&self) -> MemoStats {
+        MemoStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for MemoCache {
+    fn default() -> MemoCache {
+        MemoCache::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::parse_config_text;
+
+    fn cfgs(text: &str) -> Vec<RunConfig> {
+        parse_config_text(text).unwrap()
+    }
+
+    #[test]
+    fn fingerprint_ignores_display_names_but_not_physics() {
+        let c = cfgs(r#"[
+          {"name": "alpha", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+           "delta": 8, "count": 4096},
+          {"name": "beta", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+           "delta": 8, "count": 4096},
+          {"name": "alpha", "kernel": "Scatter", "pattern": "UNIFORM:8:1",
+           "delta": 8, "count": 4096},
+          {"name": "alpha", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+           "delta": 16, "count": 4096},
+          {"name": "alpha", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+           "delta": 8, "count": 8192},
+          {"name": "alpha", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+           "delta": 8, "count": 4096, "page-size": "2MB"},
+          {"name": "alpha", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+           "delta": 8, "count": 4096, "threads": 4}
+        ]"#);
+        let base = config_fingerprint(&c[0]);
+        assert_eq!(base, config_fingerprint(&c[1]), "name is display-only");
+        for (i, other) in c.iter().enumerate().skip(2) {
+            assert_ne!(
+                base,
+                config_fingerprint(other),
+                "config {i} differs in physics and must not alias"
+            );
+        }
+    }
+
+    #[test]
+    fn custom_index_lists_alias_by_content_not_position() {
+        // Custom arrays are spec'd "custom[{run index}]" — the digest
+        // must see through the position-dependent display string.
+        let c = cfgs(r#"[
+          {"kernel": "Gather", "pattern": [0, 3, 5], "delta": 8,
+           "count": 1024},
+          {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+           "count": 1024},
+          {"kernel": "Gather", "pattern": [0, 3, 5], "delta": 8,
+           "count": 1024},
+          {"kernel": "Gather", "pattern": [0, 3, 6], "delta": 8,
+           "count": 1024}
+        ]"#);
+        assert_ne!(c[0].pattern.spec, c[2].pattern.spec);
+        assert_eq!(config_fingerprint(&c[0]), config_fingerprint(&c[2]));
+        assert_ne!(config_fingerprint(&c[0]), config_fingerprint(&c[3]));
+    }
+
+    #[test]
+    fn dup_labels_point_at_the_first_twin() {
+        let c = cfgs(r#"[
+          {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+           "count": 1024},
+          {"kernel": "Gather", "pattern": "UNIFORM:8:2", "delta": 16,
+           "count": 1024},
+          {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+           "count": 1024},
+          {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+           "count": 1024}
+        ]"#);
+        let labels = dup_labels(&c);
+        let dups: Vec<Option<usize>> =
+            labels.iter().map(|(_, d)| *d).collect();
+        assert_eq!(dups, vec![None, None, Some(0), Some(0)]);
+    }
+
+    #[test]
+    fn cache_counts_hits_and_poisons_failures() {
+        let cache = MemoCache::new();
+        let sim = SimResult {
+            seconds: 1.0,
+            useful_bytes: 8,
+            counters: Default::default(),
+            breakdown: Default::default(),
+            simulated_iterations: 1,
+            closed_at_iteration: None,
+        };
+        match cache.get_or_reserve(7) {
+            Reservation::Owner(cell) => cell.fill(Some(sim.clone())),
+            _ => panic!("first arrival must own the cell"),
+        }
+        match cache.get_or_reserve(7) {
+            Reservation::Ready(r) => assert_eq!(r.useful_bytes, 8),
+            _ => panic!("second arrival must hit"),
+        }
+        match cache.get_or_reserve(9) {
+            Reservation::Owner(cell) => cell.fill(None),
+            _ => panic!("new key must own"),
+        }
+        assert!(matches!(cache.get_or_reserve(9), Reservation::Poisoned));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 3));
+        assert!((s.hit_rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn waiters_block_until_the_leader_fills() {
+        let cache = MemoCache::new();
+        let Reservation::Owner(cell) = cache.get_or_reserve(1) else {
+            panic!("must own");
+        };
+        let sim = SimResult {
+            seconds: 2.0,
+            useful_bytes: 16,
+            counters: Default::default(),
+            breakdown: Default::default(),
+            simulated_iterations: 1,
+            closed_at_iteration: None,
+        };
+        std::thread::scope(|s| {
+            let cache = &cache;
+            let waiter = s.spawn(move || match cache.get_or_reserve(1) {
+                Reservation::Ready(r) => r.useful_bytes,
+                _ => 0,
+            });
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            cell.fill(Some(sim));
+            assert_eq!(waiter.join().unwrap(), 16);
+        });
+    }
+}

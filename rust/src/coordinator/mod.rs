@@ -4,12 +4,23 @@
 //! aggregate + render the results.
 
 mod config;
+mod memo;
 mod runner;
 mod schedule;
 
-pub use config::{parse_config_file, parse_config_text, RunConfig};
-pub use runner::{
-    render_json, render_table, run_configs, run_configs_jobs, run_one,
-    Aggregate, BackendFactory, RunRecord,
+pub use config::{
+    parse_config_file, parse_config_text, stream_config_file,
+    stream_config_reader, ConfigStream, RunConfig,
 };
-pub use schedule::{default_jobs, parallel_map_with};
+pub use memo::{
+    config_fingerprint, dup_labels, memo_enabled_from_env, MemoCache,
+    MemoStats, Reservation,
+};
+pub use runner::{
+    render_json, render_table, run_configs, run_configs_jobs,
+    run_configs_jobs_memo, run_configs_jobs_stats, run_configs_stream,
+    run_one, Aggregate, BackendFactory, RunRecord, StreamSummary,
+};
+pub use schedule::{
+    default_jobs, parallel_map_with, parallel_stream_with, stream_window,
+};

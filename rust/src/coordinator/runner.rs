@@ -3,14 +3,19 @@
 //! suites, and the determinism tests, so `--jobs N` output can be
 //! byte-compared against serial output.
 
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
 use crate::backends::Backend;
 use crate::error::Result;
 use crate::json::{self, obj, Value};
 use crate::pattern::{Kernel, Pattern};
 use crate::report::Table;
+use crate::sim::SimResult;
 use crate::stats;
 
-use super::schedule::parallel_map_with;
+use super::memo::{self, MemoCache, MemoStats, Reservation};
+use super::schedule::{parallel_map_with, parallel_stream_with, stream_window};
 use super::RunConfig;
 
 /// The outcome of one pattern run.
@@ -52,6 +57,12 @@ pub struct RunRecord {
     /// no cycle found, or a real-execution backend). Diagnostic only:
     /// counters and bandwidths are identical either way.
     pub closed_at: Option<usize>,
+    /// Input index of the earliest config with the same physics
+    /// fingerprint (`None`: this record is the first occurrence). A
+    /// pure function of the config list — independent of schedule,
+    /// `--jobs` width, and whether the memo cache answered — so output
+    /// stays byte-identical across all execution modes.
+    pub memo: Option<usize>,
 }
 
 impl RunRecord {
@@ -97,20 +108,31 @@ impl RunRecord {
                     None => Value::Null,
                 },
             ),
+            (
+                "memo",
+                match self.memo {
+                    Some(i) => Value::from(i),
+                    None => Value::Null,
+                },
+            ),
         ])
     }
 }
 
-/// Execute one pattern on a backend.
-pub fn run_one(
-    backend: &mut dyn Backend,
+/// Build the record for a finished (or cache-served) simulation. The
+/// backend is consulted only for per-run environment (page size /
+/// thread overrides already applied via the setters), so a cached
+/// `SimResult` produces the byte-identical record a fresh run would.
+fn record_from_sim(
+    backend: &dyn Backend,
     name: &str,
     pattern: &Pattern,
     kernel: Kernel,
-) -> Result<RunRecord> {
-    let r = backend.run(pattern, kernel)?;
+    r: &SimResult,
+    memo: Option<usize>,
+) -> RunRecord {
     let payload = pattern.moved_bytes() as u64;
-    Ok(RunRecord {
+    RunRecord {
         name: name.to_string(),
         kernel,
         spec: pattern.spec.clone(),
@@ -126,7 +148,58 @@ pub fn run_one(
         tlb_hit_rate: r.counters.tlb.hit_rate(),
         threads: backend.threads(),
         closed_at: r.closed_at_iteration,
-    })
+        memo,
+    }
+}
+
+/// Execute one pattern on a backend.
+pub fn run_one(
+    backend: &mut dyn Backend,
+    name: &str,
+    pattern: &Pattern,
+    kernel: Kernel,
+) -> Result<RunRecord> {
+    let r = backend.run(pattern, kernel)?;
+    Ok(record_from_sim(&*backend, name, pattern, kernel, &r, None))
+}
+
+/// Execute one config, applying its overrides and consulting the memo
+/// cache when one is supplied *and* the backend is deterministic (real
+/// execution must actually run — timings vary run to run). Errors are
+/// never served from the cache: a failed leader poisons its cell and
+/// every duplicate recomputes, reproducing the exact uncached error.
+fn run_one_cached(
+    backend: &mut dyn Backend,
+    c: &RunConfig,
+    fp: u128,
+    dup: Option<usize>,
+    cache: Option<&MemoCache>,
+) -> Result<RunRecord> {
+    backend.set_page_size(c.page_size);
+    backend.set_threads(c.threads);
+    let Some(cache) = cache.filter(|_| backend.deterministic()) else {
+        let r = backend.run(&c.pattern, c.kernel)?;
+        return Ok(record_from_sim(
+            &*backend, &c.name, &c.pattern, c.kernel, &r, dup,
+        ));
+    };
+    let sim = match cache.get_or_reserve(fp) {
+        Reservation::Ready(r) => r,
+        Reservation::Poisoned => backend.run(&c.pattern, c.kernel)?,
+        Reservation::Owner(cell) => match backend.run(&c.pattern, c.kernel) {
+            Ok(r) => {
+                cell.fill(Some(r.clone()));
+                r
+            }
+            Err(e) => {
+                cell.fill(None);
+                return Err(e);
+            }
+        },
+    };
+    Ok(record_from_sim(
+        &*backend, &c.name, &c.pattern, c.kernel, &sim, dup,
+    ))
 }
 
 /// Execute a whole JSON config set on one backend. Each config's
@@ -136,12 +209,17 @@ pub fn run_configs(
     backend: &mut dyn Backend,
     configs: &[RunConfig],
 ) -> Result<Vec<RunRecord>> {
+    let labels = memo::dup_labels(configs);
     configs
         .iter()
-        .map(|c| {
+        .zip(&labels)
+        .map(|(c, &(_, dup))| {
             backend.set_page_size(c.page_size);
             backend.set_threads(c.threads);
-            run_one(backend, &c.name, &c.pattern, c.kernel)
+            let r = backend.run(&c.pattern, c.kernel)?;
+            Ok(record_from_sim(
+                &*backend, &c.name, &c.pattern, c.kernel, &r, dup,
+            ))
         })
         .collect()
 }
@@ -163,11 +241,39 @@ pub fn run_configs_jobs(
     configs: &[RunConfig],
     jobs: usize,
 ) -> Result<Vec<RunRecord>> {
-    parallel_map_with(configs, jobs, factory, |backend, c, _| {
-        backend.set_page_size(c.page_size);
-        backend.set_threads(c.threads);
-        run_one(backend.as_mut(), &c.name, &c.pattern, c.kernel)
-    })
+    run_configs_jobs_stats(factory, configs, jobs).map(|(r, _)| r)
+}
+
+/// [`run_configs_jobs`] plus the memo-cache hit/miss counters. The
+/// cache obeys the `SPATTER_NO_MEMO=1` escape hatch.
+pub fn run_configs_jobs_stats(
+    factory: BackendFactory,
+    configs: &[RunConfig],
+    jobs: usize,
+) -> Result<(Vec<RunRecord>, MemoStats)> {
+    run_configs_jobs_memo(factory, configs, jobs, memo::memo_enabled_from_env())
+}
+
+/// The fully explicit pool entry point: `use_memo` toggles the
+/// closure-memo result cache (benchmarks and the determinism property
+/// tests drive both sides). Records — and therefore every rendered
+/// output — are byte-identical with the cache on or off: a cache hit
+/// replays the leader's `SimResult`, which a deterministic backend
+/// would have recomputed bit-for-bit anyway.
+pub fn run_configs_jobs_memo(
+    factory: BackendFactory,
+    configs: &[RunConfig],
+    jobs: usize,
+    use_memo: bool,
+) -> Result<(Vec<RunRecord>, MemoStats)> {
+    let labels = memo::dup_labels(configs);
+    let cache = MemoCache::new();
+    let cache_ref = if use_memo { Some(&cache) } else { None };
+    let records = parallel_map_with(configs, jobs, factory, |backend, c, i| {
+        let (fp, dup) = labels[i];
+        run_one_cached(backend.as_mut(), c, fp, dup, cache_ref)
+    })?;
+    Ok((records, cache.stats()))
 }
 
 /// Render records as the CLI table plus the paper's aggregate line —
@@ -211,17 +317,164 @@ pub fn render_table(records: &[RunRecord]) -> String {
     out
 }
 
+/// Incremental writer of the `--json-out` document. The emitted chunks
+/// concatenate to exactly what [`render_json`] produces for the same
+/// records — [`render_json`] itself drives this writer, so the batch
+/// and `--stream` paths cannot drift — while holding only the running
+/// aggregate folds, not the records. The `"runs"` array comes first
+/// and `"aggregate"` last, which is what makes the document streamable
+/// at all: the aggregate isn't known until the final record retires.
+struct JsonDocWriter {
+    n: usize,
+    min: f64,
+    max: f64,
+    /// In-order sum of 1/bandwidth — the same left-to-right fold
+    /// `stats::harmonic_mean` performs, so the streamed aggregate is
+    /// bit-exact against the batch one.
+    inv_sum: f64,
+    /// `stats::harmonic_mean` refuses sets with a non-positive member;
+    /// mirror that by omitting the aggregate entirely.
+    any_nonpositive: bool,
+}
+
+impl JsonDocWriter {
+    fn new() -> JsonDocWriter {
+        JsonDocWriter {
+            n: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            inv_sum: 0.0,
+            any_nonpositive: false,
+        }
+    }
+
+    /// The chunk for `rec` (document opener included on the first
+    /// call), folding the record into the running aggregate.
+    fn record_chunk(&mut self, rec: &RunRecord) -> String {
+        let mut out = String::new();
+        if self.n == 0 {
+            out.push_str("{\n  \"runs\": [");
+        } else {
+            out.push(',');
+        }
+        out.push_str("\n    ");
+        out.push_str(&json::to_string_pretty_at(&rec.to_json(), 2));
+        let bw = rec.bandwidth_gbs;
+        self.min = self.min.min(bw);
+        self.max = self.max.max(bw);
+        if bw <= 0.0 {
+            self.any_nonpositive = true;
+        } else {
+            self.inv_sum += 1.0 / bw;
+        }
+        self.n += 1;
+        out
+    }
+
+    /// Close the array, append the aggregate (when every bandwidth was
+    /// positive, matching [`Aggregate::from_records`]), close the
+    /// document.
+    fn finish(&self) -> String {
+        if self.n == 0 {
+            return "{\n  \"runs\": []\n}\n".to_string();
+        }
+        let mut out = String::from("\n  ]");
+        if !self.any_nonpositive {
+            let agg = Aggregate {
+                runs: self.n,
+                min_gbs: self.min,
+                max_gbs: self.max,
+                harmonic_mean_gbs: self.n as f64 / self.inv_sum,
+            };
+            out.push_str(",\n  \"aggregate\": ");
+            out.push_str(&json::to_string_pretty_at(&agg.to_json(), 1));
+        }
+        out.push_str("\n}\n");
+        out
+    }
+}
+
 /// Render records as the machine-readable JSON document (`--json-out`).
 pub fn render_json(records: &[RunRecord]) -> String {
-    let arr: Vec<Value> = records.iter().map(|r| r.to_json()).collect();
-    let mut doc = vec![("runs".to_string(), Value::Array(arr))];
-    if let Some(agg) = Aggregate::from_records(records) {
-        doc.push(("aggregate".to_string(), agg.to_json()));
+    let mut w = JsonDocWriter::new();
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&w.record_chunk(r));
     }
-    let obj = Value::Object(doc.into_iter().collect());
-    let mut out = json::to_string_pretty(&obj);
-    out.push('\n');
+    out.push_str(&w.finish());
     out
+}
+
+/// What a [`run_configs_stream`] campaign reports besides the chunks
+/// it emitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamSummary {
+    /// Records emitted (== configs executed on success).
+    pub records: usize,
+    /// Memo-cache counters (zero when the cache was off).
+    pub memo: MemoStats,
+}
+
+/// The `--stream` run mode: execute configs as `source` yields them,
+/// emitting JSON-document chunks in input order through `emit_chunk`.
+/// Memory is O(jobs + reorder window) — the config list, the records,
+/// and the output document are never materialized — yet the
+/// concatenated chunks are byte-identical to [`render_json`] over the
+/// batch-executed config list, and duplicate labels + memo behavior
+/// match the batch path exactly (labeling happens on the producer side,
+/// in input order, before any scheduling nondeterminism).
+///
+/// On a mid-stream failure the chunks already emitted stand (a partial
+/// document) and the lowest-index error is returned.
+pub fn run_configs_stream<S, E>(
+    factory: BackendFactory,
+    source: S,
+    jobs: usize,
+    use_memo: bool,
+    mut emit_chunk: E,
+) -> Result<StreamSummary>
+where
+    S: Iterator<Item = Result<RunConfig>> + Send,
+    E: FnMut(&str) -> Result<()>,
+{
+    let cache = MemoCache::new();
+    let cache_ref = if use_memo { Some(&cache) } else { None };
+    // Label on the producer thread as items are pulled: first-seen
+    // fingerprint indices accumulate in input order, so the `"memo"`
+    // key is identical to what batch `dup_labels` would compute.
+    let mut first: HashMap<u128, usize> = HashMap::new();
+    let mut next_index = 0usize;
+    let labeled = source.map(move |r| {
+        r.map(|c| {
+            let fp = memo::config_fingerprint(&c);
+            let i = next_index;
+            next_index += 1;
+            let dup = match first.entry(fp) {
+                Entry::Occupied(e) => Some(*e.get()),
+                Entry::Vacant(e) => {
+                    e.insert(i);
+                    None
+                }
+            };
+            (c, fp, dup)
+        })
+    });
+    let mut writer = JsonDocWriter::new();
+    let emitted = parallel_stream_with(
+        labeled,
+        jobs,
+        stream_window(jobs),
+        factory,
+        |backend, (c, fp, dup), _| {
+            run_one_cached(backend.as_mut(), c, *fp, *dup, cache_ref)
+        },
+        |_, rec| emit_chunk(&writer.record_chunk(&rec)),
+    )?;
+    emit_chunk(&writer.finish())?;
+    Ok(StreamSummary {
+        records: emitted,
+        memo: cache.stats(),
+    })
 }
 
 /// The paper's multi-run aggregate: min/max bandwidth and the harmonic
@@ -498,5 +751,157 @@ mod tests {
         assert_eq!(render_json(&serial), render_json(&par));
         // The GS run is slower than its gather half alone.
         assert!(serial[0].bandwidth_gbs <= serial[1].bandwidth_gbs * 1.02);
+    }
+
+    /// 6 configs, 3 distinct fingerprints: [A, B, A', C, B, A] where
+    /// A' is A under a different display name (still a cache twin).
+    const DUP_HEAVY: &str = r#"[
+      {"name": "a0", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+       "delta": 8, "count": 16384},
+      {"name": "b0", "kernel": "Scatter", "pattern": "UNIFORM:8:2",
+       "delta": 16, "count": 16384},
+      {"name": "a-renamed", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+       "delta": 8, "count": 16384},
+      {"name": "c0", "kernel": "Gather", "pattern": "UNIFORM:16:512",
+       "delta": 16384, "count": 8192, "page-size": "2MB"},
+      {"name": "b0", "kernel": "Scatter", "pattern": "UNIFORM:8:2",
+       "delta": 16, "count": 16384},
+      {"name": "a0", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+       "delta": 8, "count": 16384}
+    ]"#;
+
+    #[test]
+    fn memo_on_off_and_jobs_widths_are_byte_identical() {
+        let cfgs = parse_config_text(DUP_HEAVY).unwrap();
+        let (off, s_off) =
+            run_configs_jobs_memo(&skx_factory, &cfgs, 1, false).unwrap();
+        let (on1, s_on1) =
+            run_configs_jobs_memo(&skx_factory, &cfgs, 1, true).unwrap();
+        let (on8, s_on8) =
+            run_configs_jobs_memo(&skx_factory, &cfgs, 8, true).unwrap();
+        assert_eq!(s_off, MemoStats::default(), "cache off counts nothing");
+        assert_eq!(render_json(&off), render_json(&on1));
+        assert_eq!(render_json(&off), render_json(&on8));
+        assert_eq!(render_table(&off), render_table(&on8));
+        // Every config performs exactly one lookup; each of the 3
+        // distinct fingerprints misses once (its leader), the other 3
+        // lookups hit — deterministically, at any width.
+        for s in [s_on1, s_on8] {
+            assert_eq!((s.hits, s.misses), (3, 3), "{s:?}");
+            assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        }
+        // Duplicate labels point at the earliest twin, cache on or off.
+        let memos: Vec<Option<usize>> = off.iter().map(|r| r.memo).collect();
+        assert_eq!(
+            memos,
+            vec![None, None, Some(0), None, Some(1), Some(0)]
+        );
+        assert_eq!(memos, on8.iter().map(|r| r.memo).collect::<Vec<_>>());
+        // Twins share physics but keep their own display name.
+        assert_eq!(off[2].bandwidth_gbs, off[0].bandwidth_gbs);
+        assert_eq!(off[2].name, "a-renamed");
+    }
+
+    #[test]
+    fn record_json_carries_the_memo_key() {
+        let cfgs = parse_config_text(DUP_HEAVY).unwrap();
+        let (recs, _) =
+            run_configs_jobs_memo(&skx_factory, &cfgs, 2, true).unwrap();
+        assert_eq!(
+            recs[0].to_json().get("memo").unwrap(),
+            &Value::Null,
+            "first occurrence"
+        );
+        assert_eq!(
+            recs[5].to_json().get("memo").unwrap().as_usize().unwrap(),
+            0,
+            "duplicate points at its earliest twin"
+        );
+    }
+
+    #[test]
+    fn render_json_streams_runs_first_then_aggregate() {
+        assert_eq!(render_json(&[]), "{\n  \"runs\": []\n}\n");
+        let cfgs = parse_config_text(DUP_HEAVY).unwrap();
+        let recs = run_configs_jobs(&skx_factory, &cfgs, 2).unwrap();
+        let doc = render_json(&recs);
+        assert!(doc.starts_with("{\n  \"runs\": ["), "{doc}");
+        assert!(doc.ends_with("\n}\n"), "{doc}");
+        // Still a valid document with the same values the old
+        // BTreeMap-ordered renderer carried.
+        let v = crate::json::parse(&doc).unwrap();
+        assert_eq!(v.get("runs").unwrap().as_array().unwrap().len(), 6);
+        let agg = Aggregate::from_records(&recs).unwrap();
+        assert_eq!(
+            v.get("aggregate")
+                .unwrap()
+                .get("harmonic_mean_gbs")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            agg.harmonic_mean_gbs
+        );
+        // runs precede the aggregate in the byte stream.
+        assert!(
+            doc.find("\"runs\"").unwrap() < doc.find("\"aggregate\"").unwrap()
+        );
+    }
+
+    #[test]
+    fn stream_mode_is_byte_identical_to_batch() {
+        let cfgs = parse_config_text(DUP_HEAVY).unwrap();
+        let expect = render_json(&run_configs_jobs(&skx_factory, &cfgs, 1).unwrap());
+        for jobs in [1, 2, 5] {
+            for use_memo in [false, true] {
+                let src = crate::coordinator::stream_config_reader(
+                    std::io::Cursor::new(DUP_HEAVY),
+                );
+                let mut out = String::new();
+                let sum = run_configs_stream(
+                    &skx_factory,
+                    src,
+                    jobs,
+                    use_memo,
+                    |chunk| {
+                        out.push_str(chunk);
+                        Ok(())
+                    },
+                )
+                .unwrap();
+                assert_eq!(out, expect, "jobs={jobs} memo={use_memo}");
+                assert_eq!(sum.records, cfgs.len());
+                if use_memo {
+                    assert_eq!((sum.memo.hits, sum.memo.misses), (3, 3));
+                } else {
+                    assert_eq!(sum.memo, MemoStats::default());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_failure_keeps_the_emitted_prefix_and_lowest_error() {
+        let text = r#"[
+          {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+           "count": 4096},
+          {"kernel": "Gather"},
+          {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+           "count": 4096}
+        ]"#;
+        let src = crate::coordinator::stream_config_reader(
+            std::io::Cursor::new(text),
+        );
+        let mut out = String::new();
+        let err = run_configs_stream(&skx_factory, src, 2, true, |chunk| {
+            out.push_str(chunk);
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("run 1"), "{err}");
+        // The record below the failure made it out; the document is
+        // left partial (no closing brace).
+        assert!(out.starts_with("{\n  \"runs\": ["), "{out}");
+        assert!(out.contains("UNIFORM:8:1"), "{out}");
+        assert!(!out.ends_with("\n}\n"), "{out}");
     }
 }

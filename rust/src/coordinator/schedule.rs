@@ -7,13 +7,30 @@
 //! results are collected into the slot of their input index, so table /
 //! CSV / JSON output is byte-identical to serial execution.
 //!
-//! The pool is a dynamic self-scheduling ("work-stealing") queue: idle
-//! workers claim the next unclaimed item off a shared atomic cursor,
-//! so a slow item (huge count, cold platform) never stalls the rest of
-//! the sweep behind a static partition.
+//! The pool is a work-stealing scheduler: input indices are seeded
+//! round-robin into per-worker deques; an owner pops from the LIFO end
+//! of its own deque (its lowest remaining index), and a worker whose
+//! deque runs dry steals from the FIFO end of a victim's (the victim's
+//! highest remaining index). Owner and thief therefore touch opposite
+//! ends, a slow item (huge count, cold platform) never stalls the rest
+//! of the sweep behind a static partition, and the queue tail stays
+//! utilized even when run lengths are heavily skewed. Results land in
+//! per-slot cells — each index is popped exactly once, so result
+//! writes are wait-free instead of funnelling through one global
+//! mutex.
+//!
+//! Campaigns too large to materialize go through
+//! [`parallel_stream_with`]: a producer thread pulls configs from an
+//! iterator under backpressure (it may run at most a reorder-window
+//! ahead of the emission watermark), workers drain a bounded queue,
+//! and the caller's emit hook receives results in input order as the
+//! contiguous prefix completes — memory stays O(jobs + window)
+//! instead of O(campaign).
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::cell::UnsafeCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
 
 use crate::error::{Error, Result};
 
@@ -25,15 +42,96 @@ pub fn default_jobs() -> usize {
         .unwrap_or(1)
 }
 
+/// Reorder-window size for streaming runs: enough look-ahead to keep
+/// `jobs` workers busy past a straggler without unbounded buffering.
+pub fn stream_window(jobs: usize) -> usize {
+    (4 * jobs).max(64)
+}
+
+/// Per-slot result cells. Each input index is popped from exactly one
+/// deque exactly once, so at most one worker ever writes a given cell,
+/// and nothing reads the cells until every worker has joined. That
+/// single-writer discipline is what lets the pool drop the old global
+/// `Mutex<Vec<Option<..>>>`: result writes are wait-free.
+struct Slots<R> {
+    cells: Vec<UnsafeCell<Option<Result<R>>>>,
+}
+
+// SAFETY: disjoint single-writer access per cell (each index is popped
+// once), and reads happen only after the thread scope joins.
+unsafe impl<R: Send> Sync for Slots<R> {}
+
+impl<R> Slots<R> {
+    fn new(n: usize) -> Slots<R> {
+        Slots {
+            cells: (0..n).map(|_| UnsafeCell::new(None)).collect(),
+        }
+    }
+
+    /// SAFETY: the caller must guarantee index `i` is written at most
+    /// once and never read concurrently (upheld by pop-once deques).
+    unsafe fn put(&self, i: usize, r: Result<R>) {
+        *self.cells[i].get() = Some(r);
+    }
+
+    fn into_results(self) -> Vec<Option<Result<R>>> {
+        self.cells.into_iter().map(|c| c.into_inner()).collect()
+    }
+}
+
+/// The per-worker deques. Index `i` is seeded into deque `i % jobs`,
+/// pushed in descending order so the owner's LIFO end (`pop_back`)
+/// yields its lowest index first; thieves take `pop_front` (the
+/// victim's highest remaining index), keeping the two ends disjoint.
+struct Deques {
+    queues: Vec<Mutex<VecDeque<usize>>>,
+}
+
+impl Deques {
+    fn seed(n: usize, jobs: usize) -> Deques {
+        let mut queues: Vec<VecDeque<usize>> =
+            (0..jobs).map(|_| VecDeque::new()).collect();
+        for i in (0..n).rev() {
+            queues[i % jobs].push_back(i);
+        }
+        Deques {
+            queues: queues.into_iter().map(Mutex::new).collect(),
+        }
+    }
+
+    /// Owner pop, falling back to stealing from victims in ring order.
+    /// `None` means every deque is empty: since indices are never
+    /// re-queued, the pool is done.
+    fn pop(&self, id: usize) -> Option<usize> {
+        if let Some(i) = self.queues[id].lock().unwrap().pop_back() {
+            return Some(i);
+        }
+        let n = self.queues.len();
+        for k in 1..n {
+            let victim = (id + k) % n;
+            if let Some(i) = self.queues[victim].lock().unwrap().pop_front() {
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
 /// Map `work` over `items` on up to `jobs` worker threads, preserving
 /// input order in the output.
 ///
 /// Each worker lazily builds its own context with `init` (engines are
 /// stateful and neither `Send` nor `Sync`; the context never crosses a
-/// thread boundary) and then claims items off a shared queue. The
-/// result vector is ordered by input index regardless of which worker
-/// ran what, and the returned error (if any) is the lowest-index
-/// failure — exactly what serial execution would have reported.
+/// thread boundary) and then drains its own deque, stealing from
+/// victims once it runs dry. The result vector is ordered by input
+/// index regardless of which worker ran what, and the returned error
+/// (if any) is the lowest-index failure — exactly what serial
+/// execution would have reported.
+///
+/// Fail-fast: the first error at index `e` cancels every index above
+/// `e` (those pops drain without executing), while indices below `e`
+/// still run — one of them may fail and lower the bar, so the
+/// lowest-index-error contract survives cancellation.
 pub fn parallel_map_with<C, T, R, I, W>(
     items: &[T],
     jobs: usize,
@@ -56,26 +154,26 @@ where
             .collect();
     }
 
-    let next = AtomicUsize::new(0);
-    // First failure flips the flag; workers finish their in-flight
-    // item but stop claiming, so a fast-fail stays fast instead of
-    // draining the whole queue. Claims are monotone, so every index
-    // below the failed one has already been claimed and will complete
-    // — the lowest-index-error contract survives cancellation.
-    let cancelled = AtomicBool::new(false);
-    let slots: Mutex<Vec<Option<Result<R>>>> =
-        Mutex::new((0..items.len()).map(|_| None).collect());
+    let deques = Deques::seed(items.len(), jobs);
+    let slots = Slots::new(items.len());
+    // Lowest failed index so far (usize::MAX: none). The bar only
+    // descends (fetch_min), so an index skipped at some instant is
+    // above the *final* bar too — every slot below the final bar is
+    // guaranteed to be filled.
+    let min_err = AtomicUsize::new(usize::MAX);
+
     std::thread::scope(|s| {
-        for _ in 0..jobs {
-            s.spawn(|| {
+        for id in 0..jobs {
+            let deques = &deques;
+            let slots = &slots;
+            let min_err = &min_err;
+            let init = &init;
+            let work = &work;
+            s.spawn(move || {
                 let mut ctx: Option<C> = None;
-                loop {
-                    if cancelled.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= items.len() {
-                        break;
+                while let Some(i) = deques.pop(id) {
+                    if i > min_err.load(Ordering::Relaxed) {
+                        continue; // cancelled tail: drain, don't run
                     }
                     let out = match &mut ctx {
                         Some(c) => work(c, &items[i], i),
@@ -87,31 +185,34 @@ where
                             }
                             Err(e) => {
                                 // A worker that cannot build its
-                                // context marks its claimed item and
-                                // retires.
-                                cancelled.store(true, Ordering::Relaxed);
-                                slots.lock().unwrap()[i] = Some(Err(e));
+                                // context marks its popped item and
+                                // retires; the rest of its deque is
+                                // stolen by surviving workers.
+                                min_err.fetch_min(i, Ordering::Relaxed);
+                                // SAFETY: `i` was popped exactly once.
+                                unsafe { slots.put(i, Err(e)) };
                                 break;
                             }
                         },
                     };
                     if out.is_err() {
-                        cancelled.store(true, Ordering::Relaxed);
+                        min_err.fetch_min(i, Ordering::Relaxed);
                     }
-                    slots.lock().unwrap()[i] = Some(out);
+                    // SAFETY: `i` was popped exactly once.
+                    unsafe { slots.put(i, out) };
                 }
             });
         }
     });
 
-    let slots = slots.into_inner().unwrap();
-    let mut out = Vec::with_capacity(slots.len());
-    for (i, slot) in slots.into_iter().enumerate() {
+    let mut out = Vec::with_capacity(items.len());
+    for (i, slot) in slots.into_results().into_iter().enumerate() {
         match slot {
             Some(Ok(r)) => out.push(r),
             Some(Err(e)) => return Err(e),
-            // Unreachable unless every worker died on `init`, and then
-            // an earlier slot already carried that error.
+            // Unreachable: skips only happen above the final error
+            // bar, and the walk returns at the bar's own slot first.
+            // Kept as a defensive error rather than a panic.
             None => {
                 return Err(Error::Runtime(format!(
                     "scheduler: item {i} was never executed"
@@ -122,11 +223,229 @@ where
     Ok(out)
 }
 
+/// Shared state of a streaming run. One mutex guards the whole
+/// pipeline (item queue, reorder buffer, watermarks); the three
+/// condvars separate the who-waits-on-what so wakeups stay targeted.
+struct StreamState<T, R> {
+    /// Items produced but not yet popped by a worker.
+    queue: VecDeque<(usize, T)>,
+    /// Completed results awaiting in-order emission.
+    results: BTreeMap<usize, Result<R>>,
+    /// Next index to emit.
+    emitted: usize,
+    /// Items yielded by the source so far.
+    produced: usize,
+    /// Source still running (not exhausted, errored, or cancelled).
+    producing: bool,
+    /// Lowest failed index (usize::MAX: none) — the fail-fast bar.
+    min_err: usize,
+}
+
+struct StreamShared<T, R> {
+    state: Mutex<StreamState<T, R>>,
+    /// Workers wait here for queue items.
+    work_cv: Condvar,
+    /// The emitter waits here for the next in-order result.
+    done_cv: Condvar,
+    /// The producer waits here for the emission watermark to advance.
+    space_cv: Condvar,
+}
+
+/// Run `work` over the items of `source` on `jobs` workers, emitting
+/// results to `emit` in input order as the contiguous prefix
+/// completes. Returns the number of results emitted.
+///
+/// The source is consumed on a dedicated producer thread under
+/// backpressure: item `i` is pulled only once `i < emitted + window`,
+/// so at most `window` items exist between the source and the sink at
+/// any instant — memory is O(jobs + window) regardless of how many
+/// items the source yields. A source error, work error, or emit error
+/// stops the pipeline with the lowest-index failure after the prefix
+/// below it has been emitted.
+pub fn parallel_stream_with<C, T, R, S, I, W, E>(
+    source: S,
+    jobs: usize,
+    window: usize,
+    init: I,
+    work: W,
+    mut emit: E,
+) -> Result<usize>
+where
+    T: Send,
+    R: Send,
+    S: Iterator<Item = Result<T>> + Send,
+    I: Fn() -> Result<C> + Sync,
+    W: Fn(&mut C, &T, usize) -> Result<R> + Sync,
+    E: FnMut(usize, R) -> Result<()>,
+{
+    let jobs = jobs.max(1);
+    let window = window.max(jobs);
+    let shared: StreamShared<T, R> = StreamShared {
+        state: Mutex::new(StreamState {
+            queue: VecDeque::new(),
+            results: BTreeMap::new(),
+            emitted: 0,
+            produced: 0,
+            producing: true,
+            min_err: usize::MAX,
+        }),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+        space_cv: Condvar::new(),
+    };
+
+    std::thread::scope(|s| {
+        let sh = &shared;
+
+        // Producer: pulls the source forward only while the emission
+        // watermark allows it, and winds the pipeline down on source
+        // exhaustion, source error, or a downstream failure.
+        s.spawn(move || {
+            let mut source = source;
+            loop {
+                let i = {
+                    let mut st = sh.state.lock().unwrap();
+                    while st.min_err == usize::MAX
+                        && st.produced >= st.emitted + window
+                    {
+                        st = sh.space_cv.wait(st).unwrap();
+                    }
+                    if st.min_err != usize::MAX {
+                        st.producing = false;
+                        sh.work_cv.notify_all();
+                        sh.done_cv.notify_all();
+                        return;
+                    }
+                    st.produced
+                };
+                // The (possibly slow) pull runs outside the lock.
+                match source.next() {
+                    Some(Ok(item)) => {
+                        let mut st = sh.state.lock().unwrap();
+                        st.produced += 1;
+                        st.queue.push_back((i, item));
+                        sh.work_cv.notify_one();
+                    }
+                    Some(Err(e)) => {
+                        let mut st = sh.state.lock().unwrap();
+                        st.produced += 1;
+                        st.results.insert(i, Err(e));
+                        st.min_err = st.min_err.min(i);
+                        st.producing = false;
+                        sh.work_cv.notify_all();
+                        sh.done_cv.notify_all();
+                        return;
+                    }
+                    None => {
+                        let mut st = sh.state.lock().unwrap();
+                        st.producing = false;
+                        sh.work_cv.notify_all();
+                        sh.done_cv.notify_all();
+                        return;
+                    }
+                }
+            }
+        });
+
+        // Workers: pop the oldest queued item, run it, park the
+        // result in the reorder buffer.
+        for _ in 0..jobs {
+            let init = &init;
+            let work = &work;
+            s.spawn(move || {
+                let mut ctx: Option<C> = None;
+                loop {
+                    let claimed = {
+                        let mut st = sh.state.lock().unwrap();
+                        loop {
+                            if let Some((i, item)) = st.queue.pop_front() {
+                                if i > st.min_err {
+                                    continue; // cancelled tail
+                                }
+                                break Some((i, item));
+                            }
+                            if !st.producing {
+                                break None;
+                            }
+                            st = sh.work_cv.wait(st).unwrap();
+                        }
+                    };
+                    let Some((i, item)) = claimed else { return };
+                    let out = match &mut ctx {
+                        Some(c) => work(c, &item, i),
+                        None => match init() {
+                            Ok(mut c) => {
+                                let r = work(&mut c, &item, i);
+                                ctx = Some(c);
+                                r
+                            }
+                            Err(e) => {
+                                let mut st = sh.state.lock().unwrap();
+                                st.min_err = st.min_err.min(i);
+                                st.results.insert(i, Err(e));
+                                sh.done_cv.notify_all();
+                                sh.space_cv.notify_all();
+                                return;
+                            }
+                        },
+                    };
+                    let mut st = sh.state.lock().unwrap();
+                    if out.is_err() {
+                        st.min_err = st.min_err.min(i);
+                        sh.space_cv.notify_all();
+                    }
+                    st.results.insert(i, out);
+                    sh.done_cv.notify_all();
+                }
+            });
+        }
+
+        // Emitter (the calling thread): release results in input
+        // order. The emit hook runs outside the lock.
+        let mut emitted_total = 0usize;
+        loop {
+            let next = {
+                let mut st = sh.state.lock().unwrap();
+                loop {
+                    if let Some(r) = st.results.remove(&st.emitted) {
+                        st.emitted += 1;
+                        sh.space_cv.notify_all();
+                        break Some(r);
+                    }
+                    if !st.producing && st.emitted >= st.produced {
+                        break None;
+                    }
+                    st = sh.done_cv.wait(st).unwrap();
+                }
+            };
+            match next {
+                None => break Ok(emitted_total),
+                Some(Ok(r)) => {
+                    let idx = emitted_total;
+                    emitted_total += 1;
+                    if let Err(e) = emit(idx, r) {
+                        // The sink failed: raise the bar so the
+                        // producer stops and workers drain fast.
+                        let mut st = sh.state.lock().unwrap();
+                        st.min_err = st.min_err.min(idx);
+                        sh.space_cv.notify_all();
+                        sh.work_cv.notify_all();
+                        break Err(e);
+                    }
+                }
+                Some(Err(e)) => break Err(e),
+            }
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::collections::HashSet;
+    use std::collections::{HashMap, HashSet};
     use std::sync::atomic::AtomicUsize;
+    use std::sync::Barrier;
+    use std::time::Duration;
 
     #[test]
     fn preserves_input_order_at_any_width() {
@@ -170,25 +489,90 @@ mod tests {
 
     #[test]
     fn work_actually_spreads_across_threads() {
+        // Deterministic spread proof, no sleeps: every worker's first
+        // work call waits at a barrier sized to the worker count, so
+        // the pool completes only if all four workers popped at least
+        // one item. (While any worker is parked at the barrier its
+        // popped item is in flight, and 16 - 3 items still sit in the
+        // deques, so the remaining worker always finds work — the
+        // barrier provably releases.)
+        let jobs = 4;
+        let barrier = Barrier::new(jobs);
         let ids: Mutex<HashSet<std::thread::ThreadId>> =
             Mutex::new(HashSet::new());
         let items: Vec<usize> = (0..16).collect();
         parallel_map_with(
             &items,
-            4,
-            || Ok(()),
-            |_, &x, _| {
-                ids.lock().unwrap().insert(std::thread::current().id());
-                std::thread::sleep(std::time::Duration::from_millis(5));
+            jobs,
+            || Ok(true),
+            |first, &x, _| {
+                if *first {
+                    barrier.wait();
+                    *first = false;
+                    ids.lock().unwrap().insert(std::thread::current().id());
+                }
                 Ok(x)
             },
         )
         .unwrap();
-        assert!(
-            ids.lock().unwrap().len() >= 2,
-            "expected concurrent workers, got {:?}",
-            ids.lock().unwrap().len()
-        );
+        assert_eq!(ids.lock().unwrap().len(), jobs);
+    }
+
+    #[test]
+    fn skewed_run_lengths_keep_the_tail_utilized() {
+        // One pathologically long item at index 0 must not strand the
+        // rest of its owner's deque: item 0 blocks until every other
+        // even index (seeded into the same deque) has been executed —
+        // which can only happen if the other worker steals them. A
+        // start barrier pins each worker to its own deque's first item
+        // so the roles are deterministic.
+        let n = 10usize;
+        let items: Vec<usize> = (0..n).collect();
+        let barrier = Barrier::new(2);
+        let executed: Mutex<HashSet<usize>> = Mutex::new(HashSet::new());
+        let done_cv = Condvar::new();
+        let thread_of: Mutex<HashMap<usize, std::thread::ThreadId>> =
+            Mutex::new(HashMap::new());
+        parallel_map_with(
+            &items,
+            2,
+            || Ok(true),
+            |first, _, i| {
+                if *first {
+                    barrier.wait();
+                    *first = false;
+                }
+                thread_of.lock().unwrap().insert(i, std::thread::current().id());
+                if i == 0 {
+                    let mut done = executed.lock().unwrap();
+                    while done.len() < n - 1 {
+                        let (d, t) = done_cv
+                            .wait_timeout(done, Duration::from_secs(10))
+                            .unwrap();
+                        done = d;
+                        assert!(
+                            !t.timed_out(),
+                            "tail was never stolen: {:?}",
+                            done.len()
+                        );
+                    }
+                } else {
+                    executed.lock().unwrap().insert(i);
+                    done_cv.notify_all();
+                }
+                Ok(i)
+            },
+        )
+        .unwrap();
+        let map = thread_of.lock().unwrap();
+        let blocked = map[&0];
+        for j in (2..n).step_by(2) {
+            assert_ne!(
+                map[&j], blocked,
+                "even index {j} should have been stolen from the blocked \
+                 worker's deque"
+            );
+        }
     }
 
     #[test]
@@ -212,10 +596,10 @@ mod tests {
 
     #[test]
     fn failure_cancels_remaining_queue() {
-        // After the first error, workers stop claiming: a fast-fail
-        // must not drain the whole queue. Item 0 errors immediately;
-        // the other items sleep, so by the time any worker finishes
-        // one of them the cancel flag is long set.
+        // After the first error, higher-index pops drain without
+        // executing: a fast-fail must not run the whole queue. Item 0
+        // errors immediately; the other items sleep, so by the time
+        // any worker finishes one of them the bar is long set.
         let executed = AtomicUsize::new(0);
         let items: Vec<usize> = (0..64).collect();
         let err = parallel_map_with(
@@ -259,12 +643,149 @@ mod tests {
         // More workers than items must not panic or duplicate.
         let two: Vec<usize> = vec![1, 2];
         let out =
-            parallel_map_with(&two, 16, || Ok(()), |_, &x, _| Ok(x * 2)).unwrap();
+            parallel_map_with(&two, 16, || Ok(()), |_, &x, _| Ok(x * 2))
+                .unwrap();
         assert_eq!(out, vec![2, 4]);
     }
 
     #[test]
     fn default_jobs_is_positive() {
         assert!(default_jobs() >= 1);
+    }
+
+    #[test]
+    fn stream_emits_in_input_order_at_any_width() {
+        for jobs in [1, 2, 4, 8] {
+            let mut got: Vec<(usize, usize)> = Vec::new();
+            let n = parallel_stream_with(
+                (0..50usize).map(Ok::<usize, Error>),
+                jobs,
+                8,
+                || Ok(()),
+                |_, &x, i| Ok(x * 10 + i),
+                |i, r| {
+                    got.push((i, r));
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert_eq!(n, 50);
+            let want: Vec<(usize, usize)> =
+                (0..50).map(|i| (i, i * 10 + i)).collect();
+            assert_eq!(got, want, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn stream_production_is_window_bounded() {
+        // The producer may pull item i only once i < emitted + window.
+        // The atomic emission counter trails the internal watermark by
+        // at most the one in-flight emit call, hence the +1 slack.
+        let window = 4usize;
+        let emitted = AtomicUsize::new(0);
+        let n = parallel_stream_with(
+            (0..200usize).map(|i| {
+                assert!(
+                    i < emitted.load(Ordering::SeqCst) + window + 1,
+                    "producer ran {i} items ahead of emission"
+                );
+                Ok(i)
+            }),
+            2,
+            window,
+            || Ok(()),
+            |_, &x, _| Ok(x),
+            |i, _| {
+                emitted.store(i + 1, Ordering::SeqCst);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(n, 200);
+    }
+
+    #[test]
+    fn stream_lowest_index_error_wins_after_the_prefix() {
+        let mut got: Vec<usize> = Vec::new();
+        let err = parallel_stream_with(
+            (0..40usize).map(Ok::<usize, Error>),
+            4,
+            8,
+            || Ok(()),
+            |_, &x, _| {
+                if x >= 11 {
+                    Err(Error::Runtime(format!("boom {x}")))
+                } else {
+                    Ok(x)
+                }
+            },
+            |_, r| {
+                got.push(r);
+                Ok(())
+            },
+        )
+        .unwrap_err();
+        assert_eq!(err.to_string(), "runtime error: boom 11");
+        assert_eq!(got, (0..11).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stream_source_error_propagates() {
+        let src = (0..10usize).map(|i| {
+            if i == 5 {
+                Err(Error::Json("bad element".into()))
+            } else {
+                Ok(i)
+            }
+        });
+        let mut got: Vec<usize> = Vec::new();
+        let err = parallel_stream_with(
+            src,
+            2,
+            4,
+            || Ok(()),
+            |_, &x, _| Ok(x),
+            |_, r| {
+                got.push(r);
+                Ok(())
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("bad element"));
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn stream_empty_source_emits_nothing() {
+        let n = parallel_stream_with(
+            std::iter::empty::<Result<usize>>(),
+            4,
+            8,
+            || Ok(()),
+            |_, &x, _| Ok(x),
+            |_, _: usize| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn stream_emit_failure_stops_the_pipeline() {
+        let err = parallel_stream_with(
+            (0..100usize).map(Ok::<usize, Error>),
+            2,
+            4,
+            || Ok(()),
+            |_, &x, _| Ok(x),
+            |i, _| {
+                if i == 3 {
+                    Err(Error::Runtime("sink full".into()))
+                } else {
+                    Ok(())
+                }
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("sink full"));
     }
 }

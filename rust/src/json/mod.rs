@@ -9,8 +9,8 @@
 mod parse;
 mod write;
 
-pub use parse::parse;
-pub use write::{to_string, to_string_pretty};
+pub use parse::{parse, ArrayStream};
+pub use write::{to_string, to_string_pretty, to_string_pretty_at};
 
 use std::collections::BTreeMap;
 

@@ -300,6 +300,244 @@ fn utf8_len(lead: u8) -> Option<usize> {
     }
 }
 
+/// Read chunk for [`ArrayStream`] refills.
+const STREAM_CHUNK: usize = 16 * 1024;
+
+/// Incremental reader of a top-level JSON array: yields one parsed
+/// element at a time without ever materializing the whole document —
+/// the memory high-water mark is one chunk plus the largest single
+/// element, independent of how many elements the array holds.
+///
+/// The element boundary scan is a byte-level automaton (string /
+/// escape / bracket depth), so braces and brackets inside strings
+/// never confuse it; each complete element slice then goes through the
+/// ordinary strict [`parse`]. Error positions are element-relative
+/// ("config stream element N: ..."), not document-absolute — the
+/// document is never held in one piece.
+pub struct ArrayStream<R: std::io::Read> {
+    src: R,
+    buf: Vec<u8>,
+    /// First unconsumed byte of `buf`.
+    start: usize,
+    /// `[` has been consumed.
+    started: bool,
+    /// Elements yielded so far.
+    count: usize,
+    /// `]` consumed and trailer validated, or a terminal error.
+    finished: bool,
+}
+
+impl<R: std::io::Read> ArrayStream<R> {
+    pub fn new(src: R) -> ArrayStream<R> {
+        ArrayStream {
+            src,
+            buf: Vec::new(),
+            start: 0,
+            started: false,
+            count: 0,
+            finished: false,
+        }
+    }
+
+    /// Pull one more chunk off the source; `Ok(false)` at EOF.
+    fn fill(&mut self) -> Result<bool> {
+        let mut chunk = [0u8; STREAM_CHUNK];
+        let n = self.src.read(&mut chunk).map_err(Error::Io)?;
+        if n == 0 {
+            return Ok(false);
+        }
+        self.buf.extend_from_slice(&chunk[..n]);
+        Ok(true)
+    }
+
+    /// Drop consumed bytes (called only between elements, so element
+    /// ranges under scan are never invalidated).
+    fn compact(&mut self) {
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+    }
+
+    /// The next non-whitespace byte at/after `start` (not consumed),
+    /// refilling as needed; `None` at EOF.
+    fn next_non_ws(&mut self) -> Result<Option<u8>> {
+        loop {
+            while self.start < self.buf.len() {
+                let b = self.buf[self.start];
+                if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                    self.start += 1;
+                } else {
+                    return Ok(Some(b));
+                }
+            }
+            self.compact();
+            if !self.fill()? {
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Scan one element starting at `start` (known non-ws, not a
+    /// delimiter), buffering until its top-level `,` or `]` delimiter
+    /// is visible. Returns the element's byte range; the delimiter at
+    /// the range's end is left unconsumed.
+    fn scan_element(&mut self) -> Result<(usize, usize)> {
+        let begin = self.start;
+        let mut i = self.start;
+        let mut depth = 0usize;
+        let mut in_string = false;
+        let mut escaped = false;
+        loop {
+            while i < self.buf.len() {
+                let b = self.buf[i];
+                if in_string {
+                    if escaped {
+                        escaped = false;
+                    } else if b == b'\\' {
+                        escaped = true;
+                    } else if b == b'"' {
+                        in_string = false;
+                    }
+                } else {
+                    match b {
+                        b'"' => in_string = true,
+                        b'{' | b'[' => depth += 1,
+                        b'}' | b']' if depth > 0 => depth -= 1,
+                        b']' => return Ok((begin, i)),
+                        b'}' => {
+                            return Err(Error::Json(
+                                "config stream: unbalanced '}'".into(),
+                            ))
+                        }
+                        b',' if depth == 0 => return Ok((begin, i)),
+                        _ => {}
+                    }
+                }
+                i += 1;
+            }
+            if !self.fill()? {
+                return Err(Error::Json(
+                    "config stream: unterminated array element".into(),
+                ));
+            }
+        }
+    }
+
+    /// Validate that only whitespace follows the closing `]`.
+    fn finish_trailer(&mut self) -> Result<Option<Value>> {
+        if let Some(b) = self.next_non_ws()? {
+            return Err(Error::Json(format!(
+                "config stream: trailing characters after array ('{}')",
+                b as char
+            )));
+        }
+        self.finished = true;
+        Ok(None)
+    }
+
+    fn advance(&mut self) -> Result<Option<Value>> {
+        if !self.started {
+            match self.next_non_ws()? {
+                Some(b'[') => {
+                    self.start += 1;
+                    self.started = true;
+                }
+                Some(b) => {
+                    return Err(Error::Json(format!(
+                        "config stream: expected '[' to open the config \
+                         array, found '{}'",
+                        b as char
+                    )))
+                }
+                None => {
+                    return Err(Error::Json(
+                        "config stream: empty input (expected a JSON array)"
+                            .into(),
+                    ))
+                }
+            }
+        }
+        if self.count > 0 {
+            // Consume the delimiter left behind by the last element.
+            match self.next_non_ws()? {
+                Some(b',') => self.start += 1,
+                Some(b']') => {
+                    self.start += 1;
+                    return self.finish_trailer();
+                }
+                Some(b) => {
+                    return Err(Error::Json(format!(
+                        "config stream: expected ',' or ']' after element, \
+                         found '{}'",
+                        b as char
+                    )))
+                }
+                None => {
+                    return Err(Error::Json(
+                        "config stream: unterminated array".into(),
+                    ))
+                }
+            }
+        } else if self.next_non_ws()? == Some(b']') {
+            self.start += 1;
+            return self.finish_trailer();
+        }
+        match self.next_non_ws()? {
+            Some(b']') => {
+                return Err(Error::Json(
+                    "config stream: trailing ',' before ']'".into(),
+                ))
+            }
+            Some(b',') => {
+                return Err(Error::Json(
+                    "config stream: unexpected ','".into(),
+                ))
+            }
+            Some(_) => {}
+            None => {
+                return Err(Error::Json(
+                    "config stream: unterminated array".into(),
+                ))
+            }
+        }
+        let (a, b) = self.scan_element()?;
+        let text = std::str::from_utf8(&self.buf[a..b]).map_err(|_| {
+            Error::Json("config stream: invalid UTF-8 in element".into())
+        })?;
+        let v = parse(text).map_err(|e| {
+            let msg = match e {
+                Error::Json(m) => m,
+                other => other.to_string(),
+            };
+            Error::Json(format!(
+                "config stream element {}: {}",
+                self.count, msg
+            ))
+        })?;
+        self.count += 1;
+        self.start = b;
+        Ok(Some(v))
+    }
+}
+
+impl<R: std::io::Read> Iterator for ArrayStream<R> {
+    type Item = Result<Value>;
+
+    fn next(&mut self) -> Option<Result<Value>> {
+        if self.finished {
+            return None;
+        }
+        match self.advance() {
+            Ok(v) => v.map(Ok),
+            Err(e) => {
+                self.finished = true;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::Value;
@@ -385,5 +623,87 @@ mod tests {
     fn deep_nesting_ok() {
         let doc = format!("{}1{}", "[".repeat(200), "]".repeat(200));
         assert!(parse(&doc).is_ok());
+    }
+
+    /// A reader that hands out one byte per `read` call — the worst
+    /// possible chunking, so every element boundary crosses a refill.
+    struct Trickle<'a>(&'a [u8]);
+
+    impl std::io::Read for Trickle<'_> {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.0.is_empty() || out.is_empty() {
+                return Ok(0);
+            }
+            out[0] = self.0[0];
+            self.0 = &self.0[1..];
+            Ok(1)
+        }
+    }
+
+    fn collect_stream<R: std::io::Read>(s: ArrayStream<R>) -> Result<Vec<Value>> {
+        s.collect()
+    }
+
+    #[test]
+    fn array_stream_matches_batch_parse() {
+        let doc = r#"[
+            {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+             "count": 1024},
+            {"kernel": "Scatter", "pattern": [0, 24, 48], "note": "a ] , } b"},
+            [1, [2, {"x": "]"}]],
+            "plain",
+            42,
+            true,
+            null
+        ]"#;
+        let want = parse(doc).unwrap();
+        let want = want.as_array().unwrap();
+        let got =
+            collect_stream(ArrayStream::new(std::io::Cursor::new(doc))).unwrap();
+        assert_eq!(&got, want);
+        // One-byte reads must produce the identical stream.
+        let trickled =
+            collect_stream(ArrayStream::new(Trickle(doc.as_bytes()))).unwrap();
+        assert_eq!(&trickled, want);
+    }
+
+    #[test]
+    fn array_stream_empty_array_yields_nothing() {
+        let got =
+            collect_stream(ArrayStream::new(std::io::Cursor::new("  [ ]  ")))
+                .unwrap();
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn array_stream_rejects_malformed_documents() {
+        for bad in [
+            "", "  ", "{\"a\": 1}", "1", "[1,]", "[1", "[1 2]", "[,1]",
+            "[1] x", "[}",
+        ] {
+            let r = collect_stream(ArrayStream::new(std::io::Cursor::new(bad)));
+            assert!(r.is_err(), "should reject: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn array_stream_reports_element_relative_errors_and_stops() {
+        let mut s = ArrayStream::new(std::io::Cursor::new("[1, nope, 3]"));
+        assert_eq!(s.next().unwrap().unwrap(), Value::Number(1.0));
+        let e = s.next().unwrap().unwrap_err().to_string();
+        assert!(e.contains("element 1"), "{e}");
+        // A terminal error ends the iterator.
+        assert!(s.next().is_none());
+    }
+
+    #[test]
+    fn array_stream_is_lazy_about_later_elements() {
+        // Elements before a syntax error parse fine; the error only
+        // surfaces when the stream reaches it.
+        let mut s =
+            ArrayStream::new(std::io::Cursor::new("[{\"a\": 1}, {\"b\": }]"));
+        let first = s.next().unwrap().unwrap();
+        assert_eq!(first.get("a").unwrap().as_i64().unwrap(), 1);
+        assert!(s.next().unwrap().is_err());
     }
 }

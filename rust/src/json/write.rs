@@ -16,6 +16,19 @@ pub fn to_string_pretty(v: &Value) -> String {
     out
 }
 
+/// Serialize with 2-space indentation as a fragment sitting `depth`
+/// nesting levels deep: continuation lines are indented as
+/// [`to_string_pretty`] would indent them inside an enclosing document
+/// (the first line carries no leading indent — the caller has already
+/// emitted the surrounding punctuation). This is what lets a streaming
+/// writer emit a large document chunk-by-chunk, byte-identical to the
+/// batch renderer.
+pub fn to_string_pretty_at(v: &Value, depth: usize) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out, Some(2), depth);
+    out
+}
+
 fn write_value(v: &Value, out: &mut String, indent: Option<usize>, depth: usize) {
     match v {
         Value::Null => out.push_str("null"),
@@ -153,5 +166,20 @@ mod tests {
     fn nonfinite_to_null() {
         assert_eq!(to_string(&Value::Number(f64::NAN)), "null");
         assert_eq!(to_string(&Value::Number(f64::INFINITY)), "null");
+    }
+
+    #[test]
+    fn pretty_at_fragments_reassemble_the_batch_document() {
+        let r1 = obj(&[("a", Value::from(1i64))]);
+        let r2 = obj(&[("b", Value::Array(vec![Value::from(2i64)]))]);
+        let doc = obj(&[("runs", Value::Array(vec![r1.clone(), r2.clone()]))]);
+        let mut streamed = String::from("{\n  \"runs\": [");
+        streamed.push_str("\n    ");
+        streamed.push_str(&to_string_pretty_at(&r1, 2));
+        streamed.push(',');
+        streamed.push_str("\n    ");
+        streamed.push_str(&to_string_pretty_at(&r2, 2));
+        streamed.push_str("\n  ]\n}");
+        assert_eq!(streamed, to_string_pretty(&doc));
     }
 }

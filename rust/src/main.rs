@@ -104,7 +104,6 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         Command::Json { path, common } => {
-            let configs = coordinator::parse_config_file(Path::new(&path))?;
             // Real execution measures wall-clock time: concurrent
             // workers would contend for the host's cores and depress
             // every reported bandwidth. Simulated backends are
@@ -114,8 +113,35 @@ fn run(args: &[String]) -> Result<()> {
             } else {
                 common.jobs
             };
+            let memo_on = coordinator::memo_enabled_from_env();
             let t0 = Instant::now();
-            let records = coordinator::run_configs_jobs(
+            if common.stream {
+                let source =
+                    coordinator::stream_config_file(Path::new(&path))?;
+                let stdout = std::io::stdout();
+                let mut out = stdout.lock();
+                let summary = coordinator::run_configs_stream(
+                    &|| build_backend(&common),
+                    source,
+                    jobs,
+                    memo_on,
+                    |chunk| {
+                        use std::io::Write;
+                        out.write_all(chunk.as_bytes()).map_err(Error::Io)
+                    },
+                )?;
+                eprintln!(
+                    "spatter: {} configs streamed on {} jobs in {:.3}s \
+                     wall-clock",
+                    summary.records,
+                    jobs,
+                    t0.elapsed().as_secs_f64()
+                );
+                report_memo(summary.memo, memo_on);
+                return Ok(());
+            }
+            let configs = coordinator::parse_config_file(Path::new(&path))?;
+            let (records, memo) = coordinator::run_configs_jobs_stats(
                 &|| build_backend(&common),
                 &configs,
                 jobs,
@@ -126,9 +152,24 @@ fn run(args: &[String]) -> Result<()> {
                 jobs.min(configs.len().max(1)),
                 t0.elapsed().as_secs_f64()
             );
+            report_memo(memo, memo_on);
             emit(&records, &common);
             Ok(())
         }
+    }
+}
+
+/// One stderr line with the campaign's memo-cache economics. Silent
+/// when the cache was disabled (SPATTER_NO_MEMO=1) or bypassed (real
+/// execution performs no lookups).
+fn report_memo(stats: coordinator::MemoStats, enabled: bool) {
+    if enabled && stats.total() > 0 {
+        eprintln!(
+            "spatter: memo cache: {} hits / {} lookups ({:.0}% hit rate)",
+            stats.hits,
+            stats.total(),
+            stats.hit_rate() * 100.0
+        );
     }
 }
 
@@ -241,6 +282,30 @@ mod tests {
                 .map(|s| s.to_string())
                 .collect();
         run(&args).unwrap();
+    }
+
+    #[test]
+    fn stream_invocation_end_to_end() {
+        let path = std::env::temp_dir().join("spatter_stream_e2e_cfg.json");
+        std::fs::write(
+            &path,
+            r#"[
+              {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+               "count": 4096},
+              {"kernel": "Scatter", "pattern": "UNIFORM:8:2", "delta": 16,
+               "count": 4096},
+              {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+               "count": 4096}
+            ]"#,
+        )
+        .unwrap();
+        let args: Vec<String> =
+            format!("-j {} --stream --json-out --jobs 2 -a skx", path.display())
+                .split_whitespace()
+                .map(|s| s.to_string())
+                .collect();
+        run(&args).unwrap();
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -244,6 +244,88 @@ fn prop_runconfig_to_json_roundtrip() {
 }
 
 // ---------------------------------------------------------------------------
+// Campaign scheduler: memo cache and streaming run mode
+// ---------------------------------------------------------------------------
+
+fn sim_factory()
+-> spatter::error::Result<Box<dyn spatter::backends::Backend>> {
+    Ok(Box::new(spatter::backends::OpenMpSim::new(
+        &platforms::by_name("skx").unwrap(),
+    )))
+}
+
+/// A small valid campaign with duplicates injected under fresh names,
+/// so the memo cache always has work and the `memo` labels are
+/// exercised alongside the first-occurrence paths.
+fn arbitrary_campaign(g: &mut Gen) -> Vec<RunConfig> {
+    let mut cfgs: Vec<RunConfig> = Vec::new();
+    while cfgs.len() < 3 {
+        let c = arbitrary_runconfig(g);
+        if c.pattern.validate_for(c.kernel).is_ok() {
+            cfgs.push(c);
+        }
+    }
+    for _ in 0..g.usize_in(1, 3) {
+        let i = g.usize_in(0, cfgs.len() - 1);
+        let mut dup = cfgs[i].clone();
+        dup.name = format!("{}-dup", dup.name);
+        cfgs.push(dup);
+    }
+    cfgs
+}
+
+#[test]
+fn prop_memo_cache_is_invisible_in_the_output() {
+    use spatter::coordinator::{render_json, run_configs_jobs_memo};
+    check("memo on/off emit identical JSON at any jobs width", 8, |g| {
+        let cfgs = arbitrary_campaign(g);
+        let jobs = g.usize_in(1, 5);
+        let (off, off_stats) =
+            run_configs_jobs_memo(&sim_factory, &cfgs, jobs, false).unwrap();
+        let (on, on_stats) =
+            run_configs_jobs_memo(&sim_factory, &cfgs, jobs, true).unwrap();
+        assert_eq!(render_json(&off), render_json(&on));
+        assert_eq!(off_stats.total(), 0, "disabled cache must not look up");
+        assert!(
+            on_stats.hits >= 1,
+            "duplicates were injected, the cache must hit: {on_stats:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_stream_mode_matches_batch_byte_for_byte() {
+    use spatter::coordinator::{
+        render_json, run_configs_jobs_memo, run_configs_stream,
+        stream_config_reader,
+    };
+    check("--stream == batch render_json for any jobs width", 8, |g| {
+        let cfgs = arbitrary_campaign(g);
+        let jobs = g.usize_in(1, 5);
+        let memo = g.bool();
+        let text = json::to_string(&json::Value::Array(
+            cfgs.iter().map(|c| c.to_json()).collect(),
+        ));
+        // Batch leg re-parses the same serialized text the stream leg
+        // reads, so both sides see identical inputs.
+        let parsed = parse_config_text(&text).unwrap();
+        let (recs, _) =
+            run_configs_jobs_memo(&sim_factory, &parsed, jobs, memo).unwrap();
+        let expect = render_json(&recs);
+        let mut got = String::new();
+        let src = stream_config_reader(std::io::Cursor::new(text.into_bytes()));
+        let summary =
+            run_configs_stream(&sim_factory, src, jobs, memo, |chunk| {
+                got.push_str(chunk);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(summary.records, parsed.len());
+        assert_eq!(got, expect, "streamed document diverged from batch");
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Built-in pattern builders (uniform / ms1 / laplacian / random)
 // ---------------------------------------------------------------------------
 
