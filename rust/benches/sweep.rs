@@ -1,9 +1,10 @@
 //! Perf-trajectory bench (plain `std::time::Instant` harness, no
 //! external deps): times the fast `ustride` CPU sweep and a
 //! 256-iteration LULESH-S3 scatter, each with steady-state loop
-//! closure enabled and force-disabled, and emits `BENCH_sim.json`
-//! (`{"suite": ..., "wall_ms": ...}` records) so the repo's perf
-//! numbers accumulate run over run.
+//! closure enabled and force-disabled, the scheduler/memo/stream
+//! campaign legs, and the `dram-bank` pow2-vs-odd conflict cell, and
+//! emits `BENCH_sim.json` (`{"suite": ..., "wall_ms": ...}` records)
+//! so the repo's perf numbers accumulate run over run.
 //!
 //! Run via `scripts/bench.sh` (or `cargo bench --bench sweep`); the
 //! output path can be overridden with the `BENCH_SIM_JSON` env var.
@@ -17,7 +18,7 @@ use spatter::coordinator::{
     stream_config_reader,
 };
 use spatter::json::{self, obj, Value};
-use spatter::pattern::{table5, Kernel};
+use spatter::pattern::{table5, Kernel, Pattern};
 use spatter::platforms;
 use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
 use spatter::suite::{cpu_ustride, STRIDES};
@@ -249,6 +250,47 @@ fn main() {
     records.push(obj(&[
         ("suite", Value::from("sched-unique64")),
         ("sched_speedup", Value::from(uniq_j1 / uniq_j4)),
+    ]));
+
+    // --- Banked-DRAM microbench: the aliased pow2 row-stride ladder
+    // vs its odd neighbour on a 64-bank part (KNL), prefetchers off so
+    // the activation chain is the pattern's own (`--suite dram`'s
+    // knee cell, timed).
+    let dram_pat = |rows: usize| {
+        let stride = rows * 256; // 2 KiB rows / 8-byte elements
+        Pattern::parse(&format!("UNIFORM:8:{stride}"))
+            .unwrap()
+            .with_delta(8 * stride as i64)
+            .with_count(1 << 14)
+    };
+    let knl = platforms::by_name("knl").unwrap();
+    let mut walls = [0.0f64; 2];
+    let mut rates = [0.0f64; 2];
+    for (i, rows) in [16usize, 17].into_iter().enumerate() {
+        let pat = dram_pat(rows);
+        let mut e = OpenMpSim::without_prefetch(&knl);
+        let t0 = Instant::now();
+        let r = e.run(&pat, Kernel::Gather).unwrap();
+        walls[i] = t0.elapsed().as_secs_f64() * 1e3;
+        let c = &r.counters;
+        let acts = c.dram_row_misses + c.dram_row_conflicts;
+        if acts > 0 {
+            rates[i] = c.dram_row_conflicts as f64 / acts as f64;
+        }
+        black_box(r.bandwidth_gbs());
+    }
+    println!(
+        "dram-bank: knl rows=16 {:.1} ms (conflict rate {:.2}), \
+         rows=17 {:.1} ms ({:.2})",
+        walls[0], rates[0], walls[1], rates[1]
+    );
+    records.push(obj(&[
+        ("suite", Value::from("dram-bank")),
+        ("platform", Value::from("knl")),
+        ("wall_ms_pow2", Value::from(walls[0])),
+        ("wall_ms_odd", Value::from(walls[1])),
+        ("conflict_rate_pow2", Value::from(rates[0])),
+        ("conflict_rate_odd", Value::from(rates[1])),
     ]));
 
     let out = std::env::var("BENCH_SIM_JSON")

@@ -14,9 +14,27 @@ use crate::report::Table;
 use crate::sim::SimResult;
 use crate::stats;
 
-use super::memo::{self, MemoCache, MemoStats, Reservation};
+use super::memo::{self, MemoCache, MemoCell, MemoStats, Reservation};
 use super::schedule::{parallel_map_with, parallel_stream_with, stream_window};
 use super::RunConfig;
+
+/// Fills a reserved memo cell on *every* exit path of the leader's
+/// compute, including an unwinding panic inside `Backend::run`. A cell
+/// left pending blocks each duplicate config forever (`MemoCell::wait`
+/// has no timeout), so the fill must not depend on the leader reaching
+/// its happy-path statement: dropping the guard publishes whatever is
+/// in `value` — `None` (the poison marker, waking waiters into
+/// recomputation) unless the leader stored a result first.
+struct FillOnDrop {
+    cell: std::sync::Arc<MemoCell>,
+    value: Option<SimResult>,
+}
+
+impl Drop for FillOnDrop {
+    fn drop(&mut self) {
+        self.cell.fill(self.value.take());
+    }
+}
 
 /// The outcome of one pattern run.
 #[derive(Debug, Clone)]
@@ -63,6 +81,16 @@ pub struct RunRecord {
     /// `--jobs` width, and whether the memo cache answered — so output
     /// stays byte-identical across all execution modes.
     pub memo: Option<usize>,
+    /// DRAM accesses that found their row already open in the bank's
+    /// row buffer (banked model, `sim::dram`). All three DRAM counters
+    /// are zero for real-execution backends, which model no DRAM.
+    pub dram_row_hits: u64,
+    /// Row activations that landed on a different channel×bank-group
+    /// than the immediately previous activation — pipelined, cheap.
+    pub dram_row_misses: u64,
+    /// Row activations serialized behind the previous activation in
+    /// the same channel×bank-group — the tRC-limited expensive case.
+    pub dram_row_conflicts: u64,
 }
 
 impl RunRecord {
@@ -115,6 +143,20 @@ impl RunRecord {
                     None => Value::Null,
                 },
             ),
+            (
+                "dram",
+                obj(&[
+                    ("row_hits", Value::from(self.dram_row_hits as usize)),
+                    (
+                        "row_misses",
+                        Value::from(self.dram_row_misses as usize),
+                    ),
+                    (
+                        "row_conflicts",
+                        Value::from(self.dram_row_conflicts as usize),
+                    ),
+                ]),
+            ),
         ])
     }
 }
@@ -149,6 +191,9 @@ fn record_from_sim(
         threads: backend.threads(),
         closed_at: r.closed_at_iteration,
         memo,
+        dram_row_hits: r.counters.dram_row_hits,
+        dram_row_misses: r.counters.dram_row_misses,
+        dram_row_conflicts: r.counters.dram_row_conflicts,
     }
 }
 
@@ -186,16 +231,16 @@ fn run_one_cached(
     let sim = match cache.get_or_reserve(fp) {
         Reservation::Ready(r) => r,
         Reservation::Poisoned => backend.run(&c.pattern, c.kernel)?,
-        Reservation::Owner(cell) => match backend.run(&c.pattern, c.kernel) {
-            Ok(r) => {
-                cell.fill(Some(r.clone()));
-                r
-            }
-            Err(e) => {
-                cell.fill(None);
-                return Err(e);
-            }
-        },
+        Reservation::Owner(cell) => {
+            // The guard drops — and fills — on success, on the `?`
+            // error return, and on a panicking backend alike; only the
+            // success path upgrades the published value from poison to
+            // a result.
+            let mut fill = FillOnDrop { cell, value: None };
+            let r = backend.run(&c.pattern, c.kernel)?;
+            fill.value = Some(r.clone());
+            r
+        }
     };
     Ok(record_from_sim(
         &*backend, &c.name, &c.pattern, c.kernel, &sim, dup,
@@ -282,7 +327,7 @@ pub fn run_configs_jobs_memo(
 pub fn render_table(records: &[RunRecord]) -> String {
     let mut t = Table::new(&[
         "name", "kernel", "V", "delta", "count", "page", "thr", "time (s)",
-        "GB/s", "MiB r/w", "TLB hit%", "bound by",
+        "GB/s", "MiB r/w", "TLB hit%", "DRAM cfl", "bound by",
     ]);
     let mib = |b: u64| b as f64 / (1u64 << 20) as f64;
     for r in records {
@@ -300,6 +345,15 @@ pub fn render_table(records: &[RunRecord]) -> String {
             match r.tlb_hit_rate {
                 Some(rate) => format!("{:.1}", rate * 100.0),
                 None => "-".to_string(),
+            },
+            // Backends without a DRAM model (real execution) touch no
+            // bank counter at all; render "-" rather than a bogus 0.
+            if r.dram_row_hits + r.dram_row_misses + r.dram_row_conflicts
+                == 0
+            {
+                "-".to_string()
+            } else {
+                r.dram_row_conflicts.to_string()
             },
             r.bottleneck.clone(),
         ]);
@@ -672,12 +726,23 @@ mod tests {
             .with_delta(8)
             .with_count(4096);
         let r = run_one(&mut b, "row", &p, Kernel::Gather).unwrap();
-        let table = render_table(&[r]);
+        let table = render_table(&[r.clone()]);
         assert!(table.contains("| thr "), "{table}");
         assert!(table.contains("| page "), "{table}");
         assert!(table.contains("| MiB r/w "), "{table}");
+        assert!(table.contains("| DRAM cfl "), "{table}");
         assert!(table.contains("| 16 "), "{table}");
         assert!(!table.contains("aggregate over"), "single run: no aggregate");
+        // A simulated run always opens at least one DRAM row, so the
+        // conflict cell is numeric; a record with no DRAM activity at
+        // all (real execution) renders "-" instead of a bogus zero.
+        assert!(r.dram_row_hits + r.dram_row_misses > 0);
+        let mut blank = r;
+        blank.dram_row_hits = 0;
+        blank.dram_row_misses = 0;
+        blank.dram_row_conflicts = 0;
+        let table = render_table(&[blank]);
+        assert!(table.contains(" - "), "{table}");
     }
 
     #[test]
@@ -877,6 +942,79 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// A backend whose `run` announces itself on a channel, waits for
+    /// the gate, then panics — a stand-in for a backend bug striking
+    /// the memo leader mid-compute.
+    struct PanickingBackend<'a> {
+        started: std::sync::mpsc::Sender<()>,
+        gate: &'a std::sync::Barrier,
+    }
+
+    impl Backend for PanickingBackend<'_> {
+        fn name(&self) -> &str {
+            "panicking-mock"
+        }
+
+        fn run(
+            &mut self,
+            _pattern: &Pattern,
+            _kernel: Kernel,
+        ) -> Result<SimResult> {
+            self.started.send(()).unwrap();
+            self.gate.wait();
+            panic!("injected backend bug");
+        }
+    }
+
+    /// Regression: a leader that *panicked* inside `Backend::run` never
+    /// reached `MemoCell::fill`, leaving the cell pending and every
+    /// duplicate config blocked on it forever (`MemoCell::wait` has no
+    /// timeout). The fill guard must poison the cell during unwind so
+    /// blocked waiters wake and recompute. Pre-fix, this test hangs at
+    /// `waiter.join()`.
+    #[test]
+    fn leader_panic_poisons_the_cell_and_wakes_waiters() {
+        let cfgs = parse_config_text(
+            r#"[{"name": "dup", "kernel": "Gather",
+                 "pattern": "UNIFORM:8:1", "delta": 8, "count": 4096}]"#,
+        )
+        .unwrap();
+        let c = &cfgs[0];
+        let fp = memo::config_fingerprint(c);
+        let cache = MemoCache::new();
+        let gate = std::sync::Barrier::new(2);
+        let (started_tx, started_rx) = std::sync::mpsc::channel();
+        std::thread::scope(|s| {
+            let (gate, cache) = (&gate, &cache);
+            let leader = s.spawn(move || {
+                let mut b = PanickingBackend {
+                    started: started_tx,
+                    gate,
+                };
+                run_one_cached(&mut b, c, fp, None, Some(cache))
+            });
+            // Once run() has announced itself the leader owns the
+            // cell, so the waiter spawned now can only block on it.
+            started_rx.recv().unwrap();
+            let waiter = s.spawn(move || {
+                let mut b = backend();
+                run_one_cached(&mut b, c, fp, None, Some(cache))
+            });
+            // Give the waiter time to park on the pending cell, then
+            // release the leader into its panic.
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            gate.wait();
+            assert!(leader.join().is_err(), "leader must have panicked");
+            let rec = waiter.join().unwrap().unwrap();
+            assert_eq!(rec.name, "dup");
+            assert!(rec.bandwidth_gbs > 0.0, "waiter recomputed after poison");
+        });
+        // Leader reservation + waiter's poisoned rerun: two misses,
+        // and the panic cached nothing a later twin could hit.
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 2), "{s:?}");
     }
 
     #[test]

@@ -36,7 +36,10 @@ impl<'a> Parser<'a> {
             if b == b'\n' {
                 line += 1;
                 col = 1;
-            } else {
+            } else if !(0x80..=0xBF).contains(&b) {
+                // Columns count characters, not bytes: UTF-8
+                // continuation bytes don't start a new character, so a
+                // multibyte sequence advances the column exactly once.
                 col += 1;
             }
         }
@@ -311,14 +314,18 @@ const STREAM_CHUNK: usize = 16 * 1024;
 /// The element boundary scan is a byte-level automaton (string /
 /// escape / bracket depth), so braces and brackets inside strings
 /// never confuse it; each complete element slice then goes through the
-/// ordinary strict [`parse`]. Error positions are element-relative
-/// ("config stream element N: ..."), not document-absolute — the
-/// document is never held in one piece.
+/// ordinary strict [`parse`]. Element errors carry both the element
+/// index and the element's absolute byte offset in the source ("config
+/// stream element N (byte B): ..."); line/col inside the message stay
+/// element-relative, since the document is never held in one piece.
 pub struct ArrayStream<R: std::io::Read> {
     src: R,
     buf: Vec<u8>,
     /// First unconsumed byte of `buf`.
     start: usize,
+    /// Bytes dropped from the front of `buf` by [`Self::compact`]:
+    /// `buf[i]` sits at absolute source offset `consumed + i`.
+    consumed: u64,
     /// `[` has been consumed.
     started: bool,
     /// Elements yielded so far.
@@ -333,6 +340,7 @@ impl<R: std::io::Read> ArrayStream<R> {
             src,
             buf: Vec::new(),
             start: 0,
+            consumed: 0,
             started: false,
             count: 0,
             finished: false,
@@ -354,6 +362,7 @@ impl<R: std::io::Read> ArrayStream<R> {
     /// ranges under scan are never invalidated).
     fn compact(&mut self) {
         if self.start > 0 {
+            self.consumed += self.start as u64;
             self.buf.drain(..self.start);
             self.start = 0;
         }
@@ -511,8 +520,10 @@ impl<R: std::io::Read> ArrayStream<R> {
                 other => other.to_string(),
             };
             Error::Json(format!(
-                "config stream element {}: {}",
-                self.count, msg
+                "config stream element {} (byte {}): {}",
+                self.count,
+                self.consumed + a as u64,
+                msg
             ))
         })?;
         self.count += 1;
@@ -610,6 +621,17 @@ mod tests {
     }
 
     #[test]
+    fn error_columns_count_chars_not_bytes() {
+        // 'é' is two bytes but one column wide: the bad literal after
+        // {"héé":  starts at character column 9, not byte column 11.
+        let e = parse("{\"héé\": nul}").unwrap_err().to_string();
+        assert!(e.contains("col 9"), "{e}");
+        // Pure-ASCII positions are unchanged.
+        let e = parse("{\"haa\": nul}").unwrap_err().to_string();
+        assert!(e.contains("col 9"), "{e}");
+    }
+
+    #[test]
     fn rejects_garbage() {
         for bad in [
             "", "{", "[", "\"", "{\"a\"}", "[1,]", "{\"a\":1,}", "01", "1.",
@@ -694,6 +716,23 @@ mod tests {
         assert!(e.contains("element 1"), "{e}");
         // A terminal error ends the iterator.
         assert!(s.next().is_none());
+    }
+
+    #[test]
+    fn array_stream_errors_carry_absolute_byte_offsets() {
+        // "nope" starts at byte 4 of the document.
+        let doc = "[1, nope, 3]";
+        let mut s = ArrayStream::new(std::io::Cursor::new(doc));
+        assert_eq!(s.next().unwrap().unwrap(), Value::Number(1.0));
+        let e = s.next().unwrap().unwrap_err().to_string();
+        assert!(e.contains("element 1 (byte 4)"), "{e}");
+        // The offset must survive buffer compaction: the same document
+        // through a one-byte-per-read source compacts after every
+        // element, so a buffer-relative index would be wrong here.
+        let mut s = ArrayStream::new(Trickle(doc.as_bytes()));
+        assert_eq!(s.next().unwrap().unwrap(), Value::Number(1.0));
+        let e = s.next().unwrap().unwrap_err().to_string();
+        assert!(e.contains("element 1 (byte 4)"), "{e}");
     }
 
     #[test]

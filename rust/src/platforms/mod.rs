@@ -8,7 +8,9 @@
 //! identifies per platform plus public spec sheets.
 
 use crate::error::{Error, Result};
-use crate::sim::{PrefetchKind, TlbGeometry, TlbTable};
+use crate::sim::{
+    DramConfig, InterleavePolicy, PrefetchKind, TlbGeometry, TlbTable,
+};
 
 /// A simulated CPU platform (the paper's OpenMP/Scalar targets).
 #[derive(Debug, Clone)]
@@ -59,6 +61,9 @@ pub struct CpuPlatform {
     /// TX2's observed ability to absorb repeated overwrites of the same
     /// lines (paper §5.4.2 item 1).
     pub absorbs_repeated_writes: bool,
+    /// Banked DRAM geometry, address-interleave policy, and conflict
+    /// cost (`sim::dram`).
+    pub dram: DramConfig,
 }
 
 impl CpuPlatform {
@@ -110,6 +115,9 @@ pub struct GpuPlatform {
     /// Aggregate memory-issue rate: transactions per nanosecond the
     /// SMs can generate (caps small-stride in-cache patterns).
     pub txn_per_ns: f64,
+    /// Banked DRAM geometry, address-interleave policy, and conflict
+    /// cost (`sim::dram`).
+    pub dram: DramConfig,
 }
 
 /// CPU registry, Table 3 order (plus Naples which appears in Figs 3/6
@@ -153,6 +161,15 @@ pub fn cpus() -> Vec<CpuPlatform> {
             tlb_walk_ns: 120.0,
             coherence_ns: 260.0,
             absorbs_repeated_writes: false,
+            // MCDRAM: 8 channels, flat-ish bank structure.
+            dram: DramConfig {
+                channels: 8,
+                ranks: 1,
+                bank_groups: 2,
+                banks: 4,
+                interleave: InterleavePolicy::RowBankChannel,
+                conflict_penalty_bytes: 32.0,
+            },
         },
         CpuPlatform {
             name: "bdw",
@@ -188,6 +205,15 @@ pub fn cpus() -> Vec<CpuPlatform> {
             tlb_walk_ns: 70.0,
             coherence_ns: 220.0,
             absorbs_repeated_writes: false,
+            // 4-channel DDR4-2400, 4 bank groups x 4 banks per rank.
+            dram: DramConfig {
+                channels: 4,
+                ranks: 1,
+                bank_groups: 4,
+                banks: 4,
+                interleave: InterleavePolicy::RowBankChannel,
+                conflict_penalty_bytes: 32.0,
+            },
         },
         CpuPlatform {
             name: "skx",
@@ -219,6 +245,16 @@ pub fn cpus() -> Vec<CpuPlatform> {
             tlb_walk_ns: 55.0,
             coherence_ns: 240.0,
             absorbs_repeated_writes: false,
+            // 6-channel DDR4-2666: the odd channel count decorrelates
+            // power-of-two row strides (see `--suite dram`).
+            dram: DramConfig {
+                channels: 6,
+                ranks: 1,
+                bank_groups: 4,
+                banks: 4,
+                interleave: InterleavePolicy::RowBankChannel,
+                conflict_penalty_bytes: 32.0,
+            },
         },
         CpuPlatform {
             name: "clx",
@@ -250,6 +286,15 @@ pub fn cpus() -> Vec<CpuPlatform> {
             tlb_walk_ns: 50.0,
             coherence_ns: 190.0,
             absorbs_repeated_writes: false,
+            // 6-channel DDR4-2933 (same interleave shape as SKX).
+            dram: DramConfig {
+                channels: 6,
+                ranks: 1,
+                bank_groups: 4,
+                banks: 4,
+                interleave: InterleavePolicy::RowBankChannel,
+                conflict_penalty_bytes: 32.0,
+            },
         },
         CpuPlatform {
             name: "tx2",
@@ -284,6 +329,15 @@ pub fn cpus() -> Vec<CpuPlatform> {
             // §5.4.2 item 1: handles writing the same location over and
             // over very well.
             absorbs_repeated_writes: true,
+            // 8-channel DDR4-2666 (TX2's wide memory system).
+            dram: DramConfig {
+                channels: 8,
+                ranks: 1,
+                bank_groups: 2,
+                banks: 4,
+                interleave: InterleavePolicy::RowBankChannel,
+                conflict_penalty_bytes: 32.0,
+            },
         },
         CpuPlatform {
             name: "naples",
@@ -319,6 +373,16 @@ pub fn cpus() -> Vec<CpuPlatform> {
             tlb_walk_ns: 75.0,
             coherence_ns: 320.0,
             absorbs_repeated_writes: false,
+            // Per-die 2-channel DDR4 x 2 dies feeding one socket's
+            // sweep: modelled as 4 channels of 4x4 banks.
+            dram: DramConfig {
+                channels: 4,
+                ranks: 1,
+                bank_groups: 4,
+                banks: 4,
+                interleave: InterleavePolicy::RowBankChannel,
+                conflict_penalty_bytes: 32.0,
+            },
         },
     ]
 }
@@ -349,6 +413,15 @@ pub fn gpus() -> Vec<GpuPlatform> {
             tlb_mlp: 8.0,
             write_contend_ns: 9.0,
             txn_per_ns: 12.0,
+            // GDDR5: 12 channels x 16 banks, no bank groups.
+            dram: DramConfig {
+                channels: 12,
+                ranks: 1,
+                bank_groups: 1,
+                banks: 16,
+                interleave: InterleavePolicy::RowBankChannel,
+                conflict_penalty_bytes: 16.0,
+            },
         },
         GpuPlatform {
             name: "titanxp",
@@ -371,6 +444,15 @@ pub fn gpus() -> Vec<GpuPlatform> {
             tlb_mlp: 16.0,
             write_contend_ns: 4.0,
             txn_per_ns: 28.0,
+            // GDDR5X: 12 channels x 16 banks.
+            dram: DramConfig {
+                channels: 12,
+                ranks: 1,
+                bank_groups: 1,
+                banks: 16,
+                interleave: InterleavePolicy::RowBankChannel,
+                conflict_penalty_bytes: 12.0,
+            },
         },
         GpuPlatform {
             name: "p100",
@@ -393,6 +475,15 @@ pub fn gpus() -> Vec<GpuPlatform> {
             tlb_mlp: 16.0,
             write_contend_ns: 3.5,
             txn_per_ns: 32.0,
+            // HBM2: 16 pseudo-channels x 16 banks, cheap activations.
+            dram: DramConfig {
+                channels: 16,
+                ranks: 1,
+                bank_groups: 1,
+                banks: 16,
+                interleave: InterleavePolicy::RowBankChannel,
+                conflict_penalty_bytes: 8.0,
+            },
         },
         GpuPlatform {
             name: "v100",
@@ -417,6 +508,15 @@ pub fn gpus() -> Vec<GpuPlatform> {
             tlb_mlp: 24.0,
             write_contend_ns: 2.5,
             txn_per_ns: 80.0,
+            // HBM2: 16 pseudo-channels x 16 banks, cheap activations.
+            dram: DramConfig {
+                channels: 16,
+                ranks: 1,
+                bank_groups: 1,
+                banks: 16,
+                interleave: InterleavePolicy::RowBankChannel,
+                conflict_penalty_bytes: 8.0,
+            },
         },
     ]
 }
@@ -586,6 +686,36 @@ mod tests {
         assert_eq!(gpu_by_name("v100").unwrap().tlb.sixty_four_kb.entries, 4096);
         // BDW keeps only small dedicated huge-page DTLBs.
         assert_eq!(by_name("bdw").unwrap().tlb.two_mb.entries, 32);
+    }
+
+    #[test]
+    fn dram_geometry_is_sane() {
+        // Every platform carries a usable banked-DRAM config, and the
+        // shipped default is fine-grained channel interleave (the
+        // calibration anchors were measured under it).
+        for p in cpus() {
+            assert!(p.dram.total_banks() >= 16, "{}", p.name);
+            assert_eq!(
+                p.dram.interleave,
+                InterleavePolicy::RowBankChannel,
+                "{}",
+                p.name
+            );
+            assert!(p.dram.conflict_penalty_bytes > 0.0, "{}", p.name);
+        }
+        for p in gpus() {
+            assert!(p.dram.total_banks() >= 64, "{}", p.name);
+            assert!(
+                p.dram.conflict_penalty_bytes
+                    <= cpus()[0].dram.conflict_penalty_bytes,
+                "{}: GPU parts have more bank-level parallelism",
+                p.name
+            );
+        }
+        // SKX/CLX: six channels — the odd channel count that breaks
+        // power-of-two aliasing in the dram suite.
+        assert_eq!(by_name("skx").unwrap().dram.channels, 6);
+        assert_eq!(by_name("clx").unwrap().dram.total_banks(), 96);
     }
 
     #[test]

@@ -4,15 +4,17 @@
 //! # Why it is exact
 //!
 //! Both engines advance a periodic index pattern through a
-//! deterministic state machine (caches, TLB, prefetcher, DRAM open-row
-//! tracker). The machine's evolution is *equivariant under address
+//! deterministic state machine (caches, TLB, prefetcher, banked DRAM
+//! row buffers). The machine's evolution is *equivariant under address
 //! shifts*: adding a constant to every resident tag, the base address,
 //! and the access stream produces the same hit/miss/eviction sequence
 //! with every address shifted by that constant — set indices rotate
 //! uniformly, LRU decisions depend only on stamp order, and the
-//! alignment-sensitive mechanisms (page crossings, DRAM rows, buddy
-//! lines, the 4 KiB prefetch fence) are preserved as long as the shift
-//! is a multiple of the page size (which divides all of them).
+//! alignment-sensitive mechanisms (page crossings, DRAM rows and bank
+//! assignment, buddy lines, the 4 KiB prefetch fence) are preserved as
+//! long as the shift is a multiple of the page size and of the DRAM
+//! bank span (each digest embeds its own alignment residue, so a
+//! fingerprint match implies a compatible shift).
 //!
 //! So the engines fingerprint their state *relative to the current
 //! base address* after every outer iteration, together with the base's

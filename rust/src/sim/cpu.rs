@@ -28,6 +28,7 @@ use std::collections::HashSet;
 
 use super::cache::{Cache, Probe};
 use super::closure::{self, LoopCloser, Observation};
+use super::dram::DramModel;
 use super::memory::{
     PageSize, PageTableWalker, PhysicalAddress, Tlb, VirtualAddress,
 };
@@ -133,19 +134,20 @@ pub struct CpuEngine {
     /// dense kernel's output stream), rebuilt once per pass (empty for
     /// single-buffer kernels).
     idx2_bytes: Vec<u64>,
-    /// Open-row trackers for the DRAM row-locality model, one per
-    /// operand stream: each stream's allocation is served by its own
-    /// bank group, so multi-operand kernels (GS, the STREAM tetrad)
-    /// don't thrash a single open row. Single-stream kernels use slot
-    /// 0 only — numerically identical to a lone tracker.
-    open_rows: [u64; MAX_STREAMS],
+    /// Banked DRAM row-buffer model (`sim::dram`): channels × ranks ×
+    /// bank groups × banks of open rows, shared by every operand
+    /// stream, with a per-stream slot offset so the 1 GiB-apart
+    /// regions of multi-operand kernels (GS, the STREAM tetrad) don't
+    /// alias onto one bank. Classifies every DRAM-facing access as a
+    /// row hit / miss / conflict.
+    dram: DramModel,
     /// Effective OpenMP thread count for the next run (resolved from
     /// `opts.threads` / the platform default; overridable per run via
     /// [`CpuEngine::set_threads`]).
     threads: usize,
 }
 
-/// DRAM row size for the row-locality model (2 KiB = 32 lines).
+/// DRAM row-buffer size for the banked row model (2 KiB = 32 lines).
 const ROW_LINES: u64 = 32;
 /// Row-activation cost in equivalent bytes of transfer.
 const ROW_PENALTY_BYTES: f64 = 64.0;
@@ -171,12 +173,12 @@ impl CpuEngine {
             walker: PageTableWalker::new(p.tlb_walk_ns, page, WALK_OVERLAP),
             prefetchers: std::array::from_fn(|_| Prefetcher::new(pf_kind)),
             threads: opts.threads.unwrap_or(p.threads).max(1),
+            dram: DramModel::new(&p.dram, ROW_LINES * LINE),
             platform: p,
             opts,
             pf_buf: Vec::with_capacity(8),
             idx_bytes: Vec::new(),
             idx2_bytes: Vec::new(),
-            open_rows: [u64::MAX; MAX_STREAMS],
         }
     }
 
@@ -230,19 +232,16 @@ impl CpuEngine {
         for pf in &mut self.prefetchers {
             pf.reset();
         }
-        self.open_rows = [u64::MAX; MAX_STREAMS];
+        self.dram.reset();
     }
 
-    /// Track DRAM row transitions for the fill stream of operand
+    /// Classify a DRAM-facing access (fill, prefetch fill, or
+    /// streaming store) against the banked row model for operand
     /// stream `sid`. DRAM-facing: only translated addresses may reach
     /// the row model.
     #[inline]
     fn note_row(&mut self, pa: PhysicalAddress, sid: usize, c: &mut SimCounters) {
-        let row = pa.line() / ROW_LINES;
-        if row != self.open_rows[sid] {
-            c.row_activations += 1;
-            self.open_rows[sid] = row;
-        }
+        self.dram.access(pa.byte(), sid, c);
     }
 
     /// Simulate one Spatter run and return modelled time + counters.
@@ -512,7 +511,6 @@ impl CpuEngine {
         let base_line = base_bytes / LINE;
         let page = self.tlb.page_size();
         let base_vpn = base_bytes >> page.shift();
-        let base_row = base_line / ROW_LINES;
         let rel = |v: u64, b: u64| {
             if v == u64::MAX {
                 u64::MAX
@@ -531,9 +529,10 @@ impl CpuEngine {
             for pf in &self.prefetchers {
                 h = closure::fold(h, pf.state_digest(base_bytes, seed));
             }
-            for &row in &self.open_rows {
-                h = closure::fold(h, rel(row, base_row));
-            }
+            // The banked DRAM digest embeds the base's span residue:
+            // closure can only match at bank-assignment-preserving
+            // shifts (see `sim::dram`).
+            h = closure::fold(h, self.dram.state_digest(base_bytes, seed));
             h = closure::fold(h, rel(last_stream_line, base_line));
             h = closure::fold(h, base_bytes % page.bytes());
             h = closure::fold(h, phase as u64);
@@ -544,8 +543,9 @@ impl CpuEngine {
 
     /// Shift the whole engine state forward by `shift_elems` elements
     /// — the loop-closure fast-forward. Exact because the shift is a
-    /// multiple of the page size (fingerprints embed the page residue),
-    /// which every alignment-sensitive mechanism divides.
+    /// multiple of the page size and of the DRAM bank span
+    /// (fingerprints embed both residues), which every
+    /// alignment-sensitive mechanism divides.
     fn fast_forward(&mut self, shift_elems: u64) {
         let bytes = shift_elems * 8;
         if bytes == 0 {
@@ -559,11 +559,7 @@ impl CpuEngine {
         for pf in &mut self.prefetchers {
             pf.relocate(bytes);
         }
-        for row in &mut self.open_rows {
-            if *row != u64::MAX {
-                *row += lines / ROW_LINES;
-            }
-        }
+        self.dram.relocate(bytes);
     }
 
     #[inline]
@@ -810,8 +806,11 @@ impl CpuEngine {
         let walk_bytes = walks as f64
             * self.walker.uncached_lines_per_walk() as f64
             * (64.0 + ROW_PENALTY_BYTES);
+        // Same-domain back-to-back activations additionally expose
+        // tFAW/tRRD_L serialization (`sim::dram` conflict class).
         let dram_bytes = (c.dram_read_bytes() + c.dram_write_bytes()) as f64
             + c.row_activations as f64 * ROW_PENALTY_BYTES
+            + c.dram_row_conflicts as f64 * p.dram.conflict_penalty_bytes
             + walk_bytes;
         let dram_s = dram_bytes / (p.stream_gbs * 1e9 * dram_eff);
         let latency_s =

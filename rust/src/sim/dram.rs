@@ -1,0 +1,410 @@
+//! Banked DRAM row-buffer model (ISSUE 7 tentpole).
+//!
+//! Replaces the scalar open-row-per-operand-stream registers with a
+//! DDR4-style bank state machine shared by both engines: `channels ×
+//! ranks × bank groups × banks` of [`BankState`], each holding one open
+//! row. Every DRAM-facing access (demand fill, prefetch fill,
+//! streaming store) is classified against the bank array:
+//!
+//! - **row hit** — the access's row is already open in its bank; the
+//!   column read rides the row buffer at full burst rate (tCAS only,
+//!   already covered by the per-line transfer cost).
+//! - **row miss** — the bank holds a different row (or none), but the
+//!   previous activation landed in a *different* serialization domain
+//!   (channel × bank group), so the precharge + activate overlaps with
+//!   in-flight traffic. Charged the existing row-activation penalty.
+//! - **row conflict** — the bank must open a new row *and* the
+//!   immediately preceding activation used the same channel + bank
+//!   group, so tRRD_L/tFAW-class serialization exposes the full
+//!   precharge + activate latency. Charged the activation penalty plus
+//!   the platform's `conflict_penalty_bytes`.
+//!
+//! Power-of-two strides whose row stride is a multiple of the bank
+//! count alias every access onto one bank (conflict per access);
+//! odd strides rotate through banks and channels (near-zero
+//! conflicts) — the bank-conflict collapse the `--suite dram` sweep
+//! measures.
+//!
+//! # Timing
+//!
+//! Bank timing is expressed in DDR4-2400 memory-clock cycles and
+//! converted to the simulator's byte-equivalent cost model (the
+//! engines account time as bytes moved at peak bandwidth):
+//!
+//! - `tRCD` ≈ [`T_RCD_CYCLES`] and `tRP` ≈ [`T_RP_CYCLES`]: one
+//!   activate + precharge pair costs roughly a cache line of transfer
+//!   time at burst rate — the engines' existing per-activation
+//!   `ROW_PENALTY_BYTES` (64 B).
+//! - `tCAS` ≈ [`T_CAS_CYCLES`]: column access overlaps the burst and
+//!   is covered by the per-line transfer cost.
+//! - `tFAW`/`tRRD_L` ≈ [`T_FAW_CYCLES`]: back-to-back activations in
+//!   the same channel + bank group cannot overlap; the exposed extra
+//!   latency is the per-platform `conflict_penalty_bytes`
+//!   (≈ half a line on CPUs, less on HBM/GDDR parts with more
+//!   channel-level parallelism).
+//!
+//! # Closure compatibility
+//!
+//! The model participates in steady-state loop closure exactly like
+//! `Tlb` and `Prefetcher` (`sim/closure.rs`): [`DramModel::state_digest`]
+//! folds every bank's open row *relative* to the base row plus the
+//! base's span residue, and [`DramModel::relocate`] shifts the whole
+//! array forward. Because the digest embeds `base % span_bytes`
+//! (span = total banks × row bytes), two states can only match when
+//! their bases differ by a whole number of spans — precisely the
+//! shifts under which bank assignment and serialization domains are
+//! preserved, so fast-forwarded cycles stay bit-identical.
+
+use super::SimCounters;
+
+/// DDR4-2400 `tRCD` in memory-clock cycles (activate to column).
+pub const T_RCD_CYCLES: u32 = 16;
+/// DDR4-2400 `tRP` in memory-clock cycles (precharge).
+pub const T_RP_CYCLES: u32 = 16;
+/// DDR4-2400 `tCAS` in memory-clock cycles (column access strobe).
+pub const T_CAS_CYCLES: u32 = 16;
+/// DDR4-2400 `tFAW` in memory-clock cycles (four-activate window);
+/// with `tRRD_L`, the source of the same-bank-group conflict penalty.
+pub const T_FAW_CYCLES: u32 = 26;
+
+/// Which address bits select the channel/bank, i.e. how consecutive
+/// DRAM rows spread across the bank array. A per-platform knob
+/// (`platforms::CpuPlatform::dram` / `GpuPlatform::dram`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InterleavePolicy {
+    /// `row : bank : channel` — the channel bits are lowest, so
+    /// consecutive rows rotate channels first, then banks. Sequential
+    /// streams spread across every channel (fine-grained interleave,
+    /// the default on all modelled platforms).
+    RowBankChannel,
+    /// `row : channel : bank` — the bank bits are lowest, so
+    /// consecutive rows walk the banks of one channel before moving
+    /// on. Coarse-grained interleave: sequential row streams pay
+    /// same-bank-group serialization.
+    RowChannelBank,
+}
+
+impl InterleavePolicy {
+    pub const ALL: &'static [InterleavePolicy] = &[
+        InterleavePolicy::RowBankChannel,
+        InterleavePolicy::RowChannelBank,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InterleavePolicy::RowBankChannel => "row:bank:channel",
+            InterleavePolicy::RowChannelBank => "row:channel:bank",
+        }
+    }
+}
+
+/// Per-platform DRAM geometry + conflict cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DramConfig {
+    pub channels: u64,
+    pub ranks: u64,
+    pub bank_groups: u64,
+    /// Banks per bank group.
+    pub banks: u64,
+    pub interleave: InterleavePolicy,
+    /// Extra byte-equivalent cost of a same-domain (channel × bank
+    /// group) back-to-back activation — the exposed tFAW/tRRD_L
+    /// serialization (see the module docs).
+    pub conflict_penalty_bytes: f64,
+}
+
+impl DramConfig {
+    /// Total addressable banks: `channels × ranks × bank groups ×
+    /// banks`.
+    pub fn total_banks(&self) -> u64 {
+        self.channels * self.ranks * self.bank_groups * self.banks
+    }
+}
+
+/// One bank's row buffer: the open row id, or [`u64::MAX`] when the
+/// bank is precharged (closed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BankState {
+    pub open_row: u64,
+}
+
+impl BankState {
+    const CLOSED: BankState = BankState { open_row: u64::MAX };
+}
+
+/// Slot offset per operand stream: multi-operand kernels (GS, the
+/// STREAM tetrad) allocate their regions 1 GiB apart, which is a
+/// multiple of every modelled span — without a per-stream offset the
+/// lockstep streams of a Triad would alias onto one bank and thrash.
+/// Real allocators break this alignment via physical-page scrambling;
+/// a small per-stream slot rotation models the same decorrelation.
+const SID_SLOT_SALT: u64 = 21;
+
+/// The banked DRAM state machine. One instance per engine; owned rows
+/// are global row ids (byte address / row bytes), so the model is
+/// exact under `relocate` shifts.
+#[derive(Clone, Debug)]
+pub struct DramModel {
+    cfg: DramConfig,
+    row_bytes: u64,
+    banks: Vec<BankState>,
+    /// Serialization domain (channel × bank group) of the most recent
+    /// activation; `u64::MAX` = none yet.
+    last_act_domain: u64,
+}
+
+impl DramModel {
+    pub fn new(cfg: &DramConfig, row_bytes: u64) -> DramModel {
+        debug_assert!(row_bytes.is_power_of_two());
+        debug_assert!(cfg.total_banks() > 0);
+        DramModel {
+            cfg: *cfg,
+            row_bytes,
+            banks: vec![BankState::CLOSED; cfg.total_banks() as usize],
+            last_act_domain: u64::MAX,
+        }
+    }
+
+    pub fn config(&self) -> &DramConfig {
+        &self.cfg
+    }
+
+    /// Bytes per DRAM row (row-buffer size).
+    pub fn row_bytes(&self) -> u64 {
+        self.row_bytes
+    }
+
+    /// The address period over which bank assignment repeats: total
+    /// banks × row bytes. Closure shifts must be multiples of this.
+    pub fn span_bytes(&self) -> u64 {
+        self.cfg.total_banks() * self.row_bytes
+    }
+
+    pub fn reset(&mut self) {
+        self.banks.fill(BankState::CLOSED);
+        self.last_act_domain = u64::MAX;
+    }
+
+    /// Bank index for a global row accessed by operand stream `sid`.
+    #[inline]
+    fn slot(&self, row: u64, sid: usize) -> u64 {
+        (row + sid as u64 * SID_SLOT_SALT) % self.cfg.total_banks()
+    }
+
+    /// Serialization domain (channel × bank group) of a bank slot
+    /// under the configured interleave policy.
+    #[inline]
+    fn domain(&self, slot: u64) -> u64 {
+        let c = &self.cfg;
+        match c.interleave {
+            InterleavePolicy::RowBankChannel => {
+                // Channel lowest, then rank, bank group, bank.
+                let channel = slot % c.channels;
+                let group = slot / (c.channels * c.ranks) % c.bank_groups;
+                channel * c.bank_groups + group
+            }
+            InterleavePolicy::RowChannelBank => {
+                // Bank lowest, then bank group, rank, channel.
+                let group = slot / c.banks % c.bank_groups;
+                let channel =
+                    slot / (c.banks * c.bank_groups * c.ranks) % c.channels;
+                channel * c.bank_groups + group
+            }
+        }
+    }
+
+    /// Classify one DRAM-facing access (only translated, DRAM-bound
+    /// addresses may reach the model): updates the bank array and the
+    /// row hit/miss/conflict counters. Every miss or conflict is also
+    /// a `row_activations` tick, preserving the engines' existing
+    /// activation-penalty accounting.
+    #[inline]
+    pub fn access(&mut self, byte_addr: u64, sid: usize, c: &mut SimCounters) {
+        let row = byte_addr / self.row_bytes;
+        let slot = self.slot(row, sid);
+        let bank = &mut self.banks[slot as usize];
+        if bank.open_row == row {
+            c.dram_row_hits += 1;
+            return;
+        }
+        bank.open_row = row;
+        c.row_activations += 1;
+        let domain = self.domain(slot);
+        if domain == self.last_act_domain {
+            c.dram_row_conflicts += 1;
+        } else {
+            c.dram_row_misses += 1;
+        }
+        self.last_act_domain = domain;
+    }
+
+    /// Closure digest of the full bank array *relative* to the base
+    /// address, plus the base's span residue (see the module docs:
+    /// equal digests imply a span-aligned shift, under which slots and
+    /// domains are preserved exactly).
+    pub fn state_digest(&self, base_bytes: u64, seed: u64) -> u64 {
+        use super::closure::fold;
+        let base_row = base_bytes / self.row_bytes;
+        let mut h = seed;
+        for bank in &self.banks {
+            let rel = if bank.open_row == u64::MAX {
+                u64::MAX
+            } else {
+                bank.open_row.wrapping_sub(base_row)
+            };
+            h = fold(h, rel);
+        }
+        h = fold(h, base_bytes % self.span_bytes());
+        h = fold(h, self.last_act_domain);
+        h
+    }
+
+    /// Shift every open row forward by `delta_bytes` — the closure
+    /// fast-forward. Exact because closure shifts are span multiples
+    /// (the digest embeds the span residue), so each bank's future
+    /// accesses land on the same slot with uniformly shifted rows.
+    pub fn relocate(&mut self, delta_bytes: u64) {
+        debug_assert_eq!(
+            delta_bytes % self.span_bytes(),
+            0,
+            "closure shifts must preserve bank assignment"
+        );
+        let delta_rows = delta_bytes / self.row_bytes;
+        for bank in &mut self.banks {
+            if bank.open_row != u64::MAX {
+                bank.open_row += delta_rows;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(interleave: InterleavePolicy) -> DramConfig {
+        DramConfig {
+            channels: 2,
+            ranks: 1,
+            bank_groups: 2,
+            banks: 2,
+            interleave,
+            conflict_penalty_bytes: 32.0,
+        }
+    }
+
+    fn counts(c: &SimCounters) -> (u64, u64, u64, u64) {
+        (
+            c.dram_row_hits,
+            c.dram_row_misses,
+            c.dram_row_conflicts,
+            c.row_activations,
+        )
+    }
+
+    #[test]
+    fn hit_miss_conflict_classification() {
+        let mut m = DramModel::new(&cfg(InterleavePolicy::RowBankChannel), 2048);
+        let mut c = SimCounters::default();
+        // First touch activates (miss: no prior activation domain).
+        m.access(0, 0, &mut c);
+        assert_eq!(counts(&c), (0, 1, 0, 1));
+        // Same row again: row-buffer hit, no activation.
+        m.access(64, 0, &mut c);
+        assert_eq!(counts(&c), (1, 1, 0, 1));
+        // Same bank (row + total_banks rows away), different row,
+        // immediately after an activation in that same bank: conflict.
+        let span = m.span_bytes();
+        m.access(span, 0, &mut c);
+        assert_eq!(counts(&c), (1, 1, 1, 2));
+        // Activations always split exactly into misses + conflicts.
+        assert_eq!(c.dram_row_misses + c.dram_row_conflicts, c.row_activations);
+    }
+
+    #[test]
+    fn interleave_policy_changes_adjacent_row_domains() {
+        // Adjacent rows: fine-grained interleave rotates channels
+        // (miss), coarse-grained walks banks within one channel + bank
+        // group (conflict).
+        let mut fine =
+            DramModel::new(&cfg(InterleavePolicy::RowBankChannel), 2048);
+        let mut c = SimCounters::default();
+        fine.access(0, 0, &mut c);
+        fine.access(2048, 0, &mut c);
+        assert_eq!(counts(&c), (0, 2, 0, 2));
+
+        let mut coarse =
+            DramModel::new(&cfg(InterleavePolicy::RowChannelBank), 2048);
+        let mut c = SimCounters::default();
+        coarse.access(0, 0, &mut c);
+        coarse.access(2048, 0, &mut c);
+        assert_eq!(counts(&c), (0, 1, 1, 2));
+    }
+
+    #[test]
+    fn pow2_alias_conflicts_odd_stride_rotates() {
+        // Row stride == total banks: every access lands in one bank,
+        // each with a new row — conflict per access after the first.
+        let m_cfg = cfg(InterleavePolicy::RowBankChannel);
+        let total = m_cfg.total_banks();
+        let mut m = DramModel::new(&m_cfg, 2048);
+        let mut c = SimCounters::default();
+        for i in 0..16u64 {
+            m.access(i * total * 2048, 0, &mut c);
+        }
+        assert_eq!(c.dram_row_conflicts, 15);
+
+        // Co-prime row stride: banks and channels rotate, so no two
+        // consecutive activations share a domain.
+        let mut m = DramModel::new(&m_cfg, 2048);
+        let mut c = SimCounters::default();
+        for i in 0..16u64 {
+            m.access(i * (total + 1) * 2048, 0, &mut c);
+        }
+        assert_eq!(c.dram_row_conflicts, 0);
+        assert_eq!(c.dram_row_misses, 16);
+    }
+
+    #[test]
+    fn per_stream_salt_decorrelates_span_aligned_regions() {
+        // Lockstep operand streams 1 GiB apart (a multiple of every
+        // modelled span) must settle into distinct banks, exactly like
+        // the old per-stream open-row registers.
+        let mut m = DramModel::new(&cfg(InterleavePolicy::RowBankChannel), 2048);
+        let mut c = SimCounters::default();
+        for round in 0..4u64 {
+            for sid in 0..3usize {
+                m.access((sid as u64) << 30 | round * 64, sid, &mut c);
+            }
+        }
+        // Three activations (one per stream), everything else hits.
+        assert_eq!(c.row_activations, 3);
+        assert_eq!(c.dram_row_hits, 9);
+    }
+
+    #[test]
+    fn digest_and_relocate_model_a_shifted_replay() {
+        // History at base 0 + relocate(span) must be indistinguishable
+        // from the same history run pre-shifted by one span.
+        let span = cfg(InterleavePolicy::RowChannelBank).total_banks() * 2048;
+        let addrs = [0u64, 2048, 4096, 9 * 2048, 2048, 64];
+        let mut a = DramModel::new(&cfg(InterleavePolicy::RowChannelBank), 2048);
+        let mut b = DramModel::new(&cfg(InterleavePolicy::RowChannelBank), 2048);
+        let (mut ca, mut cb) = (SimCounters::default(), SimCounters::default());
+        for &addr in &addrs {
+            a.access(addr, 0, &mut ca);
+            b.access(addr + span, 0, &mut cb);
+        }
+        assert_eq!(counts(&ca), counts(&cb), "span shift preserves classes");
+        a.relocate(span);
+        for seed in [1u64, 0x9E37_79B1_85EB_CA87] {
+            assert_eq!(
+                a.state_digest(span, seed),
+                b.state_digest(span, seed),
+                "relocated state must digest-match the shifted replay"
+            );
+        }
+        // Non-span-aligned bases must not match (span residue differs).
+        assert_ne!(a.state_digest(span, 1), a.state_digest(span + 2048, 1));
+    }
+}

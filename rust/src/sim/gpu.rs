@@ -21,6 +21,7 @@
 
 use super::cache::{Cache, Probe};
 use super::closure::{self, LoopCloser, Observation};
+use super::dram::DramModel;
 use super::memory::{
     PageSize, PageTableWalker, PhysicalAddress, Tlb, VirtualAddress,
 };
@@ -31,10 +32,6 @@ use crate::platforms::GpuPlatform;
 
 /// Warp width (threads / elements per coalescing window).
 const WARP: usize = 32;
-
-/// Most operand streams any kernel issues (Add/Triad: two reads plus
-/// one write) — sizes the per-stream DRAM open-row table.
-const MAX_STREAMS: usize = 3;
 
 /// Options for a simulated GPU run.
 #[derive(Debug, Clone)]
@@ -74,10 +71,10 @@ pub struct GpuEngine {
     /// per-transaction translation + parallel-walker latency model.
     tlb: Tlb,
     walker: PageTableWalker,
-    /// Open-row trackers, one per operand stream (each stream's
-    /// allocation is served by its own bank group — see the CPU
-    /// engine). Single-stream kernels use slot 0 only.
-    open_rows: [u64; MAX_STREAMS],
+    /// Banked DRAM row-buffer model (`sim::dram`) at the platform's
+    /// row size, shared by every operand stream with per-stream slot
+    /// offsets (see the CPU engine).
+    dram: DramModel,
     /// Scratch: sector ids of the current warp (cleared in place,
     /// never reallocated — see the scratch invariants in `sim`).
     warp_sectors: Vec<(u64, u32)>,
@@ -102,7 +99,7 @@ impl GpuEngine {
             l2: Cache::new(p.l2_kb * 1024, p.sector_bytes as usize, p.l2_assoc),
             tlb: Tlb::new(p.tlb.geometry(page), page),
             walker: PageTableWalker::new(p.tlb_walk_ns, page, p.tlb_mlp),
-            open_rows: [u64::MAX; MAX_STREAMS],
+            dram: DramModel::new(&p.dram, p.row_bytes),
             warp_sectors: Vec::with_capacity(WARP),
             idx_bytes: Vec::new(),
             idx2_bytes: Vec::new(),
@@ -138,7 +135,7 @@ impl GpuEngine {
     fn reset(&mut self) {
         self.l2.reset();
         self.tlb.reset();
-        self.open_rows = [u64::MAX; MAX_STREAMS];
+        self.dram.reset();
     }
 
     /// Simulate one Spatter run on the GPU model.
@@ -348,33 +345,25 @@ impl GpuEngine {
     }
 
     /// 128-bit fingerprint of the engine state relative to the current
-    /// base (L2 at sector granularity, TLB, open row) plus the base's
-    /// page/row/sector alignment residues and the delta-cycle phase.
+    /// base (L2 at sector granularity, TLB, banked DRAM rows) plus the
+    /// base's page/span/sector alignment residues and the delta-cycle
+    /// phase.
     fn pass_digest(&self, base: i64, phase: usize) -> u128 {
         let base_bytes = (base as u64) * 8;
         let sector_b = self.platform.sector_bytes;
         let page = self.tlb.page_size();
         let base_sector = base_bytes / sector_b;
         let base_vpn = base_bytes >> page.shift();
-        let base_row = base_bytes / self.platform.row_bytes;
-        let rel = |v: u64, b: u64| {
-            if v == u64::MAX {
-                u64::MAX
-            } else {
-                v.wrapping_sub(b)
-            }
-        };
         let mut out = [0u64; 2];
         for (slot, seed) in [closure::SEED_A, closure::SEED_B].into_iter().enumerate()
         {
             let mut h = seed;
             h = closure::fold(h, self.l2.state_digest(base_sector, seed));
             h = closure::fold(h, self.tlb.state_digest(base_vpn, seed));
-            for &row in &self.open_rows {
-                h = closure::fold(h, rel(row, base_row));
-            }
+            // The banked DRAM digest embeds the base's bank-span
+            // residue (a multiple of the row residue it replaces).
+            h = closure::fold(h, self.dram.state_digest(base_bytes, seed));
             h = closure::fold(h, base_bytes % page.bytes());
-            h = closure::fold(h, base_bytes % self.platform.row_bytes);
             h = closure::fold(h, base_bytes % sector_b);
             h = closure::fold(h, phase as u64);
             out[slot] = h;
@@ -384,8 +373,8 @@ impl GpuEngine {
 
     /// Loop-closure fast-forward: shift the engine state by
     /// `shift_elems` elements. Exact — the shift is a multiple of the
-    /// page, row, and sector sizes (all embedded in the fingerprint
-    /// residues).
+    /// page, DRAM bank-span, and sector sizes (all embedded in the
+    /// fingerprint residues).
     fn fast_forward(&mut self, shift_elems: u64) {
         let bytes = shift_elems * 8;
         if bytes == 0 {
@@ -393,11 +382,7 @@ impl GpuEngine {
         }
         self.l2.relocate(bytes / self.platform.sector_bytes);
         self.tlb.relocate(bytes >> self.tlb.page_size().shift());
-        for row in &mut self.open_rows {
-            if *row != u64::MAX {
-                *row += bytes / self.platform.row_bytes;
-            }
-        }
+        self.dram.relocate(bytes);
     }
 
     /// Coalesce one warp's addresses (pre-scaled byte offsets against
@@ -493,15 +478,11 @@ impl GpuEngine {
         }
     }
 
-    /// DRAM row tracker — DRAM-facing, so it accepts only translated
-    /// [`PhysicalAddress`]es.
+    /// Banked DRAM row classification — DRAM-facing, so it accepts
+    /// only translated [`PhysicalAddress`]es.
     #[inline]
     fn note_row(&mut self, pa: PhysicalAddress, sid: usize, c: &mut SimCounters) {
-        let row = pa.byte() / self.platform.row_bytes;
-        if row != self.open_rows[sid] {
-            c.row_activations += 1;
-            self.open_rows[sid] = row;
-        }
+        self.dram.access(pa.byte(), sid, c);
     }
 
     fn timing(
@@ -519,7 +500,8 @@ impl GpuEngine {
         // state evictions match the write rate) + row activations.
         let dram_bytes = c.dram_demand_lines as f64 * sector_b
             + c.writeback_lines as f64 * sector_b
-            + c.row_activations as f64 * p.row_activate_bytes;
+            + c.row_activations as f64 * p.row_activate_bytes
+            + c.dram_row_conflicts as f64 * p.dram.conflict_penalty_bytes;
         let dram_s = dram_bytes / (p.stream_gbs * 1e9);
 
         // L2 bandwidth serves hits.

@@ -44,12 +44,14 @@
 pub mod cache;
 pub mod closure;
 pub mod cpu;
+pub mod dram;
 pub mod gpu;
 pub mod memory;
 pub mod prefetch;
 
 pub use cache::{Cache, Probe};
 pub use cpu::{CpuEngine, CpuSimOptions};
+pub use dram::{BankState, DramConfig, DramModel, InterleavePolicy};
 pub use gpu::GpuEngine;
 pub use memory::{
     PageSize, PageTableWalker, PhysicalAddress, Tlb, TlbGeometry, TlbStats,
@@ -120,8 +122,17 @@ pub struct SimCounters {
     pub coherence_events: u64,
     /// GPU: memory transactions (sectors) issued.
     pub transactions: u64,
-    /// GPU: DRAM row activations.
+    /// DRAM row activations (bank row opened: miss or conflict).
     pub row_activations: u64,
+    /// DRAM accesses served from an already-open row buffer
+    /// ([`dram::DramModel`]).
+    pub dram_row_hits: u64,
+    /// Row activations whose precharge/activate overlapped other
+    /// channels or bank groups (pipelined).
+    pub dram_row_misses: u64,
+    /// Row activations serialized behind the previous activation in
+    /// the same channel + bank group (tFAW/tRRD_L-class stall).
+    pub dram_row_conflicts: u64,
 }
 
 impl SimCounters {
@@ -160,6 +171,10 @@ impl SimCounters {
             coherence_events: self.coherence_events - earlier.coherence_events,
             transactions: self.transactions - earlier.transactions,
             row_activations: self.row_activations - earlier.row_activations,
+            dram_row_hits: self.dram_row_hits - earlier.dram_row_hits,
+            dram_row_misses: self.dram_row_misses - earlier.dram_row_misses,
+            dram_row_conflicts: self.dram_row_conflicts
+                - earlier.dram_row_conflicts,
         }
     }
 
@@ -183,6 +198,9 @@ impl SimCounters {
         self.coherence_events += d.coherence_events * reps;
         self.transactions += d.transactions * reps;
         self.row_activations += d.row_activations * reps;
+        self.dram_row_hits += d.dram_row_hits * reps;
+        self.dram_row_misses += d.dram_row_misses * reps;
+        self.dram_row_conflicts += d.dram_row_conflicts * reps;
     }
 }
 

@@ -19,16 +19,19 @@
 //! | `threadscale` | §3.1 thread-scaling: saturation knee + contention |
 //! | `prefetch` | prefetcher depth/regime sweep, gather + GS coverage knee |
 //! | `baselines` | STREAM tetrad + GUPS measured in-engine, all platforms |
+//! | `dram` | banked-DRAM bank-conflict sweep, pow2 vs odd strides |
 //! | `all` | everything above |
 
 mod apps;
 mod baselines;
+mod dram;
 mod prefetch;
 mod threadscale;
 mod ustride;
 
 pub use apps::{fig7_radar, fig8_radar, fig9_bwbw, table1_characterization, table4_miniapps};
 pub use baselines::{baselines_suite, measured_stream_gbs, BASELINE_KERNELS};
+pub use dram::dram_suite;
 pub use prefetch::prefetch_suite;
 pub use threadscale::threadscale_suite;
 pub use ustride::{
@@ -122,12 +125,13 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
         "threadscale" => threadscale_suite(ctx),
         "prefetch" => prefetch_suite(ctx),
         "baselines" => baselines_suite(ctx),
+        "dram" => dram_suite(ctx),
         "all" => {
             let mut out = String::new();
             for n in [
                 "table1", "fig3", "fig4", "fig5", "fig6", "baselines",
                 "table4", "fig7", "fig8", "fig9", "pagesize", "ustride",
-                "threadscale", "prefetch",
+                "threadscale", "prefetch", "dram",
             ] {
                 out.push_str(&run(n, ctx)?);
                 out.push('\n');
@@ -137,7 +141,7 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
         other => Err(Error::Cli(format!(
             "unknown suite '{other}' \
              (fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|pagesize|\
-             ustride|threadscale|prefetch|baselines|all)"
+             ustride|threadscale|prefetch|baselines|dram|all)"
         ))),
     }
 }
@@ -147,6 +151,7 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
 pub const EXPERIMENTS: &[&str] = &[
     "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1",
     "table4", "pagesize", "ustride", "threadscale", "prefetch", "baselines",
+    "dram",
 ];
 
 #[cfg(test)]

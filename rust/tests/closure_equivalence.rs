@@ -4,13 +4,19 @@
 //! same `SimResult` — counters, breakdown, seconds, bandwidth — with
 //! loop closure force-disabled and force-enabled. Closure is an
 //! optimization, never an approximation.
+//!
+//! The configurations randomize the DRAM address-interleave policy
+//! too: the banked bank state (open rows + last activation domain) is
+//! part of the closure fingerprint, and the counter comparison covers
+//! the per-bank hit/miss/conflict tallies, so a digest that missed a
+//! bank-state difference would fail here.
 
 use spatter::pattern::{table5, Kernel, Pattern, StreamOp};
 use spatter::platforms;
 use spatter::prop::{check, Gen};
 use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
 use spatter::sim::gpu::{GpuEngine, GpuSimOptions};
-use spatter::sim::{PageSize, SimResult};
+use spatter::sim::{InterleavePolicy, PageSize, SimResult};
 
 fn assert_identical(on: &SimResult, off: &SimResult, ctx: &str) {
     assert_eq!(on.counters, off.counters, "{ctx}: counters");
@@ -120,10 +126,11 @@ fn arbitrary_pattern(g: &mut Gen, v_cap: usize) -> Pattern {
 #[test]
 fn prop_cpu_closure_equivalence() {
     check("CPU: closure on == closure off, exactly", 20, |g| {
-        let plat = platforms::by_name(
+        let mut plat = platforms::by_name(
             *g.choose(&["skx", "bdw", "naples", "tx2", "knl", "clx"]),
         )
         .unwrap();
+        plat.dram.interleave = *g.choose(InterleavePolicy::ALL);
         let kernel = arbitrary_kernel(g);
         let page = *g.choose(&[PageSize::FourKB, PageSize::TwoMB]);
         let threads = if g.bool() {
@@ -161,10 +168,11 @@ fn prop_cpu_closure_equivalence() {
 #[test]
 fn prop_gpu_closure_equivalence() {
     check("GPU: closure on == closure off, exactly", 14, |g| {
-        let plat = platforms::gpu_by_name(
+        let mut plat = platforms::gpu_by_name(
             *g.choose(&["k40c", "titanxp", "p100", "v100"]),
         )
         .unwrap();
+        plat.dram.interleave = *g.choose(InterleavePolicy::ALL);
         let kernel = arbitrary_kernel(g);
         let page = *g.choose(&[PageSize::SixtyFourKB, PageSize::TwoMB]);
         let pat = with_kernel_shape(
