@@ -1,8 +1,9 @@
 //! Perf-trajectory bench (plain `std::time::Instant` harness, no
 //! external deps): times the fast `ustride` CPU sweep and a
-//! 256-iteration LULESH-S3 scatter, each with steady-state loop
-//! closure enabled and force-disabled, the scheduler/memo/stream
-//! campaign legs, and the `dram-bank` pow2-vs-odd conflict cell, and
+//! 256-iteration LULESH-S3 scatter, each A/B'd twice — steady-state
+//! loop closure on vs off, and the batch-compiled access plan on vs
+//! off (the `plan-*` records) — plus the scheduler/memo/stream
+//! campaign legs and the `dram-bank` pow2-vs-odd conflict cell, and
 //! emits `BENCH_sim.json` (`{"suite": ..., "wall_ms": ...}` records)
 //! so the repo's perf numbers accumulate run over run.
 //!
@@ -32,6 +33,19 @@ fn opts(closure_enabled: bool) -> CpuSimOptions {
     }
 }
 
+/// Engine options for the plan A/B: the plan pinned per arm
+/// (independent of `SPATTER_NO_PLAN`) and closure pinned *off*, so
+/// every iteration actually walks the per-access path the plan
+/// compiles — with closure on, the analytic fast-forward hides most
+/// of the work being measured.
+fn opts_plan(plan_enabled: bool) -> CpuSimOptions {
+    CpuSimOptions {
+        plan_enabled,
+        closure_enabled: false,
+        ..Default::default()
+    }
+}
+
 /// The `--suite ustride --fast` workload: SKX + BDW, gather + scatter,
 /// strides 1..128 at the fast-mode count.
 fn ustride_fast_sweep(closure: bool) {
@@ -55,6 +69,36 @@ fn lulesh_s3_256(closure: bool) {
     let s3 = table5::by_name("LULESH-S3").unwrap().to_pattern(256);
     let p = platforms::by_name("skx").unwrap();
     let mut e = CpuEngine::with_options(&p, opts(closure));
+    for _ in 0..512 {
+        let r = e.run(&s3, Kernel::Scatter).unwrap();
+        black_box(r.seconds);
+    }
+}
+
+/// The ustride fast sweep again, plan on/off (closure pinned off; see
+/// `opts_plan`).
+fn ustride_fast_sweep_plan(plan: bool) {
+    let count = 1 << 16;
+    for name in ["skx", "bdw"] {
+        let p = platforms::by_name(name).unwrap();
+        let mut e = CpuEngine::with_options(&p, opts_plan(plan));
+        for kernel in [Kernel::Gather, Kernel::Scatter] {
+            for &s in STRIDES {
+                let r = e.run(&cpu_ustride(s, count), kernel).unwrap();
+                black_box(r.bandwidth_gbs());
+            }
+        }
+    }
+}
+
+/// The 256-iteration LULESH-S3 scatter again, plan on/off. Delta-0
+/// revisits make every line a same-line run, so this is the plan's
+/// best case: the coalesced bulk updates replace nearly every scalar
+/// cache probe.
+fn lulesh_s3_256_plan(plan: bool) {
+    let s3 = table5::by_name("LULESH-S3").unwrap().to_pattern(256);
+    let p = platforms::by_name("skx").unwrap();
+    let mut e = CpuEngine::with_options(&p, opts_plan(plan));
     for _ in 0..512 {
         let r = e.run(&s3, Kernel::Scatter).unwrap();
         black_box(r.seconds);
@@ -118,29 +162,35 @@ fn vm_hwm_kib() -> Option<u64> {
 
 fn main() {
     let mut records: Vec<Value> = Vec::new();
-    let mut bench = |suite: &str, f: fn(bool)| {
+    // A/B harness over a boolean engine knob ("closure" or "plan"):
+    // times both arms, prints one line, and records each arm plus a
+    // `<knob>_speedup` figure.
+    let mut bench = |suite: &str, knob: &str, f: fn(bool)| {
         let on_ms = time_ms(|| f(true));
         let off_ms = time_ms(|| f(false));
         println!(
-            "{suite}: closure on {on_ms:.1} ms, off {off_ms:.1} ms \
+            "{suite}: {knob} on {on_ms:.1} ms, off {off_ms:.1} ms \
              ({:.2}x)",
             off_ms / on_ms
         );
-        for (closure, wall_ms) in [(true, on_ms), (false, off_ms)] {
+        for (on, wall_ms) in [(true, on_ms), (false, off_ms)] {
             records.push(obj(&[
                 ("suite", Value::from(suite)),
-                ("closure", Value::Bool(closure)),
+                (knob, Value::Bool(on)),
                 ("wall_ms", Value::from(wall_ms)),
             ]));
         }
+        let speedup_key = format!("{knob}_speedup");
         records.push(obj(&[
             ("suite", Value::from(suite)),
-            ("closure_speedup", Value::from(off_ms / on_ms)),
+            (speedup_key.as_str(), Value::from(off_ms / on_ms)),
         ]));
     };
 
-    bench("ustride-fast", ustride_fast_sweep);
-    bench("lulesh-s3-256", lulesh_s3_256);
+    bench("ustride-fast", "closure", ustride_fast_sweep);
+    bench("lulesh-s3-256", "closure", lulesh_s3_256);
+    bench("plan-ustride-fast", "plan", ustride_fast_sweep_plan);
+    bench("plan-lulesh-s3-256", "plan", lulesh_s3_256_plan);
 
     // --- Campaign-scale scheduler benchmarks (work-stealing pool,
     // memo cache, streaming run mode). The stream leg runs FIRST so

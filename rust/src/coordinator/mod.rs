@@ -19,7 +19,8 @@ pub use memo::{
 pub use runner::{
     render_json, render_table, run_configs, run_configs_jobs,
     run_configs_jobs_memo, run_configs_jobs_stats, run_configs_stream,
-    run_one, Aggregate, BackendFactory, RunRecord, StreamSummary,
+    run_one, sim_accesses_total, Aggregate, BackendFactory, RunRecord,
+    StreamSummary,
 };
 pub use schedule::{
     default_jobs, parallel_map_with, parallel_stream_with, stream_window,

@@ -5,6 +5,7 @@
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::backends::Backend;
 use crate::error::Result;
@@ -34,6 +35,20 @@ impl Drop for FillOnDrop {
     fn drop(&mut self) {
         self.cell.fill(self.value.take());
     }
+}
+
+/// Process-wide tally of simulated accesses across every recorded run
+/// (memo-served records replay their run's accesses — the tally is a
+/// campaign-level diagnostic, not a per-engine one). The CLI divides
+/// it by wall-clock time for the per-sweep host-throughput stderr
+/// line.
+static SIM_ACCESSES: AtomicU64 = AtomicU64::new(0);
+
+/// Total simulated accesses recorded so far in this process (see
+/// [`SIM_ACCESSES`]). Sample before and after a sweep and divide the
+/// delta by the elapsed wall clock for a host-throughput figure.
+pub fn sim_accesses_total() -> u64 {
+    SIM_ACCESSES.load(Ordering::Relaxed)
 }
 
 /// The outcome of one pattern run.
@@ -75,6 +90,12 @@ pub struct RunRecord {
     /// no cycle found, or a real-execution backend). Diagnostic only:
     /// counters and bandwidths are identical either way.
     pub closed_at: Option<usize>,
+    /// Simulated accesses per modelled second (the run's access count
+    /// over its modelled time breakdown) — a deterministic throughput
+    /// diagnostic that is byte-identical across `--jobs`, memo, and
+    /// plan modes, unlike host wall-clock throughput (which goes to
+    /// stderr instead). `0.0` when the backend models no time.
+    pub sim_rate: f64,
     /// Input index of the earliest config with the same physics
     /// fingerprint (`None`: this record is the first occurrence). A
     /// pure function of the config list — independent of schedule,
@@ -136,6 +157,7 @@ impl RunRecord {
                     None => Value::Null,
                 },
             ),
+            ("sim-rate", Value::from(self.sim_rate)),
             (
                 "memo",
                 match self.memo {
@@ -174,6 +196,8 @@ fn record_from_sim(
     memo: Option<usize>,
 ) -> RunRecord {
     let payload = pattern.moved_bytes() as u64;
+    SIM_ACCESSES.fetch_add(r.counters.accesses, Ordering::Relaxed);
+    let modelled = r.breakdown.total();
     RunRecord {
         name: name.to_string(),
         kernel,
@@ -190,6 +214,11 @@ fn record_from_sim(
         tlb_hit_rate: r.counters.tlb.hit_rate(),
         threads: backend.threads(),
         closed_at: r.closed_at_iteration,
+        sim_rate: if modelled > 0.0 {
+            r.counters.accesses as f64 / modelled
+        } else {
+            0.0
+        },
         memo,
         dram_row_hits: r.counters.dram_row_hits,
         dram_row_misses: r.counters.dram_row_misses,

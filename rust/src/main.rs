@@ -75,6 +75,7 @@ fn run(args: &[String]) -> Result<()> {
                 suite::SuiteContext::new(Path::new(&out_dir))
             };
             let ctx = base.with_jobs(jobs);
+            let sim0 = coordinator::sim_accesses_total();
             let t0 = Instant::now();
             let report = suite::run(&name, &ctx)?;
             println!("{report}");
@@ -84,6 +85,7 @@ fn run(args: &[String]) -> Result<()> {
                 ctx.jobs,
                 t0.elapsed().as_secs_f64()
             );
+            report_sim_rate(sim0, t0.elapsed().as_secs_f64());
             Ok(())
         }
         Command::Run(r) => {
@@ -114,6 +116,7 @@ fn run(args: &[String]) -> Result<()> {
                 common.jobs
             };
             let memo_on = coordinator::memo_enabled_from_env();
+            let sim0 = coordinator::sim_accesses_total();
             let t0 = Instant::now();
             if common.stream {
                 let source =
@@ -137,6 +140,7 @@ fn run(args: &[String]) -> Result<()> {
                     jobs,
                     t0.elapsed().as_secs_f64()
                 );
+                report_sim_rate(sim0, t0.elapsed().as_secs_f64());
                 report_memo(summary.memo, memo_on);
                 return Ok(());
             }
@@ -152,10 +156,28 @@ fn run(args: &[String]) -> Result<()> {
                 jobs.min(configs.len().max(1)),
                 t0.elapsed().as_secs_f64()
             );
+            report_sim_rate(sim0, t0.elapsed().as_secs_f64());
             report_memo(memo, memo_on);
             emit(&records, &common);
             Ok(())
         }
+    }
+}
+
+/// One stderr line with the sweep's host simulation throughput:
+/// simulated accesses recorded since `before`, divided by the wall
+/// clock. Campaign-level — memo-served records replay their run's
+/// access counts — and host-dependent by design; the deterministic
+/// per-run figure is the `"sim-rate"` JSON key. Silent when nothing
+/// was simulated (real-execution backends report no access counts).
+fn report_sim_rate(before: u64, secs: f64) {
+    let accesses = coordinator::sim_accesses_total() - before;
+    if accesses > 0 && secs > 0.0 {
+        eprintln!(
+            "spatter: sim-rate: {:.3e} simulated accesses/s \
+             ({accesses} accesses in {secs:.3}s)",
+            accesses as f64 / secs
+        );
     }
 }
 

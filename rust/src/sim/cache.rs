@@ -182,6 +182,44 @@ impl Cache {
         Probe::Miss
     }
 
+    /// Counted bulk hit: `reps` consecutive [`Cache::access`] calls to
+    /// a line known to be resident, telescoped into O(1) updates
+    /// (`sim::plan`'s same-line run coalescing). Exactly equivalent to
+    /// the scalar sequence: the clock advances `reps` ticks, the
+    /// line's stamp lands on the final tick, the flags settle after
+    /// the first hit (`F_PREFETCHED` cleared, dirty merged — both
+    /// idempotent), the prefetched credit is consumed at most once,
+    /// and one signature remove/insert replaces the `reps` pairs
+    /// (every intermediate pair cancels).
+    pub fn hit_repeat(&mut self, line: u64, is_write: bool, reps: u32) {
+        if reps == 0 {
+            return;
+        }
+        self.clock += reps;
+        let set = self.set_of(line);
+        let i = self
+            .find(set, line)
+            .expect("hit_repeat caller guarantees residency");
+        let of = self.flags[i];
+        if of & F_PREFETCHED != 0 {
+            self.prefetch_hits += 1;
+        }
+        let nf = (of & !F_PREFETCHED) | if is_write { F_DIRTY } else { 0 };
+        self.sig.remove(sig_x(line, of), self.stamps[i] as u64);
+        self.flags[i] = nf;
+        self.stamps[i] = self.clock;
+        self.sig.insert(sig_x(line, nf), self.clock as u64);
+        self.hits += reps as u64;
+    }
+
+    /// Counted bulk miss: `reps` consecutive [`Cache::access`] probes
+    /// that miss (the streaming-store repeat path, where nothing fills
+    /// between probes). Only the clock and the miss counter move.
+    pub fn miss_repeat(&mut self, reps: u32) {
+        self.clock += reps;
+        self.misses += reps as u64;
+    }
+
     /// Probe without statistics or LRU update (used by prefetchers to
     /// avoid redundant fills).
     pub fn contains(&self, line: u64) -> bool {
@@ -543,5 +581,53 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// `reps` scalar hits and one `hit_repeat` must telescope to the
+    /// same state digest and statistics — for reads, writes, and with
+    /// an unconsumed prefetch credit on the line.
+    #[test]
+    fn hit_repeat_telescopes_scalar_hits() {
+        for reps in [1u32, 2, 7] {
+            for is_write in [false, true] {
+                for prefetched in [false, true] {
+                    let mut scalar = Cache::new(4096, 64, 4);
+                    let mut bulk = Cache::new(4096, 64, 4);
+                    for c in [&mut scalar, &mut bulk] {
+                        c.fill(5, false, prefetched);
+                        c.fill(21, true, false);
+                    }
+                    for _ in 0..reps {
+                        scalar.access(5, is_write);
+                    }
+                    bulk.hit_repeat(5, is_write, reps);
+                    assert_eq!(
+                        scalar.state_digest(0, SEED_A),
+                        bulk.state_digest(0, SEED_A),
+                        "reps={reps} write={is_write} pf={prefetched}"
+                    );
+                    assert_eq!(scalar.hits, bulk.hits);
+                    assert_eq!(scalar.misses, bulk.misses);
+                    assert_eq!(scalar.prefetch_hits, bulk.prefetch_hits);
+                }
+            }
+        }
+    }
+
+    /// `reps` scalar probe misses (nothing filling in between — the
+    /// streaming-store repeat path) and one `miss_repeat` agree.
+    #[test]
+    fn miss_repeat_matches_scalar_probe_misses() {
+        let mut scalar = Cache::new(2048, 64, 2);
+        let mut bulk = Cache::new(2048, 64, 2);
+        scalar.fill(3, false, false);
+        bulk.fill(3, false, false);
+        for _ in 0..5 {
+            assert_eq!(scalar.access(77, false), Probe::Miss);
+        }
+        bulk.miss_repeat(5);
+        assert_eq!(scalar.state_digest(0, SEED_A), bulk.state_digest(0, SEED_A));
+        assert_eq!(scalar.misses, bulk.misses);
+        assert_eq!(scalar.hits, bulk.hits);
     }
 }

@@ -32,6 +32,7 @@ use super::dram::DramModel;
 use super::memory::{
     PageSize, PageTableWalker, PhysicalAddress, Tlb, VirtualAddress,
 };
+use super::plan::{AccessPlan, Segment};
 use super::prefetch::Prefetcher;
 use super::{PrefetchKind, SimCounters, SimResult, TimeBreakdown, XorShift64};
 use crate::error::Result;
@@ -71,6 +72,16 @@ pub struct CpuSimOptions {
     /// is for A/B benchmarking. Default: on, unless the
     /// `SPATTER_NO_CLOSURE` environment variable is set.
     pub closure_enabled: bool,
+    /// Batch-compiled access plans (`sim::plan`): compile the run's
+    /// access stream once (pre-scaled offsets, per-stream flags,
+    /// same-line run RLE) and drive monomorphized hot loops with
+    /// counted bulk updates for provably-redundant repeats. Counters
+    /// and timing are bit-identical to the scalar reference path
+    /// (pinned by `tests/plan_equivalence.rs`); disabling is for A/B
+    /// benchmarking and differential testing. Default: on, unless the
+    /// `SPATTER_NO_PLAN` environment variable is set (sibling to
+    /// `SPATTER_NO_CLOSURE` / `SPATTER_NO_MEMO`).
+    pub plan_enabled: bool,
 }
 
 impl Default for CpuSimOptions {
@@ -83,6 +94,7 @@ impl Default for CpuSimOptions {
             page_size: PageSize::FourKB,
             threads: None,
             closure_enabled: std::env::var_os("SPATTER_NO_CLOSURE").is_none(),
+            plan_enabled: std::env::var_os("SPATTER_NO_PLAN").is_none(),
         }
     }
 }
@@ -134,6 +146,12 @@ pub struct CpuEngine {
     /// dense kernel's output stream), rebuilt once per pass (empty for
     /// single-buffer kernels).
     idx2_bytes: Vec<u64>,
+    /// Batch-compiled access plan (`sim::plan`): the run's full access
+    /// stream — pre-scaled offsets, per-stream segments, same-line run
+    /// RLE — compiled once per `run()` and replayed by the
+    /// monomorphized planned pass. Engine-owned scratch, rebuilt in
+    /// place (no per-run allocation once warm).
+    plan: AccessPlan,
     /// Banked DRAM row-buffer model (`sim::dram`): channels × ranks ×
     /// bank groups × banks of open rows, shared by every operand
     /// stream, with a per-stream slot offset so the 1 GiB-apart
@@ -179,6 +197,7 @@ impl CpuEngine {
             pf_buf: Vec::with_capacity(8),
             idx_bytes: Vec::new(),
             idx2_bytes: Vec::new(),
+            plan: AccessPlan::default(),
         }
     }
 
@@ -279,21 +298,38 @@ impl CpuEngine {
         // cycles, it fast-forwards to the exact end-of-run state.)
         let warmup = pattern.count.min(self.opts.warmup_iterations);
         let wstart = pattern.count - warmup;
+        // Batch-compiled plan (`sim::plan`): compile the per-iteration
+        // access stream once and replay it through the monomorphized
+        // planned pass. GUPS draws its addresses from a per-pass RNG,
+        // so it has no per-run-constant stream to compile.
+        let use_plan = self.opts.plan_enabled && kernel != Kernel::Gups;
+        if use_plan {
+            let mut plan = std::mem::take(&mut self.plan);
+            plan.build_cpu(pattern, kernel, streaming);
+            self.plan = plan;
+        }
         let mut scratch = SimCounters::default();
-        self.pass(
-            pattern,
-            wstart,
-            pattern.count,
-            kernel,
-            streaming,
-            true,
-            &mut scratch,
-        );
+        if use_plan {
+            self.pass_planned(pattern, wstart, pattern.count, &mut scratch);
+        } else {
+            self.pass(
+                pattern,
+                wstart,
+                pattern.count,
+                kernel,
+                streaming,
+                true,
+                &mut scratch,
+            );
+        }
 
         // Measured pass: iterations [0, measured) of the next run.
         let mut counters = SimCounters::default();
-        let closed_at = self
-            .pass(pattern, 0, measured, kernel, streaming, false, &mut counters);
+        let closed_at = if use_plan {
+            self.pass_planned(pattern, 0, measured, &mut counters)
+        } else {
+            self.pass(pattern, 0, measured, kernel, streaming, false, &mut counters)
+        };
         counters.coherence_events = self.coherence_events(pattern, kernel, measured);
 
         // Page walks miss the cache hierarchy when touched pages are
@@ -467,6 +503,261 @@ impl CpuEngine {
         self.idx_bytes = idx;
         self.idx2_bytes = idx2;
         closed_at
+    }
+
+    /// Planned pass (`sim::plan`): iterations [begin, end) replayed
+    /// from the precompiled access plan, under the same loop-closure
+    /// protocol as the scalar [`CpuEngine::pass`]. Each segment's
+    /// regime knobs (write / streaming / prefetch) select one
+    /// monomorphized `seg_body` instantiation, and when the iteration
+    /// base is line-aligned, same-line runs collapse into counted bulk
+    /// updates. Counters and end-of-pass state are bit-identical to
+    /// the scalar pass (pinned by `tests/plan_equivalence.rs`).
+    fn pass_planned(
+        &mut self,
+        pattern: &Pattern,
+        begin: usize,
+        end: usize,
+        c: &mut SimCounters,
+    ) -> Option<usize> {
+        let plan = std::mem::take(&mut self.plan);
+        let mut last_stream_line = u64::MAX;
+        let mut base = pattern.base(begin);
+        // Regime knob hoisted out of the loop: every prefetcher shares
+        // one kind, so one flag picks the PF arm for the whole pass.
+        let pf = !matches!(self.prefetchers[0].kind, PrefetchKind::None);
+        let period = pattern.deltas.len().max(1);
+        let mut closer = if self.opts.closure_enabled && end > begin + 1 {
+            Some(LoopCloser::new())
+        } else {
+            None
+        };
+        let mut closed_at = None;
+        let mut i = begin;
+        while i < end {
+            let base_bytes = (base as u64) * 8;
+            // Same-line runs only collapse when the base preserves the
+            // offsets' line partition (see `sim::plan`); checked once
+            // per iteration. Closure fast-forward shifts are page-size
+            // multiples, so alignment is stable across a pass.
+            let aligned = base_bytes % LINE == 0;
+            for seg in &plan.segs {
+                match (seg.write, seg.streaming, pf) {
+                    (false, false, false) => self.seg_body::<false, false, false>(
+                        &plan, seg, base_bytes, aligned, &mut last_stream_line, c,
+                    ),
+                    (false, false, true) => self.seg_body::<false, false, true>(
+                        &plan, seg, base_bytes, aligned, &mut last_stream_line, c,
+                    ),
+                    (false, true, false) => self.seg_body::<false, true, false>(
+                        &plan, seg, base_bytes, aligned, &mut last_stream_line, c,
+                    ),
+                    (false, true, true) => self.seg_body::<false, true, true>(
+                        &plan, seg, base_bytes, aligned, &mut last_stream_line, c,
+                    ),
+                    (true, false, false) => self.seg_body::<true, false, false>(
+                        &plan, seg, base_bytes, aligned, &mut last_stream_line, c,
+                    ),
+                    (true, false, true) => self.seg_body::<true, false, true>(
+                        &plan, seg, base_bytes, aligned, &mut last_stream_line, c,
+                    ),
+                    (true, true, false) => self.seg_body::<true, true, false>(
+                        &plan, seg, base_bytes, aligned, &mut last_stream_line, c,
+                    ),
+                    (true, true, true) => self.seg_body::<true, true, true>(
+                        &plan, seg, base_bytes, aligned, &mut last_stream_line, c,
+                    ),
+                }
+            }
+            base += pattern.delta_at(i);
+            i += 1;
+            if closer.is_some() && i < end {
+                let key = self.pass_digest(base, i % period, last_stream_line);
+                let obs = closer.as_mut().unwrap().observe(key, i, base, c);
+                match obs {
+                    Observation::Recorded => {}
+                    Observation::Saturated => closer = None,
+                    Observation::Cycle(info) => {
+                        let cycle = i - info.iter;
+                        let reps = (end - i) / cycle;
+                        if reps > 0 {
+                            closed_at = Some(i);
+                            let d = c.delta_since(&info.counters);
+                            c.add_scaled(&d, reps as u64);
+                            let advance = (base - info.base) as u64;
+                            let shift_elems = advance * reps as u64;
+                            self.fast_forward(shift_elems);
+                            let shift_lines = shift_elems * 8 / LINE;
+                            if last_stream_line != u64::MAX {
+                                last_stream_line += shift_lines;
+                            }
+                            base += shift_elems as i64;
+                            i += cycle * reps;
+                        }
+                        closer = None;
+                    }
+                }
+            }
+        }
+        self.plan = plan;
+        closed_at
+    }
+
+    /// One segment of the planned iteration, monomorphized over the
+    /// regime knobs: `W` = write, `S` = streaming (non-temporal), `PF`
+    /// = prefetchers active. `aligned` selects the run-coalesced body;
+    /// otherwise the per-offset walk runs through the same
+    /// monomorphized access path without bulk updates.
+    #[inline]
+    fn seg_body<const W: bool, const S: bool, const PF: bool>(
+        &mut self,
+        plan: &AccessPlan,
+        seg: &Segment,
+        base_bytes: u64,
+        aligned: bool,
+        last_stream_line: &mut u64,
+        c: &mut SimCounters,
+    ) {
+        if aligned {
+            for run in &plan.runs[seg.run_start..seg.run_end] {
+                let va = VirtualAddress(base_bytes + run.off);
+                let resident =
+                    self.access_fast::<W, S, PF>(va, seg.sid, last_stream_line, c);
+                if run.extra > 0 {
+                    self.repeat_same_line::<W>(va, resident, run.extra, c);
+                }
+            }
+        } else {
+            for &off in &plan.offsets[seg.off_start..seg.off_end] {
+                let va = VirtualAddress(base_bytes + off);
+                self.access_fast::<W, S, PF>(va, seg.sid, last_stream_line, c);
+            }
+        }
+    }
+
+    /// Monomorphized twin of [`CpuEngine::access`] (`W` = write, `S` =
+    /// streaming, `PF` = prefetchers active): identical state and
+    /// counter effects, with the per-access regime branches resolved
+    /// at compile time. Returns whether the line is L1-resident on
+    /// return — same-line followers are then pure L1 hits; on the
+    /// streaming-miss path (`false`) they are pure L1 probe misses
+    /// (see `repeat_same_line`). The `PF = false` arm still advances
+    /// the stride tracker (`Prefetcher::note_miss`) so the closure
+    /// digest stays regime-independent — `PrefetchKind::None` issues
+    /// no fills by construction, so skipping the fill loop is exact.
+    #[inline]
+    fn access_fast<const W: bool, const S: bool, const PF: bool>(
+        &mut self,
+        va: VirtualAddress,
+        sid: usize,
+        last_stream_line: &mut u64,
+        c: &mut SimCounters,
+    ) -> bool {
+        c.accesses += 1;
+        let t = self.tlb.translate(va, W, &mut c.tlb);
+        let pa = t.physical;
+        let line = pa.line();
+        self.l1.prefetch_host(line);
+        self.l2.prefetch_host(line);
+        self.l3.prefetch_host(line);
+        if S {
+            if let Probe::Hit { .. } = self.l1.access(line, W) {
+                c.l1_hits += 1;
+                return true;
+            }
+            if line != *last_stream_line {
+                c.streaming_store_lines += 1;
+                self.note_row(pa, sid, c);
+                *last_stream_line = line;
+            }
+            return false;
+        }
+        if let Probe::Hit { .. } = self.l1.access(line, W) {
+            c.l1_hits += 1;
+            return true;
+        }
+        match self.l2.access(line, W) {
+            Probe::Hit { was_prefetched } => {
+                c.l2_hits += 1;
+                if was_prefetched {
+                    c.prefetch_useful += 1;
+                }
+                self.fill_l1(line, W, c);
+                return true;
+            }
+            Probe::Miss => {}
+        }
+        match self.l3.access(line, W) {
+            Probe::Hit { was_prefetched } => {
+                c.l3_hits += 1;
+                if was_prefetched {
+                    c.prefetch_useful += 1;
+                }
+                self.fill_l2(line, W, c);
+                self.fill_l1(line, W, c);
+                return true;
+            }
+            Probe::Miss => {}
+        }
+        c.dram_demand_lines += 1;
+        self.note_row(pa, sid, c);
+        if self.l3.fill_after_miss(line, false, false).is_some() {
+            c.writeback_lines += 1;
+        }
+        self.fill_l2(line, W, c);
+        self.fill_l1(line, W, c);
+        if PF {
+            self.prefetchers[sid].on_miss(pa.byte(), line, &mut self.pf_buf);
+            let mut k = 0;
+            while k < self.pf_buf.len() {
+                let pl = self.pf_buf[k];
+                k += 1;
+                let (inserted_l2, ev) = self.l2.fill_if_absent(pl, false, true);
+                if inserted_l2 {
+                    if let Some(ev) = ev {
+                        if self.l3.fill(ev, true, false).is_some() {
+                            c.writeback_lines += 1;
+                        }
+                    }
+                    let (inserted_l3, _) = self.l3.fill_if_absent(pl, false, true);
+                    if inserted_l3 {
+                        c.dram_prefetch_lines += 1;
+                        self.note_row(PhysicalAddress::from_line(pl), sid, c);
+                    }
+                }
+            }
+        } else {
+            self.prefetchers[sid].note_miss(pa.byte());
+        }
+        true
+    }
+
+    /// Counted bulk update for the `extra` same-line followers of a
+    /// run head (`sim::plan`): each follower would translate through
+    /// the TLB's same-page short-circuit (the head always primes
+    /// `last_vpn`) and then hit — or, on the streaming miss path,
+    /// probe-miss — L1, with no other state transition possible in
+    /// between. The N scalar probe calls telescope into O(1) updates
+    /// with identical final state and counters
+    /// ([`Cache::hit_repeat`] / [`Cache::miss_repeat`] /
+    /// [`Tlb::note_same_page_repeats`]).
+    #[inline]
+    fn repeat_same_line<const W: bool>(
+        &mut self,
+        va: VirtualAddress,
+        resident: bool,
+        extra: u32,
+        c: &mut SimCounters,
+    ) {
+        let reps = extra as u64;
+        c.accesses += reps;
+        self.tlb.note_same_page_repeats(va, W, reps, &mut c.tlb);
+        if resident {
+            self.l1.hit_repeat(va.0 / LINE, W, extra);
+            c.l1_hits += reps;
+        } else {
+            self.l1.miss_repeat(extra);
+        }
     }
 
     /// GUPS pass: `V` seeded-xorshift random read-modify-writes per

@@ -25,6 +25,7 @@ use super::dram::DramModel;
 use super::memory::{
     PageSize, PageTableWalker, PhysicalAddress, Tlb, VirtualAddress,
 };
+use super::plan::GpuPlan;
 use super::{SimCounters, SimResult, TimeBreakdown, XorShift64};
 use crate::error::Result;
 use crate::pattern::{Kernel, Pattern};
@@ -48,6 +49,12 @@ pub struct GpuSimOptions {
     /// the CPU engine: bit-identical counters, disable only for A/B
     /// benchmarking (`SPATTER_NO_CLOSURE`).
     pub closure_enabled: bool,
+    /// Batch-compiled access plans (`sim::plan`) — same contract as
+    /// the CPU engine: the run's warps and their coalesced sector
+    /// lists are compiled once per `run()`, counters stay
+    /// bit-identical to the scalar path, and `SPATTER_NO_PLAN`
+    /// disables for A/B benchmarking.
+    pub plan_enabled: bool,
 }
 
 impl Default for GpuSimOptions {
@@ -57,6 +64,7 @@ impl Default for GpuSimOptions {
             warmup_iterations: 1 << 13,
             page_size: PageSize::SixtyFourKB,
             closure_enabled: std::env::var_os("SPATTER_NO_CLOSURE").is_none(),
+            plan_enabled: std::env::var_os("SPATTER_NO_PLAN").is_none(),
         }
     }
 }
@@ -85,6 +93,10 @@ pub struct GpuEngine {
     /// including the write-region base (empty for single-buffer
     /// kernels).
     idx2_bytes: Vec<u64>,
+    /// Batch-compiled access plan (`sim::plan`): every warp's offset
+    /// slice and precomputed coalesced sector list, compiled once per
+    /// `run()`. Engine-owned scratch, rebuilt in place.
+    plan: GpuPlan,
 }
 
 impl GpuEngine {
@@ -103,6 +115,7 @@ impl GpuEngine {
             warp_sectors: Vec::with_capacity(WARP),
             idx_bytes: Vec::new(),
             idx2_bytes: Vec::new(),
+            plan: GpuPlan::default(),
             platform: p,
             opts,
         }
@@ -156,19 +169,39 @@ impl GpuEngine {
         // Warmup (tail iterations of the "previous" run). Closure
         // applies here too, fast-forwarding to the exact warm state.
         let warmup = pattern.count.min(self.opts.warmup_iterations);
+        // Batch-compiled plan (`sim::plan`) — see the CPU engine; GUPS
+        // draws addresses from a per-pass RNG and stays scalar.
+        let use_plan = self.opts.plan_enabled && kernel != Kernel::Gups;
+        if use_plan {
+            let mut plan = std::mem::take(&mut self.plan);
+            plan.build_gpu(pattern, kernel, self.platform.sector_bytes);
+            self.plan = plan;
+        }
         let mut scratch = SimCounters::default();
-        self.pass(
-            pattern,
-            pattern.count - warmup,
-            pattern.count,
-            kernel,
-            true,
-            &mut scratch,
-        );
+        if use_plan {
+            self.pass_planned(
+                pattern,
+                pattern.count - warmup,
+                pattern.count,
+                &mut scratch,
+            );
+        } else {
+            self.pass(
+                pattern,
+                pattern.count - warmup,
+                pattern.count,
+                kernel,
+                true,
+                &mut scratch,
+            );
+        }
 
         let mut counters = SimCounters::default();
-        let closed_at =
-            self.pass(pattern, 0, measured, kernel, false, &mut counters);
+        let closed_at = if use_plan {
+            self.pass_planned(pattern, 0, measured, &mut counters)
+        } else {
+            self.pass(pattern, 0, measured, kernel, false, &mut counters)
+        };
 
         let breakdown = self.timing(&counters, pattern, kernel, measured);
         let scale = pattern.count as f64 / measured as f64;
@@ -307,6 +340,87 @@ impl GpuEngine {
         closed_at
     }
 
+    /// Planned pass (`sim::plan`): iterations [begin, end) replayed
+    /// from the precompiled plan, under the same loop-closure protocol
+    /// as the scalar [`GpuEngine::pass`]. When the iteration base is
+    /// sector-aligned, each warp's dedupe + sort is skipped entirely
+    /// and its precomputed coalesced transactions replay against the
+    /// shifted base sector; otherwise the warp falls back to the
+    /// scalar coalescer over the plan's offset slices. Counters are
+    /// bit-identical either way (pinned by
+    /// `tests/plan_equivalence.rs`).
+    fn pass_planned(
+        &mut self,
+        pattern: &Pattern,
+        begin: usize,
+        end: usize,
+        c: &mut SimCounters,
+    ) -> Option<usize> {
+        let plan = std::mem::take(&mut self.plan);
+        let sector_b = self.platform.sector_bytes;
+        let mut base = pattern.base(begin);
+        let period = pattern.deltas.len().max(1);
+        let mut closer = if self.opts.closure_enabled && end > begin + 1 {
+            Some(LoopCloser::new())
+        } else {
+            None
+        };
+        let mut closed_at = None;
+        let mut i = begin;
+        while i < end {
+            let base_bytes = (base as u64) * 8;
+            if base_bytes % sector_b == 0 {
+                // Sector-aligned base: relative sectors shift to
+                // absolute ones without re-partitioning (see
+                // `sim::plan`), so the coalescing work vanishes.
+                let base_sector = base_bytes / sector_b;
+                for w in &plan.warps {
+                    c.accesses += (w.off_end - w.off_start) as u64;
+                    for &(rel, elems) in &plan.sectors[w.sec_start..w.sec_end] {
+                        self.sector_txn(base_sector + rel, elems, w.write, w.sid, c);
+                    }
+                }
+            } else {
+                for w in &plan.warps {
+                    self.warp(
+                        &plan.offsets[w.off_start..w.off_end],
+                        base_bytes,
+                        w.write,
+                        w.sid,
+                        c,
+                    );
+                }
+            }
+            base += pattern.delta_at(i);
+            i += 1;
+            if closer.is_some() && i < end {
+                let key = self.pass_digest(base, i % period);
+                let obs = closer.as_mut().unwrap().observe(key, i, base, c);
+                match obs {
+                    Observation::Recorded => {}
+                    Observation::Saturated => closer = None,
+                    Observation::Cycle(info) => {
+                        let cycle = i - info.iter;
+                        let reps = (end - i) / cycle;
+                        if reps > 0 {
+                            closed_at = Some(i);
+                            let d = c.delta_since(&info.counters);
+                            c.add_scaled(&d, reps as u64);
+                            let advance = (base - info.base) as u64;
+                            let shift_elems = advance * reps as u64;
+                            self.fast_forward(shift_elems);
+                            base += shift_elems as i64;
+                            i += cycle * reps;
+                        }
+                        closer = None;
+                    }
+                }
+            }
+        }
+        self.plan = plan;
+        closed_at
+    }
+
     /// GUPS pass: warps of seeded-xorshift random updates into the
     /// power-of-two table. Each warp's addresses coalesce (vacuously —
     /// random 64-bit addresses land in distinct sectors) and every
@@ -423,56 +537,71 @@ impl GpuEngine {
         while k < self.warp_sectors.len() {
             let (sector, elems) = self.warp_sectors[k];
             k += 1;
-            c.transactions += 1;
+            self.sector_txn(sector, elems, is_write, sid, c);
+        }
+    }
 
-            // Translate the sector's base address through the shared
-            // TLB (one translation per coalesced transaction).
-            let t = self.tlb.translate(
-                VirtualAddress(sector * sector_b),
-                is_write,
-                &mut c.tlb,
-            );
-            let pa = t.physical;
+    /// Charge one coalesced transaction (`elems` elements of `sector`)
+    /// to the memory system — the shared body of the scalar `warp`
+    /// coalescer and the planned pass's precomputed replay.
+    #[inline]
+    fn sector_txn(
+        &mut self,
+        sector: u64,
+        elems: u32,
+        is_write: bool,
+        sid: usize,
+        c: &mut SimCounters,
+    ) {
+        let sector_b = self.platform.sector_bytes;
+        c.transactions += 1;
 
-            // Scatter: partially covered sectors read-modify-write
-            // (Fig 5's 1/8 scatter plateau vs 1/4 gather plateau).
-            let coverage = (elems as u64 * 8) as f64 / sector_b as f64;
-            let needs_rmw = is_write && coverage < 0.5;
+        // Translate the sector's base address through the shared
+        // TLB (one translation per coalesced transaction).
+        let t = self.tlb.translate(
+            VirtualAddress(sector * sector_b),
+            is_write,
+            &mut c.tlb,
+        );
+        let pa = t.physical;
 
-            match self.l2.access(sector, is_write) {
-                Probe::Hit { .. } => {
-                    c.l2_hits += 1;
+        // Scatter: partially covered sectors read-modify-write
+        // (Fig 5's 1/8 scatter plateau vs 1/4 gather plateau).
+        let coverage = (elems as u64 * 8) as f64 / sector_b as f64;
+        let needs_rmw = is_write && coverage < 0.5;
+
+        match self.l2.access(sector, is_write) {
+            Probe::Hit { .. } => {
+                c.l2_hits += 1;
+            }
+            Probe::Miss => {
+                // DRAM sector fetch (gather or scatter-RMW read) or
+                // a pure write allocation for covered sectors.
+                if !is_write || needs_rmw {
+                    c.dram_demand_lines += 1; // unit = one sector
                 }
-                Probe::Miss => {
-                    // DRAM sector fetch (gather or scatter-RMW read) or
-                    // a pure write allocation for covered sectors.
-                    if !is_write || needs_rmw {
-                        c.dram_demand_lines += 1; // unit = one sector
-                    }
-                    self.note_row(pa, sid, c);
-                    if is_write && !needs_rmw {
-                        // Fully-covered sectors drain to DRAM at the
-                        // write rate in steady state: charge the
-                        // writeback at fill time and insert clean, so
-                        // a short measured pass isn't flattered by
-                        // whatever tail still sits dirty in L2. (A
-                        // later re-write of the still-resident sector
-                        // dirties it and drains once more on eviction;
-                        // that second transfer stands in for the RFO
-                        // read this covered path elides, keeping the
-                        // DRAM byte total honest for repeated writes.)
-                        c.writeback_lines += 1;
-                        if self.l2.fill_after_miss(sector, false, false).is_some()
-                        {
-                            c.writeback_lines += 1;
-                        }
-                    } else if self
-                        .l2
-                        .fill_after_miss(sector, is_write, false)
-                        .is_some()
-                    {
+                self.note_row(pa, sid, c);
+                if is_write && !needs_rmw {
+                    // Fully-covered sectors drain to DRAM at the
+                    // write rate in steady state: charge the
+                    // writeback at fill time and insert clean, so
+                    // a short measured pass isn't flattered by
+                    // whatever tail still sits dirty in L2. (A
+                    // later re-write of the still-resident sector
+                    // dirties it and drains once more on eviction;
+                    // that second transfer stands in for the RFO
+                    // read this covered path elides, keeping the
+                    // DRAM byte total honest for repeated writes.)
+                    c.writeback_lines += 1;
+                    if self.l2.fill_after_miss(sector, false, false).is_some() {
                         c.writeback_lines += 1;
                     }
+                } else if self
+                    .l2
+                    .fill_after_miss(sector, is_write, false)
+                    .is_some()
+                {
+                    c.writeback_lines += 1;
                 }
             }
         }

@@ -232,6 +232,18 @@ impl TlbStats {
         }
     }
 
+    /// Record `reps` same-page hits at once (the batched accounting
+    /// behind `sim::plan`'s same-line run coalescing — every follower
+    /// of a run head takes the same-page short-circuit).
+    #[inline]
+    pub fn record_repeat(&mut self, is_write: bool, reps: u64) {
+        if is_write {
+            self.write_hits += reps;
+        } else {
+            self.read_hits += reps;
+        }
+    }
+
     pub fn hits(&self) -> u64 {
         self.read_hits + self.write_hits
     }
@@ -342,6 +354,28 @@ impl Tlb {
         stats.record(is_write, hit);
         self.last_vpn = vpn;
         Translation { physical, hit }
+    }
+
+    /// Batched same-page accounting (`sim::plan`): `reps` repeat
+    /// translations of an address on the page `translate` just primed.
+    /// Each repeat would take the same-page short-circuit — a pure
+    /// statistics hit with no TLB state change — so the whole run
+    /// telescopes into one counter add. Debug-asserts the caller's
+    /// same-page guarantee.
+    #[inline]
+    pub fn note_same_page_repeats(
+        &self,
+        va: VirtualAddress,
+        is_write: bool,
+        reps: u64,
+        stats: &mut TlbStats,
+    ) {
+        debug_assert_eq!(
+            va.page_number(self.page_size),
+            self.last_vpn,
+            "same-page repeats must follow a translate of the same page"
+        );
+        stats.record_repeat(is_write, reps);
     }
 
     /// Digest of the TLB's complete state relative to `base_vpn`
@@ -525,6 +559,36 @@ mod tests {
         assert!(t.translate(page(0), false, &mut st).hit, "0 was MRU");
         assert!(!t.translate(page(4), false, &mut st).hit, "4 was evicted");
         assert_eq!(st.misses(), 4);
+    }
+
+    /// `reps` scalar same-page translations and one
+    /// `note_same_page_repeats` produce identical statistics and state
+    /// (the batched accounting behind `sim::plan`).
+    #[test]
+    fn tlb_repeat_accounting_matches_scalar_translations() {
+        for is_write in [false, true] {
+            let mut scalar = small_tlb(PageSize::FourKB);
+            let mut bulk = small_tlb(PageSize::FourKB);
+            let mut ss = TlbStats::default();
+            let mut bs = TlbStats::default();
+            let va = VirtualAddress(4096 * 3 + 8);
+            scalar.translate(va, is_write, &mut ss);
+            bulk.translate(va, is_write, &mut bs);
+            for _ in 0..6 {
+                scalar.translate(VirtualAddress(va.byte() + 8), is_write, &mut ss);
+            }
+            bulk.note_same_page_repeats(
+                VirtualAddress(va.byte() + 8),
+                is_write,
+                6,
+                &mut bs,
+            );
+            assert_eq!(ss, bs, "write={is_write}");
+            assert_eq!(
+                scalar.state_digest(0, crate::sim::closure::SEED_A),
+                bulk.state_digest(0, crate::sim::closure::SEED_A)
+            );
+        }
     }
 
     #[test]

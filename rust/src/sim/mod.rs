@@ -21,6 +21,12 @@
 //!   (§Perf; the `closed_at_iteration` diagnostic and the
 //!   `SPATTER_NO_CLOSURE` switch are documented there and in the
 //!   README's Performance section).
+//! * [`plan`] — per-run access-plan compiler: the run's access stream
+//!   (pre-scaled offsets, per-stream flags, same-line/warp-sector run
+//!   coalescing) compiled once per `run()` and replayed through
+//!   monomorphized hot loops with counted bulk updates — bit-identical
+//!   to the scalar reference paths, which stay available behind
+//!   `SPATTER_NO_PLAN=1` (§Perf).
 //! * [`cpu`] — the CPU engine: L1/L2/L3 + TLB + prefetcher + a
 //!   bottleneck ("roofline-max") timing model over issue rate, cache
 //!   bandwidths, DRAM traffic, miss latency, and coherence.
@@ -34,12 +40,14 @@
 //! # Scratch-buffer invariants (§Perf)
 //!
 //! Both engines keep their per-access temporaries — the prefetch
-//! target list, the warp coalescing list, and the pre-scaled index
-//! byte-offset table — as engine-owned scratch vectors that are
-//! cleared and refilled in place, never reallocated, across `access`
-//! calls and across runs. Code touching the hot paths must preserve
-//! this: no allocation, no `clone`, and no `mem::take` churn inside
-//! the per-access path.
+//! target list, the warp coalescing list, the pre-scaled index
+//! byte-offset tables, and the compiled access plans — as engine-owned
+//! scratch that is cleared and refilled in place: plans are built once
+//! per `run()`, the rest once per pass, and nothing is reallocated
+//! once warm. Code touching the hot paths must preserve this: no
+//! allocation, no `clone`, and no `mem::take` churn inside the
+//! per-access path. The invariant is enforced by the counting-
+//! allocator test in `rust/tests/zero_alloc.rs`, not just by review.
 
 pub mod cache;
 pub mod closure;
@@ -47,6 +55,7 @@ pub mod cpu;
 pub mod dram;
 pub mod gpu;
 pub mod memory;
+pub mod plan;
 pub mod prefetch;
 
 pub use cache::{Cache, Probe};
@@ -57,6 +66,7 @@ pub use memory::{
     PageSize, PageTableWalker, PhysicalAddress, Tlb, TlbGeometry, TlbStats,
     TlbTable, VirtualAddress,
 };
+pub use plan::{AccessPlan, GpuPlan};
 pub use prefetch::{PrefetchKind, Prefetcher};
 
 /// Fixed seed of the GUPS random-update stream (both engines): runs

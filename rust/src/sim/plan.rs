@@ -1,0 +1,456 @@
+//! Per-run access-plan compiler (§Perf): the batch-compiled front end
+//! of both engines' hot loops.
+//!
+//! The scalar reference paths (`CpuEngine::access`, `GpuEngine::warp`)
+//! re-decide per access what is invariant per run: kernel class,
+//! stream id, read/write/streaming mode, and — for uniform patterns —
+//! whole runs of accesses that provably land on the same cache line or
+//! the same coalesced sector. An [`AccessPlan`] hoists all of that out
+//! of the loop. It is built **once per `run()`** from
+//! (pattern, kernel, options) and holds:
+//!
+//! * `offsets` — the pre-scaled byte offsets of every access of one
+//!   iteration, in exact issue order (the generalization of the old
+//!   `idx_bytes`/`idx2_bytes` scratch pair): primary stream(s) first,
+//!   then the write side (GS scatter side / dense output stream).
+//! * `segs` — one [`Segment`] per operand stream, carrying the
+//!   per-access flags the scalar path recomputes (stream id, write,
+//!   streaming). The engine dispatches each segment once into a
+//!   monomorphized (const-generic) loop body, so the per-access
+//!   branches disappear from the hot variants.
+//! * `runs` — a run-length encoding of consecutive same-line offsets
+//!   within each segment. When the iteration base is line-aligned
+//!   (checked once per iteration), every member of a run hits the same
+//!   cache line *and* the same page as its head access, and the
+//!   intervening state provably cannot change: the repeats collapse to
+//!   counted bulk updates ([`Cache::hit_repeat`] /
+//!   [`Tlb::note_same_page_repeats`]) instead of N probe calls.
+//!
+//! The GPU analogue ([`GpuPlan`]) precomputes each warp's coalesced
+//! (relative-sector, element-count) list: when the base is
+//! sector-aligned, the per-warp dedupe + sort disappears entirely and
+//! the engine replays the precomputed transactions against the shifted
+//! base sector.
+//!
+//! Plans are an optimization, never an approximation: counters stay
+//! bit-identical to the scalar reference on every platform / kernel /
+//! page-size / threads combination (pinned by
+//! `rust/tests/plan_equivalence.rs`), and `SPATTER_NO_PLAN=1`
+//! force-disables them (sibling to `SPATTER_NO_CLOSURE` /
+//! `SPATTER_NO_MEMO`) for A/B benchmarking and differential testing.
+//!
+//! # Same-line run validity
+//!
+//! Two offsets `a`, `b` with `a/64 == b/64` land on the same line for
+//! base `B` iff `B % 64 == 0`: `B + a` and `B + b` then share
+//! `(B + a) / 64` (wrapping arithmetic preserves this — a multiple of
+//! 64 plus a multiple of 64 stays one modulo 2^64). A line never spans
+//! a page, so same line implies same page and the TLB's `last_vpn`
+//! short-circuit is guaranteed after the head access. The engines
+//! check the alignment once per iteration and fall back to the scalar
+//! per-offset walk (still monomorphized, still allocation-free) when
+//! the base is misaligned. Fast-forward shifts from loop closure are
+//! page-size multiples, so alignment is stable across a run.
+//!
+//! [`Cache::hit_repeat`]: super::cache::Cache::hit_repeat
+//! [`Tlb::note_same_page_repeats`]: super::memory::Tlb::note_same_page_repeats
+
+use crate::pattern::{Kernel, Pattern};
+
+/// Cache-line bytes (the model is 64-byte everywhere).
+const LINE: u64 = 64;
+
+/// Warp width of the GPU engine (threads per coalescing window).
+const WARP: usize = 32;
+
+/// One same-line run: the head access's byte offset plus how many
+/// immediately-following accesses of the segment land on the same line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunOp {
+    /// Pre-scaled byte offset of the run's head access.
+    pub off: u64,
+    /// Accesses after the head that share its line (0 = singleton).
+    pub extra: u32,
+}
+
+/// One operand stream of the compiled iteration: a contiguous slice of
+/// `offsets` (and of `runs`) plus the per-access flags the scalar path
+/// recomputes every call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub off_start: usize,
+    pub off_end: usize,
+    pub run_start: usize,
+    pub run_end: usize,
+    /// Operand stream id (open-row slot / prefetcher slot).
+    pub sid: usize,
+    /// Whether the segment's accesses write.
+    pub write: bool,
+    /// Whether the segment's writes are non-temporal (streaming).
+    pub streaming: bool,
+}
+
+/// The CPU engine's compiled per-run access plan. Engine-owned scratch:
+/// cleared and refilled in place once per run, never reallocated once
+/// warm (see the scratch-buffer invariants in `sim`).
+#[derive(Debug, Clone, Default)]
+pub struct AccessPlan {
+    pub offsets: Vec<u64>,
+    pub runs: Vec<RunOp>,
+    pub segs: Vec<Segment>,
+}
+
+impl AccessPlan {
+    /// Compile the plan for one CPU run. The offset math mirrors the
+    /// scalar pass exactly: primary stream(s) first (one `v`-wide
+    /// chunk per read stream; the whole index buffer for Scatter),
+    /// then the write side with its region base baked in.
+    pub fn build_cpu(&mut self, pattern: &Pattern, kernel: Kernel, streaming: bool) {
+        self.offsets.clear();
+        self.runs.clear();
+        self.segs.clear();
+        debug_assert_ne!(kernel, Kernel::Gups, "GUPS never runs planned");
+
+        let v = pattern.vector_len();
+        let read_streams = kernel.read_streams();
+        let primary_write = kernel == Kernel::Scatter;
+        let primary_streaming = primary_write && streaming;
+
+        match kernel {
+            Kernel::Stream(_) => {
+                let region = pattern.dense_region_bytes();
+                for r in 0..read_streams as u64 {
+                    self.offsets.extend(
+                        pattern.indices.iter().map(|&i| r * region + i as u64 * 8),
+                    );
+                }
+            }
+            _ => self
+                .offsets
+                .extend(pattern.indices.iter().map(|&i| i as u64 * 8)),
+        }
+        let primary_len = self.offsets.len();
+        match kernel {
+            Kernel::GS => {
+                let dst = pattern.gs_scatter_base() as u64 * 8;
+                self.offsets.extend(
+                    pattern.scatter_indices.iter().map(|&i| dst + i as u64 * 8),
+                );
+            }
+            Kernel::Stream(_) => {
+                let dst = read_streams as u64 * pattern.dense_region_bytes();
+                self.offsets
+                    .extend(pattern.indices.iter().map(|&i| dst + i as u64 * 8));
+            }
+            _ => {}
+        }
+
+        // Primary segments: one per v-wide chunk, exactly the chunks
+        // the scalar pass enumerates.
+        let mut start = 0;
+        let mut sid = 0;
+        while start < primary_len {
+            let end = (start + v).min(primary_len);
+            self.push_seg(start, end, sid, primary_write, primary_streaming);
+            start = end;
+            sid += 1;
+        }
+        // Write stream (GS scatter side / dense output stream).
+        if self.offsets.len() > primary_len {
+            let end = self.offsets.len();
+            self.push_seg(primary_len, end, read_streams, true, streaming);
+        }
+    }
+
+    /// Close a segment over `offsets[off_start..off_end]`, RLE-grouping
+    /// consecutive offsets that share a 64-byte line.
+    fn push_seg(
+        &mut self,
+        off_start: usize,
+        off_end: usize,
+        sid: usize,
+        write: bool,
+        streaming: bool,
+    ) {
+        let run_start = self.runs.len();
+        let mut k = off_start;
+        while k < off_end {
+            let line = self.offsets[k] / LINE;
+            let mut j = k + 1;
+            while j < off_end && self.offsets[j] / LINE == line {
+                j += 1;
+            }
+            self.runs.push(RunOp {
+                off: self.offsets[k],
+                extra: (j - k - 1) as u32,
+            });
+            k = j;
+        }
+        self.segs.push(Segment {
+            off_start,
+            off_end,
+            run_start,
+            run_end: self.runs.len(),
+            sid,
+            write,
+            streaming,
+        });
+    }
+}
+
+/// One warp of the compiled GPU iteration: its slice of `offsets` (for
+/// the misaligned fallback) and its precomputed coalesced sector list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WarpSpan {
+    pub off_start: usize,
+    pub off_end: usize,
+    /// Slice of [`GpuPlan::sectors`]: the warp's unique relative
+    /// sectors with element counts, sorted ascending.
+    pub sec_start: usize,
+    pub sec_end: usize,
+    /// Operand stream id (open-row slot).
+    pub sid: usize,
+    /// Whether the warp's accesses write.
+    pub write: bool,
+}
+
+/// The GPU engine's compiled per-run plan: every warp's offset slice
+/// plus its coalesced (relative sector, element count) transactions.
+/// Valid whenever the iteration base is sector-aligned — relative
+/// sector ids then shift to absolute ones by adding the base sector,
+/// preserving both the dedupe partition and the sort order.
+#[derive(Debug, Clone, Default)]
+pub struct GpuPlan {
+    pub offsets: Vec<u64>,
+    pub sectors: Vec<(u64, u32)>,
+    pub warps: Vec<WarpSpan>,
+}
+
+impl GpuPlan {
+    /// Compile the plan for one GPU run: the same offset layout as
+    /// [`AccessPlan::build_cpu`], chunked into ≤32-element warps per
+    /// operand stream, each with its coalesced sector list.
+    pub fn build_gpu(&mut self, pattern: &Pattern, kernel: Kernel, sector_bytes: u64) {
+        self.offsets.clear();
+        self.sectors.clear();
+        self.warps.clear();
+        debug_assert_ne!(kernel, Kernel::Gups, "GUPS never runs planned");
+
+        let v = pattern.vector_len();
+        let read_streams = kernel.read_streams();
+        let primary_write = kernel == Kernel::Scatter;
+
+        match kernel {
+            Kernel::Stream(_) => {
+                let region = pattern.dense_region_bytes();
+                for r in 0..read_streams as u64 {
+                    self.offsets.extend(
+                        pattern.indices.iter().map(|&i| r * region + i as u64 * 8),
+                    );
+                }
+            }
+            _ => self
+                .offsets
+                .extend(pattern.indices.iter().map(|&i| i as u64 * 8)),
+        }
+        let primary_len = self.offsets.len();
+        match kernel {
+            Kernel::GS => {
+                let dst = pattern.gs_scatter_base() as u64 * 8;
+                self.offsets.extend(
+                    pattern.scatter_indices.iter().map(|&i| dst + i as u64 * 8),
+                );
+            }
+            Kernel::Stream(_) => {
+                let dst = read_streams as u64 * pattern.dense_region_bytes();
+                self.offsets
+                    .extend(pattern.indices.iter().map(|&i| dst + i as u64 * 8));
+            }
+            _ => {}
+        }
+
+        // Warps: each read stream is one v-wide chunk split into ≤32
+        // element windows; then the write side re-coalesces the same
+        // way — exactly the warps the scalar pass issues.
+        let mut start = 0;
+        let mut sid = 0;
+        while start < primary_len {
+            let chunk_end = (start + v).min(primary_len);
+            self.push_warps(start, chunk_end, sid, primary_write, sector_bytes);
+            start = chunk_end;
+            sid += 1;
+        }
+        if self.offsets.len() > primary_len {
+            let end = self.offsets.len();
+            self.push_warps(primary_len, end, read_streams, true, sector_bytes);
+        }
+    }
+
+    /// Split `offsets[chunk_start..chunk_end]` into warps and coalesce
+    /// each into unique relative sectors with element counts. Sorted by
+    /// sector id — sector ids are unique after the dedupe, so the sort
+    /// order matches the scalar path's first-appearance-then-sort
+    /// exactly.
+    fn push_warps(
+        &mut self,
+        chunk_start: usize,
+        chunk_end: usize,
+        sid: usize,
+        write: bool,
+        sector_bytes: u64,
+    ) {
+        let mut j = chunk_start;
+        while j < chunk_end {
+            let hi = (j + WARP).min(chunk_end);
+            let sec_start = self.sectors.len();
+            for k in j..hi {
+                let rel = self.offsets[k] / sector_bytes;
+                match self.sectors[sec_start..].iter_mut().find(|(s, _)| *s == rel)
+                {
+                    Some((_, n)) => *n += 1,
+                    None => self.sectors.push((rel, 1)),
+                }
+            }
+            self.sectors[sec_start..].sort_unstable_by_key(|(s, _)| *s);
+            self.warps.push(WarpSpan {
+                off_start: j,
+                off_end: hi,
+                sec_start,
+                sec_end: self.sectors.len(),
+                sid,
+                write,
+            });
+            j = hi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::StreamOp;
+
+    fn ustride(stride: usize, v: usize) -> Pattern {
+        Pattern::from_indices(
+            "u",
+            (0..v as i64).map(|i| i * stride as i64).collect(),
+        )
+        .with_delta((v * stride) as i64)
+        .with_count(64)
+    }
+
+    #[test]
+    fn stride1_coalesces_into_line_runs() {
+        let mut plan = AccessPlan::default();
+        plan.build_cpu(&ustride(1, 16), Kernel::Gather, false);
+        // 16 8-byte elements = 2 lines of 8 elements each.
+        assert_eq!(plan.segs.len(), 1);
+        assert_eq!(plan.runs.len(), 2);
+        assert_eq!(plan.runs[0], RunOp { off: 0, extra: 7 });
+        assert_eq!(plan.runs[1], RunOp { off: 64, extra: 7 });
+        let seg = plan.segs[0];
+        assert_eq!((seg.off_start, seg.off_end), (0, 16));
+        assert!(!seg.write && !seg.streaming);
+        assert_eq!(seg.sid, 0);
+    }
+
+    #[test]
+    fn stride8_has_no_runs_to_coalesce() {
+        let mut plan = AccessPlan::default();
+        plan.build_cpu(&ustride(8, 8), Kernel::Scatter, false);
+        // One element per line: every run is a singleton.
+        assert_eq!(plan.runs.len(), 8);
+        assert!(plan.runs.iter().all(|r| r.extra == 0));
+        assert!(plan.segs[0].write);
+    }
+
+    #[test]
+    fn delta0_revisits_group_within_a_line() {
+        // The LULESH-S3 shape: many elements share lines.
+        let pat = Pattern::from_indices("d0", vec![0, 1, 2, 9, 10, 17])
+            .with_delta(0)
+            .with_count(16);
+        let mut plan = AccessPlan::default();
+        plan.build_cpu(&pat, Kernel::Scatter, false);
+        // offsets 0,8,16 (line 0) | 72,80 (line 1) | 136 (line 2)
+        assert_eq!(
+            plan.runs,
+            vec![
+                RunOp { off: 0, extra: 2 },
+                RunOp { off: 72, extra: 1 },
+                RunOp { off: 136, extra: 0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn gs_gets_two_segments_with_correct_flags() {
+        let pat = ustride(2, 8).with_gs_scatter((0..8).collect());
+        let mut plan = AccessPlan::default();
+        plan.build_cpu(&pat, Kernel::GS, true);
+        assert_eq!(plan.segs.len(), 2);
+        let (g, s) = (plan.segs[0], plan.segs[1]);
+        assert!(!g.write && !g.streaming && g.sid == 0);
+        assert!(s.write && s.streaming && s.sid == 1);
+        // Scatter-side offsets carry the write-region base.
+        let dst = pat.gs_scatter_base() as u64 * 8;
+        assert_eq!(plan.offsets[s.off_start], dst);
+    }
+
+    #[test]
+    fn triad_gets_three_streams() {
+        let pat = Pattern::dense(8, 64);
+        let mut plan = AccessPlan::default();
+        plan.build_cpu(&pat, Kernel::Stream(StreamOp::Triad), true);
+        assert_eq!(plan.segs.len(), 3);
+        assert_eq!(
+            plan.segs.iter().map(|s| s.sid).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        assert!(plan.segs[2].write && plan.segs[2].streaming);
+        // Each stream lives in its own region: distinct head offsets.
+        let heads: Vec<u64> =
+            plan.segs.iter().map(|s| plan.offsets[s.off_start]).collect();
+        assert!(heads[0] < heads[1] && heads[1] < heads[2]);
+    }
+
+    #[test]
+    fn rebuild_reuses_buffers() {
+        let mut plan = AccessPlan::default();
+        plan.build_cpu(&ustride(1, 16), Kernel::Gather, false);
+        let n = plan.offsets.len();
+        plan.build_cpu(&ustride(1, 16), Kernel::Gather, false);
+        assert_eq!(plan.offsets.len(), n);
+        assert_eq!(plan.segs.len(), 1);
+    }
+
+    #[test]
+    fn gpu_warp_dedupe_matches_scalar_coalescing() {
+        // 64 elements hitting 4 distinct 32 B sectors (broadcast-ish).
+        let idx: Vec<i64> = (0..64).map(|j| (j / 16) * 4).collect();
+        let pat = Pattern::from_indices("bcast", idx)
+            .with_delta(16)
+            .with_count(8);
+        let mut plan = GpuPlan::default();
+        plan.build_gpu(&pat, Kernel::Gather, 32);
+        assert_eq!(plan.warps.len(), 2);
+        for w in &plan.warps {
+            let secs = &plan.sectors[w.sec_start..w.sec_end];
+            // Each warp covers 2 sectors x 16 elements.
+            assert_eq!(secs.iter().map(|&(_, n)| n).sum::<u32>(), 32);
+            assert!(secs.windows(2).all(|p| p[0].0 < p[1].0), "sorted unique");
+        }
+    }
+
+    #[test]
+    fn gpu_write_side_warps_follow_read_side() {
+        let pat = ustride(1, 40).with_gs_scatter((0..40).collect());
+        let mut plan = GpuPlan::default();
+        plan.build_gpu(&pat, Kernel::GS, 32);
+        // 40 gather elements = 2 warps (32 + 8), then 2 scatter warps.
+        assert_eq!(plan.warps.len(), 4);
+        assert!(!plan.warps[0].write && plan.warps[0].sid == 0);
+        assert!(plan.warps[2].write && plan.warps[2].sid == 1);
+        assert_eq!(plan.warps[1].off_end - plan.warps[1].off_start, 8);
+    }
+}

@@ -68,10 +68,14 @@ impl Prefetcher {
         self.issued = 0;
     }
 
-    /// Observe a demand miss at `byte_addr` (line `line`); return the
-    /// extra lines the prefetcher fills.
-    pub fn on_miss(&mut self, byte_addr: u64, line: u64, out: &mut Vec<u64>) {
-        out.clear();
+    /// Advance the stride-detection state for a demand miss at
+    /// `byte_addr` without issuing prefetches. The tracker runs for
+    /// every kind — including [`PrefetchKind::None`], whose fill set
+    /// is empty by construction — so the loop-closure state digest is
+    /// regime-independent and `sim::plan`'s prefetch-off monomorphized
+    /// arm can skip the fill loop exactly.
+    #[inline]
+    pub fn note_miss(&mut self, byte_addr: u64) {
         // Track the byte-stride of the demand stream for the
         // stride-sensitive kinds.
         let stride = match self.last_addr {
@@ -85,6 +89,13 @@ impl Prefetcher {
             self.last_stride = stride;
         }
         self.last_addr = Some(byte_addr);
+    }
+
+    /// Observe a demand miss at `byte_addr` (line `line`); return the
+    /// extra lines the prefetcher fills.
+    pub fn on_miss(&mut self, byte_addr: u64, line: u64, out: &mut Vec<u64>) {
+        out.clear();
+        self.note_miss(byte_addr);
 
         match self.kind {
             PrefetchKind::None => {}
@@ -255,6 +266,24 @@ mod tests {
         // Irregular stream: confidence never builds.
         let outs = run(&mut pf, &[0, 640, 64, 9000, 333 * 64, 12]);
         assert!(outs.iter().all(|o| o.is_empty()), "{outs:?}");
+    }
+
+    /// `note_miss` advances exactly the state `on_miss` does — for
+    /// `None`, where the fill set is empty by construction, the two
+    /// are digest-identical (the `sim::plan` prefetch-off arm relies
+    /// on this).
+    #[test]
+    fn note_miss_tracks_state_like_on_miss() {
+        let mut a = Prefetcher::new(PrefetchKind::None);
+        let mut b = Prefetcher::new(PrefetchKind::None);
+        let mut buf = Vec::new();
+        for &addr in &[0u64, 128, 256, 384, 9000] {
+            a.on_miss(addr, addr / 64, &mut buf);
+            b.note_miss(addr);
+            assert!(buf.is_empty());
+        }
+        assert_eq!(a.state_digest(0, 7), b.state_digest(0, 7));
+        assert_eq!(a.issued, b.issued);
     }
 
     #[test]

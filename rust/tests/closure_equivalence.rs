@@ -9,7 +9,11 @@
 //! too: the banked bank state (open rows + last activation domain) is
 //! part of the closure fingerprint, and the counter comparison covers
 //! the per-bank hit/miss/conflict tallies, so a digest that missed a
-//! bank-state difference would fail here.
+//! bank-state difference would fail here. They also randomize the
+//! batch-compiled access plan on/off (ISSUE 8 satellite) — drawn once
+//! and held equal across both closure arms — pinning the closure ×
+//! plan × DRAM-model composition; the plan-vs-scalar axis itself is
+//! pinned by `tests/plan_equivalence.rs`.
 
 use spatter::pattern::{table5, Kernel, Pattern, StreamOp};
 use spatter::platforms;
@@ -143,11 +147,13 @@ fn prop_cpu_closure_equivalence() {
             arbitrary_pattern(g, 16).with_count(1 << g.usize_in(8, 13)),
             kernel,
         );
+        let plan_enabled = g.bool();
         let run = |closure_enabled: bool| {
             let mut e = CpuEngine::with_options(
                 &plat,
                 CpuSimOptions {
                     closure_enabled,
+                    plan_enabled,
                     page_size: page,
                     threads,
                     ..Default::default()
@@ -180,11 +186,13 @@ fn prop_gpu_closure_equivalence() {
             arbitrary_pattern(g, 64).with_count(1 << g.usize_in(6, 11)),
             kernel,
         );
+        let plan_enabled = g.bool();
         let run = |closure_enabled: bool| {
             let mut e = GpuEngine::with_options(
                 &plat,
                 GpuSimOptions {
                     closure_enabled,
+                    plan_enabled,
                     page_size: page,
                     ..Default::default()
                 },

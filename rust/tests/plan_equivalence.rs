@@ -1,0 +1,277 @@
+//! Differential property test for the batch-compiled access plan
+//! (ISSUE 8 tentpole): for randomized (platform, pattern, kernel,
+//! threads, page-size, interleave, closure) configurations, the
+//! engines must produce *exactly* the same `SimResult` — counters,
+//! breakdown, seconds, bandwidth — with the plan force-disabled (the
+//! scalar reference path) and force-enabled. The plan is an
+//! optimization, never an approximation: same-line run coalescing,
+//! batched TLB accounting, and the monomorphized hot loops may not
+//! move a single counter.
+//!
+//! Loop closure is randomized (drawn once, equal in both arms) and
+//! `closed_at_iteration` is compared too: plans must leave the
+//! iteration-boundary state bit-identical, so closure fires at the
+//! same iteration either way. The closure on/off axis itself is
+//! pinned by `tests/closure_equivalence.rs`.
+
+use spatter::pattern::{table5, Kernel, Pattern, StreamOp};
+use spatter::platforms;
+use spatter::prop::{check, Gen};
+use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
+use spatter::sim::gpu::{GpuEngine, GpuSimOptions};
+use spatter::sim::{InterleavePolicy, PageSize, SimResult};
+
+fn assert_identical(planned: &SimResult, scalar: &SimResult, ctx: &str) {
+    assert_eq!(planned.counters, scalar.counters, "{ctx}: counters");
+    assert_eq!(planned.breakdown, scalar.breakdown, "{ctx}: breakdown");
+    assert_eq!(planned.seconds, scalar.seconds, "{ctx}: seconds");
+    assert_eq!(
+        planned.bandwidth_gbs(),
+        scalar.bandwidth_gbs(),
+        "{ctx}: bandwidth"
+    );
+    assert_eq!(
+        planned.simulated_iterations, scalar.simulated_iterations,
+        "{ctx}: simulated iterations"
+    );
+    // The plan must preserve the closure fingerprint stream exactly:
+    // closure fires at the same iteration (or not at all) either way.
+    assert_eq!(
+        planned.closed_at_iteration, scalar.closed_at_iteration,
+        "{ctx}: closure must fire identically under the plan"
+    );
+}
+
+/// The whole kernel family, GUPS included — its plan dispatch is a
+/// no-op (the RNG stream can't be precompiled), and that no-op must
+/// hold the contract too.
+fn arbitrary_kernel(g: &mut Gen) -> Kernel {
+    *g.choose(&[
+        Kernel::Gather,
+        Kernel::Scatter,
+        Kernel::GS,
+        Kernel::Stream(StreamOp::Copy),
+        Kernel::Stream(StreamOp::Scale),
+        Kernel::Stream(StreamOp::Add),
+        Kernel::Stream(StreamOp::Triad),
+        Kernel::Gups,
+    ])
+}
+
+/// Shape the drawn pattern for the kernel (see
+/// `tests/closure_equivalence.rs`, which this mirrors).
+fn with_kernel_shape(g: &mut Gen, pat: Pattern, kernel: Kernel) -> Pattern {
+    match kernel {
+        Kernel::GS => {
+            let v = pat.vector_len();
+            let side = match g.usize_in(0, 2) {
+                0 => {
+                    let s = g.i64_in(1, 24);
+                    (0..v as i64).map(|j| j * s).collect()
+                }
+                1 => vec![0; v],
+                _ => (0..v).map(|_| g.i64_in(0, 2048)).collect(),
+            };
+            pat.with_gs_scatter(side)
+        }
+        Kernel::Stream(_) => {
+            Pattern::dense(*g.choose(&[4usize, 8, 16, 32]), pat.count)
+        }
+        Kernel::Gups => Pattern::gups(1 << g.usize_in(10, 18), pat.count),
+        _ => pat,
+    }
+}
+
+/// Pattern families weighted toward the plan's interesting cases:
+/// dense same-line runs (delta-0 revisits, stride-1), line-straddling
+/// strides, page-walking deltas, irregular buffers (singleton runs
+/// everywhere), and the Table-5 proxies.
+fn arbitrary_pattern(g: &mut Gen, v_cap: usize) -> Pattern {
+    match g.usize_in(0, 4) {
+        0 => {
+            // Delta-0: total revisit, maximal same-line runs.
+            let v = g.usize_in(1, v_cap);
+            Pattern::from_indices(
+                "d0",
+                (0..v as i64).map(|i| i * g.i64_in(1, 8)).collect(),
+            )
+            .with_delta(0)
+        }
+        1 => {
+            let s = 1usize << g.usize_in(0, 6);
+            let v = g.usize_in(1, v_cap);
+            Pattern::from_indices(
+                "ustride",
+                (0..v as i64).map(|i| i * s as i64).collect(),
+            )
+            .with_delta((v * s) as i64)
+        }
+        2 => {
+            // Huge delta: fresh pages every iteration (PENNANT shape).
+            Pattern::from_indices(
+                "huge",
+                (0..16i64).map(|j| j * 512).collect(),
+            )
+            .with_delta(g.i64_in(1, 4) * 16384)
+        }
+        3 => {
+            // Cycling delta list: the base walks through unaligned
+            // residues, exercising the plan's scalar fallback (and its
+            // flip back to the coalesced body when realigned).
+            let v = g.usize_in(2, v_cap);
+            let idx: Vec<i64> = (0..v).map(|_| g.i64_in(0, 2048)).collect();
+            let jump = g.i64_in(0, 512);
+            Pattern::from_indices("rand", idx).with_deltas(&[0, 3, 0, jump])
+        }
+        _ => {
+            let name = *g.choose(&["AMG-G0", "LULESH-S1", "LULESH-S3"]);
+            let app = table5::by_name(name).unwrap();
+            Pattern::from_indices(app.name, app.indices.to_vec())
+                .with_delta(app.delta)
+        }
+    }
+}
+
+#[test]
+fn prop_cpu_plan_equivalence() {
+    check("CPU: plan on == plan off, exactly", 20, |g| {
+        let mut plat = platforms::by_name(
+            *g.choose(&["skx", "bdw", "naples", "tx2", "knl", "clx"]),
+        )
+        .unwrap();
+        plat.dram.interleave = *g.choose(InterleavePolicy::ALL);
+        let kernel = arbitrary_kernel(g);
+        let page = *g.choose(&[PageSize::FourKB, PageSize::TwoMB]);
+        let threads = if g.bool() {
+            None
+        } else {
+            Some(g.usize_in(1, 8))
+        };
+        let prefetch_enabled = g.bool();
+        let closure_enabled = g.bool();
+        let pat = with_kernel_shape(
+            g,
+            arbitrary_pattern(g, 16).with_count(1 << g.usize_in(8, 13)),
+            kernel,
+        );
+        let run = |plan_enabled: bool| {
+            let mut e = CpuEngine::with_options(
+                &plat,
+                CpuSimOptions {
+                    plan_enabled,
+                    closure_enabled,
+                    prefetch_enabled,
+                    page_size: page,
+                    threads,
+                    ..Default::default()
+                },
+            );
+            e.run(&pat, kernel).unwrap()
+        };
+        let planned = run(true);
+        let scalar = run(false);
+        assert_identical(
+            &planned,
+            &scalar,
+            &format!(
+                "{} {:?} {} pf={prefetch_enabled} closure={closure_enabled}",
+                plat.name, kernel, pat.spec
+            ),
+        );
+    });
+}
+
+#[test]
+fn prop_gpu_plan_equivalence() {
+    check("GPU: plan on == plan off, exactly", 14, |g| {
+        let mut plat = platforms::gpu_by_name(
+            *g.choose(&["k40c", "titanxp", "p100", "v100"]),
+        )
+        .unwrap();
+        plat.dram.interleave = *g.choose(InterleavePolicy::ALL);
+        let kernel = arbitrary_kernel(g);
+        let page = *g.choose(&[PageSize::SixtyFourKB, PageSize::TwoMB]);
+        let closure_enabled = g.bool();
+        let pat = with_kernel_shape(
+            g,
+            arbitrary_pattern(g, 64).with_count(1 << g.usize_in(6, 11)),
+            kernel,
+        );
+        let run = |plan_enabled: bool| {
+            let mut e = GpuEngine::with_options(
+                &plat,
+                GpuSimOptions {
+                    plan_enabled,
+                    closure_enabled,
+                    page_size: page,
+                    ..Default::default()
+                },
+            );
+            e.run(&pat, kernel).unwrap()
+        };
+        let planned = run(true);
+        let scalar = run(false);
+        assert_identical(
+            &planned,
+            &scalar,
+            &format!(
+                "{} {:?} {} closure={closure_enabled}",
+                plat.name, kernel, pat.spec
+            ),
+        );
+    });
+}
+
+/// Deterministic anchors for the two bench workloads the plan targets:
+/// the plan must match the scalar path exactly on the duplicate-heavy
+/// LULESH-S3 scatter and on a stride-1 gather (the maximal-coalescing
+/// cases), on both a prefetching and a non-prefetching platform.
+#[test]
+fn plan_matches_scalar_on_bench_workloads() {
+    let s3 = table5::by_name("LULESH-S3").unwrap().to_pattern(512);
+    let stride1 = Pattern::from_indices("u1", (0..8i64).collect())
+        .with_delta(8)
+        .with_count(1 << 12);
+    for plat_name in ["skx", "naples"] {
+        let plat = platforms::by_name(plat_name).unwrap();
+        for (pat, kernel) in
+            [(&s3, Kernel::Scatter), (&stride1, Kernel::Gather)]
+        {
+            let run = |plan_enabled: bool| {
+                let mut e = CpuEngine::with_options(
+                    &plat,
+                    CpuSimOptions {
+                        plan_enabled,
+                        closure_enabled: true,
+                        ..Default::default()
+                    },
+                );
+                e.run(pat, kernel).unwrap()
+            };
+            assert_identical(
+                &run(true),
+                &run(false),
+                &format!("{plat_name} {kernel:?} {}", pat.spec),
+            );
+        }
+    }
+}
+
+/// `SPATTER_NO_PLAN=1` must force-disable the plan through the default
+/// options (the sibling of `SPATTER_NO_CLOSURE`/`SPATTER_NO_MEMO`).
+/// Env mutation is race-safe here: the plan is bit-identical on or
+/// off, so a concurrent test observing either default still passes.
+#[test]
+fn spatter_no_plan_env_disables_plan() {
+    std::env::remove_var("SPATTER_NO_PLAN");
+    assert!(
+        CpuSimOptions::default().plan_enabled,
+        "plan defaults on without the env var"
+    );
+    assert!(GpuSimOptions::default().plan_enabled);
+    std::env::set_var("SPATTER_NO_PLAN", "1");
+    assert!(!CpuSimOptions::default().plan_enabled);
+    assert!(!GpuSimOptions::default().plan_enabled);
+    std::env::remove_var("SPATTER_NO_PLAN");
+    assert!(CpuSimOptions::default().plan_enabled);
+}

@@ -1,0 +1,160 @@
+//! Counting-allocator guard for the per-access hot path (ISSUE 8
+//! satellite): the scratch-buffer invariant in `sim/mod.rs` — prefetch
+//! target lists, warp coalescing lists, the pre-scaled byte-offset
+//! table, and the compiled access plans all live in engine-owned
+//! buffers that are rebuilt in place — is enforced here by a
+//! `#[global_allocator]` wrapper, not just by review.
+//!
+//! Method: run each kernel family once to warm an engine (first runs
+//! may legitimately grow scratch capacity), then measure the
+//! allocation-event count across a second, identical run. Warm-run
+//! allocations are O(log n) — hash-set doubling in the streaming
+//! write-density probe, closure bookkeeping — so they stay under a
+//! small constant bound, while a single allocation inside the
+//! per-access path would show up tens of thousands of times (once per
+//! simulated access). The bound below has ~30x headroom over the
+//! worst legitimate run and is ~30x below the cheapest per-access
+//! leak, so it cannot flake in either direction.
+//!
+//! This file holds exactly one `#[test]`: the event counter is
+//! process-global, and concurrent tests in the same binary would
+//! pollute each other's deltas.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use spatter::pattern::{Kernel, Pattern, StreamOp};
+use spatter::platforms;
+use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
+use spatter::sim::gpu::{GpuEngine, GpuSimOptions};
+
+/// Counts allocation *events* (alloc/realloc/alloc_zeroed), not bytes:
+/// a per-access leak is a per-access event regardless of size.
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn events() -> u64 {
+    ALLOC_EVENTS.load(Ordering::Relaxed)
+}
+
+/// Warm-run + steady-run allocation-event budget. Legitimate per-run
+/// work (write-density hash sets, coherence probes) allocates O(log n)
+/// events; anything in the per-access path would cost >= `MIN_ACCESSES`.
+const MAX_STEADY_EVENTS: u64 = 2048;
+const MIN_ACCESSES: u64 = 60_000;
+
+/// One pattern per kernel family, sized so a run pushes well over
+/// `MIN_ACCESSES` accesses through the hot path.
+fn family_cases() -> Vec<(Pattern, Kernel)> {
+    let count = 1 << 13;
+    let ustride = |name: &str, s: i64| {
+        Pattern::from_indices(name, (0..8i64).map(|i| i * s).collect())
+            .with_delta(8 * s)
+            .with_count(count)
+    };
+    vec![
+        (ustride("u2-gather", 2), Kernel::Gather),
+        (ustride("u2-scatter", 2), Kernel::Scatter),
+        (
+            ustride("gs", 1).with_gs_scatter((0..8i64).map(|j| j * 3).collect()),
+            Kernel::GS,
+        ),
+        (Pattern::dense(8, count), Kernel::Stream(StreamOp::Triad)),
+        (Pattern::gups(1 << 12, count), Kernel::Gups),
+    ]
+}
+
+#[test]
+fn per_access_path_is_allocation_free_once_warm() {
+    // Closure off so every iteration actually executes the per-access
+    // path (closure would fast-forward past it); plan pinned on so the
+    // planned pass — the new hot path — is what gets audited. The
+    // scalar path shares every scratch buffer it uses, so auditing the
+    // default path covers both.
+    let cpu_opts = CpuSimOptions {
+        closure_enabled: false,
+        plan_enabled: true,
+        ..Default::default()
+    };
+    let gpu_opts = GpuSimOptions {
+        closure_enabled: false,
+        plan_enabled: true,
+        ..Default::default()
+    };
+    let skx = platforms::by_name("skx").unwrap();
+    let p100 = platforms::gpu_by_name("p100").unwrap();
+
+    for (pat, kernel) in family_cases() {
+        let mut e = CpuEngine::with_options(&skx, cpu_opts.clone());
+        e.run(&pat, kernel).unwrap(); // warm: scratch grows to size
+        let before = events();
+        let r = e.run(&pat, kernel).unwrap();
+        let delta = events() - before;
+        assert!(
+            r.counters.accesses >= MIN_ACCESSES,
+            "cpu {kernel:?} {}: only {} accesses — too few for the \
+             budget argument to hold",
+            pat.spec,
+            r.counters.accesses
+        );
+        assert!(
+            delta <= MAX_STEADY_EVENTS,
+            "cpu {kernel:?} {}: {delta} allocation events across a warm \
+             run of {} accesses — something allocates per access",
+            pat.spec,
+            r.counters.accesses
+        );
+    }
+
+    for (pat, kernel) in family_cases() {
+        let mut e = GpuEngine::with_options(&p100, gpu_opts.clone());
+        e.run(&pat, kernel).unwrap();
+        let before = events();
+        let r = e.run(&pat, kernel).unwrap();
+        let delta = events() - before;
+        assert!(
+            r.counters.accesses >= MIN_ACCESSES,
+            "gpu {kernel:?} {}: only {} accesses — too few for the \
+             budget argument to hold",
+            pat.spec,
+            r.counters.accesses
+        );
+        assert!(
+            delta <= MAX_STEADY_EVENTS,
+            "gpu {kernel:?} {}: {delta} allocation events across a warm \
+             run of {} accesses — something allocates per access",
+            pat.spec,
+            r.counters.accesses
+        );
+    }
+}
