@@ -3,9 +3,10 @@
 //! 256-iteration LULESH-S3 scatter, each A/B'd twice — steady-state
 //! loop closure on vs off, and the batch-compiled access plan on vs
 //! off (the `plan-*` records) — plus the scheduler/memo/stream
-//! campaign legs and the `dram-bank` pow2-vs-odd conflict cell, and
-//! emits `BENCH_sim.json` (`{"suite": ..., "wall_ms": ...}` records)
-//! so the repo's perf numbers accumulate run over run.
+//! campaign legs, the `dram-bank` pow2-vs-odd conflict cell, and the
+//! `simd-regime` scalar-vs-native vectorization ladder, and emits
+//! `BENCH_sim.json` (`{"suite": ..., "wall_ms": ...}` records) so the
+//! repo's perf numbers accumulate run over run.
 //!
 //! Run via `scripts/bench.sh` (or `cargo bench --bench sweep`); the
 //! output path can be overridden with the `BENCH_SIM_JSON` env var.
@@ -20,7 +21,7 @@ use spatter::coordinator::{
 };
 use spatter::json::{self, obj, Value};
 use spatter::pattern::{table5, Kernel, Pattern};
-use spatter::platforms;
+use spatter::platforms::{self, VectorRegime};
 use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
 use spatter::suite::{cpu_ustride, STRIDES};
 
@@ -341,6 +342,46 @@ fn main() {
         ("wall_ms_odd", Value::from(walls[1])),
         ("conflict_rate_pow2", Value::from(rates[0])),
         ("conflict_rate_odd", Value::from(rates[1])),
+    ]));
+
+    // --- Vectorization-regime microbench: the fast KNL gather stride
+    // ladder under the forced scalar regime vs the native hardware
+    // G/S. The knob is pure analytic-timing dispatch, so the walls
+    // should tie; the stride-1 bandwidth ratio is Fig 6's KNL pole
+    // and is recorded so regressions in the regime model show up here.
+    let regime_sweep = |regime: Option<VectorRegime>| -> (f64, f64) {
+        let knl = platforms::by_name("knl").unwrap();
+        let mut e = CpuEngine::with_options(
+            &knl,
+            CpuSimOptions {
+                regime,
+                ..Default::default()
+            },
+        );
+        let mut s1_bw = 0.0f64;
+        let t0 = Instant::now();
+        for &s in STRIDES {
+            let r = e.run(&cpu_ustride(s, 1 << 16), Kernel::Gather).unwrap();
+            if s == 1 {
+                s1_bw = r.bandwidth_gbs();
+            }
+            black_box(r.bandwidth_gbs());
+        }
+        (t0.elapsed().as_secs_f64() * 1e3, s1_bw)
+    };
+    let (native_ms, native_bw) = regime_sweep(None);
+    let (scalar_ms, scalar_bw) = regime_sweep(Some(VectorRegime::Scalar));
+    println!(
+        "simd-regime: knl native {native_ms:.1} ms, scalar {scalar_ms:.1} ms, \
+         stride-1 vector/scalar {:.2}x",
+        native_bw / scalar_bw
+    );
+    records.push(obj(&[
+        ("suite", Value::from("simd-regime")),
+        ("platform", Value::from("knl")),
+        ("wall_ms_native", Value::from(native_ms)),
+        ("wall_ms_scalar", Value::from(scalar_ms)),
+        ("s1_vector_over_scalar", Value::from(native_bw / scalar_bw)),
     ]));
 
     let out = std::env::var("BENCH_SIM_JSON")

@@ -25,7 +25,7 @@ pub use pjrt::PjrtBackend;
 
 use crate::error::Result;
 use crate::pattern::{Kernel, Pattern};
-use crate::platforms::{CpuPlatform, GpuPlatform};
+use crate::platforms::{CpuPlatform, GpuPlatform, VectorRegime};
 use crate::sim::cpu::{CpuEngine, CpuSimOptions};
 use crate::sim::gpu::{GpuEngine, GpuSimOptions};
 use crate::sim::{PageSize, SimResult};
@@ -68,6 +68,18 @@ pub trait Backend {
         None
     }
 
+    /// Reconfigure the vectorization regime before the next run:
+    /// `Some` overrides, `None` restores the backend's configured
+    /// default. Backends without a CPU issue model (GPU, real
+    /// execution) ignore the knob.
+    fn set_vector_regime(&mut self, _regime: Option<VectorRegime>) {}
+
+    /// The vectorization regime the next run will model, if the
+    /// backend has a CPU issue model.
+    fn vector_regime(&self) -> Option<VectorRegime> {
+        None
+    }
+
     /// Whether identical configs produce identical results on this
     /// backend. Simulators are pure functions of the config, so the
     /// coordinator may serve repeated configs from its memo cache;
@@ -106,12 +118,27 @@ impl OpenMpSim {
         page: Option<PageSize>,
         threads: Option<usize>,
     ) -> OpenMpSim {
+        OpenMpSim::configured_regime(platform, page, threads, None)
+    }
+
+    /// [`OpenMpSim::configured`] plus the `--vector-regime` knob. The
+    /// regime lands in the engine's configured options — the restore
+    /// target of [`Backend::set_vector_regime`] — so per-run configs
+    /// without a `"vector-regime"` key fall back to the CLI value, not
+    /// the platform default.
+    pub fn configured_regime(
+        platform: &CpuPlatform,
+        page: Option<PageSize>,
+        threads: Option<usize>,
+        regime: Option<VectorRegime>,
+    ) -> OpenMpSim {
         OpenMpSim {
             engine: CpuEngine::with_options(
                 platform,
                 CpuSimOptions {
                     page_size: page.unwrap_or(PageSize::FourKB),
                     threads,
+                    regime,
                     ..Default::default()
                 },
             ),
@@ -166,6 +193,14 @@ impl Backend for OpenMpSim {
     fn threads(&self) -> Option<usize> {
         Some(self.engine.threads())
     }
+
+    fn set_vector_regime(&mut self, regime: Option<VectorRegime>) {
+        self.engine.set_vector_regime(regime);
+    }
+
+    fn vector_regime(&self) -> Option<VectorRegime> {
+        Some(self.engine.vector_regime())
+    }
 }
 
 /// The paper's Scalar backend (`#pragma novec` baseline) on a simulated
@@ -196,7 +231,7 @@ impl ScalarSim {
             engine: CpuEngine::with_options(
                 platform,
                 CpuSimOptions {
-                    vectorized: false,
+                    regime: Some(VectorRegime::Scalar),
                     page_size: page.unwrap_or(PageSize::FourKB),
                     threads,
                     ..Default::default()
@@ -234,6 +269,13 @@ impl Backend for ScalarSim {
 
     fn threads(&self) -> Option<usize> {
         Some(self.engine.threads())
+    }
+
+    fn vector_regime(&self) -> Option<VectorRegime> {
+        // The Scalar backend *is* the pinned scalar regime; the setter
+        // stays the trait no-op, so per-run overrides cannot silently
+        // re-vectorize a `#pragma novec` baseline.
+        Some(VectorRegime::Scalar)
     }
 }
 
@@ -410,6 +452,44 @@ mod tests {
         assert_eq!(cu.threads(), None);
         cu.set_threads(Some(64));
         assert_eq!(cu.threads(), None);
+    }
+
+    #[test]
+    fn vector_regime_knob_through_the_trait() {
+        let p = platforms::by_name("skx").unwrap();
+        let mut b: Box<dyn Backend> = Box::new(OpenMpSim::new(&p));
+        assert_eq!(b.vector_regime(), Some(VectorRegime::HardwareGS));
+        b.set_vector_regime(Some(VectorRegime::Scalar));
+        assert_eq!(b.vector_regime(), Some(VectorRegime::Scalar));
+        b.set_vector_regime(None);
+        assert_eq!(b.vector_regime(), Some(VectorRegime::HardwareGS));
+
+        // A CLI-level --vector-regime value is the restore target, not
+        // a transient override.
+        let mut c: Box<dyn Backend> = Box::new(OpenMpSim::configured_regime(
+            &p,
+            None,
+            None,
+            Some(VectorRegime::EmulatedGather),
+        ));
+        assert_eq!(c.vector_regime(), Some(VectorRegime::EmulatedGather));
+        c.set_vector_regime(Some(VectorRegime::Scalar));
+        c.set_vector_regime(None);
+        assert_eq!(c.vector_regime(), Some(VectorRegime::EmulatedGather));
+
+        // The Scalar backend pins the scalar regime; the setter is a
+        // no-op through the trait.
+        let mut s: Box<dyn Backend> = Box::new(ScalarSim::new(&p));
+        assert_eq!(s.vector_regime(), Some(VectorRegime::Scalar));
+        s.set_vector_regime(Some(VectorRegime::HardwareGS));
+        assert_eq!(s.vector_regime(), Some(VectorRegime::Scalar));
+
+        // GPUs have no regime model: getter None, setter no-op.
+        let g = platforms::gpu_by_name("p100").unwrap();
+        let mut cu: Box<dyn Backend> = Box::new(CudaSim::new(&g));
+        assert_eq!(cu.vector_regime(), None);
+        cu.set_vector_regime(Some(VectorRegime::Scalar));
+        assert_eq!(cu.vector_regime(), None);
     }
 
     #[test]

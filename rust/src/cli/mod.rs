@@ -10,6 +10,7 @@
 
 use crate::error::{Error, Result};
 use crate::pattern::{Kernel, Pattern};
+use crate::platforms::VectorRegime;
 use crate::sim::PageSize;
 
 /// Which backend executes the run.
@@ -90,6 +91,10 @@ pub struct CommonArgs {
     /// CPU platform's single-socket default; GPU and real-execution
     /// backends reject the flag.
     pub threads: Option<usize>,
+    /// Vectorization regime (--vector-regime). `None` keeps each CPU
+    /// platform's native regime (its ISA's best gather/scatter path);
+    /// GPU, scalar, and real-execution backends reject the flag.
+    pub vector_regime: Option<VectorRegime>,
     /// Worker threads for multi-config sweeps (--jobs). Default: the
     /// machine's available parallelism. Output is byte-identical for
     /// any value (order-preserving scheduler).
@@ -111,6 +116,7 @@ impl Default for CommonArgs {
             json_out: false,
             page_size: None,
             threads: None,
+            vector_regime: None,
             jobs: crate::coordinator::default_jobs(),
             stream: false,
         }
@@ -195,6 +201,10 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 }
                 common.threads = Some(t);
             }
+            "--vector-regime" => {
+                common.vector_regime =
+                    Some(VectorRegime::parse(&take("--vector-regime")?)?)
+            }
             "--jobs" => {
                 let v = take("--jobs")?;
                 common.jobs = v
@@ -225,6 +235,13 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             return Err(Error::Cli(
                 "--threads does not apply to suites (threadscale sweeps the \
                  thread axis itself); use it with -k/-p or -j runs"
+                    .into(),
+            ));
+        }
+        if common.vector_regime.is_some() {
+            return Err(Error::Cli(
+                "--vector-regime does not apply to suites (simd sweeps the \
+                 regime axis itself); use it with -k/-p or -j runs"
                     .into(),
             ));
         }
@@ -443,6 +460,12 @@ OPTIONS:
                        default: the platform's single-socket count,
                        e.g. 16 on skx). JSON configs may override per
                        run with a \"threads\" key
+      --vector-regime R  vectorization regime for CPU simulation:
+                       scalar | emulated-gather | hardware-gs |
+                       masked-sve (default: the platform's native
+                       regime, e.g. hardware-gs on skx). Platforms
+                       reject regimes their ISA lacks. JSON configs may
+                       override per run with a \"vector-regime\" key
       --jobs N         worker threads for multi-config sweeps and
                        suites (default: available parallelism). Output
                        is byte-identical for any N: results are
@@ -455,7 +478,8 @@ OPTIONS:
       --validate       cross-check numerics through the PJRT path
       --json-out       machine-readable output
       --suite NAME     fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|
-                       pagesize|ustride|threadscale|prefetch|baselines|all
+                       pagesize|ustride|threadscale|prefetch|baselines|
+                       dram|simd|all
 ";
 
 #[cfg(test)]
@@ -684,6 +708,44 @@ mod tests {
         assert!(parse_args(&argv("-j c.json --fast")).is_err());
         assert!(parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8 --fast")).is_err());
         assert!(parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8 --jobs 8")).is_err());
+    }
+
+    #[test]
+    fn vector_regime_flag() {
+        let cmd = parse_args(&argv(
+            "-k Gather -p UNIFORM:8:1 -d 8 --vector-regime scalar",
+        ))
+        .unwrap();
+        match cmd {
+            Command::Run(r) => assert_eq!(
+                r.common.vector_regime,
+                Some(VectorRegime::Scalar)
+            ),
+            other => panic!("{other:?}"),
+        }
+        // Case-insensitive, and it rides along with -j runs.
+        match parse_args(&argv("-j c.json --vector-regime Hardware-GS"))
+            .unwrap()
+        {
+            Command::Json { common, .. } => assert_eq!(
+                common.vector_regime,
+                Some(VectorRegime::HardwareGS)
+            ),
+            other => panic!("{other:?}"),
+        }
+        // Default: the platform's native regime.
+        match parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8")).unwrap() {
+            Command::Run(r) => assert_eq!(r.common.vector_regime, None),
+            other => panic!("{other:?}"),
+        }
+        // Junk and missing values rejected; suites sweep the axis
+        // themselves, so the flag is rejected rather than dropped.
+        assert!(parse_args(&argv("-j c.json --vector-regime avx9")).is_err());
+        assert!(parse_args(&argv("-j c.json --vector-regime")).is_err());
+        let err = parse_args(&argv("--suite simd --vector-regime scalar"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not apply to suites"), "{err}");
     }
 
     #[test]

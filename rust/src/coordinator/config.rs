@@ -21,6 +21,7 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::json::{self, obj, Value};
 use crate::pattern::{table5, Kernel, Pattern};
+use crate::platforms::VectorRegime;
 use crate::sim::PageSize;
 
 /// One entry of a JSON config file.
@@ -38,6 +39,13 @@ pub struct RunConfig {
     /// the backend's configured default. Ignored by backends without a
     /// thread model (GPU, real execution).
     pub threads: Option<usize>,
+    /// Optional `"vector-regime"` override for this run (paper §5.3 /
+    /// Fig 6 vectorization axis: `"scalar"`, `"emulated-gather"`,
+    /// `"hardware-gs"`, `"masked-sve"`); `None` keeps the backend's
+    /// configured default. Ignored by backends without a CPU issue
+    /// model (GPU, real execution); an unsupported regime on a CPU
+    /// platform is a run-time config error.
+    pub regime: Option<VectorRegime>,
 }
 
 impl RunConfig {
@@ -81,6 +89,9 @@ impl RunConfig {
         }
         if let Some(threads) = self.threads {
             pairs.push(("threads", Value::from(threads)));
+        }
+        if let Some(regime) = self.regime {
+            pairs.push(("vector-regime", Value::from(regime.name())));
         }
         obj(&pairs)
     }
@@ -359,6 +370,13 @@ fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
         }
         None => None,
     };
+    let regime = match v.get_opt("vector-regime") {
+        Some(r) => Some(
+            VectorRegime::parse(r.as_str()?)
+                .map_err(|e| Error::Config(format!("run {i}: {e}")))?,
+        ),
+        None => None,
+    };
     let name = match v.get_opt("name") {
         Some(n) => n.as_str()?.to_string(),
         None => pattern.spec.clone(),
@@ -369,6 +387,7 @@ fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
         pattern,
         page_size,
         threads,
+        regime,
     })
 }
 
@@ -475,6 +494,56 @@ mod tests {
         for (a, b) in cfgs.iter().zip(&back) {
             assert_eq!(a.threads, b.threads);
             assert_eq!(a.page_size, b.page_size);
+        }
+    }
+
+    #[test]
+    fn vector_regime_key_parses_and_roundtrips() {
+        let cfgs = parse_config_text(
+            r#"[
+              {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+               "count": 1024, "vector-regime": "scalar"},
+              {"kernel": "Gather", "pattern": "UNIFORM:8:2", "delta": 16,
+               "count": 512, "vector-regime": "hardware-gs", "threads": 4},
+              {"kernel": "Scatter", "pattern": "UNIFORM:8:1", "delta": 8,
+               "count": 256, "vector-regime": "Emulated-Gather"},
+              {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+               "count": 64}
+            ]"#,
+        )
+        .unwrap();
+        assert_eq!(cfgs[0].regime, Some(VectorRegime::Scalar));
+        assert_eq!(cfgs[1].regime, Some(VectorRegime::HardwareGS));
+        assert_eq!(cfgs[1].threads, Some(4));
+        // Case-insensitive, like the platform lookup.
+        assert_eq!(cfgs[2].regime, Some(VectorRegime::EmulatedGather));
+        assert_eq!(cfgs[3].regime, None);
+
+        let text = json::to_string(&Value::Array(
+            cfgs.iter().map(|c| c.to_json()).collect(),
+        ));
+        let back = parse_config_text(&text).unwrap();
+        for (a, b) in cfgs.iter().zip(&back) {
+            assert_eq!(a.regime, b.regime);
+            assert_eq!(a.threads, b.threads);
+            assert_eq!(a.page_size, b.page_size);
+        }
+    }
+
+    #[test]
+    fn bad_vector_regime_rejected_with_run_index() {
+        for bad in [
+            r#"[{"kernel": "Gather", "pattern": "UNIFORM:8:1",
+                 "vector-regime": "avx9"}]"#,
+            r#"[{"kernel": "Gather", "pattern": "UNIFORM:8:1",
+                 "vector-regime": 512}]"#,
+        ] {
+            let err = parse_config_text(bad).unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.contains("run 0") || msg.contains("string"),
+                "{bad}: {msg}"
+            );
         }
     }
 
@@ -673,19 +742,21 @@ mod tests {
            "pattern-scatter": "UNIFORM:8:1", "delta": 32, "count": 256},
           {"kernel": "GUPS", "count": 64},
           {"kernel": "Gather", "pattern": "PENNANT-G4", "count": 64,
-           "page-size": "2MB", "threads": 4}
+           "page-size": "2MB", "threads": 4, "vector-regime": "scalar"}
         ]"#;
         let batch = parse_config_text(text).unwrap();
         let streamed: Result<Vec<RunConfig>> =
             stream_config_reader(std::io::Cursor::new(text)).collect();
         let streamed = streamed.unwrap();
         assert_eq!(streamed.len(), batch.len());
+        assert_eq!(batch[4].regime, Some(VectorRegime::Scalar));
         for (a, b) in batch.iter().zip(&streamed) {
             assert_eq!(a.name, b.name);
             assert_eq!(a.kernel, b.kernel);
             assert_eq!(a.pattern, b.pattern);
             assert_eq!(a.page_size, b.page_size);
             assert_eq!(a.threads, b.threads);
+            assert_eq!(a.regime, b.regime);
         }
     }
 

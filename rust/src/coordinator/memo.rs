@@ -7,7 +7,8 @@
 //!
 //! The key is a 128-bit [`Fingerprinter`] digest over every field
 //! that reaches the engine: kernel, gather/scatter index buffers,
-//! delta(s), count, and the per-run page-size / thread overrides. The
+//! delta(s), count, and the per-run page-size / thread /
+//! vector-regime overrides. The
 //! display name and pattern spec string are deliberately *excluded* —
 //! `"custom[3]"` vs `"custom[7]"` or differently-named twins share
 //! physics, so they share the cache line. Backend identity is uniform
@@ -59,6 +60,13 @@ pub fn config_fingerprint(c: &RunConfig) -> u128 {
         Some(t) => {
             f.push(1);
             f.push(t as u64);
+        }
+        None => f.push(0),
+    }
+    match c.regime {
+        Some(r) => {
+            f.push(1);
+            f.push_str(r.name());
         }
         None => f.push(0),
     }
@@ -260,7 +268,9 @@ mod tests {
           {"name": "alpha", "kernel": "Gather", "pattern": "UNIFORM:8:1",
            "delta": 8, "count": 4096, "page-size": "2MB"},
           {"name": "alpha", "kernel": "Gather", "pattern": "UNIFORM:8:1",
-           "delta": 8, "count": 4096, "threads": 4}
+           "delta": 8, "count": 4096, "threads": 4},
+          {"name": "alpha", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+           "delta": 8, "count": 4096, "vector-regime": "scalar"}
         ]"#);
         let base = config_fingerprint(&c[0]);
         assert_eq!(base, config_fingerprint(&c[1]), "name is display-only");
@@ -271,6 +281,24 @@ mod tests {
                 "config {i} differs in physics and must not alias"
             );
         }
+    }
+
+    #[test]
+    fn vector_regime_is_physics_not_display() {
+        // Regression for the dead-`vectorized` era: two configs that
+        // differ only in their vector regime must not share a cache
+        // line — a false hit would hand the scalar run the vectorized
+        // result (or vice versa) with a bogus `"memo"` provenance.
+        let c = cfgs(r#"[
+          {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+           "count": 4096, "vector-regime": "scalar"},
+          {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+           "count": 4096, "vector-regime": "hardware-gs"}
+        ]"#);
+        assert_ne!(config_fingerprint(&c[0]), config_fingerprint(&c[1]));
+        let dups: Vec<Option<usize>> =
+            dup_labels(&c).iter().map(|(_, d)| *d).collect();
+        assert_eq!(dups, vec![None, None], "both are first occurrences");
     }
 
     #[test]

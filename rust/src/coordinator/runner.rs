@@ -85,6 +85,10 @@ pub struct RunRecord {
     /// Simulated OpenMP thread count the run modelled; `None` for
     /// backends without a thread model (GPU, real execution).
     pub threads: Option<usize>,
+    /// Vectorization regime the run modelled ("scalar",
+    /// "emulated-gather", "hardware-gs", "masked-sve"); `None` for
+    /// backends without a vector-ISA model (GPU, real execution).
+    pub vector_regime: Option<String>,
     /// Measured-pass iteration at which the engine's steady-state
     /// loop closure fired (`None`: full simulation — closure disabled,
     /// no cycle found, or a real-execution backend). Diagnostic only:
@@ -151,6 +155,13 @@ impl RunRecord {
                 },
             ),
             (
+                "vector_regime",
+                match &self.vector_regime {
+                    Some(r) => Value::from(r.clone()),
+                    None => Value::Null,
+                },
+            ),
+            (
                 "sim-closure",
                 match self.closed_at {
                     Some(i) => Value::from(i),
@@ -185,8 +196,9 @@ impl RunRecord {
 
 /// Build the record for a finished (or cache-served) simulation. The
 /// backend is consulted only for per-run environment (page size /
-/// thread overrides already applied via the setters), so a cached
-/// `SimResult` produces the byte-identical record a fresh run would.
+/// thread / vector-regime overrides already applied via the setters),
+/// so a cached `SimResult` produces the byte-identical record a fresh
+/// run would.
 fn record_from_sim(
     backend: &dyn Backend,
     name: &str,
@@ -213,6 +225,7 @@ fn record_from_sim(
         page_size: backend.page_size().map(|p| p.name().to_string()),
         tlb_hit_rate: r.counters.tlb.hit_rate(),
         threads: backend.threads(),
+        vector_regime: backend.vector_regime().map(|r| r.name().to_string()),
         closed_at: r.closed_at_iteration,
         sim_rate: if modelled > 0.0 {
             r.counters.accesses as f64 / modelled
@@ -251,6 +264,7 @@ fn run_one_cached(
 ) -> Result<RunRecord> {
     backend.set_page_size(c.page_size);
     backend.set_threads(c.threads);
+    backend.set_vector_regime(c.regime);
     let Some(cache) = cache.filter(|_| backend.deterministic()) else {
         let r = backend.run(&c.pattern, c.kernel)?;
         return Ok(record_from_sim(
@@ -277,8 +291,9 @@ fn run_one_cached(
 }
 
 /// Execute a whole JSON config set on one backend. Each config's
-/// `"page-size"` / `"threads"` override is applied before its run;
-/// configs without one run at the backend's configured default.
+/// `"page-size"` / `"threads"` / `"vector-regime"` override is applied
+/// before its run; configs without one run at the backend's configured
+/// default.
 pub fn run_configs(
     backend: &mut dyn Backend,
     configs: &[RunConfig],
@@ -290,6 +305,7 @@ pub fn run_configs(
         .map(|(c, &(_, dup))| {
             backend.set_page_size(c.page_size);
             backend.set_threads(c.threads);
+            backend.set_vector_regime(c.regime);
             let r = backend.run(&c.pattern, c.kernel)?;
             Ok(record_from_sim(
                 &*backend, &c.name, &c.pattern, c.kernel, &r, dup,
@@ -355,8 +371,8 @@ pub fn run_configs_jobs_memo(
 /// `--jobs` determinism tests.
 pub fn render_table(records: &[RunRecord]) -> String {
     let mut t = Table::new(&[
-        "name", "kernel", "V", "delta", "count", "page", "thr", "time (s)",
-        "GB/s", "MiB r/w", "TLB hit%", "DRAM cfl", "bound by",
+        "name", "kernel", "V", "delta", "count", "page", "thr", "vec",
+        "time (s)", "GB/s", "MiB r/w", "TLB hit%", "DRAM cfl", "bound by",
     ]);
     let mib = |b: u64| b as f64 / (1u64 << 20) as f64;
     for r in records {
@@ -368,6 +384,7 @@ pub fn render_table(records: &[RunRecord]) -> String {
             r.count.to_string(),
             r.page_size.clone().unwrap_or_else(|| "-".to_string()),
             r.threads.map(|n| n.to_string()).unwrap_or_else(|| "-".to_string()),
+            r.vector_regime.clone().unwrap_or_else(|| "-".to_string()),
             format!("{:.6}", r.seconds),
             format!("{:.2}", r.bandwidth_gbs),
             format!("{:.0}/{:.0}", mib(r.read_bytes), mib(r.write_bytes)),
@@ -689,6 +706,11 @@ mod tests {
         assert!(j.get("bandwidth_gbs").unwrap().as_f64().unwrap() > 0.0);
         // The thread-count column rides along (SKX default: 16).
         assert_eq!(j.get("threads").unwrap().as_usize().unwrap(), 16);
+        // So does the vector regime (SKX native: AVX-512 G/S).
+        assert_eq!(
+            j.get("vector_regime").unwrap().as_str().unwrap(),
+            "hardware-gs"
+        );
         // The closure diagnostic rides along too (Null when the pass
         // ran in full — either way the key is present).
         assert!(j.get("sim-closure").is_some());
@@ -748,6 +770,41 @@ mod tests {
     }
 
     #[test]
+    fn per_run_vector_regime_applies_and_resets() {
+        // A scalar override at small stride must lose to the backend's
+        // native AVX-512 G/S path, and the following config without
+        // the key must run at the native regime again.
+        let cfgs = parse_config_text(
+            r#"[
+              {"name": "r-default", "kernel": "Gather",
+               "pattern": "UNIFORM:8:2", "delta": 16, "count": 16384},
+              {"name": "r-scalar", "kernel": "Gather",
+               "pattern": "UNIFORM:8:2", "delta": 16, "count": 16384,
+               "vector-regime": "scalar"},
+              {"name": "r-default-again", "kernel": "Gather",
+               "pattern": "UNIFORM:8:2", "delta": 16, "count": 16384}
+            ]"#,
+        )
+        .unwrap();
+        let mut b = backend();
+        let recs = run_configs(&mut b, &cfgs).unwrap();
+        assert_eq!(recs[0].vector_regime.as_deref(), Some("hardware-gs"));
+        assert_eq!(recs[1].vector_regime.as_deref(), Some("scalar"));
+        assert_eq!(
+            recs[2].vector_regime.as_deref(),
+            Some("hardware-gs"),
+            "default must be restored"
+        );
+        assert!(recs[1].bandwidth_gbs < recs[0].bandwidth_gbs);
+        assert_eq!(recs[0].bandwidth_gbs, recs[2].bandwidth_gbs);
+        // The pool path agrees byte-for-byte with the serial one.
+        let serial = run_configs_jobs(&skx_factory, &cfgs, 1).unwrap();
+        let par = run_configs_jobs(&skx_factory, &cfgs, 4).unwrap();
+        assert_eq!(render_json(&serial), render_json(&par));
+        assert_eq!(render_table(&recs), render_table(&par));
+    }
+
+    #[test]
     fn render_table_has_thread_and_page_columns() {
         let mut b = backend();
         let p = Pattern::parse("UNIFORM:8:1")
@@ -757,6 +814,8 @@ mod tests {
         let r = run_one(&mut b, "row", &p, Kernel::Gather).unwrap();
         let table = render_table(&[r.clone()]);
         assert!(table.contains("| thr "), "{table}");
+        assert!(table.contains("| vec "), "{table}");
+        assert!(table.contains("hardware-gs"), "{table}");
         assert!(table.contains("| page "), "{table}");
         assert!(table.contains("| MiB r/w "), "{table}");
         assert!(table.contains("| DRAM cfl "), "{table}");

@@ -202,13 +202,39 @@ fn build_backend(common: &CommonArgs) -> Result<Box<dyn Backend>> {
     match common.backend {
         BackendKind::OpenMp => {
             let p = platforms::by_name(&common.platform)?;
-            Ok(Box::new(OpenMpSim::configured(
+            // Reject an unsupported regime here, before any run: the
+            // engine would error identically per run, but one eager
+            // CLI-level message beats N per-config failures.
+            if let Some(r) = common.vector_regime {
+                if !p.supports_regime(r) {
+                    return Err(Error::Cli(format!(
+                        "platform '{}' does not support --vector-regime \
+                         '{r}' (supported: {})",
+                        p.name,
+                        p.supported_regimes()
+                            .iter()
+                            .map(|r| r.name())
+                            .collect::<Vec<_>>()
+                            .join("|"),
+                    )));
+                }
+            }
+            Ok(Box::new(OpenMpSim::configured_regime(
                 &p,
                 common.page_size,
                 common.threads,
+                common.vector_regime,
             )))
         }
         BackendKind::Scalar => {
+            if common.vector_regime.is_some() {
+                return Err(Error::Cli(
+                    "the scalar backend pins the scalar regime (#pragma \
+                     novec baseline); use -b openmp --vector-regime ... to \
+                     pick a regime"
+                        .into(),
+                ));
+            }
             let p = platforms::by_name(&common.platform)?;
             Ok(Box::new(ScalarSim::configured(
                 &p,
@@ -231,6 +257,13 @@ fn build_backend(common: &CommonArgs) -> Result<Box<dyn Backend>> {
                         .into(),
                 ));
             }
+            if common.vector_regime.is_some() {
+                return Err(Error::Cli(
+                    "--vector-regime applies to the openmp backend; the cuda \
+                     backend models warp coalescing, not a vector ISA"
+                        .into(),
+                ));
+            }
             let b = match common.page_size {
                 Some(page) => CudaSim::with_page_size(&p, page),
                 None => CudaSim::new(&p),
@@ -242,6 +275,13 @@ fn build_backend(common: &CommonArgs) -> Result<Box<dyn Backend>> {
                 return Err(Error::Cli(
                     "--threads applies to CPU backends (openmp|scalar); pjrt \
                      executes with the host's real threads"
+                        .into(),
+                ));
+            }
+            if common.vector_regime.is_some() {
+                return Err(Error::Cli(
+                    "--vector-regime applies to the openmp backend; pjrt \
+                     executes with the host's real vector units"
                         .into(),
                 ));
             }
@@ -328,6 +368,43 @@ mod tests {
                 .collect();
         run(&args).unwrap();
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn vector_regime_invocations_end_to_end() {
+        let argv = |s: &str| -> Vec<String> {
+            s.split_whitespace().map(|t| t.to_string()).collect()
+        };
+        // A supported override runs; an ISA the platform lacks is an
+        // eager CLI error, as are non-CPU-sim backends.
+        run(&argv(
+            "-k Gather -p UNIFORM:8:2 -d 16 -l 4096 -a skx \
+             --vector-regime scalar",
+        ))
+        .unwrap();
+        run(&argv(
+            "-k Gather -p UNIFORM:8:2 -d 16 -l 4096 -a tx2 \
+             --vector-regime masked-sve",
+        ))
+        .unwrap();
+        let err = run(&argv(
+            "-k Gather -p UNIFORM:8:1 -d 8 -l 64 -a tx2 \
+             --vector-regime hardware-gs",
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("tx2"), "{err}");
+        assert!(err.contains("masked-sve"), "{err}");
+        assert!(run(&argv(
+            "-k Gather -p UNIFORM:8:1 -d 8 -l 64 -a skx -b scalar \
+             --vector-regime scalar"
+        ))
+        .is_err());
+        assert!(run(&argv(
+            "-k Gather -p UNIFORM:256:1 -d 256 -l 64 -a p100 -b cuda \
+             --vector-regime scalar"
+        ))
+        .is_err());
     }
 
     #[test]

@@ -12,6 +12,68 @@ use crate::sim::{
     DramConfig, InterleavePolicy, PrefetchKind, TlbGeometry, TlbTable,
 };
 
+/// A compiler/ISA vectorization regime for gather/scatter (paper §5.3,
+/// Fig 6): how the indexed inner loop is issued on a CPU.
+///
+/// Each platform declares which regimes its ISA supports and which one
+/// its native compiler emits ([`CpuPlatform::supported_regimes`] /
+/// [`CpuPlatform::native_regime`]); a run picks one via the
+/// `--vector-regime` CLI flag or the `"vector-regime"` JSON key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VectorRegime {
+    /// `#pragma novec`: scalar loads/stores, scalar-issue DRAM
+    /// efficiency.
+    Scalar,
+    /// AVX2-class: a (possibly microcoded) gather instruction exists;
+    /// scatter falls back to scalar stores.
+    EmulatedGather,
+    /// AVX-512-class: hardware gather *and* scatter instructions.
+    HardwareGS,
+    /// SVE/NEON-class masked lanes (TX2): vector loop structure with
+    /// per-lane scalar element access — no dedicated G/S instruction.
+    MaskedSve,
+}
+
+impl VectorRegime {
+    /// Every regime, registry order.
+    pub const ALL: &'static [VectorRegime] = &[
+        VectorRegime::Scalar,
+        VectorRegime::EmulatedGather,
+        VectorRegime::HardwareGS,
+        VectorRegime::MaskedSve,
+    ];
+
+    /// Kebab-case name used by the CLI, JSON configs, and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            VectorRegime::Scalar => "scalar",
+            VectorRegime::EmulatedGather => "emulated-gather",
+            VectorRegime::HardwareGS => "hardware-gs",
+            VectorRegime::MaskedSve => "masked-sve",
+        }
+    }
+
+    /// Case-insensitive parse of [`VectorRegime::name`].
+    pub fn parse(s: &str) -> Result<VectorRegime> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(VectorRegime::Scalar),
+            "emulated-gather" => Ok(VectorRegime::EmulatedGather),
+            "hardware-gs" => Ok(VectorRegime::HardwareGS),
+            "masked-sve" => Ok(VectorRegime::MaskedSve),
+            _ => Err(Error::Cli(format!(
+                "unknown vector regime '{s}' \
+                 (scalar|emulated-gather|hardware-gs|masked-sve)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for VectorRegime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// A simulated CPU platform (the paper's OpenMP/Scalar targets).
 #[derive(Debug, Clone)]
 pub struct CpuPlatform {
@@ -52,6 +114,12 @@ pub struct CpuPlatform {
     /// system"). < 1: scalar wastes bandwidth; > 1: the platform's
     /// microcoded G/S is itself the less efficient requester (BDW).
     pub scalar_dram_efficiency: f64,
+    /// Doubles retired per vector op in the dense (STREAM) inner loop:
+    /// 8 for AVX-512, 4 for AVX2, 2 for TX2 NEON.
+    pub simd_lanes: f64,
+    /// The regime the platform's native compiler emits at `-O3`
+    /// (what Fig 6 calls the "vectorized" build).
+    pub native_regime: VectorRegime,
     /// Per-page-size TLB geometries (cpuid-style table) and the cost
     /// of a full-depth page walk.
     pub tlb: TlbTable,
@@ -67,6 +135,33 @@ pub struct CpuPlatform {
 }
 
 impl CpuPlatform {
+    /// Regimes this platform's ISA can actually issue, registry order.
+    ///
+    /// `Scalar` is always available (`#pragma novec` compiles
+    /// everywhere); `EmulatedGather` needs a gather instruction,
+    /// `HardwareGS` needs gather *and* scatter, and `MaskedSve` is the
+    /// masked-lane structure only the SVE/NEON platform natively has.
+    pub fn supported_regimes(&self) -> Vec<VectorRegime> {
+        let mut regimes = vec![VectorRegime::Scalar];
+        if self.gather_cycles_per_elem.is_some() {
+            regimes.push(VectorRegime::EmulatedGather);
+        }
+        if self.gather_cycles_per_elem.is_some()
+            && self.scatter_cycles_per_elem.is_some()
+        {
+            regimes.push(VectorRegime::HardwareGS);
+        }
+        if self.native_regime == VectorRegime::MaskedSve {
+            regimes.push(VectorRegime::MaskedSve);
+        }
+        regimes
+    }
+
+    /// Whether `regime` can run on this platform.
+    pub fn supports_regime(&self, regime: VectorRegime) -> bool {
+        self.supported_regimes().contains(&regime)
+    }
+
     /// The paper's §3.1 thread-scaling axis for this platform: powers
     /// of two from 1 up to, and always including, the single-socket
     /// thread count (e.g. TX2: 1, 2, 4, 8, 16, 28).
@@ -151,6 +246,8 @@ pub fn cpus() -> Vec<CpuPlatform> {
             // loads are very slow — the Fig 6 "vectorize or starve".
             scalar_cycles_per_elem: 6.0,
             scalar_dram_efficiency: 0.50,
+            simd_lanes: 8.0, // AVX-512
+            native_regime: VectorRegime::HardwareGS,
             tlb: TlbTable {
                 // KNL: 256-entry uTLB class; modest 2M/1G arrays.
                 four_kb: TlbGeometry { entries: 256, assoc: 4 },
@@ -195,6 +292,8 @@ pub fn cpus() -> Vec<CpuPlatform> {
             scatter_cycles_per_elem: None, // AVX2 has no scatter
             scalar_cycles_per_elem: 2.2,
             scalar_dram_efficiency: 1.10,
+            simd_lanes: 4.0, // AVX2
+            native_regime: VectorRegime::EmulatedGather,
             tlb: TlbTable {
                 // BDW STLB: 1536 x 4K; small dedicated 2M/1G DTLBs.
                 four_kb: TlbGeometry { entries: 1536, assoc: 4 },
@@ -235,6 +334,8 @@ pub fn cpus() -> Vec<CpuPlatform> {
             scatter_cycles_per_elem: Some(1.6),
             scalar_cycles_per_elem: 2.0,
             scalar_dram_efficiency: 0.78,
+            simd_lanes: 8.0, // AVX-512
+            native_regime: VectorRegime::HardwareGS,
             tlb: TlbTable {
                 // SKX STLB shares 1536 entries for 4K/2M; 16 x 1G.
                 four_kb: TlbGeometry { entries: 1536, assoc: 4 },
@@ -276,6 +377,8 @@ pub fn cpus() -> Vec<CpuPlatform> {
             scatter_cycles_per_elem: Some(1.3),
             scalar_cycles_per_elem: 2.0,
             scalar_dram_efficiency: 0.80,
+            simd_lanes: 8.0, // AVX-512
+            native_regime: VectorRegime::HardwareGS,
             tlb: TlbTable {
                 // CLX STLB shares 1536 entries for 4K/2M; 16 x 1G.
                 four_kb: TlbGeometry { entries: 1536, assoc: 4 },
@@ -317,6 +420,8 @@ pub fn cpus() -> Vec<CpuPlatform> {
             scatter_cycles_per_elem: None,
             scalar_cycles_per_elem: 1.4,
             scalar_dram_efficiency: 1.0,
+            simd_lanes: 2.0, // NEON 128-bit
+            native_regime: VectorRegime::MaskedSve,
             tlb: TlbTable {
                 // TX2: large unified L2 TLB for 4K/2M (64K native too).
                 four_kb: TlbGeometry { entries: 2048, assoc: 4 },
@@ -363,6 +468,8 @@ pub fn cpus() -> Vec<CpuPlatform> {
             scatter_cycles_per_elem: None, // AVX2: no scatter insn
             scalar_cycles_per_elem: 2.0,
             scalar_dram_efficiency: 0.85,
+            simd_lanes: 4.0, // AVX2
+            native_regime: VectorRegime::EmulatedGather,
             tlb: TlbTable {
                 // Naples L2 TLB holds 4K and 2M; 16 x 1G.
                 four_kb: TlbGeometry { entries: 1536, assoc: 4 },
@@ -634,6 +741,65 @@ mod tests {
         // BDW gather is slower than its scalar loads (Fig 6 negative).
         let bdw = by_name("bdw").unwrap();
         assert!(bdw.gather_cycles_per_elem.unwrap() > bdw.scalar_cycles_per_elem);
+    }
+
+    #[test]
+    fn regime_support_follows_isa() {
+        use VectorRegime::*;
+        // AVX-512 platforms: scalar, emulated gather, hardware G/S.
+        for n in ["knl", "skx", "clx"] {
+            let p = by_name(n).unwrap();
+            assert_eq!(
+                p.supported_regimes(),
+                vec![Scalar, EmulatedGather, HardwareGS],
+                "{n}"
+            );
+            assert_eq!(p.native_regime, HardwareGS, "{n}");
+        }
+        // AVX2 platforms: gather exists, scatter does not.
+        for n in ["bdw", "naples"] {
+            let p = by_name(n).unwrap();
+            assert_eq!(p.supported_regimes(), vec![Scalar, EmulatedGather], "{n}");
+            assert_eq!(p.native_regime, EmulatedGather, "{n}");
+            assert!(!p.supports_regime(HardwareGS), "{n}");
+            assert!(!p.supports_regime(MaskedSve), "{n}");
+        }
+        // TX2: masked lanes only, no G/S instruction at all.
+        let tx2 = by_name("tx2").unwrap();
+        assert_eq!(tx2.supported_regimes(), vec![Scalar, MaskedSve]);
+        assert_eq!(tx2.native_regime, MaskedSve);
+        // Every platform supports its own native regime and Scalar.
+        for p in cpus() {
+            assert!(p.supports_regime(p.native_regime), "{}", p.name);
+            assert!(p.supports_regime(Scalar), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn simd_lanes_per_isa_class() {
+        // AVX-512 retires 8 doubles per op, AVX2 4, TX2 NEON 2 — the
+        // Fig 6 lane widths that the dense STREAM issue model uses.
+        for n in ["knl", "skx", "clx"] {
+            assert_eq!(by_name(n).unwrap().simd_lanes, 8.0, "{n}");
+        }
+        for n in ["bdw", "naples"] {
+            assert_eq!(by_name(n).unwrap().simd_lanes, 4.0, "{n}");
+        }
+        assert_eq!(by_name("tx2").unwrap().simd_lanes, 2.0);
+    }
+
+    #[test]
+    fn regime_names_parse_and_roundtrip() {
+        for &r in VectorRegime::ALL {
+            assert_eq!(VectorRegime::parse(r.name()).unwrap(), r);
+            // Case-insensitive, and Display matches name().
+            let upper = r.name().to_ascii_uppercase();
+            assert_eq!(VectorRegime::parse(&upper).unwrap(), r);
+            assert_eq!(format!("{r}"), r.name());
+        }
+        let err = VectorRegime::parse("avx9").unwrap_err();
+        assert!(err.to_string().contains("avx9"));
+        assert!(err.to_string().contains("hardware-gs"));
     }
 
     #[test]

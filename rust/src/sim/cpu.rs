@@ -35,18 +35,22 @@ use super::memory::{
 use super::plan::{AccessPlan, Segment};
 use super::prefetch::Prefetcher;
 use super::{PrefetchKind, SimCounters, SimResult, TimeBreakdown, XorShift64};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::pattern::{Kernel, Pattern};
-use crate::platforms::CpuPlatform;
+use crate::platforms::{CpuPlatform, VectorRegime};
 
 /// Knobs for a simulated run.
 #[derive(Debug, Clone)]
 pub struct CpuSimOptions {
     /// Model hardware prefetching (the Fig 4 MSR toggle).
     pub prefetch_enabled: bool,
-    /// Use the vector G/S instructions where the platform has them
-    /// (the OpenMP backend); `false` = the Scalar backend.
-    pub vectorized: bool,
+    /// Vectorization regime for the indexed inner loop (the
+    /// `--vector-regime` knob, paper §5.3 / Fig 6). `None` = the
+    /// platform's native compiler output
+    /// ([`CpuPlatform::native_regime`]); the Scalar backend pins
+    /// `Some(VectorRegime::Scalar)`. Running an unsupported regime is
+    /// a config error ([`CpuPlatform::supported_regimes`]).
+    pub regime: Option<VectorRegime>,
     /// Cap on simulated accesses in the measured pass; counts beyond
     /// this are extrapolated linearly (steady state).
     pub max_sim_accesses: usize,
@@ -88,7 +92,7 @@ impl Default for CpuSimOptions {
     fn default() -> Self {
         CpuSimOptions {
             prefetch_enabled: true,
-            vectorized: true,
+            regime: None,
             max_sim_accesses: 1 << 21,
             warmup_iterations: 1 << 15,
             page_size: PageSize::FourKB,
@@ -108,11 +112,6 @@ const WALK_OVERLAP: f64 = 2.0;
 /// Most operand streams any kernel issues (Add/Triad: two reads plus
 /// one write) — sizes the per-stream DRAM open-row table.
 const MAX_STREAMS: usize = 3;
-
-/// Elements a unit-stride SIMD load/store retires per issued op: the
-/// dense STREAM kernels need no indexed addressing, so their issue
-/// cost is the cheap side of every ISA.
-const DENSE_SIMD_LANES: f64 = 4.0;
 
 /// The engine. Reusable across runs (state resets per run).
 pub struct CpuEngine {
@@ -163,6 +162,10 @@ pub struct CpuEngine {
     /// `opts.threads` / the platform default; overridable per run via
     /// [`CpuEngine::set_threads`]).
     threads: usize,
+    /// Effective vectorization regime for the next run (resolved from
+    /// `opts.regime` / the platform's native regime; overridable per
+    /// run via [`CpuEngine::set_vector_regime`]).
+    regime: VectorRegime,
 }
 
 /// DRAM row-buffer size for the banked row model (2 KiB = 32 lines).
@@ -191,6 +194,7 @@ impl CpuEngine {
             walker: PageTableWalker::new(p.tlb_walk_ns, page, WALK_OVERLAP),
             prefetchers: std::array::from_fn(|_| Prefetcher::new(pf_kind)),
             threads: opts.threads.unwrap_or(p.threads).max(1),
+            regime: opts.regime.unwrap_or(p.native_regime),
             dram: DramModel::new(&p.dram, ROW_LINES * LINE),
             platform: p,
             opts,
@@ -243,6 +247,22 @@ impl CpuEngine {
             .max(1);
     }
 
+    /// The vectorization regime the next run will model.
+    pub fn vector_regime(&self) -> VectorRegime {
+        self.regime
+    }
+
+    /// Reconfigure the vectorization regime: `Some` overrides, `None`
+    /// restores the engine's configured default (the `--vector-regime`
+    /// CLI value or the platform's native regime). Support is checked
+    /// at `run()` time, so an unsupported override surfaces as a
+    /// config error rather than silently falling back.
+    pub fn set_vector_regime(&mut self, regime: Option<VectorRegime>) {
+        self.regime = regime
+            .or(self.opts.regime)
+            .unwrap_or(self.platform.native_regime);
+    }
+
     fn reset(&mut self) {
         self.l1.reset();
         self.l2.reset();
@@ -266,6 +286,20 @@ impl CpuEngine {
     /// Simulate one Spatter run and return modelled time + counters.
     pub fn run(&mut self, pattern: &Pattern, kernel: Kernel) -> Result<SimResult> {
         pattern.validate_for(kernel)?;
+        if !self.platform.supports_regime(self.regime) {
+            return Err(Error::Config(format!(
+                "platform '{}' does not support vector regime '{}' \
+                 (supported: {})",
+                self.platform.name,
+                self.regime,
+                self.platform
+                    .supported_regimes()
+                    .iter()
+                    .map(|r| r.name())
+                    .collect::<Vec<_>>()
+                    .join("|"),
+            )));
+        }
         self.reset();
         debug_assert_eq!(
             self.tlb.page_size(),
@@ -1034,43 +1068,50 @@ impl CpuEngine {
         let t = self.threads as f64;
         let hz = p.freq_ghz * 1e9;
 
-        // Issue cost per element: hardware G/S when vectorized and the
-        // instruction exists; scalar loads/stores otherwise. GS issues
-        // one gather element + one scatter element per access pair and
-        // the `accesses` counter counts both sides, so its per-access
-        // cost is the mean of the two — and it falls back to scalar
-        // issue if *either* instruction is missing (the compiler can't
-        // vectorize half an indexed copy, §5.3).
-        let vector_cpe = match kernel {
-            Kernel::Gather => p.gather_cycles_per_elem,
-            Kernel::Scatter => p.scatter_cycles_per_elem,
-            Kernel::GS => {
-                match (p.gather_cycles_per_elem, p.scatter_cycles_per_elem) {
-                    (Some(g), Some(s)) => Some(0.5 * (g + s)),
-                    _ => None,
-                }
-            }
-            // Dense unit-stride streams need no G/S instruction at
-            // all; GUPS is a scalar indexed RMW on every ISA (random
-            // 64-bit addresses defeat vector index generation).
-            Kernel::Stream(_) | Kernel::Gups => None,
-        };
+        // Issue cost per element under the run's vectorization regime
+        // (paper §5.3, Fig 6). Scalar is the `#pragma novec` build;
+        // MaskedSve keeps the vector loop structure (vector-depth miss
+        // parallelism, no scalar-stream DRAM penalty) but still issues
+        // one scalar element access per lane; EmulatedGather has only
+        // the gather instruction, so scatters — and GS, where the
+        // compiler can't vectorize half an indexed copy — fall back to
+        // the full scalar path; HardwareGS uses both instructions. GS
+        // issues one gather element + one scatter element per access
+        // pair and the `accesses` counter counts both sides, so its
+        // per-access cost is the mean of the two.
         let dense = matches!(kernel, Kernel::Stream(_));
-        let (cpe, mlp, scalar_issue) = if dense && self.opts.vectorized {
-            // Unit-stride SIMD loads/stores retire several elements
-            // per issued op — dense streams are never issue-starved.
-            (
-                p.scalar_cycles_per_elem / DENSE_SIMD_LANES,
-                p.mlp_vector,
-                false,
-            )
-        } else if self.opts.vectorized {
+        let (cpe, mlp, scalar_issue) = if self.regime == VectorRegime::Scalar {
+            (p.scalar_cycles_per_elem, p.mlp_scalar, true)
+        } else if dense {
+            // Unit-stride SIMD loads/stores need no G/S instruction
+            // and retire `simd_lanes` elements per issued op — dense
+            // streams are the cheap side of every vector ISA.
+            (p.scalar_cycles_per_elem / p.simd_lanes, p.mlp_vector, false)
+        } else if kernel == Kernel::Gups {
+            // GUPS is a scalar indexed RMW on every ISA (random 64-bit
+            // addresses defeat vector index generation).
+            (p.scalar_cycles_per_elem, p.mlp_scalar, true)
+        } else if self.regime == VectorRegime::MaskedSve {
+            (p.scalar_cycles_per_elem, p.mlp_vector, false)
+        } else {
+            let vector_cpe = match kernel {
+                Kernel::Gather => p.gather_cycles_per_elem,
+                Kernel::Scatter if self.regime == VectorRegime::HardwareGS => {
+                    p.scatter_cycles_per_elem
+                }
+                Kernel::GS if self.regime == VectorRegime::HardwareGS => {
+                    match (p.gather_cycles_per_elem, p.scatter_cycles_per_elem)
+                    {
+                        (Some(g), Some(s)) => Some(0.5 * (g + s)),
+                        _ => None,
+                    }
+                }
+                _ => None,
+            };
             match vector_cpe {
                 Some(cost) => (cost, p.mlp_vector, false),
                 None => (p.scalar_cycles_per_elem, p.mlp_scalar, true),
             }
-        } else {
-            (p.scalar_cycles_per_elem, p.mlp_scalar, true)
         };
         // Scalar-issued request streams put more pressure on the
         // memory system per byte (paper §5.3); the platform factor
@@ -1391,7 +1432,7 @@ mod tests {
         let mut sca_e = CpuEngine::with_options(
             &p,
             CpuSimOptions {
-                vectorized: false,
+                regime: Some(VectorRegime::Scalar),
                 ..Default::default()
             },
         );
@@ -1413,7 +1454,7 @@ mod tests {
         let bs = CpuEngine::with_options(
             &p,
             CpuSimOptions {
-                vectorized: false,
+                regime: Some(VectorRegime::Scalar),
                 ..Default::default()
             },
         )
@@ -1432,7 +1473,7 @@ mod tests {
         let bs = CpuEngine::with_options(
             &p,
             CpuSimOptions {
-                vectorized: false,
+                regime: Some(VectorRegime::Scalar),
                 ..Default::default()
             },
         )
@@ -1660,6 +1701,123 @@ mod tests {
         assert_eq!(e.page_size(), PageSize::TwoMB);
         e.set_page_size(None);
         assert_eq!(e.page_size(), PageSize::FourKB);
+    }
+
+    #[test]
+    fn set_vector_regime_overrides_and_restores() {
+        let p = platforms::by_name("skx").unwrap();
+        let mut e = CpuEngine::new(&p);
+        assert_eq!(e.vector_regime(), VectorRegime::HardwareGS);
+        e.set_vector_regime(Some(VectorRegime::Scalar));
+        assert_eq!(e.vector_regime(), VectorRegime::Scalar);
+        e.set_vector_regime(None);
+        assert_eq!(e.vector_regime(), VectorRegime::HardwareGS);
+        // A configured default survives the restore path.
+        let mut e = CpuEngine::with_options(
+            &p,
+            CpuSimOptions {
+                regime: Some(VectorRegime::EmulatedGather),
+                ..Default::default()
+            },
+        );
+        assert_eq!(e.vector_regime(), VectorRegime::EmulatedGather);
+        e.set_vector_regime(Some(VectorRegime::Scalar));
+        e.set_vector_regime(None);
+        assert_eq!(e.vector_regime(), VectorRegime::EmulatedGather);
+    }
+
+    #[test]
+    fn unsupported_regime_is_a_config_error() {
+        // TX2 has no G/S instructions: HardwareGS must be rejected at
+        // run() time with the supported list in the message.
+        let p = platforms::by_name("tx2").unwrap();
+        let mut e = CpuEngine::with_options(
+            &p,
+            CpuSimOptions {
+                regime: Some(VectorRegime::HardwareGS),
+                ..Default::default()
+            },
+        );
+        let err = e.run(&uniform(1, 1 << 12), Kernel::Gather).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("tx2"), "{msg}");
+        assert!(msg.contains("hardware-gs"), "{msg}");
+        assert!(msg.contains("masked-sve"), "{msg}");
+        // BDW lacks scatter: HardwareGS is out, EmulatedGather is ok.
+        let bdw = platforms::by_name("bdw").unwrap();
+        let mut e = CpuEngine::with_options(
+            &bdw,
+            CpuSimOptions {
+                regime: Some(VectorRegime::HardwareGS),
+                ..Default::default()
+            },
+        );
+        assert!(e.run(&uniform(1, 1 << 12), Kernel::Gather).is_err());
+        e.set_vector_regime(Some(VectorRegime::EmulatedGather));
+        assert!(e.run(&uniform(1, 1 << 12), Kernel::Gather).is_ok());
+    }
+
+    #[test]
+    fn dense_issue_cost_scales_with_simd_lanes() {
+        use crate::pattern::StreamOp;
+        // The old model hardcoded 4 lanes for every ISA; the issue
+        // cost of the dense STREAM inner loop must now differ across
+        // ISA classes. Vary only the lane width on one platform (one
+        // thread, where issue time is visible) and pin the 2x ratios.
+        let pat = Pattern::dense(8, 1 << 16);
+        let issue = |lanes: f64| {
+            let mut p = platforms::by_name("skx").unwrap();
+            p.simd_lanes = lanes;
+            let mut e = CpuEngine::with_options(
+                &p,
+                CpuSimOptions {
+                    threads: Some(1),
+                    ..Default::default()
+                },
+            );
+            e.run(&pat, Kernel::Stream(StreamOp::Triad))
+                .unwrap()
+                .breakdown
+                .issue_s
+        };
+        let avx512 = issue(8.0);
+        let avx2 = issue(4.0);
+        let neon = issue(2.0);
+        assert!((avx2 / avx512 - 2.0).abs() < 1e-9, "{avx2} vs {avx512}");
+        assert!((neon / avx2 - 2.0).abs() < 1e-9, "{neon} vs {avx2}");
+        // And the registry widths differ across the real ISA classes.
+        assert_ne!(
+            platforms::by_name("knl").unwrap().simd_lanes,
+            platforms::by_name("bdw").unwrap().simd_lanes
+        );
+        assert_ne!(
+            platforms::by_name("bdw").unwrap().simd_lanes,
+            platforms::by_name("tx2").unwrap().simd_lanes
+        );
+    }
+
+    #[test]
+    fn masked_sve_is_numerically_scalar_on_tx2() {
+        // TX2's masked-lane regime keeps the vector loop structure but
+        // issues scalar element accesses; with mlp_vector == mlp_scalar
+        // and unit DRAM efficiency it must land exactly on the scalar
+        // build (Fig 6: TX2's flat 0% line).
+        let p = platforms::by_name("tx2").unwrap();
+        let pat = uniform(2, 1 << 16);
+        let run = |r: VectorRegime| {
+            let mut e = CpuEngine::with_options(
+                &p,
+                CpuSimOptions {
+                    regime: Some(r),
+                    ..Default::default()
+                },
+            );
+            e.run(&pat, Kernel::Gather).unwrap()
+        };
+        let sve = run(VectorRegime::MaskedSve);
+        let sca = run(VectorRegime::Scalar);
+        assert_eq!(sve.counters, sca.counters);
+        assert_eq!(sve.seconds, sca.seconds);
     }
 
     #[test]

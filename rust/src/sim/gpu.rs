@@ -35,6 +35,11 @@ use crate::platforms::GpuPlatform;
 const WARP: usize = 32;
 
 /// Options for a simulated GPU run.
+///
+/// There is no vectorization-regime knob here (`CpuSimOptions::regime`
+/// / `--vector-regime`): the GPU's SIMD story is warp-level sector
+/// coalescing, not a scalar-vs-vector-ISA choice, so the CLI rejects
+/// the flag on the `cuda` backend.
 #[derive(Debug, Clone)]
 pub struct GpuSimOptions {
     /// Cap on simulated accesses in the measured pass.

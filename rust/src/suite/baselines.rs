@@ -63,6 +63,7 @@ fn baseline_configs(plat: &Platform, ctx: &SuiteContext) -> Vec<RunConfig> {
                 pattern,
                 page_size: None,
                 threads: None,
+                regime: None,
             }
         })
         .collect()

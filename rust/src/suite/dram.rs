@@ -114,6 +114,7 @@ fn configs_for(
                 pattern: row_stride_gather(r, count),
                 page_size: None,
                 threads: None,
+                regime: None,
             });
         }
     }
@@ -123,6 +124,7 @@ fn configs_for(
         pattern: Pattern::gups(1 << 21, (count >> 4).max(256)),
         page_size: None,
         threads: None,
+        regime: None,
     });
     configs
 }

@@ -20,12 +20,14 @@
 //! | `prefetch` | prefetcher depth/regime sweep, gather + GS coverage knee |
 //! | `baselines` | STREAM tetrad + GUPS measured in-engine, all platforms |
 //! | `dram` | banked-DRAM bank-conflict sweep, pow2 vs odd strides |
+//! | `simd` | vectorization-regime sweep (Fig 6 crossover) |
 //! | `all` | everything above |
 
 mod apps;
 mod baselines;
 mod dram;
 mod prefetch;
+mod simd;
 mod threadscale;
 mod ustride;
 
@@ -33,6 +35,7 @@ pub use apps::{fig7_radar, fig8_radar, fig9_bwbw, table1_characterization, table
 pub use baselines::{baselines_suite, measured_stream_gbs, BASELINE_KERNELS};
 pub use dram::dram_suite;
 pub use prefetch::prefetch_suite;
+pub use simd::simd_suite;
 pub use threadscale::threadscale_suite;
 pub use ustride::{
     cpu_ustride, fig3_cpu_ustride, fig4_prefetch, fig5_gpu_ustride,
@@ -126,12 +129,13 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
         "prefetch" => prefetch_suite(ctx),
         "baselines" => baselines_suite(ctx),
         "dram" => dram_suite(ctx),
+        "simd" => simd_suite(ctx),
         "all" => {
             let mut out = String::new();
             for n in [
                 "table1", "fig3", "fig4", "fig5", "fig6", "baselines",
                 "table4", "fig7", "fig8", "fig9", "pagesize", "ustride",
-                "threadscale", "prefetch", "dram",
+                "threadscale", "prefetch", "dram", "simd",
             ] {
                 out.push_str(&run(n, ctx)?);
                 out.push('\n');
@@ -141,7 +145,7 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
         other => Err(Error::Cli(format!(
             "unknown suite '{other}' \
              (fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|pagesize|\
-             ustride|threadscale|prefetch|baselines|dram|all)"
+             ustride|threadscale|prefetch|baselines|dram|simd|all)"
         ))),
     }
 }
@@ -151,7 +155,7 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
 pub const EXPERIMENTS: &[&str] = &[
     "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1",
     "table4", "pagesize", "ustride", "threadscale", "prefetch", "baselines",
-    "dram",
+    "dram", "simd",
 ];
 
 #[cfg(test)]

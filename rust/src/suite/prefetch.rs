@@ -130,6 +130,7 @@ fn configs_for(name: &str, depth: usize, count: usize) -> Vec<RunConfig> {
             pattern: cpu_ustride(s, count),
             page_size: None,
             threads: None,
+            regime: None,
         });
         configs.push(RunConfig {
             name: format!("{name}/pf{depth}/gs/s{s}"),
@@ -137,6 +138,7 @@ fn configs_for(name: &str, depth: usize, count: usize) -> Vec<RunConfig> {
             pattern: gs_ustride(s, count),
             page_size: None,
             threads: None,
+            regime: None,
         });
     }
     configs.push(RunConfig {
@@ -145,6 +147,7 @@ fn configs_for(name: &str, depth: usize, count: usize) -> Vec<RunConfig> {
         pattern: lulesh_gs(count),
         page_size: None,
         threads: None,
+        regime: None,
     });
     configs
 }

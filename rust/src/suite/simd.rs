@@ -1,0 +1,332 @@
+//! `--suite simd` — the paper's Fig 6 vectorization study, end-to-end
+//! through the `--vector-regime` knob and the parallel run queue.
+//!
+//! Fig 6 compares one vectorized backend against one scalar backend;
+//! this suite sweeps the whole regime axis instead: every CPU platform
+//! runs every regime its ISA supports — `scalar`, the AVX2-class
+//! `emulated-gather`, the AVX-512-class `hardware-gs`, the TX2-class
+//! `masked-sve` — over the uniform-stride gather/scatter grid and a
+//! set of Table-5 app patterns, all as per-run `"vector-regime"`
+//! overrides on the `--jobs` worker pool.
+//!
+//! The headline per platform is the **scalar-to-vector crossover**:
+//! the smallest stride at which the native regime's gather lead over
+//! scalar issue evaporates. KNL never crosses (its scalar loop
+//! achieves half the DRAM efficiency of its G/S path); BDW crosses
+//! immediately (the microcoded AVX2 gather loses to scalar issue,
+//! §5.3); TX2 is flat (masked-SVE is numerically scalar).
+
+use super::ustride::cpu_ustride;
+use super::{SuiteContext, STRIDES};
+use crate::backends::{Backend, OpenMpSim};
+use crate::coordinator::{run_configs_jobs, RunConfig};
+use crate::error::Result;
+use crate::json::{self, Value};
+use crate::pattern::{table5, Kernel};
+use crate::platforms::{self, VectorRegime};
+use crate::report::{Csv, Table};
+
+/// Platforms the sweep reports (the paper's Fig 6 CPUs; CLX omitted as
+/// it overlaps SKX).
+const PLATFORMS: &[&str] = &["knl", "bdw", "skx", "naples", "tx2"];
+
+/// Table-5 app patterns ridden through every regime: a cache-resident
+/// gather where issue rate binds (the BDW microcode mechanism), a
+/// DRAM-reaching gather, and a scatter.
+const APPS: &[&str] = &["AMG-G0", "LULESH-G3", "LULESH-S3"];
+
+/// The kernels of the uniform-stride grid, in sweep order.
+const KERNELS: &[Kernel] = &[Kernel::Gather, Kernel::Scatter];
+
+/// The run queue for one platform: for each supported regime, the
+/// gather/scatter stride grid then the app patterns — a fixed block
+/// layout the report indexes into arithmetically.
+fn simd_configs(
+    name: &str,
+    regimes: &[VectorRegime],
+    ctx: &SuiteContext,
+) -> Vec<RunConfig> {
+    let ucount = ctx.ustride_count();
+    let mut configs = Vec::new();
+    for &r in regimes {
+        for &kernel in KERNELS {
+            for &s in STRIDES {
+                configs.push(RunConfig {
+                    name: format!("{name}/{r}/{}/s{s}", kernel.name()),
+                    kernel,
+                    pattern: cpu_ustride(s, ucount),
+                    page_size: None,
+                    threads: None,
+                    regime: Some(r),
+                });
+            }
+        }
+        for &app in APPS {
+            let a = table5::by_name(app).expect("APPS are Table-5 ids");
+            configs.push(RunConfig {
+                name: format!("{name}/{r}/{app}"),
+                kernel: a.kernel,
+                pattern: a.to_pattern(ctx.app_count()),
+                page_size: None,
+                threads: None,
+                regime: Some(r),
+            });
+        }
+    }
+    configs
+}
+
+/// Smallest stride at which the native regime's gather bandwidth falls
+/// within 2% of (or below) scalar issue — `None` when the vector lead
+/// survives the whole sweep.
+fn crossover(native: &[f64], scalar: &[f64]) -> Option<usize> {
+    STRIDES
+        .iter()
+        .zip(native.iter().zip(scalar))
+        .find(|(_, (&n, &s))| n <= 1.02 * s)
+        .map(|(&stride, _)| stride)
+}
+
+pub fn simd_suite(ctx: &SuiteContext) -> Result<String> {
+    let mut csv = Csv::new(&[
+        "platform", "regime", "kernel", "workload", "gbs", "bottleneck",
+    ]);
+    let mut report = String::from(
+        "== simd: vectorization-regime sweep (Fig 6 crossover) ==\n",
+    );
+    let mut json_platforms: Vec<(String, Value)> = Vec::new();
+    for &name in PLATFORMS {
+        let platform = platforms::by_name(name)?;
+        let regimes = platform.supported_regimes();
+        let block = KERNELS.len() * STRIDES.len() + APPS.len();
+        let configs = simd_configs(name, &regimes, ctx);
+        let factory = || -> Result<Box<dyn Backend>> {
+            Ok(Box::new(OpenMpSim::new(&platform)))
+        };
+        let records = run_configs_jobs(&factory, &configs, ctx.jobs)?;
+        let bw = |ri: usize, ki: usize, si: usize| {
+            records[ri * block + ki * STRIDES.len() + si].bandwidth_gbs
+        };
+        let app_rec = |ri: usize, ai: usize| {
+            &records[ri * block + KERNELS.len() * STRIDES.len() + ai]
+        };
+        for (ri, r) in regimes.iter().enumerate() {
+            for (ki, kernel) in KERNELS.iter().enumerate() {
+                for (si, &s) in STRIDES.iter().enumerate() {
+                    let rec =
+                        &records[ri * block + ki * STRIDES.len() + si];
+                    csv.row_display(&[
+                        &name,
+                        &r,
+                        &kernel.name(),
+                        &format!("s{s}"),
+                        &format!("{:.3}", rec.bandwidth_gbs),
+                        &rec.bottleneck,
+                    ]);
+                }
+            }
+            for (ai, &app) in APPS.iter().enumerate() {
+                let rec = app_rec(ri, ai);
+                csv.row_display(&[
+                    &name,
+                    &r,
+                    &rec.kernel.name(),
+                    &app,
+                    &format!("{:.3}", rec.bandwidth_gbs),
+                    &rec.bottleneck,
+                ]);
+            }
+        }
+        // Per-kernel stride tables, one column per supported regime.
+        let header: Vec<String> = std::iter::once("stride".to_string())
+            .chain(regimes.iter().map(|r| format!("{r} GB/s")))
+            .collect();
+        let header_refs: Vec<&str> =
+            header.iter().map(|s| s.as_str()).collect();
+        report.push_str(&format!(
+            "-- {name} (native {}, {}-wide SIMD) --\n",
+            platform.native_regime, platform.simd_lanes as usize
+        ));
+        for (ki, kernel) in KERNELS.iter().enumerate() {
+            let mut table = Table::new(&header_refs);
+            for (si, &s) in STRIDES.iter().enumerate() {
+                let mut row = vec![s.to_string()];
+                for ri in 0..regimes.len() {
+                    row.push(format!("{:.2}", bw(ri, ki, si)));
+                }
+                table.row(&row);
+            }
+            report.push_str(&format!(
+                "{}:\n{}",
+                kernel.name(),
+                table.render()
+            ));
+        }
+        let mut apps_header = vec!["pattern".to_string()];
+        apps_header.extend(regimes.iter().map(|r| format!("{r} GB/s")));
+        let apps_refs: Vec<&str> =
+            apps_header.iter().map(|s| s.as_str()).collect();
+        let mut apps_table = Table::new(&apps_refs);
+        for (ai, &app) in APPS.iter().enumerate() {
+            let mut row = vec![app.to_string()];
+            for ri in 0..regimes.len() {
+                row.push(format!("{:.2}", app_rec(ri, ai).bandwidth_gbs));
+            }
+            apps_table.row(&row);
+        }
+        report.push_str(&format!("apps:\n{}", apps_table.render()));
+        // Crossover takeaway: native vs scalar gather across strides.
+        // Scalar is always regimes[0]; the native regime is always
+        // supported, so the position lookup cannot fail.
+        let ni = regimes
+            .iter()
+            .position(|&r| r == platform.native_regime)
+            .expect("native regime is always supported");
+        let native_g: Vec<f64> =
+            (0..STRIDES.len()).map(|si| bw(ni, 0, si)).collect();
+        let scalar_g: Vec<f64> =
+            (0..STRIDES.len()).map(|si| bw(0, 0, si)).collect();
+        report.push_str(&match crossover(&native_g, &scalar_g) {
+            Some(s) => format!(
+                "{name}: scalar issue catches {} gather at the stride-{s} \
+                 crossover\n",
+                platform.native_regime
+            ),
+            None => format!(
+                "{name}: no scalar-to-vector crossover — {} holds its \
+                 gather lead at every swept stride\n",
+                platform.native_regime
+            ),
+        });
+        json_platforms.push((
+            name.to_string(),
+            Value::Array(records.iter().map(|r| r.to_json()).collect()),
+        ));
+    }
+    csv.write(&ctx.out_dir, "simd.csv")?;
+    let doc = Value::Object(json_platforms.into_iter().collect());
+    let mut text = json::to_string_pretty(&doc);
+    text.push('\n');
+    std::fs::write(ctx.out_dir.join("simd.json"), text)?;
+    report.push_str(
+        "Takeaway check: KNL's hardware G/S never crosses (its scalar \
+         loop reaches half the DRAM efficiency of its vector path); \
+         BDW's microcoded emulated gather loses to scalar issue on the \
+         cache-resident AMG-G0; TX2's masked-SVE column is numerically \
+         identical to scalar (no G/S instructions).\n",
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn ctx(tag: &str) -> SuiteContext {
+        SuiteContext::fast(
+            &Path::new("/tmp").join(format!("spatter-simd-{tag}")),
+        )
+    }
+
+    #[test]
+    fn report_tables_and_files_written() {
+        let c = ctx("run");
+        let report = simd_suite(&c).unwrap();
+        assert!(report.contains("vectorization-regime sweep"), "{report}");
+        for name in PLATFORMS {
+            assert!(report.contains(&format!("-- {name} ")), "{report}");
+        }
+        // Every platform gets a crossover verdict, and the regime axis
+        // actually shows up in the column headers.
+        assert!(report.contains("crossover"), "{report}");
+        assert!(report.contains("hardware-gs GB/s"), "{report}");
+        assert!(report.contains("masked-sve GB/s"), "{report}");
+        assert!(c.out_dir.join("simd.csv").exists());
+        let j = std::fs::read_to_string(c.out_dir.join("simd.json")).unwrap();
+        let doc = json::parse(&j).unwrap();
+        for name in PLATFORMS {
+            let runs = doc.get(name).unwrap().as_array().unwrap();
+            let regimes =
+                platforms::by_name(name).unwrap().supported_regimes();
+            let block = KERNELS.len() * STRIDES.len() + APPS.len();
+            assert_eq!(runs.len(), regimes.len() * block, "{name}");
+            // The per-run override is visible in the JSON records.
+            assert_eq!(
+                runs[0].get("vector_regime").unwrap().as_str().unwrap(),
+                "scalar",
+                "{name}: regimes[0] is always scalar"
+            );
+        }
+        std::fs::remove_dir_all(&c.out_dir).ok();
+    }
+
+    #[test]
+    fn fig6_poles_hold_in_the_emitted_json() {
+        // The two Fig 6 poles plus the TX2 null result, read back from
+        // the suite's own records: KNL's hardware G/S dwarfs its
+        // scalar loop at stride 1, BDW's microcoded gather loses to
+        // scalar issue on the cache-resident AMG-G0, and TX2's
+        // masked-SVE column is bit-identical to scalar.
+        let c = ctx("poles");
+        simd_suite(&c).unwrap();
+        let j = std::fs::read_to_string(c.out_dir.join("simd.json")).unwrap();
+        let doc = json::parse(&j).unwrap();
+        let bw = |plat: &str, run: &str| {
+            doc.get(plat)
+                .unwrap()
+                .as_array()
+                .unwrap()
+                .iter()
+                .find(|r| r.get("name").unwrap().as_str().unwrap() == run)
+                .unwrap_or_else(|| panic!("{plat}: no run '{run}'"))
+                .get("bandwidth_gbs")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        let knl_v = bw("knl", "knl/hardware-gs/Gather/s1");
+        let knl_s = bw("knl", "knl/scalar/Gather/s1");
+        assert!(knl_v > 1.3 * knl_s, "KNL {knl_v:.1} vs {knl_s:.1}");
+        let bdw_v = bw("bdw", "bdw/emulated-gather/AMG-G0");
+        let bdw_s = bw("bdw", "bdw/scalar/AMG-G0");
+        assert!(bdw_s > bdw_v, "BDW scalar {bdw_s:.1} vs gather {bdw_v:.1}");
+        for s in STRIDES {
+            let run = format!("Gather/s{s}");
+            assert_eq!(
+                bw("tx2", &format!("tx2/masked-sve/{run}")),
+                bw("tx2", &format!("tx2/scalar/{run}")),
+                "TX2 masked-sve must be numerically scalar at s{s}"
+            );
+        }
+        std::fs::remove_dir_all(&c.out_dir).ok();
+    }
+
+    #[test]
+    fn crossover_picks_smallest_qualifying_stride() {
+        let flat = [10.0; 8];
+        assert_eq!(crossover(&[20.0; 8], &flat), None);
+        assert_eq!(crossover(&flat, &flat), Some(1));
+        let mut fades = [20.0; 8];
+        fades[5] = 10.0;
+        fades[6] = 10.0;
+        fades[7] = 10.0;
+        assert_eq!(crossover(&fades, &flat), Some(STRIDES[5]));
+    }
+
+    #[test]
+    fn simd_suite_is_jobs_invariant() {
+        let c1 = ctx("j1").with_jobs(1);
+        let c8 = ctx("j8").with_jobs(8);
+        let r1 = simd_suite(&c1).unwrap();
+        let r8 = simd_suite(&c8).unwrap();
+        assert_eq!(r1, r8, "report must not depend on --jobs");
+        let f = |c: &SuiteContext, n: &str| {
+            std::fs::read_to_string(c.out_dir.join(n)).unwrap()
+        };
+        assert_eq!(f(&c1, "simd.csv"), f(&c8, "simd.csv"));
+        assert_eq!(f(&c1, "simd.json"), f(&c8, "simd.json"));
+        std::fs::remove_dir_all(&c1.out_dir).ok();
+        std::fs::remove_dir_all(&c8.out_dir).ok();
+    }
+}

@@ -104,6 +104,7 @@ pub fn threadscale_suite(ctx: &SuiteContext) -> Result<String> {
                     pattern: w.pattern.clone(),
                     page_size: None,
                     threads: Some(t),
+                    regime: None,
                 });
             }
         }

@@ -285,6 +285,7 @@ pub fn ustride_suite(ctx: &SuiteContext) -> Result<String> {
                     pattern: cpu_ustride(s, count),
                     page_size: None,
                     threads: None,
+                    regime: None,
                 });
                 strides.push(s);
             }

@@ -142,6 +142,14 @@ fn prop_cpu_closure_equivalence() {
         } else {
             Some(g.usize_in(1, 8))
         };
+        // The vectorization regime rescales analytic timing, not the
+        // counter stream, so closure equivalence must hold on every
+        // rung the ISA supports (drawn once, equal in both arms).
+        let regime = if g.bool() {
+            None
+        } else {
+            Some(*g.choose(&plat.supported_regimes()))
+        };
         let pat = with_kernel_shape(
             g,
             arbitrary_pattern(g, 16).with_count(1 << g.usize_in(8, 13)),
@@ -156,6 +164,7 @@ fn prop_cpu_closure_equivalence() {
                     plan_enabled,
                     page_size: page,
                     threads,
+                    regime,
                     ..Default::default()
                 },
             );
@@ -166,7 +175,10 @@ fn prop_cpu_closure_equivalence() {
         assert_identical(
             &on,
             &off,
-            &format!("{} {:?} {}", plat.name, kernel, pat.spec),
+            &format!(
+                "{} {:?} {} regime={regime:?}",
+                plat.name, kernel, pat.spec
+            ),
         );
     });
 }

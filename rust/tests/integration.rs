@@ -178,14 +178,16 @@ fn suite_experiments_all_run_fast() {
         "threadscale.csv",
         "prefetch.csv",
         "baselines.csv",
+        "simd.csv",
     ] {
         assert!(dir.join(csv).exists(), "{csv}");
     }
-    // The ustride, prefetch, and baselines suites also emit JSON
+    // The ustride, prefetch, baselines, and simd suites also emit JSON
     // documents.
     assert!(dir.join("ustride.json").exists());
     assert!(dir.join("prefetch.json").exists());
     assert!(dir.join("baselines.json").exists());
+    assert!(dir.join("simd.json").exists());
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -147,6 +147,14 @@ fn prop_cpu_plan_equivalence() {
         } else {
             Some(g.usize_in(1, 8))
         };
+        // The regime only rescales the analytic timing after counter
+        // collection, so the plan contract must hold on every rung the
+        // platform's ISA supports (drawn once, equal in both arms).
+        let regime = if g.bool() {
+            None
+        } else {
+            Some(*g.choose(&plat.supported_regimes()))
+        };
         let prefetch_enabled = g.bool();
         let closure_enabled = g.bool();
         let pat = with_kernel_shape(
@@ -163,6 +171,7 @@ fn prop_cpu_plan_equivalence() {
                     prefetch_enabled,
                     page_size: page,
                     threads,
+                    regime,
                     ..Default::default()
                 },
             );
@@ -174,7 +183,8 @@ fn prop_cpu_plan_equivalence() {
             &planned,
             &scalar,
             &format!(
-                "{} {:?} {} pf={prefetch_enabled} closure={closure_enabled}",
+                "{} {:?} {} pf={prefetch_enabled} closure={closure_enabled} \
+                 regime={regime:?}",
                 plat.name, kernel, pat.spec
             ),
         );

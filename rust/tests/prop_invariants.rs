@@ -203,6 +203,11 @@ fn arbitrary_runconfig(g: &mut Gen) -> RunConfig {
             None
         },
         threads: if g.bool() { Some(g.usize_in(1, 64)) } else { None },
+        regime: if g.bool() {
+            Some(*g.choose(spatter::platforms::VectorRegime::ALL))
+        } else {
+            None
+        },
     }
 }
 
@@ -234,6 +239,7 @@ fn prop_runconfig_to_json_roundtrip() {
             assert_eq!(b.pattern.count, cfg.pattern.count);
             assert_eq!(b.page_size, cfg.page_size);
             assert_eq!(b.threads, cfg.threads);
+            assert_eq!(b.regime, cfg.regime);
             // And serializing the parsed config is a fixed point.
             assert_eq!(
                 json::to_string(&b.to_json()),
@@ -260,7 +266,13 @@ fn sim_factory()
 fn arbitrary_campaign(g: &mut Gen) -> Vec<RunConfig> {
     let mut cfgs: Vec<RunConfig> = Vec::new();
     while cfgs.len() < 3 {
-        let c = arbitrary_runconfig(g);
+        let mut c = arbitrary_runconfig(g);
+        // The campaign runs on skx, whose ISA has no masked-SVE
+        // regime — an unsupported draw would (correctly) be a run
+        // error, but these properties cover the happy path.
+        if c.regime == Some(spatter::platforms::VectorRegime::MaskedSve) {
+            c.regime = None;
+        }
         if c.pattern.validate_for(c.kernel).is_ok() {
             cfgs.push(c);
         }

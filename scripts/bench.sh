@@ -2,8 +2,9 @@
 # Perf-trajectory runner: times the ustride fast sweep and the
 # LULESH-S3 delta-0 proxy, each A/B'd twice — loop closure on vs off,
 # and the batch-compiled access plan on vs off (the plan-* records) —
-# plus the scheduler/memo/stream campaign legs and the dram-bank
-# pow2-vs-odd conflict cell, and records the wall-clock numbers in
+# plus the scheduler/memo/stream campaign legs, the dram-bank
+# pow2-vs-odd conflict cell, and the simd-regime scalar-vs-native
+# vectorization ladder, and records the wall-clock numbers in
 # BENCH_sim.json (repo root by default, or $1).
 #
 # Usage: scripts/bench.sh [output.json]
