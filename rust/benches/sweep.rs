@@ -3,8 +3,9 @@
 //! 256-iteration LULESH-S3 scatter, each A/B'd twice — steady-state
 //! loop closure on vs off, and the batch-compiled access plan on vs
 //! off (the `plan-*` records) — plus the scheduler/memo/stream
-//! campaign legs, the `dram-bank` pow2-vs-odd conflict cell, and the
-//! `simd-regime` scalar-vs-native vectorization ladder, and emits
+//! campaign legs, the `dram-bank` pow2-vs-odd conflict cell, the
+//! `simd-regime` scalar-vs-native vectorization ladder, and the
+//! `numa-remote` all-local vs all-remote cliff endpoints, and emits
 //! `BENCH_sim.json` (`{"suite": ..., "wall_ms": ...}` records) so the
 //! repo's perf numbers accumulate run over run.
 //!
@@ -23,7 +24,8 @@ use spatter::json::{self, obj, Value};
 use spatter::pattern::{table5, Kernel, Pattern};
 use spatter::platforms::{self, VectorRegime};
 use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
-use spatter::suite::{cpu_ustride, STRIDES};
+use spatter::sim::NumaPlacement;
+use spatter::suite::{cpu_ustride, ratio_pattern, STRIDES};
 
 /// Engine options with closure pinned explicitly (independent of the
 /// `SPATTER_NO_CLOSURE` env var, so both arms run in one process).
@@ -382,6 +384,43 @@ fn main() {
         ("wall_ms_native", Value::from(native_ms)),
         ("wall_ms_scalar", Value::from(scalar_ms)),
         ("s1_vector_over_scalar", Value::from(native_bw / scalar_bw)),
+    ]));
+
+    // --- NUMA microbench: the numa suite's engineered ratio pattern
+    // at its all-local vs all-remote endpoints on the two-socket SKX
+    // under interleave placement, prefetchers off (`--suite numa`'s
+    // cliff endpoints, timed). The bandwidth ratio is the recorded
+    // remote-access cliff; the walls catch topology-layer overhead.
+    let skx2 = platforms::by_name("skx-2s").unwrap();
+    let mut numa_walls = [0.0f64; 2];
+    let mut numa_bw = [0.0f64; 2];
+    for (i, remote_lanes) in [0usize, 16].into_iter().enumerate() {
+        let pat = ratio_pattern(remote_lanes, 1 << 14);
+        let mut e = OpenMpSim::without_prefetch(&skx2);
+        e.set_numa_placement(Some(NumaPlacement::Interleave));
+        let t0 = Instant::now();
+        let r = e.run(&pat, Kernel::Gather).unwrap();
+        numa_walls[i] = t0.elapsed().as_secs_f64() * 1e3;
+        numa_bw[i] = r.bandwidth_gbs();
+        black_box(r.seconds);
+    }
+    println!(
+        "numa-remote: skx-2s local {:.1} ms ({:.1} GB/s), remote {:.1} ms \
+         ({:.1} GB/s), cliff {:.2}x",
+        numa_walls[0],
+        numa_bw[0],
+        numa_walls[1],
+        numa_bw[1],
+        numa_bw[0] / numa_bw[1]
+    );
+    records.push(obj(&[
+        ("suite", Value::from("numa-remote")),
+        ("platform", Value::from("skx-2s")),
+        ("wall_ms_local", Value::from(numa_walls[0])),
+        ("wall_ms_remote", Value::from(numa_walls[1])),
+        ("local_gbs", Value::from(numa_bw[0])),
+        ("remote_gbs", Value::from(numa_bw[1])),
+        ("remote_cliff", Value::from(numa_bw[0] / numa_bw[1])),
     ]));
 
     let out = std::env::var("BENCH_SIM_JSON")

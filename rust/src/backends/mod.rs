@@ -28,7 +28,7 @@ use crate::pattern::{Kernel, Pattern};
 use crate::platforms::{CpuPlatform, GpuPlatform, VectorRegime};
 use crate::sim::cpu::{CpuEngine, CpuSimOptions};
 use crate::sim::gpu::{GpuEngine, GpuSimOptions};
-use crate::sim::{PageSize, SimResult};
+use crate::sim::{NumaPlacement, PageSize, SimResult};
 
 /// A Spatter execution backend: takes a fully-specified pattern, runs
 /// (or models) it, and reports time + bandwidth.
@@ -77,6 +77,19 @@ pub trait Backend {
     /// The vectorization regime the next run will model, if the
     /// backend has a CPU issue model.
     fn vector_regime(&self) -> Option<VectorRegime> {
+        None
+    }
+
+    /// Reconfigure the NUMA page-placement policy before the next run:
+    /// `Some` overrides, `None` restores the backend's configured
+    /// default. Backends without a NUMA model (GPU, real execution)
+    /// ignore the knob; on single-socket CPU platforms it is accepted
+    /// but inert (`sim::topology`).
+    fn set_numa_placement(&mut self, _placement: Option<NumaPlacement>) {}
+
+    /// The NUMA placement policy the next run will model, if the
+    /// backend has a NUMA model.
+    fn numa_placement(&self) -> Option<NumaPlacement> {
         None
     }
 
@@ -132,6 +145,21 @@ impl OpenMpSim {
         threads: Option<usize>,
         regime: Option<VectorRegime>,
     ) -> OpenMpSim {
+        OpenMpSim::configured_numa(platform, page, threads, regime, None)
+    }
+
+    /// [`OpenMpSim::configured_regime`] plus the `--numa-placement`
+    /// knob. The placement lands in the engine's configured options —
+    /// the restore target of [`Backend::set_numa_placement`] — so
+    /// per-run configs without a `"numa-placement"` key fall back to
+    /// the CLI value, not the first-touch default.
+    pub fn configured_numa(
+        platform: &CpuPlatform,
+        page: Option<PageSize>,
+        threads: Option<usize>,
+        regime: Option<VectorRegime>,
+        placement: Option<NumaPlacement>,
+    ) -> OpenMpSim {
         OpenMpSim {
             engine: CpuEngine::with_options(
                 platform,
@@ -139,6 +167,7 @@ impl OpenMpSim {
                     page_size: page.unwrap_or(PageSize::FourKB),
                     threads,
                     regime,
+                    numa_placement: placement.unwrap_or_default(),
                     ..Default::default()
                 },
             ),
@@ -201,6 +230,14 @@ impl Backend for OpenMpSim {
     fn vector_regime(&self) -> Option<VectorRegime> {
         Some(self.engine.vector_regime())
     }
+
+    fn set_numa_placement(&mut self, placement: Option<NumaPlacement>) {
+        self.engine.set_numa_placement(placement);
+    }
+
+    fn numa_placement(&self) -> Option<NumaPlacement> {
+        Some(self.engine.numa_placement())
+    }
 }
 
 /// The paper's Scalar backend (`#pragma novec` baseline) on a simulated
@@ -227,6 +264,17 @@ impl ScalarSim {
         page: Option<PageSize>,
         threads: Option<usize>,
     ) -> ScalarSim {
+        ScalarSim::configured_numa(platform, page, threads, None)
+    }
+
+    /// [`ScalarSim::configured`] plus the `--numa-placement` knob
+    /// (restore target of [`Backend::set_numa_placement`]).
+    pub fn configured_numa(
+        platform: &CpuPlatform,
+        page: Option<PageSize>,
+        threads: Option<usize>,
+        placement: Option<NumaPlacement>,
+    ) -> ScalarSim {
         ScalarSim {
             engine: CpuEngine::with_options(
                 platform,
@@ -234,6 +282,7 @@ impl ScalarSim {
                     regime: Some(VectorRegime::Scalar),
                     page_size: page.unwrap_or(PageSize::FourKB),
                     threads,
+                    numa_placement: placement.unwrap_or_default(),
                     ..Default::default()
                 },
             ),
@@ -276,6 +325,14 @@ impl Backend for ScalarSim {
         // stays the trait no-op, so per-run overrides cannot silently
         // re-vectorize a `#pragma novec` baseline.
         Some(VectorRegime::Scalar)
+    }
+
+    fn set_numa_placement(&mut self, placement: Option<NumaPlacement>) {
+        self.engine.set_numa_placement(placement);
+    }
+
+    fn numa_placement(&self) -> Option<NumaPlacement> {
+        Some(self.engine.numa_placement())
     }
 }
 
@@ -490,6 +547,44 @@ mod tests {
         assert_eq!(cu.vector_regime(), None);
         cu.set_vector_regime(Some(VectorRegime::Scalar));
         assert_eq!(cu.vector_regime(), None);
+    }
+
+    #[test]
+    fn numa_placement_knob_through_the_trait() {
+        let p = platforms::by_name("skx-2s").unwrap();
+        let mut b: Box<dyn Backend> = Box::new(OpenMpSim::new(&p));
+        assert_eq!(b.numa_placement(), Some(NumaPlacement::FirstTouch));
+        b.set_numa_placement(Some(NumaPlacement::Interleave));
+        assert_eq!(b.numa_placement(), Some(NumaPlacement::Interleave));
+        b.set_numa_placement(None);
+        assert_eq!(b.numa_placement(), Some(NumaPlacement::FirstTouch));
+
+        // A CLI-level --numa-placement value is the restore target,
+        // not a transient override.
+        let mut c: Box<dyn Backend> = Box::new(OpenMpSim::configured_numa(
+            &p,
+            None,
+            None,
+            None,
+            Some(NumaPlacement::Interleave),
+        ));
+        assert_eq!(c.numa_placement(), Some(NumaPlacement::Interleave));
+        c.set_numa_placement(Some(NumaPlacement::FirstTouch));
+        c.set_numa_placement(None);
+        assert_eq!(c.numa_placement(), Some(NumaPlacement::Interleave));
+
+        // The Scalar backend carries the same NUMA model.
+        let mut s: Box<dyn Backend> = Box::new(ScalarSim::new(&p));
+        assert_eq!(s.numa_placement(), Some(NumaPlacement::FirstTouch));
+        s.set_numa_placement(Some(NumaPlacement::Interleave));
+        assert_eq!(s.numa_placement(), Some(NumaPlacement::Interleave));
+
+        // GPUs have no NUMA model: getter None, setter no-op.
+        let g = platforms::gpu_by_name("p100").unwrap();
+        let mut cu: Box<dyn Backend> = Box::new(CudaSim::new(&g));
+        assert_eq!(cu.numa_placement(), None);
+        cu.set_numa_placement(Some(NumaPlacement::Interleave));
+        assert_eq!(cu.numa_placement(), None);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use crate::error::{Error, Result};
 use crate::pattern::{Kernel, Pattern};
 use crate::platforms::VectorRegime;
-use crate::sim::PageSize;
+use crate::sim::{NumaPlacement, PageSize};
 
 /// Which backend executes the run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,6 +95,11 @@ pub struct CommonArgs {
     /// platform's native regime (its ISA's best gather/scatter path);
     /// GPU, scalar, and real-execution backends reject the flag.
     pub vector_regime: Option<VectorRegime>,
+    /// NUMA page-placement policy (--numa-placement). `None` keeps the
+    /// default (first-touch). Only changes results on multi-socket
+    /// platforms; single-socket runs are placement-inert by
+    /// construction.
+    pub numa_placement: Option<NumaPlacement>,
     /// Worker threads for multi-config sweeps (--jobs). Default: the
     /// machine's available parallelism. Output is byte-identical for
     /// any value (order-preserving scheduler).
@@ -117,6 +122,7 @@ impl Default for CommonArgs {
             page_size: None,
             threads: None,
             vector_regime: None,
+            numa_placement: None,
             jobs: crate::coordinator::default_jobs(),
             stream: false,
         }
@@ -205,6 +211,10 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
                 common.vector_regime =
                     Some(VectorRegime::parse(&take("--vector-regime")?)?)
             }
+            "--numa-placement" => {
+                common.numa_placement =
+                    Some(NumaPlacement::parse(&take("--numa-placement")?)?)
+            }
             "--jobs" => {
                 let v = take("--jobs")?;
                 common.jobs = v
@@ -242,6 +252,13 @@ pub fn parse_args(args: &[String]) -> Result<Command> {
             return Err(Error::Cli(
                 "--vector-regime does not apply to suites (simd sweeps the \
                  regime axis itself); use it with -k/-p or -j runs"
+                    .into(),
+            ));
+        }
+        if common.numa_placement.is_some() {
+            return Err(Error::Cli(
+                "--numa-placement does not apply to suites (numa sweeps the \
+                 placement axis itself); use it with -k/-p or -j runs"
                     .into(),
             ));
         }
@@ -466,6 +483,11 @@ OPTIONS:
                        regime, e.g. hardware-gs on skx). Platforms
                        reject regimes their ISA lacks. JSON configs may
                        override per run with a \"vector-regime\" key
+      --numa-placement P  NUMA page-placement policy for multi-socket
+                       platforms (e.g. skx-2s): first-touch | interleave
+                       (default first-touch). Single-socket platforms
+                       ignore it. JSON configs may override per run with
+                       a \"numa-placement\" key
       --jobs N         worker threads for multi-config sweeps and
                        suites (default: available parallelism). Output
                        is byte-identical for any N: results are
@@ -479,7 +501,7 @@ OPTIONS:
       --json-out       machine-readable output
       --suite NAME     fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|
                        pagesize|ustride|threadscale|prefetch|baselines|
-                       dram|simd|all
+                       dram|simd|numa|all
 ";
 
 #[cfg(test)]
@@ -743,6 +765,44 @@ mod tests {
         assert!(parse_args(&argv("-j c.json --vector-regime avx9")).is_err());
         assert!(parse_args(&argv("-j c.json --vector-regime")).is_err());
         let err = parse_args(&argv("--suite simd --vector-regime scalar"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not apply to suites"), "{err}");
+    }
+
+    #[test]
+    fn numa_placement_flag() {
+        let cmd = parse_args(&argv(
+            "-k Gather -p UNIFORM:8:1 -d 8 --numa-placement interleave",
+        ))
+        .unwrap();
+        match cmd {
+            Command::Run(r) => assert_eq!(
+                r.common.numa_placement,
+                Some(NumaPlacement::Interleave)
+            ),
+            other => panic!("{other:?}"),
+        }
+        // Case-insensitive (and the short alias), rides along with -j.
+        match parse_args(&argv("-j c.json --numa-placement First-Touch"))
+            .unwrap()
+        {
+            Command::Json { common, .. } => assert_eq!(
+                common.numa_placement,
+                Some(NumaPlacement::FirstTouch)
+            ),
+            other => panic!("{other:?}"),
+        }
+        // Default: the configured first-touch policy (no override).
+        match parse_args(&argv("-k Gather -p UNIFORM:8:1 -d 8")).unwrap() {
+            Command::Run(r) => assert_eq!(r.common.numa_placement, None),
+            other => panic!("{other:?}"),
+        }
+        // Junk and missing values rejected; the numa suite sweeps the
+        // placement axis itself, so suites reject the flag.
+        assert!(parse_args(&argv("-j c.json --numa-placement nearest")).is_err());
+        assert!(parse_args(&argv("-j c.json --numa-placement")).is_err());
+        let err = parse_args(&argv("--suite numa --numa-placement interleave"))
             .unwrap_err()
             .to_string();
         assert!(err.contains("does not apply to suites"), "{err}");

@@ -22,7 +22,7 @@ use crate::error::{Error, Result};
 use crate::json::{self, obj, Value};
 use crate::pattern::{table5, Kernel, Pattern};
 use crate::platforms::VectorRegime;
-use crate::sim::PageSize;
+use crate::sim::{NumaPlacement, PageSize};
 
 /// One entry of a JSON config file.
 #[derive(Debug, Clone)]
@@ -46,6 +46,11 @@ pub struct RunConfig {
     /// model (GPU, real execution); an unsupported regime on a CPU
     /// platform is a run-time config error.
     pub regime: Option<VectorRegime>,
+    /// Optional `"numa-placement"` override for this run
+    /// (`"first-touch"`, `"interleave"`); `None` keeps the backend's
+    /// configured default. Ignored by backends without a NUMA model
+    /// and inert on single-socket platforms (`sim::topology`).
+    pub placement: Option<NumaPlacement>,
 }
 
 impl RunConfig {
@@ -92,6 +97,9 @@ impl RunConfig {
         }
         if let Some(regime) = self.regime {
             pairs.push(("vector-regime", Value::from(regime.name())));
+        }
+        if let Some(placement) = self.placement {
+            pairs.push(("numa-placement", Value::from(placement.name())));
         }
         obj(&pairs)
     }
@@ -377,6 +385,13 @@ fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
         ),
         None => None,
     };
+    let placement = match v.get_opt("numa-placement") {
+        Some(p) => Some(
+            NumaPlacement::parse(p.as_str()?)
+                .map_err(|e| Error::Config(format!("run {i}: {e}")))?,
+        ),
+        None => None,
+    };
     let name = match v.get_opt("name") {
         Some(n) => n.as_str()?.to_string(),
         None => pattern.spec.clone(),
@@ -388,6 +403,7 @@ fn parse_one(i: usize, v: &Value) -> Result<RunConfig> {
         page_size,
         threads,
         regime,
+        placement,
     })
 }
 
@@ -527,6 +543,53 @@ mod tests {
             assert_eq!(a.regime, b.regime);
             assert_eq!(a.threads, b.threads);
             assert_eq!(a.page_size, b.page_size);
+        }
+    }
+
+    #[test]
+    fn numa_placement_key_parses_and_roundtrips() {
+        let cfgs = parse_config_text(
+            r#"[
+              {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+               "count": 1024, "numa-placement": "interleave"},
+              {"kernel": "Scatter", "pattern": "UNIFORM:8:1", "delta": 8,
+               "count": 512, "numa-placement": "First-Touch", "threads": 4},
+              {"kernel": "Gather", "pattern": "UNIFORM:8:1", "delta": 8,
+               "count": 64}
+            ]"#,
+        )
+        .unwrap();
+        assert_eq!(cfgs[0].placement, Some(NumaPlacement::Interleave));
+        // Case-insensitive, like the other knob keys.
+        assert_eq!(cfgs[1].placement, Some(NumaPlacement::FirstTouch));
+        assert_eq!(cfgs[1].threads, Some(4));
+        assert_eq!(cfgs[2].placement, None);
+
+        let text = json::to_string(&Value::Array(
+            cfgs.iter().map(|c| c.to_json()).collect(),
+        ));
+        let back = parse_config_text(&text).unwrap();
+        for (a, b) in cfgs.iter().zip(&back) {
+            assert_eq!(a.placement, b.placement);
+            assert_eq!(a.threads, b.threads);
+            assert_eq!(a.page_size, b.page_size);
+        }
+    }
+
+    #[test]
+    fn bad_numa_placement_rejected_with_run_index() {
+        for bad in [
+            r#"[{"kernel": "Gather", "pattern": "UNIFORM:8:1",
+                 "numa-placement": "nearest"}]"#,
+            r#"[{"kernel": "Gather", "pattern": "UNIFORM:8:1",
+                 "numa-placement": 2}]"#,
+        ] {
+            let err = parse_config_text(bad).unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.contains("run 0") || msg.contains("string"),
+                "{bad}: {msg}"
+            );
         }
     }
 
@@ -742,7 +805,8 @@ mod tests {
            "pattern-scatter": "UNIFORM:8:1", "delta": 32, "count": 256},
           {"kernel": "GUPS", "count": 64},
           {"kernel": "Gather", "pattern": "PENNANT-G4", "count": 64,
-           "page-size": "2MB", "threads": 4, "vector-regime": "scalar"}
+           "page-size": "2MB", "threads": 4, "vector-regime": "scalar",
+           "numa-placement": "interleave"}
         ]"#;
         let batch = parse_config_text(text).unwrap();
         let streamed: Result<Vec<RunConfig>> =
@@ -750,6 +814,7 @@ mod tests {
         let streamed = streamed.unwrap();
         assert_eq!(streamed.len(), batch.len());
         assert_eq!(batch[4].regime, Some(VectorRegime::Scalar));
+        assert_eq!(batch[4].placement, Some(NumaPlacement::Interleave));
         for (a, b) in batch.iter().zip(&streamed) {
             assert_eq!(a.name, b.name);
             assert_eq!(a.kernel, b.kernel);
@@ -757,6 +822,7 @@ mod tests {
             assert_eq!(a.page_size, b.page_size);
             assert_eq!(a.threads, b.threads);
             assert_eq!(a.regime, b.regime);
+            assert_eq!(a.placement, b.placement);
         }
     }
 

@@ -8,7 +8,7 @@
 //! The key is a 128-bit [`Fingerprinter`] digest over every field
 //! that reaches the engine: kernel, gather/scatter index buffers,
 //! delta(s), count, and the per-run page-size / thread /
-//! vector-regime overrides. The
+//! vector-regime / numa-placement overrides. The
 //! display name and pattern spec string are deliberately *excluded* —
 //! `"custom[3]"` vs `"custom[7]"` or differently-named twins share
 //! physics, so they share the cache line. Backend identity is uniform
@@ -67,6 +67,13 @@ pub fn config_fingerprint(c: &RunConfig) -> u128 {
         Some(r) => {
             f.push(1);
             f.push_str(r.name());
+        }
+        None => f.push(0),
+    }
+    match c.placement {
+        Some(p) => {
+            f.push(1);
+            f.push_str(p.name());
         }
         None => f.push(0),
     }
@@ -270,7 +277,9 @@ mod tests {
           {"name": "alpha", "kernel": "Gather", "pattern": "UNIFORM:8:1",
            "delta": 8, "count": 4096, "threads": 4},
           {"name": "alpha", "kernel": "Gather", "pattern": "UNIFORM:8:1",
-           "delta": 8, "count": 4096, "vector-regime": "scalar"}
+           "delta": 8, "count": 4096, "vector-regime": "scalar"},
+          {"name": "alpha", "kernel": "Gather", "pattern": "UNIFORM:8:1",
+           "delta": 8, "count": 4096, "numa-placement": "interleave"}
         ]"#);
         let base = config_fingerprint(&c[0]);
         assert_eq!(base, config_fingerprint(&c[1]), "name is display-only");

@@ -116,6 +116,12 @@ pub struct RunRecord {
     /// Row activations serialized behind the previous activation in
     /// the same channel×bank-group — the tRC-limited expensive case.
     pub dram_row_conflicts: u64,
+    /// DRAM-touching accesses served by the accessing socket's local
+    /// memory (`sim::topology`). Both NUMA counters are zero on
+    /// single-socket platforms and for backends without a NUMA model.
+    pub numa_local: u64,
+    /// DRAM-touching accesses that crossed the socket interconnect.
+    pub numa_remote: u64,
 }
 
 impl RunRecord {
@@ -190,6 +196,20 @@ impl RunRecord {
                     ),
                 ]),
             ),
+            (
+                "numa",
+                // Null on single-socket platforms and NUMA-less
+                // backends (nothing was classified), mirroring the
+                // other capability-gated keys.
+                if self.numa_local + self.numa_remote == 0 {
+                    Value::Null
+                } else {
+                    obj(&[
+                        ("local", Value::from(self.numa_local as usize)),
+                        ("remote", Value::from(self.numa_remote as usize)),
+                    ])
+                },
+            ),
         ])
     }
 }
@@ -236,6 +256,8 @@ fn record_from_sim(
         dram_row_hits: r.counters.dram_row_hits,
         dram_row_misses: r.counters.dram_row_misses,
         dram_row_conflicts: r.counters.dram_row_conflicts,
+        numa_local: r.counters.numa_local,
+        numa_remote: r.counters.numa_remote,
     }
 }
 
@@ -265,6 +287,7 @@ fn run_one_cached(
     backend.set_page_size(c.page_size);
     backend.set_threads(c.threads);
     backend.set_vector_regime(c.regime);
+    backend.set_numa_placement(c.placement);
     let Some(cache) = cache.filter(|_| backend.deterministic()) else {
         let r = backend.run(&c.pattern, c.kernel)?;
         return Ok(record_from_sim(
@@ -291,9 +314,9 @@ fn run_one_cached(
 }
 
 /// Execute a whole JSON config set on one backend. Each config's
-/// `"page-size"` / `"threads"` / `"vector-regime"` override is applied
-/// before its run; configs without one run at the backend's configured
-/// default.
+/// `"page-size"` / `"threads"` / `"vector-regime"` /
+/// `"numa-placement"` override is applied before its run; configs
+/// without one run at the backend's configured default.
 pub fn run_configs(
     backend: &mut dyn Backend,
     configs: &[RunConfig],
@@ -306,6 +329,7 @@ pub fn run_configs(
             backend.set_page_size(c.page_size);
             backend.set_threads(c.threads);
             backend.set_vector_regime(c.regime);
+            backend.set_numa_placement(c.placement);
             let r = backend.run(&c.pattern, c.kernel)?;
             Ok(record_from_sim(
                 &*backend, &c.name, &c.pattern, c.kernel, &r, dup,
@@ -372,7 +396,8 @@ pub fn run_configs_jobs_memo(
 pub fn render_table(records: &[RunRecord]) -> String {
     let mut t = Table::new(&[
         "name", "kernel", "V", "delta", "count", "page", "thr", "vec",
-        "time (s)", "GB/s", "MiB r/w", "TLB hit%", "DRAM cfl", "bound by",
+        "time (s)", "GB/s", "MiB r/w", "TLB hit%", "DRAM cfl", "loc%",
+        "bound by",
     ]);
     let mib = |b: u64| b as f64 / (1u64 << 20) as f64;
     for r in records {
@@ -400,6 +425,17 @@ pub fn render_table(records: &[RunRecord]) -> String {
                 "-".to_string()
             } else {
                 r.dram_row_conflicts.to_string()
+            },
+            // Local fraction of the NUMA-classified traffic; "-" on
+            // single-socket platforms and NUMA-less backends.
+            if r.numa_local + r.numa_remote == 0 {
+                "-".to_string()
+            } else {
+                format!(
+                    "{:.1}",
+                    r.numa_local as f64 * 100.0
+                        / (r.numa_local + r.numa_remote) as f64
+                )
             },
             r.bottleneck.clone(),
         ]);
@@ -714,6 +750,43 @@ mod tests {
         // The closure diagnostic rides along too (Null when the pass
         // ran in full — either way the key is present).
         assert!(j.get("sim-closure").is_some());
+        // The NUMA object is present but Null on a single-socket
+        // platform: nothing was classified local or remote.
+        assert_eq!(j.get("numa").unwrap(), &Value::Null);
+    }
+
+    #[test]
+    fn numa_record_fields_on_a_two_socket_platform() {
+        let p = platforms::by_name("skx-2s").unwrap();
+        let mut b = OpenMpSim::new(&p);
+        // A DRAM-heavy gather under interleave splits pages across the
+        // two nodes: both classes show up in the record and the JSON.
+        b.set_numa_placement(Some(crate::sim::NumaPlacement::Interleave));
+        let pat = Pattern::parse("UNIFORM:8:8")
+            .unwrap()
+            .with_delta(64)
+            .with_count(1 << 16);
+        let r = run_one(&mut b, "interleaved", &pat, Kernel::Gather).unwrap();
+        assert!(r.numa_local > 0, "{r:?}");
+        assert!(r.numa_remote > 0, "{r:?}");
+        let j = r.to_json();
+        let numa = j.get("numa").unwrap();
+        assert_eq!(
+            numa.get("local").unwrap().as_usize().unwrap() as u64,
+            r.numa_local
+        );
+        assert_eq!(
+            numa.get("remote").unwrap().as_usize().unwrap() as u64,
+            r.numa_remote
+        );
+        let expected_cell = format!(
+            "{:.1}",
+            r.numa_local as f64 * 100.0
+                / (r.numa_local + r.numa_remote) as f64
+        );
+        let table = render_table(&[r]);
+        assert!(table.contains("| loc% "), "{table}");
+        assert!(table.contains(&expected_cell), "{table}");
     }
 
     fn skx_factory() -> crate::error::Result<Box<dyn crate::backends::Backend>>
@@ -819,6 +892,7 @@ mod tests {
         assert!(table.contains("| page "), "{table}");
         assert!(table.contains("| MiB r/w "), "{table}");
         assert!(table.contains("| DRAM cfl "), "{table}");
+        assert!(table.contains("| loc% "), "{table}");
         assert!(table.contains("| 16 "), "{table}");
         assert!(!table.contains("aggregate over"), "single run: no aggregate");
         // A simulated run always opens at least one DRAM row, so the

@@ -219,11 +219,12 @@ fn build_backend(common: &CommonArgs) -> Result<Box<dyn Backend>> {
                     )));
                 }
             }
-            Ok(Box::new(OpenMpSim::configured_regime(
+            Ok(Box::new(OpenMpSim::configured_numa(
                 &p,
                 common.page_size,
                 common.threads,
                 common.vector_regime,
+                common.numa_placement,
             )))
         }
         BackendKind::Scalar => {
@@ -236,10 +237,11 @@ fn build_backend(common: &CommonArgs) -> Result<Box<dyn Backend>> {
                 ));
             }
             let p = platforms::by_name(&common.platform)?;
-            Ok(Box::new(ScalarSim::configured(
+            Ok(Box::new(ScalarSim::configured_numa(
                 &p,
                 common.page_size,
                 common.threads,
+                common.numa_placement,
             )))
         }
         BackendKind::Cuda => {
@@ -264,6 +266,14 @@ fn build_backend(common: &CommonArgs) -> Result<Box<dyn Backend>> {
                         .into(),
                 ));
             }
+            if common.numa_placement.is_some() {
+                return Err(Error::Cli(
+                    "--numa-placement applies to the CPU simulation backends \
+                     (openmp|scalar); the cuda backend models a single GPU \
+                     device"
+                        .into(),
+                ));
+            }
             let b = match common.page_size {
                 Some(page) => CudaSim::with_page_size(&p, page),
                 None => CudaSim::new(&p),
@@ -282,6 +292,13 @@ fn build_backend(common: &CommonArgs) -> Result<Box<dyn Backend>> {
                 return Err(Error::Cli(
                     "--vector-regime applies to the openmp backend; pjrt \
                      executes with the host's real vector units"
+                        .into(),
+                ));
+            }
+            if common.numa_placement.is_some() {
+                return Err(Error::Cli(
+                    "--numa-placement applies to the CPU simulation backends \
+                     (openmp|scalar); pjrt executes on the host's real memory"
                         .into(),
                 ));
             }
@@ -403,6 +420,36 @@ mod tests {
         assert!(run(&argv(
             "-k Gather -p UNIFORM:256:1 -d 256 -l 64 -a p100 -b cuda \
              --vector-regime scalar"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn numa_placement_invocations_end_to_end() {
+        let argv = |s: &str| -> Vec<String> {
+            s.split_whitespace().map(|t| t.to_string()).collect()
+        };
+        // Both placements run on a two-socket platform; the knob is
+        // inert but accepted on single-socket CPUs.
+        run(&argv(
+            "-k Gather -p UNIFORM:8:2 -d 16 -l 4096 -a skx-2s \
+             --numa-placement interleave",
+        ))
+        .unwrap();
+        run(&argv(
+            "-k Scatter -p UNIFORM:8:1 -d 8 -l 4096 -a skx-2s \
+             --numa-placement first-touch -b scalar",
+        ))
+        .unwrap();
+        run(&argv(
+            "-k Gather -p UNIFORM:8:2 -d 16 -l 4096 -a skx \
+             --numa-placement interleave",
+        ))
+        .unwrap();
+        // Backends without a NUMA model reject the flag eagerly.
+        assert!(run(&argv(
+            "-k Gather -p UNIFORM:256:1 -d 256 -l 64 -a p100 -b cuda \
+             --numa-placement interleave"
         ))
         .is_err());
     }

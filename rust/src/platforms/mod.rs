@@ -9,7 +9,8 @@
 
 use crate::error::{Error, Result};
 use crate::sim::{
-    DramConfig, InterleavePolicy, PrefetchKind, TlbGeometry, TlbTable,
+    DramConfig, InterleavePolicy, NumaConfig, PrefetchKind, TlbGeometry,
+    TlbTable,
 };
 
 /// A compiler/ISA vectorization regime for gather/scatter (paper §5.3,
@@ -129,8 +130,14 @@ pub struct CpuPlatform {
     /// TX2's observed ability to absorb repeated overwrites of the same
     /// lines (paper §5.4.2 item 1).
     pub absorbs_repeated_writes: bool,
+    /// Socket geometry and interconnect link cost (`sim::topology`).
+    /// Every Table 3 part is measured single-socket; the derived
+    /// `*-2s` variants in [`multi_socket_cpus`] set two sockets plus
+    /// their link model.
+    pub numa: NumaConfig,
     /// Banked DRAM geometry, address-interleave policy, and conflict
-    /// cost (`sim::dram`).
+    /// cost (`sim::dram`) — per socket; `sim::topology` instantiates
+    /// one banked model per node.
     pub dram: DramConfig,
 }
 
@@ -258,6 +265,7 @@ pub fn cpus() -> Vec<CpuPlatform> {
             tlb_walk_ns: 120.0,
             coherence_ns: 260.0,
             absorbs_repeated_writes: false,
+            numa: NumaConfig::single(),
             // MCDRAM: 8 channels, flat-ish bank structure.
             dram: DramConfig {
                 channels: 8,
@@ -304,6 +312,7 @@ pub fn cpus() -> Vec<CpuPlatform> {
             tlb_walk_ns: 70.0,
             coherence_ns: 220.0,
             absorbs_repeated_writes: false,
+            numa: NumaConfig::single(),
             // 4-channel DDR4-2400, 4 bank groups x 4 banks per rank.
             dram: DramConfig {
                 channels: 4,
@@ -346,6 +355,7 @@ pub fn cpus() -> Vec<CpuPlatform> {
             tlb_walk_ns: 55.0,
             coherence_ns: 240.0,
             absorbs_repeated_writes: false,
+            numa: NumaConfig::single(),
             // 6-channel DDR4-2666: the odd channel count decorrelates
             // power-of-two row strides (see `--suite dram`).
             dram: DramConfig {
@@ -389,6 +399,7 @@ pub fn cpus() -> Vec<CpuPlatform> {
             tlb_walk_ns: 50.0,
             coherence_ns: 190.0,
             absorbs_repeated_writes: false,
+            numa: NumaConfig::single(),
             // 6-channel DDR4-2933 (same interleave shape as SKX).
             dram: DramConfig {
                 channels: 6,
@@ -434,6 +445,7 @@ pub fn cpus() -> Vec<CpuPlatform> {
             // §5.4.2 item 1: handles writing the same location over and
             // over very well.
             absorbs_repeated_writes: true,
+            numa: NumaConfig::single(),
             // 8-channel DDR4-2666 (TX2's wide memory system).
             dram: DramConfig {
                 channels: 8,
@@ -480,6 +492,7 @@ pub fn cpus() -> Vec<CpuPlatform> {
             tlb_walk_ns: 75.0,
             coherence_ns: 320.0,
             absorbs_repeated_writes: false,
+            numa: NumaConfig::single(),
             // Per-die 2-channel DDR4 x 2 dies feeding one socket's
             // sweep: modelled as 4 channels of 4x4 banks.
             dram: DramConfig {
@@ -491,6 +504,67 @@ pub fn cpus() -> Vec<CpuPlatform> {
                 conflict_penalty_bytes: 32.0,
             },
         },
+    ]
+}
+
+/// Derive a two-socket variant of a Table 3 part: double the threads,
+/// aggregate the DRAM and L3 bandwidth across both sockets' channels,
+/// raise the coherence cost (cross-socket snoops travel the link), and
+/// attach the interconnect model. Per-socket structures — caches, TLB,
+/// and the banked DRAM geometry — keep the base part's shape;
+/// `sim::topology` instantiates one banked DRAM model per node.
+fn dual_socket(
+    base: &str,
+    name: &'static str,
+    full_name: &'static str,
+    link_latency_ns: f64,
+    link_penalty_bytes: f64,
+) -> CpuPlatform {
+    let mut p = cpus()
+        .into_iter()
+        .find(|p| p.name == base)
+        .expect("multi-socket variants derive from Table 3 parts");
+    p.name = name;
+    p.full_name = full_name;
+    p.threads *= 2;
+    p.stream_gbs *= 2.0;
+    p.l3_gbs *= 2.0;
+    p.coherence_ns *= 1.5;
+    p.numa = NumaConfig {
+        sockets: 2,
+        link_latency_ns,
+        link_penalty_bytes,
+    };
+    p
+}
+
+/// Derived two-socket variants for the NUMA studies (`--suite numa`).
+/// They are not part of the Table 3 registry ([`cpus`]/[`all`] are
+/// unchanged — the paper's protocol is single-socket); [`by_name`]
+/// resolves them, so `-a skx-2s` and JSON configs reach them directly.
+pub fn multi_socket_cpus() -> Vec<CpuPlatform> {
+    vec![
+        dual_socket(
+            "skx",
+            "skx-2s",
+            "Skylake (Platinum 8160, two sockets, UPI)",
+            70.0,
+            96.0,
+        ),
+        dual_socket(
+            "tx2",
+            "tx2-2s",
+            "ThunderX2 (two sockets, CCPI2)",
+            80.0,
+            112.0,
+        ),
+        dual_socket(
+            "naples",
+            "naples-2s",
+            "AMD Naples (EPYC 7601, two sockets, xGMI)",
+            90.0,
+            128.0,
+        ),
     ]
 }
 
@@ -671,10 +745,12 @@ pub fn all() -> Vec<Platform> {
         .collect()
 }
 
-/// Look up a CPU platform by short name.
+/// Look up a CPU platform by short name (Table 3 parts plus the
+/// derived [`multi_socket_cpus`] variants).
 pub fn by_name(name: &str) -> Result<CpuPlatform> {
     cpus()
         .into_iter()
+        .chain(multi_socket_cpus())
         .find(|p| p.name.eq_ignore_ascii_case(name))
         .ok_or_else(|| Error::UnknownPlatform(name.to_string()))
 }
@@ -905,6 +981,43 @@ mod tests {
             assert_eq!(*s.last().unwrap(), p.threads, "{}", p.name);
             assert!(s.windows(2).all(|w| w[0] < w[1]), "{}", p.name);
         }
+    }
+
+    #[test]
+    fn multi_socket_variants_resolve_and_derive() {
+        // The Table 3 registry is untouched: every part there is
+        // single-socket, and the counts pinned above still hold.
+        for p in cpus() {
+            assert_eq!(p.numa, NumaConfig::single(), "{}", p.name);
+        }
+        let variants = multi_socket_cpus();
+        assert_eq!(variants.len(), 3);
+        for p in &variants {
+            assert_eq!(p.numa.sockets, 2, "{}", p.name);
+            assert!(p.numa.link_latency_ns > 0.0, "{}", p.name);
+            assert!(p.numa.link_penalty_bytes > 0.0, "{}", p.name);
+            let base =
+                by_name(p.name.strip_suffix("-2s").unwrap()).unwrap();
+            // Aggregate resources double; per-socket structures keep
+            // the base geometry.
+            assert_eq!(p.threads, 2 * base.threads, "{}", p.name);
+            assert!(
+                (p.stream_gbs - 2.0 * base.stream_gbs).abs() < 1e-9,
+                "{}",
+                p.name
+            );
+            assert!((p.l3_gbs - 2.0 * base.l3_gbs).abs() < 1e-9);
+            assert_eq!(p.l2_kb, base.l2_kb, "{}", p.name);
+            assert_eq!(p.dram.channels, base.dram.channels, "{}", p.name);
+            assert!(p.coherence_ns > base.coherence_ns, "{}", p.name);
+            assert_eq!(p.native_regime, base.native_regime, "{}", p.name);
+        }
+        // by_name resolves them, case-insensitively; cpus()/all() do
+        // not grow.
+        assert_eq!(by_name("skx-2s").unwrap().numa.sockets, 2);
+        assert_eq!(by_name("TX2-2S").unwrap().threads, 56);
+        assert!(by_name("bdw-2s").is_err());
+        assert!(!all().iter().any(|p| p.name().ends_with("-2s")));
     }
 
     #[test]

@@ -28,12 +28,12 @@ use std::collections::HashSet;
 
 use super::cache::{Cache, Probe};
 use super::closure::{self, LoopCloser, Observation};
-use super::dram::DramModel;
 use super::memory::{
     PageSize, PageTableWalker, PhysicalAddress, Tlb, VirtualAddress,
 };
 use super::plan::{AccessPlan, Segment};
 use super::prefetch::Prefetcher;
+use super::topology::{NumaPlacement, Topology};
 use super::{PrefetchKind, SimCounters, SimResult, TimeBreakdown, XorShift64};
 use crate::error::{Error, Result};
 use crate::pattern::{Kernel, Pattern};
@@ -86,6 +86,11 @@ pub struct CpuSimOptions {
     /// `SPATTER_NO_PLAN` environment variable is set (sibling to
     /// `SPATTER_NO_CLOSURE` / `SPATTER_NO_MEMO`).
     pub plan_enabled: bool,
+    /// NUMA page-placement policy (the `--numa-placement` knob).
+    /// Inert on single-socket platforms; on multi-socket parts it
+    /// decides each page's home node and therefore the local/remote
+    /// split (`sim::topology`). Default: first-touch, the OS default.
+    pub numa_placement: NumaPlacement,
 }
 
 impl Default for CpuSimOptions {
@@ -99,6 +104,7 @@ impl Default for CpuSimOptions {
             threads: None,
             closure_enabled: std::env::var_os("SPATTER_NO_CLOSURE").is_none(),
             plan_enabled: std::env::var_os("SPATTER_NO_PLAN").is_none(),
+            numa_placement: NumaPlacement::FirstTouch,
         }
     }
 }
@@ -151,13 +157,14 @@ pub struct CpuEngine {
     /// monomorphized planned pass. Engine-owned scratch, rebuilt in
     /// place (no per-run allocation once warm).
     plan: AccessPlan,
-    /// Banked DRAM row-buffer model (`sim::dram`): channels × ranks ×
-    /// bank groups × banks of open rows, shared by every operand
-    /// stream, with a per-stream slot offset so the 1 GiB-apart
-    /// regions of multi-operand kernels (GS, the STREAM tetrad) don't
-    /// alias onto one bank. Classifies every DRAM-facing access as a
-    /// row hit / miss / conflict.
-    dram: DramModel,
+    /// NUMA topology (`sim::topology`): one banked DRAM row-buffer
+    /// model (`sim::dram`) per socket — channels × ranks × bank groups
+    /// × banks of open rows, with a per-stream slot offset so the
+    /// 1 GiB-apart regions of multi-operand kernels don't alias onto
+    /// one bank — plus the page-placement policy that classifies every
+    /// DRAM-facing access local or remote. Single-socket platforms
+    /// collapse to the flat PR-7 model bit-exactly.
+    topo: Topology,
     /// Effective OpenMP thread count for the next run (resolved from
     /// `opts.threads` / the platform default; overridable per run via
     /// [`CpuEngine::set_threads`]).
@@ -195,7 +202,13 @@ impl CpuEngine {
             prefetchers: std::array::from_fn(|_| Prefetcher::new(pf_kind)),
             threads: opts.threads.unwrap_or(p.threads).max(1),
             regime: opts.regime.unwrap_or(p.native_regime),
-            dram: DramModel::new(&p.dram, ROW_LINES * LINE),
+            topo: Topology::new(
+                &p.numa,
+                &p.dram,
+                ROW_LINES * LINE,
+                opts.numa_placement,
+                page.shift(),
+            ),
             platform: p,
             opts,
             pf_buf: Vec::with_capacity(8),
@@ -229,6 +242,8 @@ impl CpuEngine {
         self.tlb = Tlb::new(self.platform.tlb.geometry(page), page);
         self.walker =
             PageTableWalker::new(self.platform.tlb_walk_ns, page, WALK_OVERLAP);
+        // Home nodes are per-page: the topology tracks the same size.
+        self.topo.set_page_shift(page.shift());
     }
 
     /// The OpenMP thread count the next run will model.
@@ -263,6 +278,19 @@ impl CpuEngine {
             .unwrap_or(self.platform.native_regime);
     }
 
+    /// The NUMA page-placement policy the next run will model.
+    pub fn numa_placement(&self) -> NumaPlacement {
+        self.topo.placement()
+    }
+
+    /// Reconfigure the NUMA placement policy: `Some` overrides, `None`
+    /// restores the engine's configured default (the `--numa-placement`
+    /// CLI value or first-touch). Inert on single-socket platforms.
+    pub fn set_numa_placement(&mut self, placement: Option<NumaPlacement>) {
+        self.topo
+            .set_placement(placement.unwrap_or(self.opts.numa_placement));
+    }
+
     fn reset(&mut self) {
         self.l1.reset();
         self.l2.reset();
@@ -271,16 +299,17 @@ impl CpuEngine {
         for pf in &mut self.prefetchers {
             pf.reset();
         }
-        self.dram.reset();
+        self.topo.reset();
     }
 
     /// Classify a DRAM-facing access (fill, prefetch fill, or
-    /// streaming store) against the banked row model for operand
-    /// stream `sid`. DRAM-facing: only translated addresses may reach
-    /// the row model.
+    /// streaming store): route it through the NUMA topology — which
+    /// decides the home node and the local/remote split — into the
+    /// home node's banked row model for operand stream `sid`.
+    /// DRAM-facing: only translated addresses may reach the row model.
     #[inline]
     fn note_row(&mut self, pa: PhysicalAddress, sid: usize, c: &mut SimCounters) {
-        self.dram.access(pa.byte(), sid, c);
+        self.topo.access(pa.byte(), sid, c);
     }
 
     /// Simulate one Spatter run and return modelled time + counters.
@@ -300,6 +329,14 @@ impl CpuEngine {
                     .join("|"),
             )));
         }
+        // Footprint sharing decides the first-touch placement path: a
+        // delta-0 pattern (every thread re-walks the same window) and
+        // the GUPS table (one table, all threads) are touched — and
+        // first-touch placed — by whichever thread got there first;
+        // everything else advances, so each thread's chunk is private.
+        self.topo.set_shared(
+            kernel == Kernel::Gups || pattern.mean_delta() == 0.0,
+        );
         self.reset();
         debug_assert_eq!(
             self.tlb.page_size(),
@@ -854,10 +891,11 @@ impl CpuEngine {
             for pf in &self.prefetchers {
                 h = closure::fold(h, pf.state_digest(base_bytes, seed));
             }
-            // The banked DRAM digest embeds the base's span residue:
-            // closure can only match at bank-assignment-preserving
-            // shifts (see `sim::dram`).
-            h = closure::fold(h, self.dram.state_digest(base_bytes, seed));
+            // The topology digest folds every node's banked DRAM state
+            // (which embeds the base's span residue — closure can only
+            // match at bank-assignment-preserving shifts, `sim::dram`)
+            // plus the placement-visible residues (`sim::topology`).
+            h = closure::fold(h, self.topo.state_digest(base_bytes, seed));
             h = closure::fold(h, rel(last_stream_line, base_line));
             h = closure::fold(h, base_bytes % page.bytes());
             h = closure::fold(h, phase as u64);
@@ -884,7 +922,7 @@ impl CpuEngine {
         for pf in &mut self.prefetchers {
             pf.relocate(bytes);
         }
-        self.dram.relocate(bytes);
+        self.topo.relocate(bytes);
     }
 
     #[inline]
@@ -1140,13 +1178,49 @@ impl CpuEngine {
             * (64.0 + ROW_PENALTY_BYTES);
         // Same-domain back-to-back activations additionally expose
         // tFAW/tRRD_L serialization (`sim::dram` conflict class).
-        let dram_bytes = (c.dram_read_bytes() + c.dram_write_bytes()) as f64
+        let mut dram_bytes = (c.dram_read_bytes() + c.dram_write_bytes()) as f64
             + c.row_activations as f64 * ROW_PENALTY_BYTES
             + c.dram_row_conflicts as f64 * p.dram.conflict_penalty_bytes
             + walk_bytes;
-        let dram_s = dram_bytes / (p.stream_gbs * 1e9 * dram_eff);
-        let latency_s =
-            c.dram_demand_lines as f64 * p.dram_latency_ns * 1e-9 / mlp / t;
+        // NUMA (multi-socket platforms only; `sim::topology`). Remote
+        // accesses pay the interconnect's bandwidth share in equivalent
+        // bytes, and the concentration factor models how unevenly the
+        // traffic loads the per-node memory channels: `stream_gbs` is
+        // the machine aggregate, so traffic spread evenly across all
+        // nodes sees factor 1.0, while a first-touch-contended shared
+        // footprint funnels through one node's channels (factor ~=
+        // sockets — one socket's worth of bandwidth).
+        let mut conc_factor = 1.0;
+        let mut link_latency_s = 0.0;
+        if p.numa.sockets > 1 {
+            dram_bytes += c.numa_remote as f64 * p.numa.link_penalty_bytes;
+            link_latency_s =
+                c.numa_remote as f64 * p.numa.link_latency_ns * 1e-9 / mlp / t;
+            let total = (c.numa_local + c.numa_remote) as f64;
+            if total > 0.0 {
+                let s = p.numa.sockets as f64;
+                let (concentrated, spread) = match self.topo.placement() {
+                    // Interleaved pages spread over every node.
+                    NumaPlacement::Interleave => (0.0, s),
+                    // Private first-touch chunks live with their owning
+                    // threads (spread over the occupied sockets);
+                    // contended shared pages all sit on one node.
+                    NumaPlacement::FirstTouch => (
+                        c.numa_contended as f64,
+                        self.threads.min(p.numa.sockets) as f64,
+                    ),
+                };
+                let node0_frac =
+                    (concentrated + (total - concentrated) / spread) / total;
+                conc_factor = s * node0_frac;
+            }
+        }
+        let dram_s =
+            dram_bytes / (p.stream_gbs * 1e9 * dram_eff) * conc_factor;
+        let latency_s = c.dram_demand_lines as f64 * p.dram_latency_ns * 1e-9
+            / mlp
+            / t
+            + link_latency_s;
         // Depth-dependent walk latency from the shared walker model
         // (walks overlap WALK_OVERLAP deep per thread).
         let tlb_s = c.tlb.misses() as f64 * self.walker.ns_per_miss() * 1e-9 / t;

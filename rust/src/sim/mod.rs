@@ -27,6 +27,10 @@
 //!   monomorphized hot loops with counted bulk updates — bit-identical
 //!   to the scalar reference paths, which stay available behind
 //!   `SPATTER_NO_PLAN=1` (§Perf).
+//! * [`topology`] — NUMA socket topology: one banked DRAM model per
+//!   node, local/remote access classification under a page-placement
+//!   policy (`--numa-placement`), and the interconnect link cost the
+//!   timing model charges remote traffic.
 //! * [`cpu`] — the CPU engine: L1/L2/L3 + TLB + prefetcher + a
 //!   bottleneck ("roofline-max") timing model over issue rate, cache
 //!   bandwidths, DRAM traffic, miss latency, and coherence.
@@ -36,6 +40,10 @@
 //! Absolute GB/s are calibrated to the Table 3 STREAM column; curve
 //! *shapes* (who wins, crossover strides, plateau fractions) are the
 //! reproduction target.
+//!
+//! A top-down map of how these pieces compose — backends over engines
+//! over the cache/TLB/DRAM/plan/closure substrate — lives in
+//! `docs/ARCHITECTURE.md`, with the pinning test for each invariant.
 //!
 //! # Scratch-buffer invariants (§Perf)
 //!
@@ -57,6 +65,7 @@ pub mod gpu;
 pub mod memory;
 pub mod plan;
 pub mod prefetch;
+pub mod topology;
 
 pub use cache::{Cache, Probe};
 pub use cpu::{CpuEngine, CpuSimOptions};
@@ -68,6 +77,7 @@ pub use memory::{
 };
 pub use plan::{AccessPlan, GpuPlan};
 pub use prefetch::{PrefetchKind, Prefetcher};
+pub use topology::{NumaConfig, NumaPlacement, Topology};
 
 /// Fixed seed of the GUPS random-update stream (both engines): runs
 /// are deterministic, and the same pattern produces the same update
@@ -143,6 +153,15 @@ pub struct SimCounters {
     /// Row activations serialized behind the previous activation in
     /// the same channel + bank group (tFAW/tRRD_L-class stall).
     pub dram_row_conflicts: u64,
+    /// DRAM-touching accesses whose page was home to the accessing
+    /// socket ([`topology::Topology`]; zero on single-socket parts).
+    pub numa_local: u64,
+    /// DRAM-touching accesses that crossed the socket interconnect.
+    pub numa_remote: u64,
+    /// First-touch accesses to a shared (all-threads) footprint whose
+    /// pages concentrated on one node — the traffic the timing model's
+    /// bandwidth-concentration factor is built from.
+    pub numa_contended: u64,
 }
 
 impl SimCounters {
@@ -185,6 +204,9 @@ impl SimCounters {
             dram_row_misses: self.dram_row_misses - earlier.dram_row_misses,
             dram_row_conflicts: self.dram_row_conflicts
                 - earlier.dram_row_conflicts,
+            numa_local: self.numa_local - earlier.numa_local,
+            numa_remote: self.numa_remote - earlier.numa_remote,
+            numa_contended: self.numa_contended - earlier.numa_contended,
         }
     }
 
@@ -211,6 +233,9 @@ impl SimCounters {
         self.dram_row_hits += d.dram_row_hits * reps;
         self.dram_row_misses += d.dram_row_misses * reps;
         self.dram_row_conflicts += d.dram_row_conflicts * reps;
+        self.numa_local += d.numa_local * reps;
+        self.numa_remote += d.numa_remote * reps;
+        self.numa_contended += d.numa_contended * reps;
     }
 }
 

@@ -1,0 +1,517 @@
+//! NUMA socket topology: per-socket local DRAM, an interconnect link
+//! model, and the page-placement policy that decides which socket a
+//! translated page calls home.
+//!
+//! # The model
+//!
+//! A [`Topology`] holds one banked [`DramModel`] per socket (the PR-7
+//! row-buffer machinery, instantiated per node) plus the placement
+//! policy. The engine simulates the union access stream of all threads
+//! through one representative hierarchy whose core sits on **socket
+//! 0**; threads are distributed round-robin across sockets (thread `t`
+//! runs on socket `t % sockets`), and every DRAM-touching access is
+//! classified *local* or *remote* from the machine-wide mix that
+//! round-robin distribution produces:
+//!
+//! * **`interleave`** — pages are placed round-robin by virtual page
+//!   number (`vpn % sockets`), the OS `numactl --interleave` policy.
+//!   An access is local iff its page's home node is socket 0, and it
+//!   is routed to the home node's DRAM banks — traffic spreads across
+//!   every node's channels.
+//! * **`first-touch`** — the default OS policy: a page lives on the
+//!   socket of the thread that touched it first. A *private* footprint
+//!   (the pattern advances every iteration, so each thread's chunk is
+//!   touched — and therefore placed — by its owner) is all-local. A
+//!   *shared* footprint (a delta-0 pattern or the GUPS table, where
+//!   every thread hammers the same pages) is **contended**: the pages
+//!   all landed on one node, so machine-wide only `1/sockets` of the
+//!   accesses are local and every node's traffic funnels through the
+//!   home node's channels (the bandwidth concentration the timing
+//!   model charges).
+//!
+//! Remote accesses pay the platform's interconnect link cost
+//! ([`NumaConfig::link_latency_ns`] added to the latency bottleneck,
+//! [`NumaConfig::link_penalty_bytes`] of equivalent DRAM traffic added
+//! to the bandwidth bottleneck).
+//!
+//! Single-socket topologies are the identity: every access routes to
+//! node 0 exactly as the flat PR-7 model did, no counters move, and
+//! the timing terms are untouched — `tests/numa_differential.rs` pins
+//! bit-exactness against the pre-NUMA behaviour on every platform.
+//!
+//! Loop-closure compatibility: [`Topology::state_digest`] folds every
+//! node's DRAM digest plus the placement-visible residues (the
+//! first-touch rotation phase and the base page's home-node phase), so
+//! a detected cycle implies the classification sequence repeats too;
+//! [`Topology::relocate`] shifts every node for the fast-forward path.
+//! See `docs/ARCHITECTURE.md` for where this sits in the stack.
+
+use super::closure;
+use super::dram::{DramConfig, DramModel};
+use super::SimCounters;
+use crate::error::{Error, Result};
+
+/// NUMA page-placement policy (the `--numa-placement` knob and the
+/// `"numa-placement"` JSON config key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NumaPlacement {
+    /// Pages live on the socket of the first-touching thread (OS
+    /// default).
+    FirstTouch,
+    /// Pages round-robin across sockets by virtual page number
+    /// (`numactl --interleave`).
+    Interleave,
+}
+
+impl NumaPlacement {
+    /// Every policy (for sweeps and property tests).
+    pub const ALL: &'static [NumaPlacement] =
+        &[NumaPlacement::FirstTouch, NumaPlacement::Interleave];
+
+    /// Display name (also the CLI/JSON syntax).
+    pub fn name(&self) -> &'static str {
+        match self {
+            NumaPlacement::FirstTouch => "first-touch",
+            NumaPlacement::Interleave => "interleave",
+        }
+    }
+
+    /// Parse the CLI/JSON syntax (case-insensitive).
+    pub fn parse(s: &str) -> Result<NumaPlacement> {
+        match s.to_ascii_lowercase().as_str() {
+            "first-touch" | "firsttouch" | "ft" => {
+                Ok(NumaPlacement::FirstTouch)
+            }
+            "interleave" | "il" => Ok(NumaPlacement::Interleave),
+            _ => Err(Error::Config(format!(
+                "unknown NUMA placement '{s}' (first-touch|interleave)"
+            ))),
+        }
+    }
+}
+
+impl Default for NumaPlacement {
+    /// The OS default policy.
+    fn default() -> NumaPlacement {
+        NumaPlacement::FirstTouch
+    }
+}
+
+impl std::fmt::Display for NumaPlacement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-platform socket geometry and interconnect link cost
+/// (`platforms` instantiates one per machine; single-socket parts use
+/// [`NumaConfig::single`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NumaConfig {
+    /// Socket count; 1 disables the whole subsystem.
+    pub sockets: usize,
+    /// Extra serialized latency of a remote (cross-socket) access, ns
+    /// — the QPI/UPI/xGMI hop, charged on the latency bottleneck.
+    pub link_latency_ns: f64,
+    /// Bandwidth cost of a remote access in equivalent DRAM bytes —
+    /// the link's share of the bandwidth bottleneck (protocol overhead
+    /// plus the narrower cross-socket path).
+    pub link_penalty_bytes: f64,
+}
+
+impl NumaConfig {
+    /// A flat single-socket machine (no link, no remote accesses).
+    pub const fn single() -> NumaConfig {
+        NumaConfig {
+            sockets: 1,
+            link_latency_ns: 0.0,
+            link_penalty_bytes: 0.0,
+        }
+    }
+}
+
+/// Engine-side NUMA state: one banked [`DramModel`] per socket plus
+/// the placement policy and the per-run shared-footprint flag.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    cfg: NumaConfig,
+    placement: NumaPlacement,
+    /// log2(page bytes) — home nodes are assigned at page granularity,
+    /// tracking the engine's translation page size.
+    page_shift: u32,
+    /// Whether the current run's footprint is shared by all threads
+    /// (delta-0 patterns, the GUPS table). Decides the first-touch
+    /// contended path; set once per run by the engine.
+    shared: bool,
+    /// Rotation phase of the first-touch contended classification:
+    /// consecutive accesses to the shared footprint come from threads
+    /// walking the sockets round-robin, so `rr % sockets == 0` marks
+    /// the local ones. Only `rr % sockets` is semantically meaningful
+    /// (the digest folds exactly that).
+    rr: u64,
+    nodes: Vec<DramModel>,
+}
+
+impl Topology {
+    pub fn new(
+        cfg: &NumaConfig,
+        dram: &DramConfig,
+        row_bytes: u64,
+        placement: NumaPlacement,
+        page_shift: u32,
+    ) -> Topology {
+        assert!(cfg.sockets >= 1, "a machine has at least one socket");
+        Topology {
+            cfg: *cfg,
+            placement,
+            page_shift,
+            shared: false,
+            rr: 0,
+            nodes: (0..cfg.sockets)
+                .map(|_| DramModel::new(dram, row_bytes))
+                .collect(),
+        }
+    }
+
+    pub fn sockets(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn config(&self) -> &NumaConfig {
+        &self.cfg
+    }
+
+    pub fn placement(&self) -> NumaPlacement {
+        self.placement
+    }
+
+    pub fn set_placement(&mut self, placement: NumaPlacement) {
+        self.placement = placement;
+    }
+
+    /// Track the engine's translation page size (home nodes are
+    /// per-page).
+    pub fn set_page_shift(&mut self, page_shift: u32) {
+        self.page_shift = page_shift;
+    }
+
+    /// Mark the current run's footprint shared (first-touch contended
+    /// path) or private. The engine decides once per run, before the
+    /// warmup pass.
+    pub fn set_shared(&mut self, shared: bool) {
+        self.shared = shared;
+    }
+
+    /// Clear all per-run state (node row buffers, rotation phase). The
+    /// shared flag survives — the engine sets it per run right before
+    /// resetting.
+    pub fn reset(&mut self) {
+        for n in &mut self.nodes {
+            n.reset();
+        }
+        self.rr = 0;
+    }
+
+    /// Route one DRAM-touching access (demand fill, prefetch fill, or
+    /// streaming store): classify it local/remote under the placement
+    /// policy, count it, and run it through the home node's banked
+    /// row-buffer model. Single-socket topologies route to node 0 with
+    /// no classification — bit-exact with the flat pre-NUMA model.
+    #[inline]
+    pub fn access(&mut self, byte_addr: u64, sid: usize, c: &mut SimCounters) {
+        let s = self.nodes.len() as u64;
+        if s == 1 {
+            self.nodes[0].access(byte_addr, sid, c);
+            return;
+        }
+        let node = match self.placement {
+            NumaPlacement::Interleave => {
+                let home = (byte_addr >> self.page_shift) % s;
+                if home == 0 {
+                    c.numa_local += 1;
+                } else {
+                    c.numa_remote += 1;
+                }
+                home as usize
+            }
+            NumaPlacement::FirstTouch => {
+                if self.shared {
+                    // Shared pages all landed on one node; the threads
+                    // walking the sockets round-robin make 1/sockets of
+                    // the machine-wide accesses local.
+                    c.numa_contended += 1;
+                    if self.rr % s == 0 {
+                        c.numa_local += 1;
+                    } else {
+                        c.numa_remote += 1;
+                    }
+                    self.rr = self.rr.wrapping_add(1);
+                } else {
+                    // Private chunks were first-touched by their owning
+                    // thread: every access finds its page at home.
+                    c.numa_local += 1;
+                }
+                0
+            }
+        };
+        self.nodes[node].access(byte_addr, sid, c);
+    }
+
+    /// Digest of the complete topology state relative to `base_bytes`,
+    /// for the loop-closure fingerprint: every node's DRAM digest plus
+    /// the placement-visible residues — the first-touch rotation phase
+    /// and the base page's home-node phase (an interleave cycle only
+    /// repeats if the shift preserves `vpn % sockets`). On a
+    /// single-socket topology both residues are constant zero, so the
+    /// collision structure is exactly the flat model's.
+    pub fn state_digest(&self, base_bytes: u64, seed: u64) -> u64 {
+        let s = self.nodes.len() as u64;
+        let mut h = seed;
+        for n in &self.nodes {
+            h = closure::fold(h, n.state_digest(base_bytes, seed));
+        }
+        h = closure::fold(h, self.rr % s);
+        closure::fold(h, (base_bytes >> self.page_shift) % s)
+    }
+
+    /// Shift every node's state forward by `delta_bytes` (loop-closure
+    /// fast-forward). The rotation phase needs no shift: a matched
+    /// digest already implies `rr % sockets` is back in phase.
+    pub fn relocate(&mut self, delta_bytes: u64) {
+        for n in &mut self.nodes {
+            n.relocate(delta_bytes);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platforms;
+    use crate::sim::closure::{SEED_A, SEED_B};
+
+    const ROW_BYTES: u64 = 2048;
+
+    fn dram() -> DramConfig {
+        platforms::by_name("skx").unwrap().dram
+    }
+
+    fn two_socket() -> NumaConfig {
+        NumaConfig {
+            sockets: 2,
+            link_latency_ns: 70.0,
+            link_penalty_bytes: 96.0,
+        }
+    }
+
+    #[test]
+    fn placement_names_parse_and_roundtrip() {
+        for &p in NumaPlacement::ALL {
+            assert_eq!(NumaPlacement::parse(p.name()).unwrap(), p);
+            assert_eq!(
+                NumaPlacement::parse(&p.name().to_uppercase()).unwrap(),
+                p
+            );
+            assert_eq!(format!("{p}"), p.name());
+        }
+        assert_eq!(
+            NumaPlacement::parse("ft").unwrap(),
+            NumaPlacement::FirstTouch
+        );
+        assert_eq!(NumaPlacement::default(), NumaPlacement::FirstTouch);
+        assert!(NumaPlacement::parse("nearest").is_err());
+        assert!(NumaPlacement::parse("").is_err());
+    }
+
+    #[test]
+    fn single_socket_is_transparent() {
+        // One node, no classification: counters stay zero and the
+        // banked model sees exactly the flat access stream.
+        let mut topo = Topology::new(
+            &NumaConfig::single(),
+            &dram(),
+            ROW_BYTES,
+            NumaPlacement::Interleave,
+            12,
+        );
+        let mut flat = DramModel::new(&dram(), ROW_BYTES);
+        let mut ct = SimCounters::default();
+        let mut cf = SimCounters::default();
+        for i in 0..512u64 {
+            let addr = i * 4096 * 3 + (i % 7) * 64;
+            topo.access(addr, (i % 3) as usize, &mut ct);
+            flat.access(addr, (i % 3) as usize, &mut cf);
+        }
+        assert_eq!(ct, cf, "flat and single-socket counters must match");
+        assert_eq!(ct.numa_local, 0);
+        assert_eq!(ct.numa_remote, 0);
+        assert_eq!(ct.numa_contended, 0);
+        for seed in [SEED_A, SEED_B] {
+            assert_eq!(
+                topo.nodes[0].state_digest(0, seed),
+                flat.state_digest(0, seed)
+            );
+        }
+    }
+
+    #[test]
+    fn interleave_classifies_by_page_parity() {
+        let mut topo = Topology::new(
+            &two_socket(),
+            &dram(),
+            ROW_BYTES,
+            NumaPlacement::Interleave,
+            12,
+        );
+        let mut c = SimCounters::default();
+        // Even 4 KiB pages are home to socket 0 (local), odd pages to
+        // socket 1 (remote).
+        for page in 0..16u64 {
+            topo.access(page * 4096, 0, &mut c);
+        }
+        assert_eq!(c.numa_local, 8);
+        assert_eq!(c.numa_remote, 8);
+        assert_eq!(c.numa_contended, 0, "contention is a first-touch notion");
+        // The page size matters: at 2 MiB pages the same byte stream
+        // is 16 pages' worth of one 2 MiB page — all local.
+        let mut big = Topology::new(
+            &two_socket(),
+            &dram(),
+            ROW_BYTES,
+            NumaPlacement::Interleave,
+            21,
+        );
+        let mut cb = SimCounters::default();
+        for page in 0..16u64 {
+            big.access(page * 4096, 0, &mut cb);
+        }
+        assert_eq!(cb.numa_local, 16);
+        assert_eq!(cb.numa_remote, 0);
+    }
+
+    #[test]
+    fn first_touch_private_is_all_local() {
+        let mut topo = Topology::new(
+            &two_socket(),
+            &dram(),
+            ROW_BYTES,
+            NumaPlacement::FirstTouch,
+            12,
+        );
+        topo.set_shared(false);
+        let mut c = SimCounters::default();
+        for page in 0..32u64 {
+            topo.access(page * 4096, 0, &mut c);
+        }
+        assert_eq!(c.numa_local, 32);
+        assert_eq!(c.numa_remote, 0);
+        assert_eq!(c.numa_contended, 0);
+    }
+
+    #[test]
+    fn first_touch_shared_rotates_and_concentrates() {
+        let mut topo = Topology::new(
+            &two_socket(),
+            &dram(),
+            ROW_BYTES,
+            NumaPlacement::FirstTouch,
+            12,
+        );
+        topo.set_shared(true);
+        let mut c = SimCounters::default();
+        for i in 0..32u64 {
+            topo.access((i % 4) * 4096, 0, &mut c);
+        }
+        // Two sockets: exactly half the machine-wide accesses to the
+        // shared pages are local, and all of them are contended.
+        assert_eq!(c.numa_local, 16);
+        assert_eq!(c.numa_remote, 16);
+        assert_eq!(c.numa_contended, 32);
+        // reset() clears the rotation phase.
+        topo.reset();
+        let mut c2 = SimCounters::default();
+        topo.access(0, 0, &mut c2);
+        assert_eq!(c2.numa_local, 1, "rotation restarts local-first");
+    }
+
+    #[test]
+    fn digest_and_relocate_are_shift_exact() {
+        // Two 2-socket topologies fed the same stream shifted by a
+        // span-aligned, home-phase-preserving offset digest identically
+        // relative to their bases, and relocation reproduces the
+        // shifted history.
+        let mk = || {
+            Topology::new(
+                &two_socket(),
+                &dram(),
+                ROW_BYTES,
+                NumaPlacement::Interleave,
+                12,
+            )
+        };
+        let mut a = mk();
+        let mut b = mk();
+        // A shift that is a multiple of every node's span and of
+        // sockets * page bytes keeps both the bank slots and the
+        // home-node phase aligned.
+        let span = ROW_BYTES * dram().total_banks() as u64;
+        let shift = span * 4096 * 2;
+        let mut ca = SimCounters::default();
+        let mut cb = SimCounters::default();
+        for i in 0..256u64 {
+            let addr = i * 8192 + (i % 5) * 64;
+            a.access(addr, (i % 3) as usize, &mut ca);
+            b.access(addr + shift, (i % 3) as usize, &mut cb);
+        }
+        assert_eq!(ca, cb, "classification must be shift-invariant");
+        for seed in [SEED_A, SEED_B] {
+            assert_eq!(a.state_digest(0, seed), b.state_digest(shift, seed));
+        }
+        a.relocate(shift);
+        for seed in [SEED_A, SEED_B] {
+            assert_eq!(
+                a.state_digest(shift, seed),
+                b.state_digest(shift, seed)
+            );
+        }
+        // A home-phase-breaking shift (odd page count) must not digest
+        // equal: vpn % sockets flips.
+        let mut d = mk();
+        let mut cd = SimCounters::default();
+        d.access(4096, 0, &mut cd);
+        let mut e = mk();
+        let mut ce = SimCounters::default();
+        e.access(0, 0, &mut ce);
+        assert_ne!(
+            d.state_digest(4096, SEED_A),
+            e.state_digest(0, SEED_A),
+            "odd-page shifts flip the home phase"
+        );
+    }
+
+    #[test]
+    fn rotation_phase_reaches_the_digest() {
+        let mut a = Topology::new(
+            &two_socket(),
+            &dram(),
+            ROW_BYTES,
+            NumaPlacement::FirstTouch,
+            12,
+        );
+        a.set_shared(true);
+        let mut b = a.clone();
+        let mut ca = SimCounters::default();
+        let mut cb = SimCounters::default();
+        // Same DRAM state, rotation phases differing by one access.
+        a.access(0, 0, &mut ca);
+        b.access(0, 0, &mut cb);
+        b.access(0, 0, &mut cb);
+        assert_ne!(
+            a.state_digest(0, SEED_A),
+            b.state_digest(0, SEED_A),
+            "an out-of-phase rotation is a different state"
+        );
+        a.access(0, 0, &mut ca);
+        assert_eq!(a.state_digest(0, SEED_A), b.state_digest(0, SEED_A));
+    }
+}

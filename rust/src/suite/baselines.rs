@@ -64,6 +64,7 @@ fn baseline_configs(plat: &Platform, ctx: &SuiteContext) -> Vec<RunConfig> {
                 page_size: None,
                 threads: None,
                 regime: None,
+                placement: None,
             }
         })
         .collect()

@@ -115,6 +115,7 @@ fn configs_for(
                 page_size: None,
                 threads: None,
                 regime: None,
+                placement: None,
             });
         }
     }
@@ -125,6 +126,7 @@ fn configs_for(
         page_size: None,
         threads: None,
         regime: None,
+        placement: None,
     });
     configs
 }

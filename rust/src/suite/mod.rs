@@ -21,11 +21,13 @@
 //! | `baselines` | STREAM tetrad + GUPS measured in-engine, all platforms |
 //! | `dram` | banked-DRAM bank-conflict sweep, pow2 vs odd strides |
 //! | `simd` | vectorization-regime sweep (Fig 6 crossover) |
+//! | `numa` | NUMA remote-access cliff + placement A/B, 2-socket parts |
 //! | `all` | everything above |
 
 mod apps;
 mod baselines;
 mod dram;
+mod numa;
 mod prefetch;
 mod simd;
 mod threadscale;
@@ -34,6 +36,7 @@ mod ustride;
 pub use apps::{fig7_radar, fig8_radar, fig9_bwbw, table1_characterization, table4_miniapps};
 pub use baselines::{baselines_suite, measured_stream_gbs, BASELINE_KERNELS};
 pub use dram::dram_suite;
+pub use numa::{numa_suite, ratio_pattern, REMOTE_LANES};
 pub use prefetch::prefetch_suite;
 pub use simd::simd_suite;
 pub use threadscale::threadscale_suite;
@@ -130,12 +133,13 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
         "baselines" => baselines_suite(ctx),
         "dram" => dram_suite(ctx),
         "simd" => simd_suite(ctx),
+        "numa" => numa_suite(ctx),
         "all" => {
             let mut out = String::new();
             for n in [
                 "table1", "fig3", "fig4", "fig5", "fig6", "baselines",
                 "table4", "fig7", "fig8", "fig9", "pagesize", "ustride",
-                "threadscale", "prefetch", "dram", "simd",
+                "threadscale", "prefetch", "dram", "simd", "numa",
             ] {
                 out.push_str(&run(n, ctx)?);
                 out.push('\n');
@@ -145,7 +149,7 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
         other => Err(Error::Cli(format!(
             "unknown suite '{other}' \
              (fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1|table4|pagesize|\
-             ustride|threadscale|prefetch|baselines|dram|simd|all)"
+             ustride|threadscale|prefetch|baselines|dram|simd|numa|all)"
         ))),
     }
 }
@@ -155,7 +159,7 @@ pub fn run(name: &str, ctx: &SuiteContext) -> Result<String> {
 pub const EXPERIMENTS: &[&str] = &[
     "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1",
     "table4", "pagesize", "ustride", "threadscale", "prefetch", "baselines",
-    "dram", "simd",
+    "dram", "simd", "numa",
 ];
 
 #[cfg(test)]

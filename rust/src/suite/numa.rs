@@ -1,0 +1,433 @@
+//! `--suite numa` — the NUMA remote-access bandwidth-cliff study.
+//!
+//! The engines model a multi-socket topology (`sim::topology`): every
+//! DRAM-reaching access resolves to a home node under the configured
+//! page-placement policy, and remote accesses pay the interconnect
+//! link's latency plus a bandwidth penalty in equivalent bytes. This
+//! suite drives the mechanism end to end on every two-socket platform:
+//!
+//! * **ratio sweep** — an engineered 16-lane pattern under `interleave`
+//!   placement whose lanes split between an even page (node 0, local)
+//!   and the adjacent odd page (node 1, remote). Sweeping the remote
+//!   lane count through 0, 4, 8, 12, 16 dials the remote fraction
+//!   through 0..1 in quarters; the per-iteration delta advances two
+//!   whole pages, so the split is exact on every iteration. Runs cover
+//!   Gather, Scatter, and GS.
+//! * **placement A/B** — GUPS over a table far larger than any L3,
+//!   run under both `first-touch` (one thread faults every page: the
+//!   whole table lands on node 0 and every socket hammers it) and
+//!   `interleave` (pages rotate across nodes and the sockets' memory
+//!   controllers share the load).
+//!
+//! The report states, per platform, the **remote-access bandwidth
+//! cliff**: the all-local to all-remote bandwidth ratio per kernel,
+//! plus the GUPS placement split. Prefetchers are disabled so the
+//! node-classified stream is exactly the pattern's own accesses.
+//! Results go to `numa.csv` / `numa.json`; everything runs through the
+//! `--jobs` pool and is byte-identical for any worker count.
+
+use super::SuiteContext;
+use crate::backends::{Backend, OpenMpSim};
+use crate::coordinator::{run_configs_jobs, RunConfig, RunRecord};
+use crate::error::Result;
+use crate::json::{self, obj, Value};
+use crate::pattern::{Kernel, Pattern};
+use crate::platforms;
+use crate::report::{Csv, Table};
+use crate::sim::NumaPlacement;
+
+/// Every two-socket platform (`platforms::multi_socket_cpus`).
+const PLATFORMS: &[&str] = &["skx-2s", "tx2-2s", "naples-2s"];
+
+/// Lanes in the engineered ratio pattern.
+const LANES: usize = 16;
+
+/// Remote lane counts swept (remote fraction 0, 1/4, 1/2, 3/4, 1).
+pub const REMOTE_LANES: &[usize] = &[0, 4, 8, 12, 16];
+
+/// Elements per 4 KiB translation page (the placement grain).
+const PAGE_ELEMS: usize = 512;
+
+/// Per-iteration advance: two whole pages, so every lane keeps its
+/// page parity — and therefore its interleave home node — across the
+/// entire run.
+const DELTA_ELEMS: i64 = 2 * PAGE_ELEMS as i64;
+
+/// The kernels of the ratio sweep, in sweep order.
+const SWEEP_KERNELS: &[Kernel] = &[Kernel::Gather, Kernel::Scatter, Kernel::GS];
+
+/// GUPS table for the placement A/B: 128 MiB of doubles, far past
+/// every platform's L3, so the updates are DRAM traffic throughout.
+const GUPS_TABLE_ELEMS: usize = 1 << 24;
+
+/// The engineered ratio pattern: `LANES - remote` lanes on the even
+/// page (interleave home node 0: local) and `remote` lanes on the odd
+/// page (node 1: remote). Lanes sit a cache line apart, so each is one
+/// distinct DRAM-classified access per iteration.
+pub fn ratio_pattern(remote: usize, count: usize) -> Pattern {
+    assert!(remote <= LANES, "at most {LANES} remote lanes");
+    let local = LANES - remote;
+    let idx: Vec<i64> = (0..local)
+        .map(|j| (j * 8) as i64)
+        .chain((0..remote).map(|j| (PAGE_ELEMS + j * 8) as i64))
+        .collect();
+    Pattern::from_indices(&format!("NUMA:{LANES}:r{remote}"), idx)
+        .with_delta(DELTA_ELEMS)
+        .with_count(count)
+}
+
+/// The GS variant: the same lane split on both sides. The scatter
+/// region starts at the next 1 GiB boundary — an even page — so the
+/// write side's page parity (and remote fraction) matches the read
+/// side's.
+fn ratio_gs(remote: usize, count: usize) -> Pattern {
+    let p = ratio_pattern(remote, count);
+    let side = p.indices.clone();
+    p.with_gs_scatter(side)
+}
+
+/// Iteration count for the sweep: like the dram suite, every access is
+/// a fresh line, so fewer iterations than the cache-assisted studies
+/// produce the same DRAM-event population.
+fn numa_count(ctx: &SuiteContext) -> usize {
+    ctx.ustride_count() >> 2
+}
+
+fn remote_frac(remote: usize) -> f64 {
+    remote as f64 / LANES as f64
+}
+
+/// Local fraction of the node-classified traffic (1.0 when the run
+/// produced none).
+fn local_frac(r: &RunRecord) -> f64 {
+    let total = r.numa_local + r.numa_remote;
+    if total == 0 {
+        1.0
+    } else {
+        r.numa_local as f64 / total as f64
+    }
+}
+
+/// The run queue for one platform: for each kernel of the ratio sweep
+/// the five remote-lane counts under interleave placement, then the
+/// GUPS placement A/B — record `ki * 5 + ri` is kernel `ki` at
+/// `REMOTE_LANES[ri]`, and the last two records are GUPS under
+/// first-touch and interleave.
+fn configs_for(name: &str, count: usize) -> Vec<RunConfig> {
+    let mut configs = Vec::new();
+    for &kernel in SWEEP_KERNELS {
+        for &k in REMOTE_LANES {
+            let pattern = match kernel {
+                Kernel::GS => ratio_gs(k, count),
+                _ => ratio_pattern(k, count),
+            };
+            configs.push(RunConfig {
+                name: format!("{name}/il/{}/r{k}", kernel.name()),
+                kernel,
+                pattern,
+                page_size: None,
+                threads: None,
+                regime: None,
+                placement: Some(NumaPlacement::Interleave),
+            });
+        }
+    }
+    for placement in [NumaPlacement::FirstTouch, NumaPlacement::Interleave] {
+        configs.push(RunConfig {
+            name: format!("{name}/{}/gups", placement.name()),
+            kernel: Kernel::Gups,
+            pattern: Pattern::gups(GUPS_TABLE_ELEMS, (count >> 4).max(256)),
+            page_size: None,
+            threads: None,
+            regime: None,
+            placement: Some(placement),
+        });
+    }
+    configs
+}
+
+pub fn numa_suite(ctx: &SuiteContext) -> Result<String> {
+    let count = numa_count(ctx);
+    let nr = REMOTE_LANES.len();
+    let mut csv = Csv::new(&[
+        "platform", "kernel", "placement", "remote_frac", "gbs",
+        "numa_local", "numa_remote", "local_frac",
+    ]);
+    let mut report = String::from(
+        "== numa: remote-access bandwidth cliff (local:remote ratio \
+         sweep + GUPS placement A/B) ==\n",
+    );
+    let mut json_platforms: Vec<(String, Value)> = Vec::new();
+    for &name in PLATFORMS {
+        let platform = platforms::by_name(name)?;
+        let factory = || -> Result<Box<dyn Backend>> {
+            Ok(Box::new(OpenMpSim::without_prefetch(&platform)))
+        };
+        let configs = configs_for(name, count);
+        let records = run_configs_jobs(&factory, &configs, ctx.jobs)?;
+
+        for (ri, r) in records.iter().enumerate() {
+            let (kernel, placement, frac) = if ri < SWEEP_KERNELS.len() * nr {
+                (
+                    SWEEP_KERNELS[ri / nr].name(),
+                    NumaPlacement::Interleave.name(),
+                    format!("{:.2}", remote_frac(REMOTE_LANES[ri % nr])),
+                )
+            } else {
+                let placement = if ri == SWEEP_KERNELS.len() * nr {
+                    NumaPlacement::FirstTouch
+                } else {
+                    NumaPlacement::Interleave
+                };
+                ("GUPS", placement.name(), "-".to_string())
+            };
+            csv.row_display(&[
+                &name,
+                &kernel,
+                &placement,
+                &frac,
+                &format!("{:.3}", r.bandwidth_gbs),
+                &r.numa_local,
+                &r.numa_remote,
+                &format!("{:.4}", local_frac(r)),
+            ]);
+        }
+
+        // Table: one row per remote fraction, bandwidth per kernel
+        // plus the gather run's measured local fraction.
+        let header: Vec<String> = std::iter::once("remote".to_string())
+            .chain(
+                SWEEP_KERNELS
+                    .iter()
+                    .map(|k| format!("{} GB/s", k.name())),
+            )
+            .chain(std::iter::once("gather loc%".to_string()))
+            .collect();
+        let header_refs: Vec<&str> =
+            header.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new(&header_refs);
+        for (ri, &k) in REMOTE_LANES.iter().enumerate() {
+            let mut row = vec![format!("{:.2}", remote_frac(k))];
+            for ki in 0..SWEEP_KERNELS.len() {
+                row.push(format!(
+                    "{:.2}",
+                    records[ki * nr + ri].bandwidth_gbs
+                ));
+            }
+            row.push(format!("{:.1}", local_frac(&records[ri]) * 100.0));
+            table.row(&row);
+        }
+
+        // All-local over all-remote bandwidth, per kernel.
+        let cliff = |ki: usize| {
+            records[ki * nr].bandwidth_gbs
+                / records[ki * nr + nr - 1].bandwidth_gbs
+        };
+        let cliff_text: Vec<String> = SWEEP_KERNELS
+            .iter()
+            .enumerate()
+            .map(|(ki, k)| format!("{} {:.2}x", k.name(), cliff(ki)))
+            .collect();
+        let gups_ft = &records[SWEEP_KERNELS.len() * nr];
+        let gups_il = &records[SWEEP_KERNELS.len() * nr + 1];
+        report.push_str(&format!(
+            "-- {name} ({} sockets) --\n{}remote-access bandwidth \
+             cliff: {}; gups: first-touch {:.3} vs interleave {:.3} \
+             GB/s\n",
+            platform.numa.sockets,
+            table.render(),
+            cliff_text.join(", "),
+            gups_ft.bandwidth_gbs,
+            gups_il.bandwidth_gbs,
+        ));
+
+        json_platforms.push((
+            name.to_string(),
+            obj(&[
+                ("sockets", Value::from(platform.numa.sockets)),
+                (
+                    "cliff",
+                    obj(&SWEEP_KERNELS
+                        .iter()
+                        .enumerate()
+                        .map(|(ki, k)| (k.name(), Value::from(cliff(ki))))
+                        .collect::<Vec<_>>()),
+                ),
+                (
+                    "gups",
+                    obj(&[
+                        (
+                            NumaPlacement::FirstTouch.name(),
+                            Value::from(gups_ft.bandwidth_gbs),
+                        ),
+                        (
+                            NumaPlacement::Interleave.name(),
+                            Value::from(gups_il.bandwidth_gbs),
+                        ),
+                    ]),
+                ),
+                (
+                    "runs",
+                    Value::Array(
+                        records.iter().map(|r| r.to_json()).collect(),
+                    ),
+                ),
+            ]),
+        ));
+    }
+    csv.write(&ctx.out_dir, "numa.csv")?;
+    let doc = Value::Object(json_platforms.into_iter().collect());
+    let mut text = json::to_string_pretty(&doc);
+    text.push('\n');
+    std::fs::write(ctx.out_dir.join("numa.json"), text)?;
+    report.push_str(
+        "Takeaway check: under interleave placement every odd-page lane \
+         crosses the socket link and pays its latency plus a \
+         bandwidth-equivalent penalty, so bandwidth declines monotonely \
+         as the remote fraction rises — the all-local to all-remote \
+         ratio is the platform's remote-access cliff. On the shared \
+         GUPS table, first-touch homes every page on node 0 and both \
+         sockets contend for one memory controller, while interleave \
+         spreads the pages and recovers the aggregate bandwidth — \
+         placement, not the pattern, decides which regime the run \
+         lands in.\n",
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn ctx(tag: &str) -> SuiteContext {
+        SuiteContext::fast(
+            &Path::new("/tmp").join(format!("spatter-numa-{tag}")),
+        )
+    }
+
+    #[test]
+    fn ratio_pattern_page_split() {
+        let p = ratio_pattern(4, 1024);
+        assert_eq!(p.vector_len(), LANES);
+        assert_eq!(p.delta, DELTA_ELEMS);
+        // 12 lanes on the even page, 4 on the odd page; a cache line
+        // apart within each page.
+        let page = |e: i64| (e * 8) >> 12;
+        assert_eq!(
+            p.indices.iter().filter(|&&e| page(e) % 2 == 0).count(),
+            12
+        );
+        assert_eq!(
+            p.indices.iter().filter(|&&e| page(e) % 2 == 1).count(),
+            4
+        );
+        assert_eq!(p.indices[1] - p.indices[0], 8);
+        // The delta preserves every lane's parity.
+        assert_eq!(page(DELTA_ELEMS) % 2, 0);
+        // The GS variant mirrors the split on its write side.
+        let gs = ratio_gs(4, 1024);
+        assert_eq!(gs.scatter_indices, gs.indices);
+    }
+
+    #[test]
+    fn remote_lanes_raise_remote_traffic_and_cut_bandwidth() {
+        let p = platforms::by_name("skx-2s").unwrap();
+        let count = 1 << 12;
+        let run = |remote: usize| {
+            let mut b = OpenMpSim::without_prefetch(&p);
+            b.set_numa_placement(Some(NumaPlacement::Interleave));
+            b.run(&ratio_pattern(remote, count), Kernel::Gather).unwrap()
+        };
+        let local = run(0);
+        let mixed = run(8);
+        let far = run(16);
+        assert!(local.counters.numa_remote == 0, "{:?}", local.counters);
+        assert!(local.counters.numa_local > 0);
+        assert!(
+            mixed.counters.numa_remote > 0
+                && far.counters.numa_remote > mixed.counters.numa_remote,
+            "mixed {:?} far {:?}",
+            mixed.counters,
+            far.counters
+        );
+        // The link penalty is visible end to end.
+        let bw = |r: &crate::sim::SimResult| r.bandwidth_gbs();
+        assert!(
+            bw(&far) < bw(&mixed) && bw(&mixed) < bw(&local),
+            "local {:.2} mixed {:.2} far {:.2}",
+            bw(&local),
+            bw(&mixed),
+            bw(&far)
+        );
+    }
+
+    #[test]
+    fn first_touch_concentrates_gups_on_one_node() {
+        let p = platforms::by_name("skx-2s").unwrap();
+        let pat = Pattern::gups(GUPS_TABLE_ELEMS, 1 << 10);
+        let run = |placement: NumaPlacement| {
+            let mut b = OpenMpSim::without_prefetch(&p);
+            b.set_numa_placement(Some(placement));
+            b.run(&pat, Kernel::Gups).unwrap()
+        };
+        let ft = run(NumaPlacement::FirstTouch);
+        let il = run(NumaPlacement::Interleave);
+        assert!(
+            ft.bandwidth_gbs() < il.bandwidth_gbs(),
+            "first-touch {:.3} must trail interleave {:.3}",
+            ft.bandwidth_gbs(),
+            il.bandwidth_gbs()
+        );
+    }
+
+    #[test]
+    fn report_csv_json_written_and_cliffs_reported() {
+        let c = ctx("run");
+        let report = numa_suite(&c).unwrap();
+        assert!(report.contains("remote-access bandwidth cliff"), "{report}");
+        assert!(report.contains("-- skx-2s (2 sockets) --"), "{report}");
+        assert!(c.out_dir.join("numa.csv").exists());
+        let j =
+            std::fs::read_to_string(c.out_dir.join("numa.json")).unwrap();
+        let doc = json::parse(&j).unwrap();
+        for &plat in PLATFORMS {
+            let node = doc.get(plat).unwrap();
+            // All-local beats all-remote on every kernel.
+            for k in ["Gather", "Scatter", "GS"] {
+                let cliff =
+                    node.get("cliff").unwrap().get(k).unwrap().as_f64().unwrap();
+                assert!(cliff > 1.0, "{plat}/{k} cliff {cliff}");
+            }
+            // Interleave beats first-touch on the shared GUPS table.
+            let gups = node.get("gups").unwrap();
+            assert!(
+                gups.get("interleave").unwrap().as_f64().unwrap()
+                    > gups.get("first-touch").unwrap().as_f64().unwrap(),
+                "{plat} gups"
+            );
+            // Every run record carries the numa counters in its JSON.
+            let runs = node.get("runs").unwrap().as_array().unwrap();
+            assert!(runs
+                .iter()
+                .any(|r| r.get("numa").unwrap().get_opt("remote").is_some()));
+        }
+        std::fs::remove_dir_all(&c.out_dir).ok();
+    }
+
+    #[test]
+    fn jobs_invariant_output() {
+        let c1 = ctx("j1").with_jobs(1);
+        let c4 = ctx("j4").with_jobs(4);
+        let r1 = numa_suite(&c1).unwrap();
+        let r4 = numa_suite(&c4).unwrap();
+        assert_eq!(r1, r4, "report must not depend on --jobs");
+        let f = |c: &SuiteContext, n: &str| {
+            std::fs::read_to_string(c.out_dir.join(n)).unwrap()
+        };
+        assert_eq!(f(&c1, "numa.csv"), f(&c4, "numa.csv"));
+        assert_eq!(f(&c1, "numa.json"), f(&c4, "numa.json"));
+        std::fs::remove_dir_all(&c1.out_dir).ok();
+        std::fs::remove_dir_all(&c4.out_dir).ok();
+    }
+}

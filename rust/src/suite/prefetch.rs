@@ -131,6 +131,7 @@ fn configs_for(name: &str, depth: usize, count: usize) -> Vec<RunConfig> {
             page_size: None,
             threads: None,
             regime: None,
+            placement: None,
         });
         configs.push(RunConfig {
             name: format!("{name}/pf{depth}/gs/s{s}"),
@@ -139,6 +140,7 @@ fn configs_for(name: &str, depth: usize, count: usize) -> Vec<RunConfig> {
             page_size: None,
             threads: None,
             regime: None,
+            placement: None,
         });
     }
     configs.push(RunConfig {
@@ -148,6 +150,7 @@ fn configs_for(name: &str, depth: usize, count: usize) -> Vec<RunConfig> {
         page_size: None,
         threads: None,
         regime: None,
+        placement: None,
     });
     configs
 }

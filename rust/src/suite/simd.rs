@@ -58,6 +58,7 @@ fn simd_configs(
                     page_size: None,
                     threads: None,
                     regime: Some(r),
+                    placement: None,
                 });
             }
         }
@@ -70,6 +71,7 @@ fn simd_configs(
                 page_size: None,
                 threads: None,
                 regime: Some(r),
+                placement: None,
             });
         }
     }

@@ -105,6 +105,7 @@ pub fn threadscale_suite(ctx: &SuiteContext) -> Result<String> {
                     page_size: None,
                     threads: Some(t),
                     regime: None,
+                    placement: None,
                 });
             }
         }

@@ -286,6 +286,7 @@ pub fn ustride_suite(ctx: &SuiteContext) -> Result<String> {
                     page_size: None,
                     threads: None,
                     regime: None,
+                    placement: None,
                 });
                 strides.push(s);
             }

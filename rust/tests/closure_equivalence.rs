@@ -20,7 +20,7 @@ use spatter::platforms;
 use spatter::prop::{check, Gen};
 use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
 use spatter::sim::gpu::{GpuEngine, GpuSimOptions};
-use spatter::sim::{InterleavePolicy, PageSize, SimResult};
+use spatter::sim::{InterleavePolicy, NumaPlacement, PageSize, SimResult};
 
 fn assert_identical(on: &SimResult, off: &SimResult, ctx: &str) {
     assert_eq!(on.counters, off.counters, "{ctx}: counters");
@@ -130,11 +130,17 @@ fn arbitrary_pattern(g: &mut Gen, v_cap: usize) -> Pattern {
 #[test]
 fn prop_cpu_closure_equivalence() {
     check("CPU: closure on == closure off, exactly", 20, |g| {
-        let mut plat = platforms::by_name(
-            *g.choose(&["skx", "bdw", "naples", "tx2", "knl", "clx"]),
-        )
+        // The pool includes the two-socket variants: per-node DRAM
+        // bank state and the first-touch rotation phase are part of
+        // the closure fingerprint, so a digest that missed either
+        // would fail here (ISSUE 10 tentpole).
+        let mut plat = platforms::by_name(*g.choose(&[
+            "skx", "bdw", "naples", "tx2", "knl", "clx", "skx-2s",
+            "tx2-2s", "naples-2s",
+        ]))
         .unwrap();
         plat.dram.interleave = *g.choose(InterleavePolicy::ALL);
+        let numa_placement = *g.choose(NumaPlacement::ALL);
         let kernel = arbitrary_kernel(g);
         let page = *g.choose(&[PageSize::FourKB, PageSize::TwoMB]);
         let threads = if g.bool() {
@@ -165,6 +171,7 @@ fn prop_cpu_closure_equivalence() {
                     page_size: page,
                     threads,
                     regime,
+                    numa_placement,
                     ..Default::default()
                 },
             );
@@ -176,8 +183,11 @@ fn prop_cpu_closure_equivalence() {
             &on,
             &off,
             &format!(
-                "{} {:?} {} regime={regime:?}",
-                plat.name, kernel, pat.spec
+                "{} {:?} {} regime={regime:?} numa={}",
+                plat.name,
+                kernel,
+                pat.spec,
+                numa_placement.name()
             ),
         );
     });

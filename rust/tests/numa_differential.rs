@@ -1,0 +1,240 @@
+//! Differential tests for the NUMA topology subsystem (ISSUE 10
+//! tentpole). Three contracts:
+//!
+//! 1. **Single-socket inertness** — on every single-socket CPU
+//!    platform the topology is a pass-through: both placement policies
+//!    produce bit-identical `SimResult`s and move no numa counters, so
+//!    pre-NUMA numbers are reproduced exactly.
+//! 2. **Monotone remote penalty** — on every two-socket platform,
+//!    dialing the engineered pattern's remote fraction up under
+//!    interleave placement strictly raises the remote access count and
+//!    cuts bandwidth; the all-remote run always trails the all-local
+//!    one.
+//! 3. **Placement ordering** — on a contended delta-0 scatter whose
+//!    shared footprint dwarfs the L3, first-touch (whole footprint
+//!    homed on node 0) loses to interleave (pages spread across both
+//!    memory controllers).
+//!
+//! Plus `--jobs` invariance of the records a NUMA sweep produces.
+
+use spatter::backends::{Backend, OpenMpSim};
+use spatter::coordinator::{render_json, run_configs_jobs, RunConfig};
+use spatter::error::Result;
+use spatter::pattern::{table5, Kernel, Pattern};
+use spatter::platforms;
+use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
+use spatter::sim::{NumaPlacement, SimResult};
+use spatter::suite::{ratio_pattern, REMOTE_LANES};
+
+const SINGLE_SOCKET: &[&str] = &["skx", "bdw", "naples", "tx2", "knl", "clx"];
+const TWO_SOCKET: &[&str] = &["skx-2s", "tx2-2s", "naples-2s"];
+
+fn assert_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.counters, b.counters, "{ctx}: counters");
+    assert_eq!(a.breakdown, b.breakdown, "{ctx}: breakdown");
+    assert_eq!(a.seconds, b.seconds, "{ctx}: seconds");
+    assert_eq!(a.bandwidth_gbs(), b.bandwidth_gbs(), "{ctx}: bandwidth");
+    assert_eq!(
+        a.closed_at_iteration, b.closed_at_iteration,
+        "{ctx}: closure"
+    );
+}
+
+/// Workloads spanning the node-classification paths: a dense gather,
+/// a shared (delta-0) scatter, a GS pair, and the GUPS table.
+fn workloads() -> Vec<(Pattern, Kernel)> {
+    vec![
+        (
+            Pattern::parse("UNIFORM:8:1")
+                .unwrap()
+                .with_delta(8)
+                .with_count(1 << 12),
+            Kernel::Gather,
+        ),
+        (
+            table5::by_name("LULESH-S3").unwrap().to_pattern(1 << 12),
+            Kernel::Scatter,
+        ),
+        (
+            Pattern::parse("UNIFORM:8:4")
+                .unwrap()
+                .with_gs_scatter((0..8).collect())
+                .with_delta(32)
+                .with_count(1 << 12),
+            Kernel::GS,
+        ),
+        (Pattern::gups(1 << 20, 1 << 10), Kernel::Gups),
+    ]
+}
+
+fn run_with(
+    name: &str,
+    placement: NumaPlacement,
+    pat: &Pattern,
+    kernel: Kernel,
+) -> SimResult {
+    let plat = platforms::by_name(name).unwrap();
+    let mut e = CpuEngine::with_options(
+        &plat,
+        CpuSimOptions {
+            numa_placement: placement,
+            ..Default::default()
+        },
+    );
+    e.run(pat, kernel).unwrap()
+}
+
+#[test]
+fn single_socket_platforms_are_placement_inert() {
+    for &name in SINGLE_SOCKET {
+        for (pat, kernel) in workloads() {
+            let ft = run_with(name, NumaPlacement::FirstTouch, &pat, kernel);
+            let il = run_with(name, NumaPlacement::Interleave, &pat, kernel);
+            let ctx = format!("{name} {kernel:?} {}", pat.spec);
+            assert_identical(&ft, &il, &ctx);
+            // The pass-through moves no node counters at all, so
+            // records keep the pre-NUMA JSON shape ("numa": null).
+            assert_eq!(ft.counters.numa_local, 0, "{ctx}: local");
+            assert_eq!(ft.counters.numa_remote, 0, "{ctx}: remote");
+            assert_eq!(ft.counters.numa_contended, 0, "{ctx}: contended");
+        }
+    }
+}
+
+#[test]
+fn remote_fraction_penalty_is_monotone_on_two_socket_platforms() {
+    for &name in TWO_SOCKET {
+        let plat = platforms::by_name(name).unwrap();
+        let sweep: Vec<SimResult> = REMOTE_LANES
+            .iter()
+            .map(|&k| {
+                let mut e = CpuEngine::with_options(
+                    &plat,
+                    CpuSimOptions {
+                        prefetch_enabled: false,
+                        numa_placement: NumaPlacement::Interleave,
+                        ..Default::default()
+                    },
+                );
+                e.run(&ratio_pattern(k, 1 << 12), Kernel::Gather).unwrap()
+            })
+            .collect();
+        // Remote traffic rises strictly with the remote lane count,
+        // and local traffic falls.
+        for w in sweep.windows(2) {
+            assert!(
+                w[1].counters.numa_remote > w[0].counters.numa_remote,
+                "{name}: remote must rise: {:?} -> {:?}",
+                w[0].counters.numa_remote,
+                w[1].counters.numa_remote
+            );
+            assert!(
+                w[1].counters.numa_local < w[0].counters.numa_local,
+                "{name}: local must fall"
+            );
+        }
+        // Every partially- or fully-remote run trails the all-local
+        // run; the endpoints (structurally identical: one page per
+        // iteration, only the home node differs) order strictly.
+        let bw: Vec<f64> =
+            sweep.iter().map(|r| r.bandwidth_gbs()).collect();
+        for (i, &b) in bw.iter().enumerate().skip(1) {
+            assert!(
+                b < bw[0],
+                "{name}: remote fraction {i}/4 must trail all-local: \
+                 {b:.3} vs {:.3}",
+                bw[0]
+            );
+        }
+        assert!(
+            bw[bw.len() - 1] < bw[1],
+            "{name}: all-remote must trail the lightest mixed run"
+        );
+    }
+    // On skx-2s the sweep is DRAM-bound throughout, so the decline is
+    // strictly monotone step by step.
+    let plat = platforms::by_name("skx-2s").unwrap();
+    let bw: Vec<f64> = REMOTE_LANES
+        .iter()
+        .map(|&k| {
+            let mut e = CpuEngine::with_options(
+                &plat,
+                CpuSimOptions {
+                    prefetch_enabled: false,
+                    numa_placement: NumaPlacement::Interleave,
+                    ..Default::default()
+                },
+            );
+            e.run(&ratio_pattern(k, 1 << 12), Kernel::Gather)
+                .unwrap()
+                .bandwidth_gbs()
+        })
+        .collect();
+    for w in bw.windows(2) {
+        assert!(
+            w[1] < w[0],
+            "skx-2s: strictly monotone decline expected: {bw:?}"
+        );
+    }
+}
+
+#[test]
+fn first_touch_loses_to_interleave_on_a_contended_scatter() {
+    // Delta-0 shared scatter, 64 MiB footprint (past every L3), one
+    // access per cache line: under first-touch the whole footprint is
+    // homed on node 0 and both sockets fight for one memory
+    // controller; interleave spreads the pages.
+    let pat = Pattern::from_indices(
+        "contended-scatter",
+        (0..1i64 << 17).map(|i| i * 64).collect(),
+    )
+    .with_delta(0)
+    .with_count(8);
+    for &name in TWO_SOCKET {
+        let ft = run_with(name, NumaPlacement::FirstTouch, &pat, Kernel::Scatter);
+        let il = run_with(name, NumaPlacement::Interleave, &pat, Kernel::Scatter);
+        assert!(
+            ft.counters.numa_contended > 0,
+            "{name}: first-touch must see the shared-footprint contention"
+        );
+        assert_eq!(
+            il.counters.numa_contended, 0,
+            "{name}: interleave spreads instead of contending"
+        );
+        assert!(
+            ft.bandwidth_gbs() < il.bandwidth_gbs(),
+            "{name}: first-touch {:.3} must trail interleave {:.3}",
+            ft.bandwidth_gbs(),
+            il.bandwidth_gbs()
+        );
+    }
+}
+
+#[test]
+fn numa_records_are_jobs_invariant() {
+    let plat = platforms::by_name("skx-2s").unwrap();
+    let mut configs = Vec::new();
+    for placement in [NumaPlacement::FirstTouch, NumaPlacement::Interleave] {
+        for &k in REMOTE_LANES {
+            configs.push(RunConfig {
+                name: format!("{}/r{k}", placement.name()),
+                kernel: Kernel::Gather,
+                pattern: ratio_pattern(k, 1 << 10),
+                page_size: None,
+                threads: None,
+                regime: None,
+                placement: Some(placement),
+            });
+        }
+    }
+    let factory = || -> Result<Box<dyn Backend>> {
+        Ok(Box::new(OpenMpSim::without_prefetch(&plat)))
+    };
+    let r1 = run_configs_jobs(&factory, &configs, 1).unwrap();
+    let r3 = run_configs_jobs(&factory, &configs, 3).unwrap();
+    assert_eq!(
+        render_json(&r1),
+        render_json(&r3),
+        "numa records must be byte-identical for any --jobs"
+    );
+}

@@ -19,7 +19,7 @@ use spatter::platforms;
 use spatter::prop::{check, Gen};
 use spatter::sim::cpu::{CpuEngine, CpuSimOptions};
 use spatter::sim::gpu::{GpuEngine, GpuSimOptions};
-use spatter::sim::{InterleavePolicy, PageSize, SimResult};
+use spatter::sim::{InterleavePolicy, NumaPlacement, PageSize, SimResult};
 
 fn assert_identical(planned: &SimResult, scalar: &SimResult, ctx: &str) {
     assert_eq!(planned.counters, scalar.counters, "{ctx}: counters");
@@ -135,11 +135,17 @@ fn arbitrary_pattern(g: &mut Gen, v_cap: usize) -> Pattern {
 #[test]
 fn prop_cpu_plan_equivalence() {
     check("CPU: plan on == plan off, exactly", 20, |g| {
-        let mut plat = platforms::by_name(
-            *g.choose(&["skx", "bdw", "naples", "tx2", "knl", "clx"]),
-        )
+        // Two-socket variants and both placement policies ride along:
+        // the plan's coalesced bulk paths route node classification
+        // through the same single DRAM-facing hook as the scalar path,
+        // and may not move a numa counter (ISSUE 10 tentpole).
+        let mut plat = platforms::by_name(*g.choose(&[
+            "skx", "bdw", "naples", "tx2", "knl", "clx", "skx-2s",
+            "tx2-2s", "naples-2s",
+        ]))
         .unwrap();
         plat.dram.interleave = *g.choose(InterleavePolicy::ALL);
+        let numa_placement = *g.choose(NumaPlacement::ALL);
         let kernel = arbitrary_kernel(g);
         let page = *g.choose(&[PageSize::FourKB, PageSize::TwoMB]);
         let threads = if g.bool() {
@@ -172,6 +178,7 @@ fn prop_cpu_plan_equivalence() {
                     page_size: page,
                     threads,
                     regime,
+                    numa_placement,
                     ..Default::default()
                 },
             );
@@ -184,8 +191,11 @@ fn prop_cpu_plan_equivalence() {
             &scalar,
             &format!(
                 "{} {:?} {} pf={prefetch_enabled} closure={closure_enabled} \
-                 regime={regime:?}",
-                plat.name, kernel, pat.spec
+                 regime={regime:?} numa={}",
+                plat.name,
+                kernel,
+                pat.spec,
+                numa_placement.name()
             ),
         );
     });

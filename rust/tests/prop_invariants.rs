@@ -208,6 +208,11 @@ fn arbitrary_runconfig(g: &mut Gen) -> RunConfig {
         } else {
             None
         },
+        placement: if g.bool() {
+            Some(*g.choose(spatter::sim::NumaPlacement::ALL))
+        } else {
+            None
+        },
     }
 }
 
